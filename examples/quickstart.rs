@@ -1,0 +1,52 @@
+//! Quickstart: the smallest end-to-end Gauntlet run.
+//!
+//! Loads the `nano` artifacts (run `make artifacts` first), registers four
+//! honest peers and one poisoner on the simulated chain, and runs ten
+//! communication rounds of incentivized DeMo training. Takes ~30 s on one
+//! CPU core.
+//!
+//!     cargo run --release --example quickstart
+
+use gauntlet::bench::Table;
+use gauntlet::coordinator::run::{RunConfig, TemplarRun};
+use gauntlet::peers::Behavior;
+
+fn main() -> anyhow::Result<()> {
+    let peers = vec![
+        Behavior::Honest { data_mult: 1.0 },
+        Behavior::Honest { data_mult: 1.0 },
+        Behavior::Honest { data_mult: 2.0 }, // more data => should earn more
+        Behavior::Honest { data_mult: 1.0 },
+        Behavior::Poisoner { scale: 100.0 }, // should earn ~nothing
+    ];
+    let mut cfg = RunConfig::quick("nano", 10, peers);
+    cfg.params.top_g = 3;
+    cfg.eval_every = 2;
+
+    println!("quickstart: 5 peers, 10 rounds, top-G=3, model=nano");
+    let mut run = TemplarRun::new(cfg)?;
+    for r in 0..10 {
+        let rec = run.run_round()?;
+        if let Some(l) = rec.heldout_loss {
+            println!(
+                "round {r:>2}: heldout loss {l:.4}, {} valid submissions, top-G {:?}",
+                rec.n_valid_submissions, rec.top_g
+            );
+        }
+    }
+
+    let mut t = Table::new("who earned what", &["peer", "behaviour", "mu", "score", "TAO"]);
+    let book = &run.validators[0].book;
+    for p in &run.peers {
+        t.row(&[
+            p.uid.to_string(),
+            p.behavior.label(),
+            format!("{:+.2}", book.get(p.uid).map(|s| s.mu.value).unwrap_or(0.0)),
+            format!("{:.2}", book.peer_score(p.uid)),
+            format!("{:.3}", run.chain.neuron(p.uid).map(|n| n.balance).unwrap_or(0.0)),
+        ]);
+    }
+    t.print();
+    println!("\n(the poisoner's mu should be the lowest — Gauntlet at work)");
+    Ok(())
+}

@@ -1,0 +1,119 @@
+//! Fig. 2 reproduction: "Simulating LossRating".
+//!
+//! Three peers — one processing 2x data, one desynchronized (pauses for 3
+//! rounds, then continues from the stale model), one baseline — are
+//! primary-evaluated **every** round (S = K, as in the paper's controlled
+//! simulation) and their LossScore / LossRating trajectories printed.
+//!
+//! Expected shapes (paper Fig. 2): LossScore is noisy round-to-round but
+//! the 2x-data peer's rating pulls ahead while the desynchronized peer's
+//! rating collapses after its pause.
+//!
+//!     cargo run --release --example rating_sim [rounds]
+
+use gauntlet::bench::{save_json, sparkline, Table};
+use gauntlet::coordinator::run::{RunConfig, TemplarRun};
+use gauntlet::minjson::{self, Value};
+use gauntlet::peers::Behavior;
+
+fn main() -> anyhow::Result<()> {
+    let rounds: u64 =
+        std::env::args().nth(1).map(|s| s.parse()).transpose()?.unwrap_or(30);
+    let desync_at = 5;
+
+    let peers = vec![
+        Behavior::Honest { data_mult: 2.0 },             // uid 1: more data
+        Behavior::Desync { at: desync_at, pause: 3 },    // uid 2: desynchronized
+        Behavior::Honest { data_mult: 1.0 },             // uid 3: baseline
+    ];
+    let mut cfg = RunConfig::quick("nano", rounds, peers);
+    cfg.params.eval_sample = 3; // S = K: evaluate everyone, like the paper's sim
+    cfg.params.top_g = 3;
+    cfg.eval_every = 0;
+
+    println!("rating_sim: 3 peers (2x-data / desync@{desync_at} / baseline), {rounds} rounds\n");
+    let mut run = TemplarRun::new(cfg)?;
+
+    let mut series: Vec<(u64, Vec<(String, Option<f64>, f64, f64)>)> = Vec::new();
+    for _ in 0..rounds {
+        let rec = run.run_round()?;
+        let row: Vec<(String, Option<f64>, f64, f64)> = rec
+            .peers
+            .iter()
+            .map(|p| (p.label.clone(), p.loss_score_rand, p.rating_mu, p.mu))
+            .collect();
+        series.push((rec.round, row));
+    }
+
+    // ---- print the trajectories ----------------------------------------
+    let mut t = Table::new(
+        "LossScore (rand) and LossRating per round",
+        &["round", "2x-data score", "desync score", "base score", "2x rating", "desync rating", "base rating"],
+    );
+    for (round, row) in &series {
+        let f = |o: &Option<f64>| o.map(|v| format!("{v:+.4}")).unwrap_or_else(|| "--".into());
+        t.row(&[
+            round.to_string(),
+            f(&row[0].1),
+            f(&row[1].1),
+            f(&row[2].1),
+            format!("{:.2}", row[0].2),
+            format!("{:.2}", row[1].2),
+            format!("{:.2}", row[2].2),
+        ]);
+    }
+    t.print();
+
+    let rating_series = |i: usize| -> Vec<f64> { series.iter().map(|(_, r)| r[i].2).collect() };
+    println!("\nrating trajectories:");
+    println!("  2x-data {}", sparkline(&rating_series(0), 50));
+    println!("  desync  {}", sparkline(&rating_series(1), 50));
+    println!("  base    {}", sparkline(&rating_series(2), 50));
+
+    let final_row = &series.last().unwrap().1;
+    println!(
+        "\nfinal ratings: 2x-data={:.2}  desync={:.2}  baseline={:.2}",
+        final_row[0].2, final_row[1].2, final_row[2].2
+    );
+    if final_row[0].2 > final_row[2].2 && final_row[1].2 < final_row[2].2 {
+        println!("=> matches the paper's Fig. 2: more data wins, desync collapses");
+    } else {
+        println!("=> WARNING: ordering deviates from the paper's Fig. 2 shape");
+    }
+
+    save_json(
+        "rating_sim",
+        &minjson::obj(vec![(
+            "rounds",
+            Value::Arr(
+                series
+                    .iter()
+                    .map(|(round, row)| {
+                        minjson::obj(vec![
+                            ("round", minjson::num(*round as f64)),
+                            (
+                                "peers",
+                                Value::Arr(
+                                    row.iter()
+                                        .map(|(label, score, rating, mu)| {
+                                            minjson::obj(vec![
+                                                ("label", minjson::s(label)),
+                                                (
+                                                    "loss_score",
+                                                    score.map(minjson::num).unwrap_or(Value::Null),
+                                                ),
+                                                ("rating", minjson::num(*rating)),
+                                                ("mu", minjson::num(*mu)),
+                                            ])
+                                        })
+                                        .collect(),
+                                ),
+                            ),
+                        ])
+                    })
+                    .collect(),
+            ),
+        )]),
+    );
+    Ok(())
+}

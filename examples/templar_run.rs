@@ -1,0 +1,146 @@
+//! Flagship end-to-end run — the repo's §6 "Results" reproduction.
+//!
+//! Trains a transformer with the full permissionless stack (chain, cloud
+//! storage, heterogeneous honest + adversarial peers, Gauntlet validator,
+//! DeMo aggregation) and, side by side, the centralized AdamW-DDP baseline
+//! on the same token budget per round. Ends with the Table-1-style
+//! downstream evaluation of both checkpoints.
+//!
+//!     cargo run --release --example templar_run [model] [rounds]
+//!
+//! Defaults: model=tiny rounds=60 (~15 min on one CPU core). The run used
+//! for EXPERIMENTS.md §Fig.1 is `templar_run small 150`.
+
+use gauntlet::bench::{save_json, series_json, sparkline, Table};
+use gauntlet::coordinator::baseline::{AdamWParams, AdamWTrainer};
+use gauntlet::coordinator::run::{RunConfig, TemplarRun};
+use gauntlet::data::Corpus;
+use gauntlet::eval::{evaluate_suite, Suite};
+use gauntlet::minjson;
+use gauntlet::peers::Behavior;
+use gauntlet::runtime::{artifact_dir, Executor};
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let model = args.first().map(String::as_str).unwrap_or("tiny").to_string();
+    let rounds: u64 = args.get(1).map(|s| s.parse()).transpose()?.unwrap_or(60);
+
+    // The paper's live population in miniature: mostly honest peers with
+    // heterogeneous data throughput, plus one of each adversary class.
+    let peers = vec![
+        Behavior::Honest { data_mult: 1.0 },
+        Behavior::Honest { data_mult: 1.0 },
+        Behavior::Honest { data_mult: 2.0 },
+        Behavior::Honest { data_mult: 1.5 },
+        Behavior::Honest { data_mult: 1.0 },
+        Behavior::Desync { at: rounds / 4, pause: 3 },
+        Behavior::Freeloader,
+        Behavior::Poisoner { scale: 100.0 },
+    ];
+    let n_honest_equiv = 5; // AdamW baseline worker count (same order of tokens/round)
+
+    let mut cfg = RunConfig::quick(&model, rounds, peers);
+    cfg.params.top_g = 4;
+    cfg.params.eval_sample = 3;
+    cfg.eval_every = 5;
+    println!(
+        "templar_run: model={model} rounds={rounds} peers={} (top-G={}, S={})",
+        cfg.peers.len(),
+        cfg.params.top_g,
+        cfg.params.eval_sample
+    );
+
+    // ---------------- Gauntlet permissionless run -----------------------
+    let t0 = std::time::Instant::now();
+    let mut run = TemplarRun::new(cfg)?;
+    let mut gauntlet_curve: Vec<(f64, f64)> = Vec::new();
+    for r in 0..rounds {
+        let rec = run.run_round()?;
+        if let Some(l) = rec.heldout_loss {
+            gauntlet_curve.push((r as f64, l));
+            println!(
+                "  [gauntlet] round {r:>4}  heldout={l:.4}  local={:.4}  topG={:?}",
+                rec.mean_local_loss, rec.top_g
+            );
+        }
+    }
+    let gauntlet_time = t0.elapsed();
+    let theta_gauntlet = run.theta.clone();
+
+    // ---------------- AdamW DDP baseline --------------------------------
+    let exec = Executor::load(artifact_dir(&model))?;
+    let corpus = Corpus::new(exec.meta.vocab as u32, 0);
+    let mut trainer =
+        AdamWTrainer::new(exec.init_params()?, AdamWParams::default(), n_honest_equiv);
+    let mut adamw_curve: Vec<(f64, f64)> = Vec::new();
+    let t1 = std::time::Instant::now();
+    for r in 0..rounds {
+        trainer.step(&exec, &corpus, r)?;
+        if r % 5 == 0 {
+            let toks = corpus.heldout(0, exec.meta.batch, exec.meta.seq + 1);
+            let l = exec.loss(&trainer.theta, &toks)? as f64;
+            adamw_curve.push((r as f64, l));
+            println!("  [adamw]    round {r:>4}  heldout={l:.4}");
+        }
+    }
+    let adamw_time = t1.elapsed();
+
+    // ---------------- Fig. 1 style summary ------------------------------
+    let gl: Vec<f64> = gauntlet_curve.iter().map(|(_, y)| *y).collect();
+    let al: Vec<f64> = adamw_curve.iter().map(|(_, y)| *y).collect();
+    println!("\nFig.1 — loss curves ({rounds} rounds)");
+    println!("  gauntlet {}  ({:.4} -> {:.4})", sparkline(&gl, 50), gl[0], gl[gl.len() - 1]);
+    println!("  adamw    {}  ({:.4} -> {:.4})", sparkline(&al, 50), al[0], al[al.len() - 1]);
+    save_json(
+        &format!("templar_run_{model}"),
+        &minjson::obj(vec![
+            ("gauntlet", series_json(&gauntlet_curve)),
+            ("adamw", series_json(&adamw_curve)),
+        ]),
+    );
+
+    // ---------------- final standings ------------------------------------
+    let mut t = Table::new(
+        "final standings (permissionless run)",
+        &["uid", "behaviour", "mu", "rating", "score", "TAO earned"],
+    );
+    let book = &run.validators[0].book;
+    for p in &run.peers {
+        let st = book.get(p.uid);
+        t.row(&[
+            p.uid.to_string(),
+            p.behavior.label(),
+            st.map(|s| format!("{:+.3}", s.mu.value)).unwrap_or_default(),
+            st.map(|s| format!("{:.2}", s.rating.mu)).unwrap_or_default(),
+            format!("{:.3}", book.peer_score(p.uid)),
+            format!("{:.3}", run.chain.neuron(p.uid).map(|n| n.balance).unwrap_or(0.0)),
+        ]);
+    }
+    t.print();
+
+    // ---------------- Table 1 style downstream eval ----------------------
+    let mut t1tab = Table::new(
+        "Table 1 — downstream acc_norm (synthetic suites)",
+        &["model", "synth-hellaswag", "synth-piqa", "synth-arc-e"],
+    );
+    for (name, theta) in [("TEMPLAR (gauntlet)", &theta_gauntlet), ("AdamW DDP", &trainer.theta)]
+    {
+        let mut cells = vec![name.to_string()];
+        for suite in Suite::all() {
+            let r = evaluate_suite(&exec, theta, &corpus, suite, 40)?;
+            cells.push(format!("{:.3}", r.acc_norm));
+        }
+        t1tab.row(&cells);
+    }
+    t1tab.print();
+
+    println!(
+        "\nwall-clock: gauntlet {:.1}s, adamw {:.1}s; checkpoints: {} full + {} signed updates ({} KiB of signs)",
+        gauntlet_time.as_secs_f64(),
+        adamw_time.as_secs_f64(),
+        run.checkpoints.n_checkpoints(),
+        run.checkpoints.n_updates(),
+        run.checkpoints.sign_bytes() / 1024,
+    );
+    Ok(())
+}

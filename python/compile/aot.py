@@ -1,0 +1,162 @@
+"""AOT pipeline: lower every Layer-2 entry point to HLO-text artifacts.
+
+Run once at build time (``make artifacts``); Python is never on the request
+path. For each model config this emits into ``artifacts/<cfg>/``:
+
+  loss.hlo.txt, grad.hlo.txt, demo_compress.hlo.txt, apply_update.hlo.txt,
+  eval_peer.hlo.txt, adamw_step.hlo.txt   -- the compiled entry points
+  meta.json                               -- shapes/offsets/hyperparams ABI
+  init_params.bin                         -- deterministic f32 LE init vector
+
+Interchange format is **HLO text**, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the Rust ``xla`` crate) rejects; the HLO text parser
+reassigns ids so text round-trips cleanly. Everything is lowered with
+``return_tuple=True`` and unwrapped with ``to_tuple()`` on the Rust side.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import math
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import configs, model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring).
+
+    `print_large_constants=True` is load-bearing: the default printer
+    elides big literals as `constant({...})`, which xla_extension 0.5.1's
+    text parser silently materializes as **zeros** — RoPE tables, causal
+    masks and DCT bases would all vanish. (Found the hard way; see
+    DESIGN.md "HLO-text gotchas".)
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def entry_points(cfg: configs.ModelConfig):
+    """(name -> (fn, example_arg_specs)) for every artifact of a config."""
+    p, p_pad, _, _ = model.demo_dims(cfg)
+    tok = _spec((cfg.batch, cfg.seq + 1), jnp.int32)
+    vec = _spec((p,))
+    coeff = _spec((p_pad,))
+    scalar = _spec(())
+
+    return {
+        "loss": (lambda th, t: (model.loss_fn(th, t, cfg),), (vec, tok)),
+        "loss_per_seq": (lambda th, t: (model.loss_per_seq(th, t, cfg),), (vec, tok)),
+        "grad": (lambda th, t: model.grad_fn(th, t, cfg), (vec, tok)),
+        "demo_compress": (
+            lambda e, g, d: model.demo_compress(e, g, d, cfg),
+            (vec, vec, scalar),
+        ),
+        "apply_update": (
+            lambda th, q, lr: (model.apply_update(th, q, lr, cfg),),
+            (vec, coeff, scalar),
+        ),
+        "eval_peer": (
+            lambda th, q, b, ta, tr: model.eval_peer(th, q, b, ta, tr, cfg),
+            (vec, coeff, scalar, tok, tok),
+        ),
+        "adamw_step": (
+            lambda th, m, v, t, lr, st: model.adamw_step(th, m, v, t, lr, st, cfg),
+            (vec, vec, vec, tok, scalar, scalar),
+        ),
+    }
+
+
+def build_meta(cfg: configs.ModelConfig) -> dict:
+    p, p_pad, n_chunks, c_total = model.demo_dims(cfg)
+    specs = []
+    off = 0
+    for name, shape in model.param_specs(cfg):
+        n = math.prod(shape)
+        specs.append({"name": name, "shape": list(shape), "offset": off, "size": n})
+        off += n
+    return {
+        "name": cfg.name,
+        "d_model": cfg.d_model,
+        "n_layers": cfg.n_layers,
+        "n_heads": cfg.n_heads,
+        "d_ff": cfg.d_ff,
+        "vocab": cfg.vocab,
+        "seq": cfg.seq,
+        "batch": cfg.batch,
+        "chunk": cfg.chunk,
+        "topk": cfg.topk,
+        "param_count": p,
+        "padded_count": p_pad,
+        "n_chunks": n_chunks,
+        "coeff_count": c_total,
+        "hyper": {
+            "lr": cfg.lr,
+            "demo_decay": cfg.demo_decay,
+            "adamw_lr": cfg.adamw_lr,
+            "adamw_beta1": cfg.adamw_beta1,
+            "adamw_beta2": cfg.adamw_beta2,
+            "adamw_eps": cfg.adamw_eps,
+            "adamw_wd": cfg.adamw_wd,
+        },
+        "params": specs,
+        "artifacts": sorted(entry_points(cfg)),
+    }
+
+
+def build_config(cfg: configs.ModelConfig, out_dir: str, only: set[str] | None = None) -> None:
+    cfg_dir = os.path.join(out_dir, cfg.name)
+    os.makedirs(cfg_dir, exist_ok=True)
+    eps = entry_points(cfg)
+    names = sorted(eps) if only is None else sorted(set(eps) & only)
+    for name in names:
+        fn, arg_specs = eps[name]
+        lowered = jax.jit(fn).lower(*arg_specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(cfg_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"  {cfg.name}/{name}.hlo.txt  ({len(text) / 1e6:.2f} MB)", flush=True)
+    with open(os.path.join(cfg_dir, "meta.json"), "w") as f:
+        json.dump(build_meta(cfg), f, indent=1)
+    init = model.init_params(cfg, seed=0)
+    init.astype("<f4").tofile(os.path.join(cfg_dir, "init_params.bin"))
+    print(f"  {cfg.name}/meta.json + init_params.bin (P={init.size})", flush=True)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--configs",
+        default=",".join(configs.DEFAULT_BUILD),
+        help="comma-separated config names (default: %(default)s)",
+    )
+    ap.add_argument("--functions", default="", help="subset of entry points (default: all)")
+    ap.add_argument("--out-dir", default=os.path.join("..", "artifacts"))
+    args = ap.parse_args()
+    only = set(args.functions.split(",")) - {""} or None
+    for name in args.configs.split(","):
+        cfg = configs.get(name.strip())
+        print(f"[aot] lowering config {cfg.name!r}", flush=True)
+        build_config(cfg, args.out_dir, only)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,77 @@
+"""Model / DeMo / training configurations shared by the AOT pipeline.
+
+Every config is lowered into its own ``artifacts/<name>/`` directory; the
+Rust coordinator picks a config by name and reads its ``meta.json``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """A llama-style decoder-only transformer configuration.
+
+    Attributes mirror the 1B-class recipe the paper trains (pre-RMSNorm,
+    RoPE attention, SwiGLU MLP, tied embeddings) at reduced width.
+    """
+
+    name: str
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    vocab: int
+    seq: int  # training sequence length (tokens arrive as [batch, seq+1])
+    batch: int  # per-artifact microbatch
+    # DeMo compression (chunked 2-D DCT + per-chunk top-k).
+    chunk: int = 64
+    topk: int = 32
+    # Default optimizer hyperparameters baked into meta.json (the runtime
+    # still passes lr / beta as runtime scalars; these are the defaults the
+    # launcher reads). Signed descent moves EVERY parameter by +-lr each
+    # round, so lr must shrink as models grow (swept in the perf pass).
+    lr: float = 0.01
+    demo_decay: float = 0.999
+    adamw_lr: float = 3e-4
+    adamw_beta1: float = 0.9
+    adamw_beta2: float = 0.95
+    adamw_eps: float = 1e-8
+    adamw_wd: float = 0.1
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+
+NANO = ModelConfig(
+    name="nano", d_model=64, n_layers=2, n_heads=2, d_ff=256, vocab=512, seq=32, batch=4,
+    lr=0.01,
+)
+TINY = ModelConfig(
+    name="tiny", d_model=128, n_layers=4, n_heads=4, d_ff=512, vocab=2048, seq=64, batch=4,
+    lr=0.003,
+)
+SMALL = ModelConfig(
+    name="small", d_model=256, n_layers=6, n_heads=8, d_ff=1024, vocab=4096, seq=128, batch=4,
+    lr=0.002,
+)
+BASE = ModelConfig(
+    name="base", d_model=512, n_layers=8, n_heads=8, d_ff=2048, vocab=8192, seq=256, batch=2,
+    lr=0.0015,
+)
+
+CONFIGS: dict[str, ModelConfig] = {c.name: c for c in (NANO, TINY, SMALL, BASE)}
+
+# Configs built by `make artifacts` (BASE is compile-scale-check only; build
+# it explicitly with `python -m compile.aot --configs base`).
+DEFAULT_BUILD = ("nano", "tiny", "small")
+
+
+def get(name: str) -> ModelConfig:
+    try:
+        return CONFIGS[name]
+    except KeyError:
+        raise KeyError(f"unknown config {name!r}; known: {sorted(CONFIGS)}") from None

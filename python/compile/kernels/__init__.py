@@ -1,0 +1,17 @@
+"""Layer-1 Pallas kernels for the Gauntlet/DeMo compute hot-spots.
+
+All kernels are authored for TPU-style tiling (VMEM blocks, MXU-friendly
+matmul shapes) but lowered with ``interpret=True`` so the resulting HLO runs
+on any PJRT backend, including the Rust CPU client on the request path.
+
+Kernels:
+  - :mod:`.dct`: chunked 2-D DCT encode/decode (DeMo's transform).
+  - :mod:`.topk`: per-chunk top-k magnitude compression.
+  - :mod:`.cross_entropy`: fused log-softmax cross-entropy.
+
+:mod:`.ref` holds the pure-``jax.numpy`` oracles used by the pytest suite.
+"""
+
+from . import cross_entropy, dct, ref, topk  # noqa: F401
+
+__all__ = ["cross_entropy", "dct", "ref", "topk"]

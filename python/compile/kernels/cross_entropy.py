@@ -1,0 +1,76 @@
+"""Fused log-softmax cross-entropy as a Pallas kernel with a custom VJP.
+
+The vocabulary projection dominates small-LLM step time, and materializing
+the (rows, vocab) softmax in HBM doubles its cost. The kernel streams a
+block of rows into VMEM and computes max / sum-exp / gold-logit gather in
+one pass (the flash-softmax trick re-tiled for 8x128 VPU lanes), emitting
+only the per-row loss.
+
+``jax.grad`` cannot differentiate through ``pallas_call``, so the backward
+pass is supplied analytically (``softmax - onehot``) via ``jax.custom_vjp``
+— this is also what the fused CUDA kernels in the DeMo reference stack do.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# 128 rows x 4096 vocab x 4 B = 2 MiB per block — wider blocks shorten the
+# grid loop, the measured bottleneck in interpret mode (perf pass).
+DEFAULT_BLOCK_ROWS = 128
+
+
+def _xent_kernel(logits_ref, labels_ref, loss_ref):
+    logits = logits_ref[...].astype(jnp.float32)  # (br, v)
+    labels = labels_ref[...]  # (br,)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    lse = jnp.log(jnp.sum(jnp.exp(logits - m), axis=-1)) + m[:, 0]
+    gold = jnp.take_along_axis(logits, labels[:, None].astype(jnp.int32), axis=-1)[:, 0]
+    loss_ref[...] = lse - gold
+
+
+def _xent_fwd_impl(logits: jax.Array, labels: jax.Array, block_rows: int) -> jax.Array:
+    r, v = logits.shape
+    br = min(block_rows, r)
+    pad = 0
+    if r % br != 0:
+        pad = br - r % br
+        logits = jnp.concatenate([logits, jnp.zeros((pad, v), logits.dtype)], axis=0)
+        labels = jnp.concatenate([labels, jnp.zeros((pad,), labels.dtype)], axis=0)
+    grid = (logits.shape[0] // br,)
+    loss = pl.pallas_call(
+        _xent_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, v), lambda i: (i, 0)),
+            pl.BlockSpec((br,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((br,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((logits.shape[0],), jnp.float32),
+        interpret=True,
+    )(logits, labels)
+    return loss[:r]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def cross_entropy(logits: jax.Array, labels: jax.Array, block_rows: int = DEFAULT_BLOCK_ROWS):
+    """Per-row softmax cross-entropy loss. logits (r, v), labels (r,) i32."""
+    return _xent_fwd_impl(logits, labels, block_rows)
+
+
+def _fwd(logits, labels, block_rows):
+    return _xent_fwd_impl(logits, labels, block_rows), (logits, labels)
+
+
+def _bwd(block_rows, res, g):
+    logits, labels = res
+    p = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=jnp.float32)
+    return ((p - onehot) * g[:, None]).astype(logits.dtype), None
+
+
+cross_entropy.defvjp(_fwd, _bwd)

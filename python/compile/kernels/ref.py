@@ -1,0 +1,80 @@
+"""Pure-``jax.numpy`` oracles for every Layer-1 Pallas kernel.
+
+These are the correctness ground truth: the pytest suite asserts each Pallas
+kernel (run in interpret mode) matches its oracle to float32 tolerance, and
+hypothesis sweeps shapes / chunk sizes / k against them.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@functools.lru_cache(maxsize=8)
+def dct_basis(c: int) -> np.ndarray:
+    """Orthonormal DCT-II basis ``D`` of size (c, c): rows are frequencies.
+
+    ``D @ D.T == I`` so the inverse transform is ``D.T @ Y @ D``.
+    """
+    n = np.arange(c, dtype=np.float64)
+    j = n[:, None]
+    d = np.cos(np.pi * (n[None, :] + 0.5) * j / c)
+    d *= np.sqrt(2.0 / c)
+    d[0, :] *= np.sqrt(0.5)
+    return d.astype(np.float32)
+
+
+def dct2(chunks: jax.Array) -> jax.Array:
+    """2-D DCT-II of a batch of square chunks, shape (n, c, c)."""
+    d = jnp.asarray(dct_basis(chunks.shape[-1]))
+    return jnp.einsum("ij,njk,lk->nil", d, chunks, d, precision="highest")
+
+
+def idct2(coeffs: jax.Array) -> jax.Array:
+    """Inverse of :func:`dct2` (orthonormal, so the transpose basis)."""
+    d = jnp.asarray(dct_basis(coeffs.shape[-1]))
+    return jnp.einsum("ji,njk,kl->nil", d, coeffs, d, precision="highest")
+
+
+def topk_compress(coeffs: jax.Array, k: int) -> tuple[jax.Array, jax.Array]:
+    """Per-chunk top-k by magnitude.
+
+    Args:
+      coeffs: (n_chunks, m) flattened DCT coefficients.
+      k: number of coefficients kept per chunk.
+
+    Returns:
+      (values (n_chunks, k) f32, indices (n_chunks, k) i32) where indices are
+      local to the chunk and values carry their original signs. Ordered by
+      descending magnitude; ties broken by lower index (jax.lax.top_k order).
+    """
+    mag = jnp.abs(coeffs)
+    _, idx = jax.lax.top_k(mag, k)
+    vals = jnp.take_along_axis(coeffs, idx, axis=-1)
+    return vals, idx.astype(jnp.int32)
+
+
+def topk_decompress(vals: jax.Array, idx: jax.Array, m: int) -> jax.Array:
+    """Scatter per-chunk (values, indices) back to dense (n_chunks, m)."""
+    n = vals.shape[0]
+    dense = jnp.zeros((n, m), dtype=vals.dtype)
+    rows = jnp.broadcast_to(jnp.arange(n)[:, None], idx.shape)
+    return dense.at[rows, idx].set(vals)
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Per-row softmax cross-entropy. logits (r, v) f32, labels (r,) i32."""
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None].astype(jnp.int32), axis=-1)[:, 0]
+    return lse - gold.astype(jnp.float32)
+
+
+def cross_entropy_grad(logits: jax.Array, labels: jax.Array, g: jax.Array) -> jax.Array:
+    """Analytic d(loss)/d(logits): ``g[:,None] * (softmax(logits) - onehot)``."""
+    p = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=jnp.float32)
+    return (p - onehot) * g[:, None]

@@ -1,0 +1,295 @@
+"""Layer-2 JAX model: llama-style transformer + DeMo ops over a flat ABI.
+
+Everything the Rust coordinator executes is defined here as a pure function
+over a **flat f32[P] parameter vector** (plus opaque optimizer state). The
+flat ABI keeps the Rust <-> XLA boundary a fixed tuple of dense arrays;
+unflattening into weight matrices happens inside the jitted function, where
+XLA turns the dynamic-slices into zero-copy bitcasts.
+
+Entry points lowered by :mod:`compile.aot` (one HLO artifact each):
+
+  loss, grad           -- forward / forward+backward on one microbatch
+  demo_compress        -- DeMo: error-feedback + chunked DCT + top-k
+  apply_update         -- IDCT of aggregated coefficients, sign, SGD step
+  eval_peer            -- fused Gauntlet primary evaluation (4 losses)
+  adamw_step           -- centralized AdamW DDP baseline (Fig. 1 / Table 1)
+
+The vocabulary cross-entropy and the DCT/top-k transform call the Layer-1
+Pallas kernels in :mod:`compile.kernels`.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .configs import ModelConfig
+from .kernels import cross_entropy as xent_kernel
+from .kernels import dct as dct_kernel
+from .kernels import topk as topk_kernel
+
+# --------------------------------------------------------------------------
+# Parameter layout (the flat ABI)
+# --------------------------------------------------------------------------
+
+
+def param_specs(cfg: ModelConfig) -> list[tuple[str, tuple[int, ...]]]:
+    """Ordered (name, shape) pairs defining the flat parameter layout.
+
+    The order is load-bearing: Rust reads the same list from meta.json to
+    locate tensors inside the flat vector (e.g. for SyncScore sampling).
+    """
+    specs: list[tuple[str, tuple[int, ...]]] = [("embed", (cfg.vocab, cfg.d_model))]
+    for l in range(cfg.n_layers):
+        d, f = cfg.d_model, cfg.d_ff
+        specs += [
+            (f"l{l}.attn_norm", (d,)),
+            (f"l{l}.wq", (d, d)),
+            (f"l{l}.wk", (d, d)),
+            (f"l{l}.wv", (d, d)),
+            (f"l{l}.wo", (d, d)),
+            (f"l{l}.mlp_norm", (d,)),
+            (f"l{l}.w_gate", (d, f)),
+            (f"l{l}.w_up", (d, f)),
+            (f"l{l}.w_down", (f, d)),
+        ]
+    specs.append(("final_norm", (cfg.d_model,)))
+    return specs
+
+
+def param_count(cfg: ModelConfig) -> int:
+    return sum(math.prod(s) for _, s in param_specs(cfg))
+
+
+def unflatten(flat: jax.Array, cfg: ModelConfig) -> dict[str, jax.Array]:
+    """Slice the flat vector into named weight tensors (bitcasts under XLA)."""
+    out: dict[str, jax.Array] = {}
+    off = 0
+    for name, shape in param_specs(cfg):
+        n = math.prod(shape)
+        out[name] = jax.lax.dynamic_slice_in_dim(flat, off, n).reshape(shape)
+        off += n
+    return out
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> np.ndarray:
+    """Deterministic initialization, returned as the flat f32[P] vector.
+
+    GPT-2-style: N(0, 0.02) with the residual-output projections (wo,
+    w_down) scaled down by 1/sqrt(2*n_layers); norms start at 1.
+    """
+    rng = np.random.default_rng(seed)
+    resid_scale = 1.0 / math.sqrt(2 * cfg.n_layers)
+    parts = []
+    for name, shape in param_specs(cfg):
+        if name.endswith("norm"):
+            parts.append(np.ones(shape, np.float32))
+            continue
+        w = rng.normal(0.0, 0.02, size=shape).astype(np.float32)
+        if name.endswith(".wo") or name.endswith(".w_down"):
+            w *= resid_scale
+        parts.append(w)
+    return np.concatenate([p.reshape(-1) for p in parts])
+
+
+# --------------------------------------------------------------------------
+# Transformer forward
+# --------------------------------------------------------------------------
+
+
+def _rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+@functools.lru_cache(maxsize=8)
+def _rope_tables(seq: int, head_dim: int) -> tuple[np.ndarray, np.ndarray]:
+    half = head_dim // 2
+    inv_freq = 1.0 / (10000.0 ** (np.arange(half, dtype=np.float64) / half))
+    ang = np.arange(seq, dtype=np.float64)[:, None] * inv_freq[None, :]
+    return np.cos(ang).astype(np.float32), np.sin(ang).astype(np.float32)
+
+
+def _rope(x: jax.Array) -> jax.Array:
+    """Rotate-half RoPE. x: (B, H, S, hd)."""
+    s, hd = x.shape[-2], x.shape[-1]
+    cos, sin = _rope_tables(s, hd)
+    cos, sin = jnp.asarray(cos), jnp.asarray(sin)  # (S, hd/2)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def forward(params: dict[str, jax.Array], tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Logits (B, S, vocab) for input tokens (B, S) i32."""
+    b, s = tokens.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    x = params["embed"][tokens]  # (B, S, d)
+    mask = jnp.tril(jnp.ones((s, s), jnp.bool_))
+    neg = jnp.float32(-1e9)
+    for l in range(cfg.n_layers):
+        p = lambda k: params[f"l{l}.{k}"]  # noqa: E731
+        # --- attention ---
+        y = _rmsnorm(x, p("attn_norm"))
+        q = (y @ p("wq")).reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+        k = (y @ p("wk")).reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+        v = (y @ p("wv")).reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+        q, k = _rope(q), _rope(k)
+        att = jnp.einsum("bhqd,bhkd->bhqk", q, k) / math.sqrt(hd)
+        att = jnp.where(mask, att, neg)
+        att = jax.nn.softmax(att, axis=-1)
+        o = jnp.einsum("bhqk,bhkd->bhqd", att, v).transpose(0, 2, 1, 3).reshape(b, s, -1)
+        x = x + o @ p("wo")
+        # --- SwiGLU MLP ---
+        y = _rmsnorm(x, p("mlp_norm"))
+        x = x + (jax.nn.silu(y @ p("w_gate")) * (y @ p("w_up"))) @ p("w_down")
+    x = _rmsnorm(x, params["final_norm"])
+    return x @ params["embed"].T  # tied embeddings
+
+
+def loss_fn(flat: jax.Array, tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Mean next-token cross-entropy. tokens: (B, S+1) i32."""
+    params = unflatten(flat, cfg)
+    logits = forward(params, tokens[:, :-1], cfg)
+    r = logits.shape[0] * logits.shape[1]
+    per_row = xent_kernel.cross_entropy(
+        logits.reshape(r, cfg.vocab), tokens[:, 1:].reshape(r).astype(jnp.int32)
+    )
+    return jnp.mean(per_row)
+
+
+def loss_per_seq(flat: jax.Array, tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Per-sequence mean next-token cross-entropy, f32[B].
+
+    Used by the downstream evaluation harness (Table 1): multiple-choice
+    candidates are scored by length-normalized logprob, one candidate per
+    batch row.
+    """
+    params = unflatten(flat, cfg)
+    logits = forward(params, tokens[:, :-1], cfg)
+    b, s = logits.shape[0], logits.shape[1]
+    per_row = xent_kernel.cross_entropy(
+        logits.reshape(b * s, cfg.vocab), tokens[:, 1:].reshape(b * s).astype(jnp.int32)
+    )
+    return jnp.mean(per_row.reshape(b, s), axis=-1)
+
+
+def grad_fn(flat: jax.Array, tokens: jax.Array, cfg: ModelConfig):
+    """(loss, grad f32[P]) on one microbatch."""
+    return jax.value_and_grad(loss_fn)(flat, tokens, cfg)
+
+
+# --------------------------------------------------------------------------
+# DeMo compression / decode / update (chunked DCT domain)
+# --------------------------------------------------------------------------
+
+
+def demo_dims(cfg: ModelConfig) -> tuple[int, int, int, int]:
+    """(P, P_pad, n_chunks, C): flat length, padded length, chunk count and
+    total transmitted coefficient count per pseudo-gradient."""
+    p = param_count(cfg)
+    m = cfg.chunk * cfg.chunk
+    n_chunks = (p + m - 1) // m
+    return p, n_chunks * m, n_chunks, n_chunks * cfg.topk
+
+
+def _to_chunks(flat: jax.Array, cfg: ModelConfig) -> jax.Array:
+    p, p_pad, n_chunks, _ = demo_dims(cfg)
+    padded = jnp.concatenate([flat, jnp.zeros((p_pad - p,), flat.dtype)])
+    return padded.reshape(n_chunks, cfg.chunk, cfg.chunk)
+
+
+def _from_chunks(chunks: jax.Array, cfg: ModelConfig) -> jax.Array:
+    p, _, _, _ = demo_dims(cfg)
+    return chunks.reshape(-1)[:p]
+
+
+def demo_compress(e: jax.Array, g: jax.Array, decay: jax.Array, cfg: ModelConfig):
+    """One DeMo encode step (Algorithm 2, lines 2-8).
+
+    e <- decay * e + g; q = DCT(chunk(e)); (vals, idx) = top-k(q);
+    e <- e - IDCT(scatter(vals, idx)).
+
+    Returns (vals f32[C], idx i32[C] with *global* coefficient indices
+    chunk_id * chunk^2 + local, e' f32[P]).
+    """
+    _, _, n_chunks, _ = demo_dims(cfg)
+    m = cfg.chunk * cfg.chunk
+    e1 = decay * e + g
+    q = dct_kernel.dct2(_to_chunks(e1, cfg))  # (n, c, c)
+    vals, idx_local = topk_kernel.topk_compress(q.reshape(n_chunks, m), cfg.topk)
+    idx_global = idx_local + (jnp.arange(n_chunks, dtype=jnp.int32) * m)[:, None]
+    # Transmitted estimate, removed from the local error buffer.
+    rows = jnp.broadcast_to(jnp.arange(n_chunks)[:, None], idx_local.shape)
+    q_hat = jnp.zeros((n_chunks, m), jnp.float32).at[rows, idx_local].set(vals)
+    e2 = e1 - _from_chunks(dct_kernel.idct2(q_hat.reshape(n_chunks, cfg.chunk, cfg.chunk)), cfg)
+    return vals.reshape(-1), idx_global.reshape(-1), e2
+
+
+def coeff_to_delta(coeff: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Dense DCT-coefficient vector f32[P_pad] -> parameter-space Delta f32[P]."""
+    _, _, n_chunks, _ = demo_dims(cfg)
+    return _from_chunks(
+        dct_kernel.idct2(coeff.reshape(n_chunks, cfg.chunk, cfg.chunk)), cfg
+    )
+
+
+def apply_update(flat: jax.Array, coeff: jax.Array, lr: jax.Array, cfg: ModelConfig):
+    """Signed descent (Algorithm 2 lines 15-16 + eq. 1): theta - lr*sign(IDCT(Q))."""
+    delta = coeff_to_delta(coeff, cfg)
+    return flat - lr * jnp.sign(delta)
+
+
+def eval_peer(
+    flat: jax.Array,
+    coeff: jax.Array,
+    beta: jax.Array,
+    tok_assigned: jax.Array,
+    tok_random: jax.Array,
+    cfg: ModelConfig,
+):
+    """Fused Gauntlet primary evaluation (Algorithm 1, validator loop).
+
+    Applies the peer's *signed* decoded pseudo-gradient with step beta and
+    returns (L(theta, D_assigned), L(theta', D_assigned),
+             L(theta, D_rand),     L(theta', D_rand)) so the validator can
+    form LossScore on both data subsets from one artifact call.
+    """
+    theta_p = flat - beta * jnp.sign(coeff_to_delta(coeff, cfg))
+    la0 = loss_fn(flat, tok_assigned, cfg)
+    la1 = loss_fn(theta_p, tok_assigned, cfg)
+    lr0 = loss_fn(flat, tok_random, cfg)
+    lr1 = loss_fn(theta_p, tok_random, cfg)
+    return la0, la1, lr0, lr1
+
+
+# --------------------------------------------------------------------------
+# Centralized AdamW baseline (the paper's Fig. 1 / Table 1 comparison)
+# --------------------------------------------------------------------------
+
+
+def adamw_step(
+    flat: jax.Array,
+    m: jax.Array,
+    v: jax.Array,
+    tokens: jax.Array,
+    lr: jax.Array,
+    t: jax.Array,
+    cfg: ModelConfig,
+):
+    """One fused AdamW step on one (aggregated) batch.
+
+    t is the 1-based step count as f32 (bias correction). Weight decay is
+    decoupled. Returns (loss, theta', m', v').
+    """
+    loss, g = jax.value_and_grad(loss_fn)(flat, tokens, cfg)
+    b1, b2 = cfg.adamw_beta1, cfg.adamw_beta2
+    m1 = b1 * m + (1.0 - b1) * g
+    v1 = b2 * v + (1.0 - b2) * jnp.square(g)
+    mhat = m1 / (1.0 - jnp.power(b1, t))
+    vhat = v1 / (1.0 - jnp.power(b2, t))
+    upd = mhat / (jnp.sqrt(vhat) + cfg.adamw_eps) + cfg.adamw_wd * flat
+    return loss, flat - lr * upd, m1, v1

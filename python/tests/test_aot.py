@@ -1,0 +1,77 @@
+"""AOT pipeline: entry points lower to valid HLO text, meta is consistent."""
+
+import json
+import math
+import os
+
+import pytest
+
+from compile import aot, configs, model
+
+CFG = configs.NANO
+
+
+class TestMeta:
+    def test_meta_offsets_cover_param_vector(self):
+        meta = aot.build_meta(CFG)
+        off = 0
+        for spec in meta["params"]:
+            assert spec["offset"] == off
+            assert spec["size"] == math.prod(spec["shape"])
+            off += spec["size"]
+        assert off == meta["param_count"]
+
+    def test_meta_demo_dims(self):
+        meta = aot.build_meta(CFG)
+        p, p_pad, n_chunks, c_total = model.demo_dims(CFG)
+        assert meta["param_count"] == p
+        assert meta["padded_count"] == p_pad
+        assert meta["n_chunks"] == n_chunks
+        assert meta["coeff_count"] == c_total
+
+    def test_meta_lists_all_artifacts(self):
+        meta = aot.build_meta(CFG)
+        assert meta["artifacts"] == sorted(
+            ["loss", "loss_per_seq", "grad", "demo_compress", "apply_update", "eval_peer", "adamw_step"]
+        )
+
+    def test_meta_json_serializable(self):
+        json.dumps(aot.build_meta(CFG))
+
+
+class TestLowering:
+    def test_entry_points_have_expected_arity(self):
+        eps = aot.entry_points(CFG)
+        arity = {name: len(specs) for name, (_, specs) in eps.items()}
+        assert arity == {
+            "loss": 2,
+            "loss_per_seq": 2,
+            "grad": 2,
+            "demo_compress": 3,
+            "apply_update": 3,
+            "eval_peer": 5,
+            "adamw_step": 6,
+        }
+
+    @pytest.mark.parametrize("name", ["loss", "apply_update"])
+    def test_lowers_to_hlo_text(self, name):
+        import jax
+
+        fn, arg_specs = aot.entry_points(CFG)[name]
+        text = aot.to_hlo_text(jax.jit(fn).lower(*arg_specs))
+        assert text.startswith("HloModule")
+        assert "ENTRY" in text
+
+    def test_artifacts_on_disk_if_built(self):
+        """If `make artifacts` ran, the nano directory must be complete."""
+        d = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts", "nano")
+        if not os.path.isdir(d):
+            pytest.skip("artifacts not built")
+        meta = json.load(open(os.path.join(d, "meta.json")))
+        for name in meta["artifacts"]:
+            path = os.path.join(d, f"{name}.hlo.txt")
+            assert os.path.exists(path), path
+            with open(path) as f:
+                assert f.read(9) == "HloModule"
+        init = os.path.join(d, "init_params.bin")
+        assert os.path.getsize(init) == 4 * meta["param_count"]

@@ -1,0 +1,234 @@
+"""Layer-1 correctness: every Pallas kernel against its pure-jnp oracle.
+
+Hypothesis sweeps shapes / chunk sizes / k / dtypes; fixed seeds keep the
+suite deterministic. interpret-mode Pallas is slow, so example counts are
+deliberately modest — each case still exercises a distinct code path
+(padding vs exact grid, ties, extreme magnitudes, non-square batches).
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from compile.kernels import cross_entropy as xk
+from compile.kernels import dct as dk
+from compile.kernels import ref
+from compile.kernels import topk as tk
+
+hypothesis.settings.register_profile(
+    "gauntlet", deadline=None, max_examples=12, derandomize=True
+)
+hypothesis.settings.load_profile("gauntlet")
+
+
+def rng(seed=0):
+    return np.random.default_rng(seed)
+
+
+# ---------------------------------------------------------------- DCT ----
+
+
+class TestDct:
+    def test_basis_orthonormal(self):
+        for c in (8, 64):
+            d = ref.dct_basis(c)
+            np.testing.assert_allclose(d @ d.T, np.eye(c), atol=1e-5)
+
+    def test_matches_ref(self):
+        x = jnp.asarray(rng(1).normal(size=(9, 64, 64)).astype(np.float32))
+        np.testing.assert_allclose(dk.dct2(x), ref.dct2(x), atol=1e-4)
+
+    def test_roundtrip_identity(self):
+        x = jnp.asarray(rng(2).normal(size=(8, 64, 64)).astype(np.float32))
+        np.testing.assert_allclose(dk.idct2(dk.dct2(x)), x, atol=1e-4)
+
+    def test_energy_preserved(self):
+        """Orthonormal transform: per-chunk L2 norm is invariant."""
+        x = jnp.asarray(rng(3).normal(size=(4, 64, 64)).astype(np.float32))
+        y = dk.dct2(x)
+        np.testing.assert_allclose(
+            jnp.linalg.norm(y.reshape(4, -1), axis=1),
+            jnp.linalg.norm(x.reshape(4, -1), axis=1),
+            rtol=1e-4,
+        )
+
+    def test_constant_chunk_concentrates_dc(self):
+        """A constant chunk has all energy in the (0, 0) coefficient."""
+        x = jnp.ones((1, 64, 64), jnp.float32) * 3.0
+        y = np.array(dk.dct2(x))[0]
+        assert abs(y[0, 0] - 3.0 * 64) < 1e-3
+        y[0, 0] = 0.0
+        assert np.abs(y).max() < 1e-4
+
+    @given(
+        n=st.integers(1, 17),
+        c=st.sampled_from([8, 16, 32]),
+        bc=st.sampled_from([1, 3, 8]),
+        seed=st.integers(0, 3),
+    )
+    def test_hypothesis_shapes(self, n, c, bc, seed):
+        x = jnp.asarray(rng(seed).normal(size=(n, c, c)).astype(np.float32))
+        np.testing.assert_allclose(dk.dct2(x, block_chunks=bc), ref.dct2(x), atol=1e-4)
+        np.testing.assert_allclose(dk.idct2(x, block_chunks=bc), ref.idct2(x), atol=1e-4)
+
+    def test_linearity(self):
+        a = jnp.asarray(rng(4).normal(size=(3, 16, 16)).astype(np.float32))
+        b = jnp.asarray(rng(5).normal(size=(3, 16, 16)).astype(np.float32))
+        np.testing.assert_allclose(
+            dk.dct2(2.0 * a + b), 2.0 * dk.dct2(a) + dk.dct2(b), atol=1e-4
+        )
+
+
+# --------------------------------------------------------------- top-k ----
+
+
+class TestTopk:
+    def test_matches_ref(self):
+        c = jnp.asarray(rng(10).normal(size=(13, 256)).astype(np.float32))
+        v, i = tk.topk_compress(c, 16)
+        vr, ir = ref.topk_compress(c, 16)
+        np.testing.assert_array_equal(np.asarray(i), np.asarray(ir))
+        np.testing.assert_allclose(v, vr, atol=0)
+
+    def test_signs_preserved(self):
+        c = jnp.asarray(-np.abs(rng(11).normal(size=(2, 64))).astype(np.float32))
+        v, _ = tk.topk_compress(c, 4)
+        assert np.all(np.asarray(v) < 0)
+
+    def test_k_equals_m_is_sorted_permutation(self):
+        c = jnp.asarray(rng(12).normal(size=(3, 32)).astype(np.float32))
+        v, i = tk.topk_compress(c, 32)
+        for r in range(3):
+            assert sorted(np.asarray(i)[r].tolist()) == list(range(32))
+            mags = np.abs(np.asarray(v)[r])
+            assert np.all(np.diff(mags) <= 1e-7)
+
+    def test_tie_breaks_lower_index(self):
+        c = jnp.asarray(np.array([[1.0, -1.0, 1.0, 0.5]], np.float32))
+        _, i = tk.topk_compress(c, 3)
+        vr, ir = ref.topk_compress(c, 3)
+        np.testing.assert_array_equal(np.asarray(i), np.asarray(ir))
+        assert np.asarray(i)[0].tolist() == [0, 1, 2]
+
+    @given(
+        n=st.integers(1, 10),
+        m=st.sampled_from([16, 64, 100]),
+        k=st.integers(1, 16),
+        seed=st.integers(0, 3),
+    )
+    def test_hypothesis_matches_ref(self, n, m, k, seed):
+        c = jnp.asarray(rng(seed).normal(size=(n, m)).astype(np.float32))
+        v, i = tk.topk_compress(c, k)
+        vr, ir = ref.topk_compress(c, k)
+        np.testing.assert_array_equal(np.asarray(i), np.asarray(ir))
+        np.testing.assert_allclose(v, vr, atol=0)
+
+    def test_decompress_roundtrip(self):
+        c = jnp.asarray(rng(13).normal(size=(5, 64)).astype(np.float32))
+        v, i = tk.topk_compress(c, 64)
+        np.testing.assert_allclose(ref.topk_decompress(v, i, 64), c, atol=0)
+
+
+# ------------------------------------------------------- cross-entropy ----
+
+
+class TestCrossEntropy:
+    def test_matches_ref(self):
+        g = rng(20)
+        lg = jnp.asarray(g.normal(size=(37, 512)).astype(np.float32))
+        lb = jnp.asarray(g.integers(0, 512, size=(37,)).astype(np.int32))
+        np.testing.assert_allclose(xk.cross_entropy(lg, lb), ref.cross_entropy(lg, lb), atol=1e-4)
+
+    def test_uniform_logits_give_log_v(self):
+        lg = jnp.zeros((8, 1000), jnp.float32)
+        lb = jnp.arange(8, dtype=jnp.int32)
+        np.testing.assert_allclose(
+            xk.cross_entropy(lg, lb), np.full(8, np.log(1000.0), np.float32), rtol=1e-5
+        )
+
+    def test_large_logits_stable(self):
+        """Flash-style max subtraction keeps huge logits finite."""
+        lg = jnp.asarray(rng(21).normal(size=(4, 64)).astype(np.float32)) * 1e4
+        lb = jnp.zeros((4,), jnp.int32)
+        out = np.asarray(xk.cross_entropy(lg, lb))
+        assert np.all(np.isfinite(out))
+
+    def test_grad_matches_analytic(self):
+        g = rng(22)
+        lg = jnp.asarray(g.normal(size=(16, 128)).astype(np.float32))
+        lb = jnp.asarray(g.integers(0, 128, size=(16,)).astype(np.int32))
+        got = jax.grad(lambda z: jnp.sum(xk.cross_entropy(z, lb)))(lg)
+        want = ref.cross_entropy_grad(lg, lb, jnp.ones((16,)))
+        np.testing.assert_allclose(got, want, atol=1e-5)
+
+    def test_grad_matches_finite_difference(self):
+        g = rng(23)
+        lg = jnp.asarray(g.normal(size=(2, 8)).astype(np.float32))
+        lb = jnp.asarray([1, 5], dtype=jnp.int32)
+        f = lambda z: float(jnp.sum(xk.cross_entropy(z, lb)))  # noqa: E731
+        grad = np.asarray(jax.grad(lambda z: jnp.sum(xk.cross_entropy(z, lb)))(lg))
+        eps = 1e-3
+        for r, c in [(0, 1), (1, 5), (0, 3)]:
+            e = np.zeros_like(np.asarray(lg))
+            e[r, c] = eps
+            fd = (f(lg + e) - f(lg - e)) / (2 * eps)
+            assert abs(fd - grad[r, c]) < 1e-2, (r, c, fd, grad[r, c])
+
+    @given(
+        r=st.integers(1, 40),
+        v=st.sampled_from([8, 64, 500]),
+        br=st.sampled_from([4, 32]),
+        seed=st.integers(0, 3),
+    )
+    def test_hypothesis_shapes(self, r, v, br, seed):
+        g = rng(seed)
+        lg = jnp.asarray(g.normal(size=(r, v)).astype(np.float32))
+        lb = jnp.asarray(g.integers(0, v, size=(r,)).astype(np.int32))
+        np.testing.assert_allclose(
+            xk.cross_entropy(lg, lb, block_rows=br), ref.cross_entropy(lg, lb), atol=1e-4
+        )
+
+    def test_bf16_logits(self):
+        g = rng(24)
+        lg = jnp.asarray(g.normal(size=(8, 32)).astype(np.float32)).astype(jnp.bfloat16)
+        lb = jnp.asarray(g.integers(0, 32, size=(8,)).astype(np.int32))
+        got = xk.cross_entropy(lg, lb)
+        want = ref.cross_entropy(lg.astype(jnp.float32), lb)
+        np.testing.assert_allclose(got, want, atol=5e-2)
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])
+
+
+class TestTopkMethods:
+    """Both kernel strategies (itermax sweep / stable argsort) must agree
+    with the oracle and with each other — they are perf alternatives, not
+    semantic variants."""
+
+    @given(
+        n=st.integers(1, 8),
+        m=st.sampled_from([32, 100]),
+        k=st.integers(1, 12),
+        seed=st.integers(0, 2),
+    )
+    def test_methods_agree(self, n, m, k, seed):
+        c = jnp.asarray(rng(seed).normal(size=(n, m)).astype(np.float32))
+        vs, is_ = tk.topk_compress(c, k, method="sort")
+        vi, ii = tk.topk_compress(c, k, method="itermax")
+        vr, ir = ref.topk_compress(c, k)
+        np.testing.assert_array_equal(np.asarray(is_), np.asarray(ir))
+        np.testing.assert_array_equal(np.asarray(ii), np.asarray(ir))
+        np.testing.assert_allclose(vs, vr, atol=0)
+        np.testing.assert_allclose(vi, vr, atol=0)
+
+    def test_methods_agree_on_ties(self):
+        c = jnp.asarray(np.array([[1.0, -1.0, 1.0, -1.0, 0.5]], np.float32))
+        vs, is_ = tk.topk_compress(c, 4, method="sort")
+        vi, ii = tk.topk_compress(c, 4, method="itermax")
+        np.testing.assert_array_equal(np.asarray(is_), np.asarray(ii))
+        np.testing.assert_allclose(vs, vi, atol=0)

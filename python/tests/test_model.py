@@ -1,0 +1,247 @@
+"""Layer-2 correctness: transformer, DeMo ops, AdamW baseline."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import configs, model
+from compile.kernels import ref
+
+CFG = configs.NANO
+
+
+def rng(seed=0):
+    return np.random.default_rng(seed)
+
+
+def batch(cfg=CFG, seed=0):
+    return jnp.asarray(
+        rng(seed).integers(0, cfg.vocab, size=(cfg.batch, cfg.seq + 1)).astype(np.int32)
+    )
+
+
+@pytest.fixture(scope="module")
+def flat():
+    return jnp.asarray(model.init_params(CFG, seed=0))
+
+
+class TestParams:
+    def test_param_count_matches_specs(self, flat):
+        assert flat.size == model.param_count(CFG)
+
+    def test_param_count_formula(self):
+        # embed + L * (4 attn + 3 mlp mats + 2 norms) + final norm
+        c = CFG
+        expected = c.vocab * c.d_model + c.n_layers * (
+            4 * c.d_model * c.d_model + 3 * c.d_model * c.d_ff + 2 * c.d_model
+        ) + c.d_model
+        assert model.param_count(c) == expected
+
+    def test_unflatten_shapes_and_coverage(self, flat):
+        p = model.unflatten(flat, CFG)
+        specs = dict(model.param_specs(CFG))
+        assert set(p) == set(specs)
+        total = 0
+        for name, arr in p.items():
+            assert arr.shape == specs[name], name
+            total += arr.size
+        assert total == flat.size
+
+    def test_unflatten_is_exact_slicing(self, flat):
+        p = model.unflatten(flat, CFG)
+        emb = np.asarray(p["embed"]).reshape(-1)
+        np.testing.assert_array_equal(emb, np.asarray(flat)[: emb.size])
+
+    def test_init_deterministic(self):
+        a = model.init_params(CFG, seed=0)
+        b = model.init_params(CFG, seed=0)
+        np.testing.assert_array_equal(a, b)
+        c = model.init_params(CFG, seed=1)
+        assert np.abs(a - c).max() > 0
+
+    def test_norms_init_to_one(self, flat):
+        p = model.unflatten(flat, CFG)
+        np.testing.assert_array_equal(np.asarray(p["final_norm"]), np.ones(CFG.d_model))
+
+
+class TestForward:
+    def test_logit_shape(self, flat):
+        p = model.unflatten(flat, CFG)
+        toks = batch()[:, :-1]
+        logits = model.forward(p, toks, CFG)
+        assert logits.shape == (CFG.batch, CFG.seq, CFG.vocab)
+
+    def test_initial_loss_near_log_vocab(self, flat):
+        loss = model.loss_fn(flat, batch(), CFG)
+        assert abs(float(loss) - np.log(CFG.vocab)) < 0.5
+
+    def test_causality(self, flat):
+        """Perturbing a future token must not change earlier logits."""
+        p = model.unflatten(flat, CFG)
+        toks = np.asarray(batch()[:, :-1]).copy()
+        a = np.asarray(model.forward(p, jnp.asarray(toks), CFG))
+        toks2 = toks.copy()
+        toks2[:, -1] = (toks2[:, -1] + 1) % CFG.vocab
+        b = np.asarray(model.forward(p, jnp.asarray(toks2), CFG))
+        np.testing.assert_allclose(a[:, :-1], b[:, :-1], atol=1e-5)
+        assert np.abs(a[:, -1] - b[:, -1]).max() > 1e-6
+
+    def test_rope_properties(self):
+        """RoPE is identity at position 0, norm-preserving, position-mixing."""
+        x = jnp.asarray(rng(9).normal(size=(1, 2, CFG.seq, CFG.head_dim)).astype(np.float32))
+        y = np.asarray(model._rope(x))
+        np.testing.assert_allclose(y[:, :, 0], np.asarray(x)[:, :, 0], atol=1e-6)
+        np.testing.assert_allclose(
+            np.linalg.norm(y, axis=-1), np.linalg.norm(np.asarray(x), axis=-1), rtol=1e-5
+        )
+        assert np.abs(y[:, :, 1:] - np.asarray(x)[:, :, 1:]).max() > 1e-3
+
+    def test_order_sensitivity(self, flat):
+        """Permuting earlier tokens changes the last position's logits."""
+        p = model.unflatten(flat, CFG)
+        toks = np.asarray(batch()[:, :-1]).copy()
+        a = np.asarray(model.forward(p, jnp.asarray(toks), CFG))[:, -1]
+        toks2 = toks.copy()
+        toks2[:, [0, 1]] = toks2[:, [1, 0]]
+        b = np.asarray(model.forward(p, jnp.asarray(toks2), CFG))[:, -1]
+        assert np.abs(a - b).max() > 1e-6
+
+    def test_grad_matches_finite_difference(self, flat):
+        toks = batch()
+        loss0, g = model.grad_fn(flat, toks, CFG)
+        g = np.asarray(g)
+        eps = 1e-2
+        f = lambda th: float(model.loss_fn(th, toks, CFG))  # noqa: E731
+        idxs = [0, 17, int(flat.size // 2), int(flat.size - 1)]
+        for i in idxs:
+            e = np.zeros(flat.size, np.float32)
+            e[i] = eps
+            fd = (f(flat + jnp.asarray(e)) - f(flat - jnp.asarray(e))) / (2 * eps)
+            assert abs(fd - g[i]) < 5e-3, (i, fd, g[i])
+
+    def test_loss_decreases_with_sgd(self, flat):
+        toks = batch()
+        th = flat
+        first = None
+        for _ in range(5):
+            loss, g = model.grad_fn(th, toks, CFG)
+            first = first if first is not None else float(loss)
+            th = th - 0.5 * g
+        assert float(model.loss_fn(th, toks, CFG)) < first - 0.3
+
+
+class TestDemo:
+    def test_dims(self):
+        p, p_pad, n_chunks, c_total = model.demo_dims(CFG)
+        m = CFG.chunk * CFG.chunk
+        assert p == model.param_count(CFG)
+        assert p_pad == n_chunks * m and p_pad >= p and p_pad - p < m
+        assert c_total == n_chunks * CFG.topk
+
+    def test_compress_shapes_and_index_layout(self, flat):
+        p, p_pad, n_chunks, c_total = model.demo_dims(CFG)
+        g = jnp.asarray(rng(3).normal(size=(p,)).astype(np.float32))
+        vals, idx, e2 = model.demo_compress(jnp.zeros((p,)), g, jnp.float32(0.999), CFG)
+        assert vals.shape == (c_total,) and idx.shape == (c_total,)
+        assert e2.shape == (p,)
+        idx = np.asarray(idx)
+        m = CFG.chunk * CFG.chunk
+        # indices are globally unique and each chunk owns its own stripe
+        assert len(set(idx.tolist())) == c_total
+        chunk_of = idx // m
+        np.testing.assert_array_equal(
+            chunk_of, np.repeat(np.arange(n_chunks), CFG.topk)
+        )
+
+    def test_error_feedback_invariant(self, flat):
+        """e' == decay*e + g - IDCT(scatter(vals, idx)) exactly."""
+        p, p_pad, n_chunks, _ = model.demo_dims(CFG)
+        e = jnp.asarray(rng(4).normal(size=(p,)).astype(np.float32))
+        g = jnp.asarray(rng(5).normal(size=(p,)).astype(np.float32))
+        decay = jnp.float32(0.9)
+        vals, idx, e2 = model.demo_compress(e, g, decay, CFG)
+        coeff = np.zeros(p_pad, np.float32)
+        coeff[np.asarray(idx)] = np.asarray(vals)
+        est = np.asarray(model.coeff_to_delta(jnp.asarray(coeff), CFG))
+        want = np.asarray(decay * e + g) - est
+        np.testing.assert_allclose(np.asarray(e2), want, atol=1e-4)
+
+    def test_transmitted_energy_dominates(self, flat):
+        """Top-k of the DCT should capture the largest coefficients: the
+        transmitted estimate's energy >= what any random-k choice gets."""
+        p, p_pad, n_chunks, _ = model.demo_dims(CFG)
+        g = jnp.asarray(rng(6).normal(size=(p,)).astype(np.float32))
+        vals, idx, e2 = model.demo_compress(jnp.zeros((p,)), g, jnp.float32(0), CFG)
+        # residual energy strictly less than input energy
+        assert float(jnp.linalg.norm(e2)) < float(jnp.linalg.norm(g))
+
+    def test_apply_update_is_signed_step(self, flat):
+        p, p_pad, _, _ = model.demo_dims(CFG)
+        coeff = jnp.asarray(rng(7).normal(size=(p_pad,)).astype(np.float32))
+        lr = jnp.float32(0.01)
+        th2 = model.apply_update(flat, coeff, lr, CFG)
+        step = np.asarray(th2 - flat)
+        nz = step[np.abs(step) > 0]
+        np.testing.assert_allclose(np.abs(nz), 0.01, rtol=1e-4)
+
+    def test_eval_peer_consistency(self, flat):
+        """eval_peer's four losses match loss_fn on manually stepped params."""
+        p, p_pad, _, _ = model.demo_dims(CFG)
+        coeff = jnp.asarray(rng(8).normal(size=(p_pad,)).astype(np.float32))
+        beta = jnp.float32(0.004)
+        ta, trd = batch(seed=1), batch(seed=2)
+        la0, la1, lr0, lr1 = model.eval_peer(flat, coeff, beta, ta, trd, CFG)
+        thp = flat - beta * jnp.sign(model.coeff_to_delta(coeff, CFG))
+        np.testing.assert_allclose(float(la0), float(model.loss_fn(flat, ta, CFG)), rtol=1e-5)
+        np.testing.assert_allclose(float(la1), float(model.loss_fn(thp, ta, CFG)), rtol=1e-5)
+        np.testing.assert_allclose(float(lr0), float(model.loss_fn(flat, trd, CFG)), rtol=1e-5)
+        np.testing.assert_allclose(float(lr1), float(model.loss_fn(thp, trd, CFG)), rtol=1e-5)
+
+    def test_demo_training_reduces_loss(self, flat):
+        """A few self-aggregated DeMo steps reduce loss on a fixed batch."""
+        p, p_pad, n_chunks, _ = model.demo_dims(CFG)
+        toks = batch()
+        th, e = flat, jnp.zeros((p,))
+        l0 = float(model.loss_fn(th, toks, CFG))
+        for _ in range(5):
+            _, g = model.grad_fn(th, toks, CFG)
+            vals, idx, e = model.demo_compress(e, g, jnp.float32(0.9), CFG)
+            coeff = np.zeros(p_pad, np.float32)
+            norm = float(np.linalg.norm(np.asarray(vals)))
+            coeff[np.asarray(idx)] = np.asarray(vals) / max(norm, 1e-12)
+            th = model.apply_update(th, jnp.asarray(coeff), jnp.float32(0.02), CFG)
+        assert float(model.loss_fn(th, toks, CFG)) < l0 - 0.5
+
+
+class TestAdamW:
+    def test_matches_manual_adamw(self, flat):
+        toks = batch()
+        m = jnp.zeros_like(flat)
+        v = jnp.zeros_like(flat)
+        lr, t = jnp.float32(1e-3), jnp.float32(1)
+        loss, th1, m1, v1 = model.adamw_step(flat, m, v, toks, lr, t, CFG)
+        _, g = model.grad_fn(flat, toks, CFG)
+        g = np.asarray(g, np.float64)
+        b1, b2 = CFG.adamw_beta1, CFG.adamw_beta2
+        mm = (1 - b1) * g
+        vv = (1 - b2) * g * g
+        mhat = mm / (1 - b1)
+        vhat = vv / (1 - b2)
+        upd = mhat / (np.sqrt(vhat) + CFG.adamw_eps) + CFG.adamw_wd * np.asarray(flat, np.float64)
+        np.testing.assert_allclose(np.asarray(th1), np.asarray(flat) - 1e-3 * upd, atol=1e-6)
+
+    def test_loss_decreases(self, flat):
+        toks = batch()
+        th = flat
+        m = jnp.zeros_like(flat)
+        v = jnp.zeros_like(flat)
+        l0 = None
+        for t in range(1, 7):
+            loss, th, m, v = model.adamw_step(th, m, v, toks, jnp.float32(3e-3), jnp.float32(t), CFG)
+            l0 = l0 if l0 is not None else float(loss)
+        assert float(model.loss_fn(th, toks, CFG)) < l0 - 0.3
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

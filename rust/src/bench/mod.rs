@@ -1,0 +1,208 @@
+//! Bench harness utilities (criterion is unavailable in this vendored
+//! environment; the `[[bench]]` targets use `harness = false` and this
+//! module for timing, table rendering, and result persistence).
+
+use std::fmt::Write as _;
+use std::time::{Duration, Instant};
+
+use crate::minjson::{self, Value};
+use crate::util::{mean, percentile, std_dev};
+
+/// Timing summary of repeated measurements.
+#[derive(Clone, Debug)]
+pub struct Timing {
+    pub iters: usize,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub p50_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+}
+
+impl Timing {
+    pub fn per_iter_human(&self) -> String {
+        human_duration(self.mean_s)
+    }
+}
+
+pub fn human_duration(secs: f64) -> String {
+    if secs >= 1.0 {
+        format!("{secs:.3} s")
+    } else if secs >= 1e-3 {
+        format!("{:.3} ms", secs * 1e3)
+    } else {
+        format!("{:.1} µs", secs * 1e6)
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` warmup calls.
+pub fn time_it<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Timing {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    Timing {
+        iters,
+        mean_s: mean(&samples),
+        std_s: std_dev(&samples),
+        p50_s: percentile(&samples, 50.0),
+        min_s: samples.iter().cloned().fold(f64::INFINITY, f64::min),
+        max_s: samples.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+    }
+}
+
+/// Wall-clock a single closure.
+pub fn elapsed<T, F: FnOnce() -> T>(f: F) -> (T, Duration) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed())
+}
+
+/// Plain-text table with aligned columns (the bench targets print the
+/// paper's tables/series in this shape).
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: vec![],
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "\n== {} ==", self.title);
+        let line = |cells: &[String], widths: &[usize]| {
+            let mut s = String::new();
+            for (c, w) in cells.iter().zip(widths) {
+                let _ = write!(s, "{c:<w$}  ");
+            }
+            s.trim_end().to_string()
+        };
+        let _ = writeln!(out, "{}", line(&self.headers, &widths));
+        let total: usize = widths.iter().sum::<usize>() + 2 * widths.len();
+        let _ = writeln!(out, "{}", "-".repeat(total));
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", line(row, &widths));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Persist a bench result JSON under `bench_results/` for later plotting.
+pub fn save_json(name: &str, value: &Value) {
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("bench_results");
+    let _ = std::fs::create_dir_all(&dir);
+    let path = dir.join(format!("{name}.json"));
+    if std::fs::write(&path, value.write()).is_ok() {
+        println!("[saved {}]", path.display());
+    }
+}
+
+/// Series (x, y) -> JSON for save_json.
+pub fn series_json(pairs: &[(f64, f64)]) -> Value {
+    Value::Arr(
+        pairs
+            .iter()
+            .map(|(x, y)| minjson::obj(vec![("x", minjson::num(*x)), ("y", minjson::num(*y))]))
+            .collect(),
+    )
+}
+
+/// Render a crude ASCII sparkline of a series (losses over rounds) so bench
+/// output shows the curve shape directly in the terminal.
+pub fn sparkline(ys: &[f64], width: usize) -> String {
+    if ys.is_empty() {
+        return String::new();
+    }
+    const BARS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+    let lo = ys.iter().cloned().fold(f64::INFINITY, f64::min);
+    let hi = ys.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let span = (hi - lo).max(1e-12);
+    let step = (ys.len() as f64 / width.max(1) as f64).max(1.0);
+    let mut out = String::new();
+    let mut i = 0.0;
+    while (i as usize) < ys.len() && out.chars().count() < width {
+        let y = ys[i as usize];
+        let b = (((y - lo) / span) * 7.0).round() as usize;
+        out.push(BARS[b.min(7)]);
+        i += step;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_it_reports_sane_stats() {
+        let t = time_it(1, 5, || std::thread::sleep(Duration::from_millis(2)));
+        assert_eq!(t.iters, 5);
+        assert!(t.mean_s >= 0.002, "mean {}", t.mean_s);
+        assert!(t.min_s <= t.p50_s && t.p50_s <= t.max_s);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("demo", &["name", "value"]);
+        t.row(&["a".into(), "1".into()]);
+        t.row(&["long-name".into(), "2.5".into()]);
+        let s = t.render();
+        assert!(s.contains("== demo =="));
+        assert!(s.contains("long-name"));
+        let lines: Vec<&str> = s.lines().filter(|l| !l.is_empty()).collect();
+        assert_eq!(lines.len(), 5); // title, header, rule, 2 rows
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn table_rejects_wrong_arity() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn human_duration_scales() {
+        assert_eq!(human_duration(2.0), "2.000 s");
+        assert_eq!(human_duration(0.0021), "2.100 ms");
+        assert!(human_duration(3e-6).contains("µs"));
+    }
+
+    #[test]
+    fn sparkline_is_bounded_and_monotone_shape() {
+        let ys: Vec<f64> = (0..100).map(|i| i as f64).collect();
+        let s = sparkline(&ys, 20);
+        assert!(s.chars().count() <= 20);
+        let first = s.chars().next().unwrap();
+        let last = s.chars().last().unwrap();
+        assert_ne!(first, last, "rising series should change bars");
+        assert_eq!(sparkline(&[], 10), "");
+    }
+}

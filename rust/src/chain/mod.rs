@@ -1,0 +1,299 @@
+//! Simulated Bittensor substrate: block clock, permissionless registration,
+//! stake, weight commits, Yuma consensus, and token emission.
+//!
+//! Gauntlet's scores only become money once a validator posts them to the
+//! chain and the chain combines (possibly several) validators' weight
+//! vectors under the Yuma consensus protocol [18], weighting each validator
+//! by its stake and clipping outliers to the stake-majority consensus.
+//! This module provides exactly that substrate, plus the two pieces of
+//! chain state the paper leans on elsewhere: a global block clock used to
+//! timestamp put windows (§5) and the read-key registry for peers' buckets.
+
+use std::collections::BTreeMap;
+
+pub mod yuma;
+
+pub use yuma::{yuma_consensus, YumaParams};
+
+use crate::storage::ReadKey;
+
+/// A network participant id (paper: "uid" on the subnet).
+pub type Uid = u32;
+
+/// Milliseconds per block (Bittensor mainnet: 12 s).
+pub const BLOCK_MS: u64 = 12_000;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Neuron {
+    pub uid: Uid,
+    pub hotkey: String,
+    /// Stake in TAO; > 0 effectively makes the neuron a validator.
+    pub stake: f64,
+    /// Read credential for the neuron's bucket (posted at registration).
+    pub bucket_read_key: Option<ReadKey>,
+    pub registered_at_block: u64,
+    /// Cumulative emission received.
+    pub balance: f64,
+}
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum ChainError {
+    #[error("hotkey {0:?} already registered")]
+    DuplicateHotkey(String),
+    #[error("unknown uid {0}")]
+    UnknownUid(Uid),
+    #[error("weights must be finite and non-negative")]
+    BadWeights,
+    #[error("uid {0} has no stake; only validators may set weights")]
+    NotValidator(Uid),
+}
+
+/// The simulated subnet.
+pub struct Chain {
+    pub block: u64,
+    neurons: BTreeMap<Uid, Neuron>,
+    next_uid: Uid,
+    /// Latest committed weight vector per validator uid: target uid -> w.
+    weights: BTreeMap<Uid, BTreeMap<Uid, f64>>,
+    pub yuma: YumaParams,
+    /// TAO emitted to contributors per epoch (paper: real-valued payouts).
+    pub emission_per_epoch: f64,
+}
+
+impl Chain {
+    pub fn new() -> Self {
+        Chain {
+            block: 0,
+            neurons: BTreeMap::new(),
+            next_uid: 0,
+            weights: BTreeMap::new(),
+            yuma: YumaParams::default(),
+            emission_per_epoch: 1.0,
+        }
+    }
+
+    /// Advance the global clock.
+    pub fn advance_blocks(&mut self, n: u64) {
+        self.block += n;
+    }
+
+    /// Current chain time in ms (the "consistent global clock" of §3.2).
+    pub fn now_ms(&self) -> u64 {
+        self.block * BLOCK_MS
+    }
+
+    /// Permissionless registration: anyone with a fresh hotkey gets a uid.
+    /// (The live chain charges a registration fee / PoW; economically that
+    /// is folded into the incentive analysis, not modelled here.)
+    pub fn register(&mut self, hotkey: &str) -> Result<Uid, ChainError> {
+        if self.neurons.values().any(|n| n.hotkey == hotkey) {
+            return Err(ChainError::DuplicateHotkey(hotkey.to_string()));
+        }
+        let uid = self.next_uid;
+        self.next_uid += 1;
+        self.neurons.insert(
+            uid,
+            Neuron {
+                uid,
+                hotkey: hotkey.to_string(),
+                stake: 0.0,
+                bucket_read_key: None,
+                registered_at_block: self.block,
+                balance: 0.0,
+            },
+        );
+        Ok(uid)
+    }
+
+    pub fn add_stake(&mut self, uid: Uid, amount: f64) -> Result<(), ChainError> {
+        let n = self.neurons.get_mut(&uid).ok_or(ChainError::UnknownUid(uid))?;
+        n.stake += amount;
+        Ok(())
+    }
+
+    /// Publish the read key for the neuron's bucket (paper §5).
+    pub fn post_read_key(&mut self, uid: Uid, key: ReadKey) -> Result<(), ChainError> {
+        let n = self.neurons.get_mut(&uid).ok_or(ChainError::UnknownUid(uid))?;
+        n.bucket_read_key = Some(key);
+        Ok(())
+    }
+
+    pub fn neuron(&self, uid: Uid) -> Option<&Neuron> {
+        self.neurons.get(&uid)
+    }
+
+    pub fn neurons(&self) -> impl Iterator<Item = &Neuron> {
+        self.neurons.values()
+    }
+
+    pub fn uids(&self) -> Vec<Uid> {
+        self.neurons.keys().copied().collect()
+    }
+
+    /// Validators = staked neurons, ordered by stake descending.
+    pub fn validators(&self) -> Vec<Uid> {
+        let mut v: Vec<&Neuron> = self.neurons.values().filter(|n| n.stake > 0.0).collect();
+        v.sort_by(|a, b| b.stake.partial_cmp(&a.stake).unwrap());
+        v.into_iter().map(|n| n.uid).collect()
+    }
+
+    /// The highest-staked validator provides checkpoint locations and the
+    /// top-G peer list in the current protocol (paper §3.3).
+    pub fn lead_validator(&self) -> Option<Uid> {
+        self.validators().first().copied()
+    }
+
+    /// A validator commits its (pre-normalized, non-negative) weights.
+    pub fn set_weights(&mut self, validator: Uid, w: &[(Uid, f64)]) -> Result<(), ChainError> {
+        let v = self.neurons.get(&validator).ok_or(ChainError::UnknownUid(validator))?;
+        if v.stake <= 0.0 {
+            return Err(ChainError::NotValidator(validator));
+        }
+        if w.iter().any(|(_, x)| !x.is_finite() || *x < 0.0) {
+            return Err(ChainError::BadWeights);
+        }
+        for (uid, _) in w {
+            if !self.neurons.contains_key(uid) {
+                return Err(ChainError::UnknownUid(*uid));
+            }
+        }
+        self.weights.insert(validator, w.iter().copied().collect());
+        Ok(())
+    }
+
+    pub fn committed_weights(&self, validator: Uid) -> Option<&BTreeMap<Uid, f64>> {
+        self.weights.get(&validator)
+    }
+
+    /// Run one Yuma epoch: combine all committed validator weights into
+    /// consensus incentives and pay emission. Returns (uid, incentive)
+    /// with incentives summing to 1 over peers with any weight (or empty
+    /// if no validator has committed anything).
+    pub fn run_epoch(&mut self) -> Vec<(Uid, f64)> {
+        let validators: Vec<Uid> =
+            self.weights.keys().copied().filter(|v| self.neurons[v].stake > 0.0).collect();
+        if validators.is_empty() {
+            return vec![];
+        }
+        let stakes: Vec<f64> = validators.iter().map(|v| self.neurons[v].stake).collect();
+        let all_uids = self.uids();
+        let wmat: Vec<Vec<f64>> = validators
+            .iter()
+            .map(|v| {
+                let row = &self.weights[v];
+                all_uids.iter().map(|u| row.get(u).copied().unwrap_or(0.0)).collect()
+            })
+            .collect();
+        let incentives = yuma_consensus(&wmat, &stakes, &self.yuma);
+        let out: Vec<(Uid, f64)> = all_uids
+            .iter()
+            .copied()
+            .zip(incentives.iter().copied())
+            .filter(|(_, inc)| *inc > 0.0)
+            .collect();
+        for (uid, inc) in &out {
+            self.neurons.get_mut(uid).unwrap().balance += inc * self.emission_per_epoch;
+        }
+        out
+    }
+}
+
+impl Default for Chain {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn chain_with_validator() -> (Chain, Uid) {
+        let mut c = Chain::new();
+        let v = c.register("validator").unwrap();
+        c.add_stake(v, 1000.0).unwrap();
+        (c, v)
+    }
+
+    #[test]
+    fn registration_is_permissionless_and_uids_increment() {
+        let mut c = Chain::new();
+        let a = c.register("alice").unwrap();
+        let b = c.register("bob").unwrap();
+        assert_eq!((a, b), (0, 1));
+        assert_eq!(c.neuron(a).unwrap().hotkey, "alice");
+    }
+
+    #[test]
+    fn duplicate_hotkey_rejected_but_sybils_allowed() {
+        // The paper's "Duplicating Contributions" attack registers many
+        // hotkeys; the chain allows that — Gauntlet's PoC catches it.
+        let mut c = Chain::new();
+        c.register("eve-1").unwrap();
+        assert_eq!(c.register("eve-1").unwrap_err(), ChainError::DuplicateHotkey("eve-1".into()));
+        c.register("eve-2").unwrap(); // sybil under a fresh hotkey: allowed
+    }
+
+    #[test]
+    fn block_clock_advances() {
+        let mut c = Chain::new();
+        assert_eq!(c.now_ms(), 0);
+        c.advance_blocks(5);
+        assert_eq!(c.now_ms(), 5 * BLOCK_MS);
+    }
+
+    #[test]
+    fn only_staked_neurons_set_weights() {
+        let (mut c, v) = chain_with_validator();
+        let p = c.register("peer").unwrap();
+        assert_eq!(c.set_weights(p, &[(v, 1.0)]).unwrap_err(), ChainError::NotValidator(p));
+        c.set_weights(v, &[(p, 1.0)]).unwrap();
+        assert_eq!(c.committed_weights(v).unwrap()[&p], 1.0);
+    }
+
+    #[test]
+    fn weights_validated() {
+        let (mut c, v) = chain_with_validator();
+        let p = c.register("peer").unwrap();
+        assert_eq!(c.set_weights(v, &[(p, -0.5)]).unwrap_err(), ChainError::BadWeights);
+        assert_eq!(c.set_weights(v, &[(p, f64::NAN)]).unwrap_err(), ChainError::BadWeights);
+        assert_eq!(c.set_weights(v, &[(99, 0.5)]).unwrap_err(), ChainError::UnknownUid(99));
+    }
+
+    #[test]
+    fn single_validator_epoch_normalizes_and_pays() {
+        let (mut c, v) = chain_with_validator();
+        let p0 = c.register("p0").unwrap();
+        let p1 = c.register("p1").unwrap();
+        c.set_weights(v, &[(p0, 3.0), (p1, 1.0)]).unwrap();
+        c.emission_per_epoch = 10.0;
+        let inc = c.run_epoch();
+        let total: f64 = inc.iter().map(|(_, x)| x).sum();
+        assert!((total - 1.0).abs() < 1e-9);
+        let i0 = inc.iter().find(|(u, _)| *u == p0).unwrap().1;
+        assert!((i0 - 0.75).abs() < 1e-9);
+        assert!((c.neuron(p0).unwrap().balance - 7.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn lead_validator_is_highest_staked() {
+        let mut c = Chain::new();
+        let a = c.register("a").unwrap();
+        let b = c.register("b").unwrap();
+        c.add_stake(a, 10.0).unwrap();
+        c.add_stake(b, 50.0).unwrap();
+        assert_eq!(c.lead_validator(), Some(b));
+    }
+
+    #[test]
+    fn read_key_registry() {
+        let mut c = Chain::new();
+        let p = c.register("p").unwrap();
+        c.post_read_key(p, ReadKey("rk-x".into())).unwrap();
+        assert_eq!(c.neuron(p).unwrap().bucket_read_key, Some(ReadKey("rk-x".into())));
+        assert_eq!(
+            c.post_read_key(99, ReadKey("rk".into())).unwrap_err(),
+            ChainError::UnknownUid(99)
+        );
+    }
+}

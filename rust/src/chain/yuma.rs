@@ -1,0 +1,191 @@
+//! Yuma consensus (Steeves et al. [18]; docs.bittensor.com/yuma-consensus).
+//!
+//! Given each validator's weight vector over peers and each validator's
+//! stake, Yuma computes, per peer, a *consensus weight*: the largest value
+//! `w` such that validators holding at least a `kappa` fraction of total
+//! stake assign the peer at least `w`. Every validator's weight is then
+//! clipped to the consensus (punishing out-of-consensus inflation), and
+//! incentives are the stake-weighted sum of clipped weights, normalized to
+//! sum to 1. A dishonest minority validator therefore cannot pump a peer's
+//! incentive above what the stake majority supports.
+
+#[derive(Clone, Copy, Debug)]
+pub struct YumaParams {
+    /// Stake-majority threshold (mainnet default 0.5).
+    pub kappa: f64,
+}
+
+impl Default for YumaParams {
+    fn default() -> Self {
+        YumaParams { kappa: 0.5 }
+    }
+}
+
+/// `weights[v][j]` = validator v's (non-negative) weight on peer j.
+/// `stake[v]` = validator v's stake. Returns per-peer incentives summing to
+/// 1 (all zeros if every weight is zero).
+pub fn yuma_consensus(weights: &[Vec<f64>], stake: &[f64], params: &YumaParams) -> Vec<f64> {
+    assert_eq!(weights.len(), stake.len());
+    if weights.is_empty() {
+        return vec![];
+    }
+    let n_peers = weights[0].len();
+    for row in weights {
+        assert_eq!(row.len(), n_peers, "ragged weight matrix");
+    }
+    let total_stake: f64 = stake.iter().sum();
+    if total_stake <= 0.0 {
+        return vec![0.0; n_peers];
+    }
+
+    // Row-normalize each validator's weights (the chain stores weights
+    // already normalized; we re-normalize defensively).
+    let norm: Vec<Vec<f64>> = weights
+        .iter()
+        .map(|row| {
+            let s: f64 = row.iter().sum();
+            if s > 0.0 {
+                row.iter().map(|w| w / s).collect()
+            } else {
+                row.clone()
+            }
+        })
+        .collect();
+
+    // Consensus per peer: kappa-stake-weighted quantile of the column.
+    let consensus: Vec<f64> = (0..n_peers)
+        .map(|j| {
+            // candidate thresholds are the committed weights themselves
+            let mut col: Vec<(f64, f64)> =
+                norm.iter().zip(stake).map(|(row, &s)| (row[j], s)).collect();
+            col.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            // largest w s.t. stake of validators with weight >= w is
+            // >= kappa * total
+            let mut best = 0.0;
+            for &(w, _) in &col {
+                let supporting: f64 =
+                    col.iter().filter(|(wi, _)| *wi >= w).map(|(_, s)| *s).sum();
+                if supporting >= params.kappa * total_stake {
+                    best = w;
+                }
+            }
+            best
+        })
+        .collect();
+
+    // Clip and combine by stake.
+    let mut rank = vec![0.0; n_peers];
+    for (row, &s) in norm.iter().zip(stake) {
+        for j in 0..n_peers {
+            rank[j] += s * row[j].min(consensus[j]);
+        }
+    }
+    let total: f64 = rank.iter().sum();
+    if total > 0.0 {
+        for r in &mut rank {
+            *r /= total;
+        }
+    }
+    rank
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop;
+    use crate::prop_assert;
+
+    fn p() -> YumaParams {
+        YumaParams::default()
+    }
+
+    #[test]
+    fn single_validator_passthrough() {
+        let inc = yuma_consensus(&[vec![0.75, 0.25]], &[100.0], &p());
+        assert!((inc[0] - 0.75).abs() < 1e-12);
+        assert!((inc[1] - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn agreement_is_preserved() {
+        let w = vec![vec![0.6, 0.4], vec![0.6, 0.4], vec![0.6, 0.4]];
+        let inc = yuma_consensus(&w, &[10.0, 20.0, 30.0], &p());
+        assert!((inc[0] - 0.6).abs() < 1e-9);
+    }
+
+    #[test]
+    fn minority_validator_cannot_pump_a_peer() {
+        // Two honest validators (90% of stake) give peer 1 nothing; a
+        // dishonest 10% validator gives it everything. Consensus clips the
+        // dishonest weight to the majority's (0), so peer 1 earns ~0.
+        let w = vec![vec![1.0, 0.0], vec![1.0, 0.0], vec![0.0, 1.0]];
+        let inc = yuma_consensus(&w, &[45.0, 45.0, 10.0], &p());
+        assert!(inc[1] < 1e-9, "pumped peer got {}", inc[1]);
+        assert!((inc[0] - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn majority_attacker_does_control() {
+        // Flip the stake: the "attacker" holds the majority, so its view IS
+        // the consensus — stake is the security assumption.
+        let w = vec![vec![1.0, 0.0], vec![0.0, 1.0]];
+        let inc = yuma_consensus(&w, &[10.0, 90.0], &p());
+        assert!(inc[1] > 0.85, "majority view should dominate: {inc:?}");
+    }
+
+    #[test]
+    fn zero_everything_is_safe() {
+        assert_eq!(yuma_consensus(&[], &[], &p()), Vec::<f64>::new());
+        assert_eq!(yuma_consensus(&[vec![0.0, 0.0]], &[5.0], &p()), vec![0.0, 0.0]);
+        assert_eq!(yuma_consensus(&[vec![1.0]], &[0.0], &p()), vec![0.0]);
+    }
+
+    #[test]
+    fn unnormalized_rows_are_renormalized() {
+        let inc = yuma_consensus(&[vec![30.0, 10.0]], &[1.0], &p());
+        assert!((inc[0] - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn prop_incentives_normalized_and_bounded_by_majority_max() {
+        prop::check("yuma-invariants", 50, |rng, size| {
+            let n_val = 1 + size % 5;
+            let n_peer = 1 + size % 7;
+            let weights: Vec<Vec<f64>> = (0..n_val)
+                .map(|_| (0..n_peer).map(|_| rng.range_f64(0.0, 1.0)).collect())
+                .collect();
+            let stake: Vec<f64> = (0..n_val).map(|_| rng.range_f64(1.0, 100.0)).collect();
+            let inc = yuma_consensus(&weights, &stake, &p());
+            prop_assert!(inc.len() == n_peer, "length mismatch");
+            let total: f64 = inc.iter().sum();
+            prop_assert!(
+                inc.iter().all(|x| (0.0..=1.0 + 1e-9).contains(x)),
+                "incentive out of range: {inc:?}"
+            );
+            prop_assert!(
+                total < 1e-9 || (total - 1.0).abs() < 1e-9,
+                "not normalized: {total}"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_stake_scaling_invariance() {
+        prop::check("yuma-stake-scale", 30, |rng, size| {
+            let n_val = 2 + size % 3;
+            let n_peer = 2 + size % 4;
+            let weights: Vec<Vec<f64>> = (0..n_val)
+                .map(|_| (0..n_peer).map(|_| rng.range_f64(0.0, 1.0)).collect())
+                .collect();
+            let stake: Vec<f64> = (0..n_val).map(|_| rng.range_f64(1.0, 10.0)).collect();
+            let scaled: Vec<f64> = stake.iter().map(|s| s * 7.0).collect();
+            let a = yuma_consensus(&weights, &stake, &p());
+            let b = yuma_consensus(&weights, &scaled, &p());
+            for (x, y) in a.iter().zip(&b) {
+                prop_assert!((x - y).abs() < 1e-9, "stake scale changed outcome");
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,141 @@
+//! Centralized AdamW DDP baseline (Fig. 1 / Table 1 comparison).
+//!
+//! The paper compares the permissionless run against "a controlled AdamW
+//! baseline with the same number of peers and the default per worker batch
+//! size" — i.e. classic synchronous data-parallel training, which is *not*
+//! deployable over the internet (full-gradient all-reduce) but anchors the
+//! convergence comparison.
+//!
+//! Two modes:
+//!  - [`AdamWTrainer`]: gradient averaging over `n_workers` simulated
+//!    workers' shards per step (DDP semantics), AdamW moments kept in Rust.
+//!  - the fused single-batch `adamw_step` artifact (used by the hot-path
+//!    bench) — same math, one XLA call, for B = one microbatch.
+
+use anyhow::Result;
+
+use crate::data::Corpus;
+use crate::runtime::Executor;
+
+/// AdamW hyperparameters (defaults mirror meta.json / DeMo's paper).
+#[derive(Clone, Copy, Debug)]
+pub struct AdamWParams {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub weight_decay: f32,
+}
+
+impl Default for AdamWParams {
+    fn default() -> Self {
+        AdamWParams { lr: 3e-4, beta1: 0.9, beta2: 0.95, eps: 1e-8, weight_decay: 0.1 }
+    }
+}
+
+/// DDP-style trainer: per step, average gradients over `n_workers` disjoint
+/// shards, then take one AdamW step (moments live host-side).
+pub struct AdamWTrainer {
+    pub p: AdamWParams,
+    pub n_workers: usize,
+    pub theta: Vec<f32>,
+    m: Vec<f32>,
+    v: Vec<f32>,
+    step: u64,
+}
+
+impl AdamWTrainer {
+    pub fn new(theta: Vec<f32>, p: AdamWParams, n_workers: usize) -> Self {
+        let n = theta.len();
+        AdamWTrainer { p, n_workers, theta, m: vec![0.0; n], v: vec![0.0; n], step: 0 }
+    }
+
+    /// One synchronous DDP step at `round`; returns the mean worker loss.
+    pub fn step(&mut self, exec: &Executor, corpus: &Corpus, round: u64) -> Result<f64> {
+        let meta = &exec.meta;
+        let (b, s1) = (meta.batch, meta.seq + 1);
+        let mut acc = vec![0.0f32; meta.param_count];
+        let mut loss_sum = 0.0f64;
+        for w in 0..self.n_workers {
+            // Same shard namespace the Gauntlet peers use, different stream
+            // per worker — equal tokens per step at equal worker counts.
+            let toks = corpus.assigned_shard(w as u32, round, 0, b, s1);
+            let (loss, g) = exec.grad(&self.theta, &toks)?;
+            loss_sum += loss as f64;
+            for (a, gi) in acc.iter_mut().zip(&g) {
+                *a += gi / self.n_workers as f32;
+            }
+        }
+        self.apply(&acc);
+        Ok(loss_sum / self.n_workers as f64)
+    }
+
+    /// The AdamW update on an externally computed (averaged) gradient.
+    pub fn apply(&mut self, grad: &[f32]) {
+        assert_eq!(grad.len(), self.theta.len());
+        self.step += 1;
+        let t = self.step as f32;
+        let (b1, b2) = (self.p.beta1, self.p.beta2);
+        let bc1 = 1.0 - b1.powf(t);
+        let bc2 = 1.0 - b2.powf(t);
+        for i in 0..grad.len() {
+            let g = grad[i];
+            self.m[i] = b1 * self.m[i] + (1.0 - b1) * g;
+            self.v[i] = b2 * self.v[i] + (1.0 - b2) * g * g;
+            let mhat = self.m[i] / bc1;
+            let vhat = self.v[i] / bc2;
+            self.theta[i] -=
+                self.p.lr * (mhat / (vhat.sqrt() + self.p.eps) + self.p.weight_decay * self.theta[i]);
+        }
+    }
+
+    pub fn steps_taken(&self) -> u64 {
+        self.step
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Quadratic sanity check: AdamW on f(x) = 0.5 * x^2 (grad = x)
+    /// converges toward 0 from any start.
+    #[test]
+    fn adamw_minimizes_quadratic() {
+        let p = AdamWParams { lr: 0.05, weight_decay: 0.0, ..Default::default() };
+        let mut t = AdamWTrainer::new(vec![3.0, -2.0, 0.5], p, 1);
+        for _ in 0..500 {
+            let g = t.theta.clone();
+            t.apply(&g);
+        }
+        for x in &t.theta {
+            assert!(x.abs() < 0.05, "did not converge: {:?}", t.theta);
+        }
+        assert_eq!(t.steps_taken(), 500);
+    }
+
+    #[test]
+    fn bias_correction_makes_first_step_lr_sized() {
+        // With m=v=0, the first AdamW step is ~lr * sign(g) regardless of
+        // gradient magnitude (the classic bias-correction property).
+        let p = AdamWParams { lr: 0.01, weight_decay: 0.0, ..Default::default() };
+        for g0 in [1e-3f32, 1.0, 1e3] {
+            let mut t = AdamWTrainer::new(vec![0.0], p, 1);
+            t.apply(&[g0]);
+            assert!(
+                (t.theta[0] + 0.01).abs() < 1e-3,
+                "g0={g0}: step was {}",
+                t.theta[0]
+            );
+        }
+    }
+
+    #[test]
+    fn weight_decay_is_decoupled() {
+        // With zero gradient, parameters decay multiplicatively.
+        let p = AdamWParams { lr: 0.1, weight_decay: 0.5, ..Default::default() };
+        let mut t = AdamWTrainer::new(vec![1.0], p, 1);
+        t.apply(&[0.0]);
+        assert!((t.theta[0] - 0.95).abs() < 1e-6, "{}", t.theta[0]);
+    }
+}

@@ -1,0 +1,222 @@
+//! Checkpointing and signed-update catchup (§3.1, "Signed Descent").
+//!
+//! Because the aggregated update is `theta' = theta - alpha * sign(Delta)`,
+//! each round's update is fully described by one ternary digit per
+//! parameter. The coordinator therefore checkpoints the full parameter
+//! vector only every `checkpoint_every` rounds and stores the per-round
+//! sign vectors bit-packed (2 bits/param, 16x smaller than f32); a peer
+//! joining late (or restarting) downloads the latest checkpoint and
+//! replays the signs — the paper's "fast checkpoint catchup".
+
+use anyhow::{bail, Result};
+
+/// A bit-packed ternary sign vector: 2 bits per parameter.
+/// Encoding: 0b00 = 0, 0b01 = +1, 0b10 = -1.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SignVector {
+    packed: Vec<u8>,
+    len: usize,
+}
+
+impl SignVector {
+    /// Extract signs from a pre/post parameter pair:
+    /// `sign_i = round((theta_i - theta_i') / lr)` which is exact for the
+    /// signed-descent update.
+    pub fn from_update(theta_before: &[f32], theta_after: &[f32], lr: f32) -> Result<SignVector> {
+        if theta_before.len() != theta_after.len() {
+            bail!("length mismatch");
+        }
+        let mut packed = vec![0u8; theta_before.len().div_ceil(4)];
+        for (i, (b, a)) in theta_before.iter().zip(theta_after).enumerate() {
+            let step = ((*b as f64 - *a as f64) / lr as f64).round();
+            let code: u8 = match step as i64 {
+                0 => 0b00,
+                1 => 0b01,
+                -1 => 0b10,
+                s => bail!("update at {i} is {s} steps, not a single signed step"),
+            };
+            packed[i / 4] |= code << ((i % 4) * 2);
+        }
+        Ok(SignVector { packed, len: theta_before.len() })
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+    pub fn byte_size(&self) -> usize {
+        self.packed.len()
+    }
+
+    pub fn get(&self, i: usize) -> i8 {
+        let code = (self.packed[i / 4] >> ((i % 4) * 2)) & 0b11;
+        match code {
+            0b01 => 1,
+            0b10 => -1,
+            _ => 0,
+        }
+    }
+
+    /// Apply this signed update in place: `theta -= lr * sign`.
+    pub fn apply(&self, theta: &mut [f32], lr: f32) {
+        assert_eq!(theta.len(), self.len);
+        for i in 0..self.len {
+            match self.get(i) {
+                1 => theta[i] -= lr,
+                -1 => theta[i] += lr,
+                _ => {}
+            }
+        }
+    }
+}
+
+/// In-memory checkpoint store (the deployed system keeps these in the lead
+/// validator's bucket; the storage layer is orthogonal to the replay
+/// logic tested here).
+pub struct CheckpointStore {
+    pub every: u64,
+    /// (round, full params) — "params as of the *start* of round".
+    checkpoints: Vec<(u64, Vec<f32>)>,
+    /// sign vector applied at the *end* of round r, with the lr used.
+    updates: Vec<(u64, f32, SignVector)>,
+}
+
+impl CheckpointStore {
+    pub fn new(every: u64) -> Self {
+        CheckpointStore { every, checkpoints: Vec::new(), updates: Vec::new() }
+    }
+
+    /// Record state at the start of `round` if it's a checkpoint round.
+    pub fn maybe_checkpoint(&mut self, round: u64, theta: &[f32]) {
+        if round % self.every == 0 {
+            self.checkpoints.push((round, theta.to_vec()));
+        }
+    }
+
+    /// Record the signed update that advanced round `round`.
+    pub fn record_update(
+        &mut self,
+        round: u64,
+        theta_before: &[f32],
+        theta_after: &[f32],
+        lr: f32,
+    ) -> Result<()> {
+        let sv = SignVector::from_update(theta_before, theta_after, lr)?;
+        self.updates.push((round, lr, sv));
+        Ok(())
+    }
+
+    /// Reconstruct the parameters at the **start** of `round` from the
+    /// nearest earlier checkpoint plus sign replay — what a late-joining
+    /// peer does.
+    pub fn catchup(&self, round: u64) -> Option<Vec<f32>> {
+        let (ckpt_round, base) =
+            self.checkpoints.iter().rev().find(|(r, _)| *r <= round)?;
+        let mut theta = base.clone();
+        for (r, lr, sv) in &self.updates {
+            if *r >= *ckpt_round && *r < round {
+                sv.apply(&mut theta, *lr);
+            }
+        }
+        Some(theta)
+    }
+
+    pub fn n_checkpoints(&self) -> usize {
+        self.checkpoints.len()
+    }
+    pub fn n_updates(&self) -> usize {
+        self.updates.len()
+    }
+    /// Total bytes of sign storage (compression accounting).
+    pub fn sign_bytes(&self) -> usize {
+        self.updates.iter().map(|(_, _, sv)| sv.byte_size()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop;
+    use crate::prop_assert;
+
+    #[test]
+    fn sign_vector_roundtrip() {
+        let lr = 0.02f32;
+        let before = vec![1.0f32, -0.5, 0.25, 0.0, 2.0];
+        let signs: [i8; 5] = [1, -1, 0, 1, -1];
+        let after: Vec<f32> =
+            before.iter().zip(signs).map(|(b, s)| b - lr * s as f32).collect();
+        let sv = SignVector::from_update(&before, &after, lr).unwrap();
+        for (i, s) in signs.iter().enumerate() {
+            assert_eq!(sv.get(i), *s, "index {i}");
+        }
+        let mut replay = before.clone();
+        sv.apply(&mut replay, lr);
+        for (r, a) in replay.iter().zip(&after) {
+            assert!((r - a).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn rejects_non_signed_updates() {
+        let before = vec![1.0f32];
+        let after = vec![0.9f32]; // 5 steps at lr=0.02
+        assert!(SignVector::from_update(&before, &after, 0.02).is_err());
+    }
+
+    #[test]
+    fn packing_is_16x_smaller_than_f32() {
+        let n = 1024;
+        let before = vec![0.0f32; n];
+        let after = vec![-0.02f32; n];
+        let sv = SignVector::from_update(&before, &after, 0.02).unwrap();
+        assert_eq!(sv.byte_size(), n / 4);
+        assert_eq!(sv.byte_size() * 16, n * 4);
+    }
+
+    #[test]
+    fn catchup_replays_to_exact_state() {
+        let lr = 0.1f32;
+        let mut store = CheckpointStore::new(4);
+        let mut theta = vec![0.0f32; 9];
+        let mut rng = crate::util::Rng::new(3);
+        let mut states = vec![theta.clone()];
+        for round in 0..10u64 {
+            store.maybe_checkpoint(round, &theta);
+            let before = theta.clone();
+            for t in theta.iter_mut() {
+                let s = (rng.below(3) as i64) - 1;
+                *t -= lr * s as f32;
+            }
+            store.record_update(round, &before, &theta, lr).unwrap();
+            states.push(theta.clone());
+        }
+        assert_eq!(store.n_checkpoints(), 3); // rounds 0, 4, 8
+        for round in 0..=10u64 {
+            let got = store.catchup(round).unwrap();
+            let want = &states[round as usize];
+            for (g, w) in got.iter().zip(want) {
+                assert!((g - w).abs() < 1e-5, "round {round}");
+            }
+        }
+    }
+
+    #[test]
+    fn prop_signvector_roundtrips_arbitrary_ternary() {
+        prop::check("signvector-roundtrip", 40, |rng, size| {
+            let n = 1 + size * 3;
+            let lr = 0.05f32;
+            let before: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let signs: Vec<i8> = (0..n).map(|_| (rng.below(3) as i8) - 1).collect();
+            let after: Vec<f32> =
+                before.iter().zip(&signs).map(|(b, s)| b - lr * *s as f32).collect();
+            let sv = SignVector::from_update(&before, &after, lr).map_err(|e| e.to_string())?;
+            for i in 0..n {
+                prop_assert!(sv.get(i) == signs[i], "sign mismatch at {i}");
+            }
+            Ok(())
+        });
+    }
+}

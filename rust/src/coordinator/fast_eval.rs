@@ -1,0 +1,270 @@
+//! Fast evaluation (§3.2): low-cost checks over a large peer subset.
+//!
+//! (a) put-window timing, (b) presence, (c) wire format + declared tensor
+//! dimensions, plus the SyncScore heuristic estimating how many signed
+//! update steps a peer's model has diverged from the validator's. Any
+//! violation yields phi = `phi_penalty` (< 1), applied multiplicatively to
+//! the peer's mu — repeated failures crash the peer's PEERSCORE and evict
+//! it from the top-G aggregation within a few rounds.
+
+use crate::demo::wire::{Submission, WireError};
+use crate::demo::SparseGrad;
+use crate::storage::WindowedGet;
+
+/// Why fast evaluation failed (diagnostics + tests).
+#[derive(Clone, Debug, PartialEq)]
+pub enum FastViolation {
+    Missing,
+    TooEarly,
+    TooLate,
+    BadFormat(String),
+    WrongRound { declared: u64, expected: u64 },
+    WrongUid { declared: u32, expected: u32 },
+    Desynchronized { sync_score: f64 },
+}
+
+/// Outcome of fast evaluation for one peer.
+#[derive(Clone, Debug)]
+pub struct FastEvalOutcome {
+    pub violations: Vec<FastViolation>,
+    /// A validated submission, if one was decodable (kept even when the
+    /// peer failed SyncScore, so diagnostics can inspect it; the validator
+    /// only *aggregates* submissions from peers that passed everything).
+    pub submission: Option<Submission>,
+}
+
+impl FastEvalOutcome {
+    pub fn passed(&self) -> bool {
+        self.violations.is_empty()
+    }
+    /// phi multiplier (§3.2): `penalty` on any failure, 1 otherwise.
+    pub fn phi(&self, penalty: f64) -> f64 {
+        if self.passed() {
+            1.0
+        } else {
+            penalty
+        }
+    }
+}
+
+/// SyncScore (§3.2): mean absolute difference between the validator's and
+/// the peer's sampled parameters, in units of the signed step size alpha —
+/// a heuristic count of divergent update steps.
+pub fn sync_score(validator_probe: &[f32], peer_probe: &[f32], lr: f32) -> f64 {
+    assert_eq!(validator_probe.len(), peer_probe.len());
+    if validator_probe.is_empty() || lr == 0.0 {
+        return 0.0;
+    }
+    let n = validator_probe.len() as f64;
+    let sum: f64 = validator_probe
+        .iter()
+        .zip(peer_probe)
+        .map(|(a, b)| (*a as f64 - *b as f64).abs())
+        .sum();
+    sum / (lr as f64 * n)
+}
+
+/// Structural expectations for a submission in this round.
+pub struct FastEvalCtx<'a> {
+    pub uid: u32,
+    pub round: u64,
+    /// Expected coefficient count C (meta.coeff_count).
+    pub coeff_count: usize,
+    /// Dense coefficient space size (meta.padded_count).
+    pub padded_count: usize,
+    /// Expected probe length (2 per tensor).
+    pub probe_len: usize,
+    /// The validator's own probe of theta_t.
+    pub validator_probe: &'a [f32],
+    pub lr: f32,
+    pub sync_threshold: f64,
+}
+
+/// Run every fast check against a windowed GET result.
+pub fn fast_evaluate(get: &WindowedGet<'_>, ctx: &FastEvalCtx<'_>) -> FastEvalOutcome {
+    let mut violations = Vec::new();
+    let bytes: &[u8] = match get {
+        WindowedGet::InWindow(obj) => &obj.bytes,
+        WindowedGet::Missing => {
+            return FastEvalOutcome { violations: vec![FastViolation::Missing], submission: None }
+        }
+        WindowedGet::TooEarly(_) => {
+            return FastEvalOutcome { violations: vec![FastViolation::TooEarly], submission: None }
+        }
+        WindowedGet::TooLate(_) => {
+            return FastEvalOutcome { violations: vec![FastViolation::TooLate], submission: None }
+        }
+    };
+
+    let sub = match Submission::decode(bytes) {
+        Ok(s) => s,
+        Err(e @ (WireError::Truncated(_)
+        | WireError::BadMagic(_)
+        | WireError::BadVersion(_)
+        | WireError::LengthMismatch { .. }
+        | WireError::BadDigest)) => {
+            return FastEvalOutcome {
+                violations: vec![FastViolation::BadFormat(e.to_string())],
+                submission: None,
+            }
+        }
+    };
+
+    if sub.round != ctx.round {
+        violations.push(FastViolation::WrongRound { declared: sub.round, expected: ctx.round });
+    }
+    if sub.uid != ctx.uid {
+        violations.push(FastViolation::WrongUid { declared: sub.uid, expected: ctx.uid });
+    }
+    if let Err(msg) = sub.grad.validate(ctx.coeff_count, ctx.padded_count) {
+        violations.push(FastViolation::BadFormat(msg));
+    }
+    if sub.probe.len() != ctx.probe_len {
+        violations.push(FastViolation::BadFormat(format!(
+            "probe has {} values, expected {}",
+            sub.probe.len(),
+            ctx.probe_len
+        )));
+    } else {
+        let s = sync_score(ctx.validator_probe, &sub.probe, ctx.lr);
+        if s > ctx.sync_threshold {
+            violations.push(FastViolation::Desynchronized { sync_score: s });
+        }
+    }
+    FastEvalOutcome { violations, submission: Some(sub) }
+}
+
+/// Convenience for tests/benches: fast-evaluate an in-memory submission.
+pub fn fast_evaluate_decoded(sub: &Submission, ctx: &FastEvalCtx<'_>) -> FastEvalOutcome {
+    let obj = crate::storage::Object {
+        key: String::new(),
+        bytes: sub.encode(),
+        stored_at: 0,
+    };
+    fast_evaluate(&WindowedGet::InWindow(&obj), ctx)
+}
+
+/// Sanity helper used by both validator and peers: a well-formed empty
+/// gradient placeholder (peers that have nothing still probe for sync).
+pub fn empty_grad() -> SparseGrad {
+    SparseGrad { vals: vec![], idx: vec![] }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::Object;
+
+    fn ctx<'a>(probe: &'a [f32]) -> FastEvalCtx<'a> {
+        FastEvalCtx {
+            uid: 1,
+            round: 10,
+            coeff_count: 3,
+            padded_count: 100,
+            probe_len: probe.len(),
+            validator_probe: probe,
+            lr: 0.02,
+            sync_threshold: 3.0,
+        }
+    }
+
+    fn good_sub(probe: Vec<f32>) -> Submission {
+        Submission {
+            uid: 1,
+            round: 10,
+            grad: SparseGrad { vals: vec![1.0, -1.0, 0.5], idx: vec![0, 5, 99] },
+            probe,
+        }
+    }
+
+    #[test]
+    fn compliant_submission_passes() {
+        let vp = vec![0.5, -0.5];
+        let out = fast_evaluate_decoded(&good_sub(vp.clone()), &ctx(&vp));
+        assert!(out.passed(), "{:?}", out.violations);
+        assert_eq!(out.phi(0.75), 1.0);
+        assert!(out.submission.is_some());
+    }
+
+    #[test]
+    fn missing_early_late_fail() {
+        let vp = vec![0.0];
+        let c = ctx(&vp);
+        for (get, want) in [
+            (WindowedGet::Missing, FastViolation::Missing),
+            (WindowedGet::TooEarly(1), FastViolation::TooEarly),
+            (WindowedGet::TooLate(2), FastViolation::TooLate),
+        ] {
+            let out = fast_evaluate(&get, &c);
+            assert_eq!(out.violations, vec![want.clone()]);
+            assert_eq!(out.phi(0.75), 0.75);
+        }
+    }
+
+    #[test]
+    fn corrupt_bytes_fail_format() {
+        let vp = vec![0.0];
+        let obj = Object { key: "k".into(), bytes: vec![1, 2, 3], stored_at: 0 };
+        let out = fast_evaluate(&WindowedGet::InWindow(&obj), &ctx(&vp));
+        assert!(matches!(out.violations[0], FastViolation::BadFormat(_)));
+    }
+
+    #[test]
+    fn wrong_dims_fail_format() {
+        let vp = vec![0.0, 0.0];
+        let mut sub = good_sub(vp.clone());
+        sub.grad.vals.push(9.0); // now 4 vals vs declared layout of 3
+        sub.grad.idx.push(1);
+        let out = fast_evaluate_decoded(&sub, &ctx(&vp));
+        assert!(out.violations.iter().any(|v| matches!(v, FastViolation::BadFormat(_))));
+    }
+
+    #[test]
+    fn wrong_round_or_uid_detected() {
+        let vp = vec![0.0, 0.0];
+        let mut sub = good_sub(vp.clone());
+        sub.round = 9;
+        sub.uid = 7;
+        let out = fast_evaluate_decoded(&sub, &ctx(&vp));
+        assert!(out
+            .violations
+            .contains(&FastViolation::WrongRound { declared: 9, expected: 10 }));
+        assert!(out.violations.contains(&FastViolation::WrongUid { declared: 7, expected: 1 }));
+    }
+
+    #[test]
+    fn sync_score_counts_divergent_steps() {
+        // peer diverged by exactly k signed steps on every sampled param:
+        // SyncScore == k.
+        let lr = 0.02f32;
+        let vp = vec![1.0, -1.0, 0.5, 0.0];
+        for k in 0..5 {
+            let pp: Vec<f32> = vp.iter().map(|v| v + k as f32 * lr).collect();
+            let s = sync_score(&vp, &pp, lr);
+            assert!((s - k as f64).abs() < 1e-4, "k={k} s={s}");
+        }
+    }
+
+    #[test]
+    fn desync_beyond_threshold_fails() {
+        let lr = 0.02f32;
+        let vp = vec![1.0, -1.0];
+        let pp: Vec<f32> = vp.iter().map(|v| v + 5.0 * lr).collect(); // 5 steps off
+        let sub = good_sub(pp);
+        let out = fast_evaluate_decoded(&sub, &ctx(&vp));
+        assert!(matches!(
+            out.violations[0],
+            FastViolation::Desynchronized { sync_score } if sync_score > 3.0
+        ));
+        // 2 steps off passes the threshold-3 filter
+        let pp2: Vec<f32> = vp.iter().map(|v| v + 2.0 * lr).collect();
+        let out2 = fast_evaluate_decoded(&good_sub(pp2), &ctx(&vp));
+        assert!(out2.passed(), "{:?}", out2.violations);
+    }
+
+    #[test]
+    fn sync_score_empty_or_zero_lr_is_zero() {
+        assert_eq!(sync_score(&[], &[], 0.02), 0.0);
+        assert_eq!(sync_score(&[1.0], &[2.0], 0.0), 0.0);
+    }
+}

@@ -1,0 +1,81 @@
+//! The Gauntlet coordinator — the paper's contribution (§3).
+//!
+//! Two-phase incentive evaluation over a synchronous DeMo training run:
+//!
+//! - [`fast_eval`]: cheap per-round checks over a large peer subset — put
+//!   window, presence, wire format, SyncScore — applying the multiplicative
+//!   `phi` penalty to the proof-of-computation EMA (§3.2).
+//! - [`primary_eval`]: the compute-heavy LossScore (eq. 2) on a small
+//!   random subset, on both the peer's **assigned** data shard and a fresh
+//!   **random** shard, feeding the OpenSkill LossRating and the
+//!   proof-of-computation EMA mu_p (eq. 3).
+//! - [`scoring`]: PEERSCORE = mu * LossRating (eq. 4), the power
+//!   normalization (eq. 5) and top-G aggregation weights (eq. 6).
+//! - [`validator`]: glues the phases together for one validator identity.
+//! - [`round`]: the communication-round clock and put windows.
+//! - [`checkpoint`]: infrequent checkpoints + signed-update replay catchup.
+//! - [`baseline`]: the centralized AdamW-DDP comparison run (Fig. 1).
+//! - [`run`]: the full system — chain + storage + peers + validators —
+//!   driving a live training run end to end.
+
+pub mod baseline;
+pub mod checkpoint;
+pub mod fast_eval;
+pub mod primary_eval;
+pub mod round;
+pub mod run;
+pub mod schedule;
+pub mod scoring;
+pub mod validator;
+
+/// All Gauntlet hyperparameters in one place (defaults follow the paper
+/// where it states values: phi = 0.75, sync threshold = 3, c = 2, beta =
+/// c_beta * lr with c_beta < 1).
+#[derive(Clone, Debug)]
+pub struct GauntletParams {
+    /// EMA decay gamma for the proof-of-computation score mu_p (eq. 3).
+    pub gamma: f64,
+    /// Multiplicative penalty on mu_p for failing any fast check (§3.2).
+    pub phi_penalty: f64,
+    /// SyncScore filter threshold ("in practice, setting the threshold to 3").
+    pub sync_threshold: f64,
+    /// beta = beta_frac * lr for the primary-evaluation step (beta_frac < 1).
+    pub beta_frac: f32,
+    /// Exponent c of the incentive normalization (eq. 5); paper uses 2.
+    pub norm_power: f64,
+    /// Number of top peers aggregated each round (eq. 6; paper: G = 15).
+    pub top_g: usize,
+    /// |S_t|: peers primary-evaluated per round (paper: 5).
+    pub eval_sample: usize,
+    /// Outer (base) learning rate alpha for the signed update (eq. 1).
+    pub lr: f32,
+    /// Per-round schedule: alpha_t = schedule.lr_at(t, lr); the evaluation
+    /// step follows as beta_t = beta_frac * alpha_t (§3.1).
+    pub schedule: schedule::LrSchedule,
+    /// DeMo error-feedback momentum decay.
+    pub demo_decay: f32,
+    /// Number of grad microbatches an honest peer runs per round at
+    /// data multiplier 1.0 (the "baseline training script").
+    pub base_microbatches: usize,
+    /// Checkpoint every this many rounds (catchup replays signed updates).
+    pub checkpoint_every: u64,
+}
+
+impl Default for GauntletParams {
+    fn default() -> Self {
+        GauntletParams {
+            gamma: 0.9,
+            phi_penalty: 0.75,
+            sync_threshold: 3.0,
+            beta_frac: 0.5,
+            norm_power: 2.0,
+            top_g: 4,
+            eval_sample: 3,
+            lr: 0.02,
+            schedule: schedule::LrSchedule::Constant,
+            demo_decay: 0.999,
+            base_microbatches: 1,
+            checkpoint_every: 25,
+        }
+    }
+}

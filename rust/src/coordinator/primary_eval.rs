@@ -1,0 +1,105 @@
+//! Primary evaluation (§3.1): the compute-heavy heart of Gauntlet.
+//!
+//! For each sampled peer p the validator decodes the peer's pseudo-gradient
+//! into the dense DCT-coefficient space, applies a scaled **signed** step
+//! `theta - beta * sign(IDCT(q_p))` inside the fused `eval_peer` artifact,
+//! and measures the loss drop (eq. 2) on two data subsets:
+//!
+//! - the peer's **assigned** shard D_t^p (re-derived from public seeds),
+//! - a fresh **random** shard D_t^rand.
+//!
+//! The random-shard LossScore feeds the OpenSkill ranking; the sign of the
+//! assigned-minus-random difference feeds the proof-of-computation EMA
+//! (eq. 3), catching copiers and duplicators who did not actually train on
+//! their assigned data.
+
+use anyhow::Result;
+
+use crate::data::Corpus;
+use crate::demo::SparseGrad;
+use crate::runtime::Executor;
+
+/// Result of one primary evaluation.
+#[derive(Clone, Copy, Debug)]
+pub struct PrimaryEval {
+    /// LossScore on the assigned shard: L(theta, D^p) - L(theta', D^p).
+    pub score_assigned: f64,
+    /// LossScore on the random shard: L(theta, D^rand) - L(theta', D^rand).
+    pub score_rand: f64,
+    /// Raw losses (diagnostics / Fig. 2 series).
+    pub loss_before_assigned: f64,
+    pub loss_before_rand: f64,
+}
+
+/// Scratch buffer reuse across evaluations (the dense coefficient vector is
+/// the largest allocation on the validator's hot path).
+pub struct PrimaryEvaluator {
+    dense: Vec<f32>,
+}
+
+impl PrimaryEvaluator {
+    pub fn new(padded_count: usize) -> Self {
+        PrimaryEvaluator { dense: vec![0.0; padded_count] }
+    }
+
+    /// Evaluate one peer's pseudo-gradient at round `round`.
+    ///
+    /// `beta` is the scaled evaluation step size (beta = beta_frac * lr,
+    /// with beta_frac < 1 — §3.1 explains why stepping with the full lr
+    /// over-penalizes individual contributions).
+    pub fn evaluate(
+        &mut self,
+        exec: &Executor,
+        theta: &[f32],
+        uid: u32,
+        round: u64,
+        grad: &SparseGrad,
+        corpus: &Corpus,
+        beta: f32,
+    ) -> Result<PrimaryEval> {
+        let meta = &exec.meta;
+        // Validator-side decode: scatter the sparse submission into the
+        // dense coefficient space (normalized exactly like aggregation
+        // normalizes, so scale games don't help here either).
+        self.dense.iter_mut().for_each(|x| *x = 0.0);
+        let norm = grad.l2_norm();
+        if norm > 1e-12 {
+            grad.scatter_into(&mut self.dense, (1.0 / norm) as f32);
+        }
+
+        let (b, s1) = (meta.batch, meta.seq + 1);
+        // The peer's assigned shard, microbatch 0 — the subset the PoC
+        // contract requires it to have trained on.
+        let tok_assigned = corpus.assigned_shard(uid, round, 0, b, s1);
+        let tok_rand = corpus.random_eval(round, uid, b, s1);
+
+        let (la0, la1, lr0, lr1) =
+            exec.eval_peer(theta, &self.dense, beta, &tok_assigned, &tok_rand)?;
+        Ok(PrimaryEval {
+            score_assigned: la0 as f64 - la1 as f64,
+            score_rand: lr0 as f64 - lr1 as f64,
+            loss_before_assigned: la0 as f64,
+            loss_before_rand: lr0 as f64,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! Integration tests for primary evaluation live in
+    //! `rust/tests/integration.rs` (they need compiled artifacts); the unit
+    //! tests here cover the pure parts.
+
+    use super::*;
+
+    #[test]
+    fn evaluator_scratch_is_reused_and_zeroed() {
+        let mut ev = PrimaryEvaluator::new(8);
+        let g = SparseGrad { vals: vec![3.0], idx: vec![2] };
+        g.scatter_into(&mut ev.dense, 1.0);
+        assert_eq!(ev.dense[2], 3.0);
+        // a second evaluate() call zeroes first — simulate the zeroing step
+        ev.dense.iter_mut().for_each(|x| *x = 0.0);
+        assert!(ev.dense.iter().all(|&x| x == 0.0));
+    }
+}

@@ -1,0 +1,75 @@
+//! Communication-round clock and put windows (§2).
+//!
+//! Training proceeds in fixed-duration communication rounds anchored to
+//! blockchain time (§5 gives the network a consistent global clock). At
+//! the end of each round there is a short **put window** during which
+//! pseudo-gradients must land in the peer's bucket; submissions stored
+//! outside the window are ignored by the validator (§3.2 basic check (a)).
+
+use crate::storage::SimTime;
+
+#[derive(Clone, Copy, Debug)]
+pub struct RoundClock {
+    /// Full round duration (compute + communication), ms.
+    pub round_ms: u64,
+    /// Length of the put window at the end of the round, ms.
+    pub put_window_ms: u64,
+}
+
+impl Default for RoundClock {
+    fn default() -> Self {
+        // 60 s rounds with a 20 s put window — scaled-down from the live
+        // run's multi-minute windows, same structure.
+        RoundClock { round_ms: 60_000, put_window_ms: 20_000 }
+    }
+}
+
+impl RoundClock {
+    pub fn round_start(&self, round: u64) -> SimTime {
+        round * self.round_ms
+    }
+
+    /// [open, close] of the put window for `round`.
+    pub fn put_window(&self, round: u64) -> (SimTime, SimTime) {
+        let end = (round + 1) * self.round_ms;
+        (end - self.put_window_ms, end)
+    }
+
+    /// The round a given timestamp falls in.
+    pub fn round_of(&self, t: SimTime) -> u64 {
+        t / self.round_ms
+    }
+
+    /// A compliant upload time for a peer that spent `compute_ms` working:
+    /// it posts as soon as its work is done, but never before the window
+    /// opens (early submissions are ignored too).
+    pub fn compliant_upload_time(&self, round: u64, compute_ms: u64) -> SimTime {
+        let (open, _) = self.put_window(round);
+        (self.round_start(round) + compute_ms).max(open)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn windows_tile_the_timeline() {
+        let c = RoundClock { round_ms: 1000, put_window_ms: 300 };
+        assert_eq!(c.round_start(0), 0);
+        assert_eq!(c.put_window(0), (700, 1000));
+        assert_eq!(c.put_window(3), (3700, 4000));
+        assert_eq!(c.round_of(0), 0);
+        assert_eq!(c.round_of(999), 0);
+        assert_eq!(c.round_of(1000), 1);
+    }
+
+    #[test]
+    fn compliant_upload_waits_for_window() {
+        let c = RoundClock { round_ms: 1000, put_window_ms: 300 };
+        // fast peer: done at t=200, must hold until window opens at 700
+        assert_eq!(c.compliant_upload_time(0, 200), 700);
+        // slow peer: done at 900, posts immediately
+        assert_eq!(c.compliant_upload_time(0, 900), 900);
+    }
+}

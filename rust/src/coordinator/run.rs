@@ -1,0 +1,495 @@
+//! The end-to-end Templar system: chain + cloud storage + peers +
+//! validator(s) + DeMo aggregation, driven round by round (§2, §3.3, §6).
+//!
+//! This is what `examples/templar_run.rs` and the Fig. 1 / Fig. 2 benches
+//! execute. One `TemplarRun` owns every substrate; `run_round()` performs:
+//!
+//!   1. peers take their turns (first pass: independent behaviours; second
+//!      pass: copiers/duplicators, who need a victim's public object),
+//!   2. each validator fast-evaluates everyone, primary-evaluates a random
+//!      subset, updates its scores, and commits weights to the chain,
+//!   3. the chain runs a Yuma epoch, combining validators into incentives
+//!      and paying emission,
+//!   4. the lead validator's top-G weights drive the DeMo aggregation
+//!      (encoded-domain normalization + weighted sparse sum -> IDCT ->
+//!      sign -> `theta -= lr * sign`), with checkpoint bookkeeping,
+//!   5. peers synchronize to the new model (or diverge, per behaviour).
+
+use std::collections::BTreeMap;
+
+use anyhow::{Context, Result};
+
+use super::checkpoint::CheckpointStore;
+use super::round::RoundClock;
+use super::validator::Validator;
+use super::GauntletParams;
+use crate::chain::{Chain, Uid};
+use crate::data::Corpus;
+use crate::demo::aggregate::{aggregate_into, AggregateOpts};
+use crate::demo::wire::Submission;
+use crate::minjson::{self, Value};
+use crate::peers::{Behavior, PeerCtx, PeerOutput, PeerRunner};
+use crate::runtime::{artifact_dir, Executor};
+use crate::storage::{ObjectStore, ProviderModel};
+
+/// Configuration for a full run.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    /// Artifact config name (nano / tiny / small / base).
+    pub model: String,
+    pub rounds: u64,
+    /// One behaviour per registered peer (uids assigned in order).
+    pub peers: Vec<Behavior>,
+    pub params: GauntletParams,
+    pub clock: RoundClock,
+    pub provider: ProviderModel,
+    pub seed: u64,
+    /// Evaluate held-out loss every this many rounds (0 = never).
+    pub eval_every: u64,
+    /// Number of staked validators (>=1; all run the same protocol and
+    /// are combined by Yuma consensus).
+    pub n_validators: usize,
+    /// Aggregation options (normalization on/off for the §4 ablation).
+    pub agg: AggregateOpts,
+}
+
+impl RunConfig {
+    pub fn quick(model: &str, rounds: u64, peers: Vec<Behavior>) -> Self {
+        RunConfig {
+            model: model.to_string(),
+            rounds,
+            peers,
+            // lr = 0 means "resolve from the config's meta.json default"
+            // (signed-descent lr scales with model size; see configs.py).
+            params: GauntletParams { lr: 0.0, ..GauntletParams::default() },
+            clock: RoundClock::default(),
+            provider: ProviderModel::default(),
+            seed: 0,
+            eval_every: 5,
+            n_validators: 1,
+            agg: AggregateOpts::default(),
+        }
+    }
+}
+
+/// Per-peer metrics for one round.
+#[derive(Clone, Debug)]
+pub struct PeerRoundStats {
+    pub uid: Uid,
+    pub label: String,
+    pub submitted: bool,
+    pub fast_pass: bool,
+    pub peer_score: f64,
+    pub rating_mu: f64,
+    pub rating_ordinal: f64,
+    pub mu: f64,
+    pub incentive: f64,
+    pub in_top_g: bool,
+    pub loss_score_rand: Option<f64>,
+    pub loss_score_assigned: Option<f64>,
+    pub balance: f64,
+}
+
+/// Everything recorded about one round.
+#[derive(Clone, Debug)]
+pub struct RoundRecord {
+    pub round: u64,
+    pub heldout_loss: Option<f64>,
+    /// Mean local training loss over honest submitting peers.
+    pub mean_local_loss: f64,
+    pub n_valid_submissions: usize,
+    pub top_g: Vec<Uid>,
+    pub peers: Vec<PeerRoundStats>,
+    /// Estimated tokens processed across peers this round.
+    pub tokens_processed: u64,
+}
+
+/// Full-run metrics, serializable for the bench harness / plots.
+#[derive(Clone, Debug, Default)]
+pub struct RunMetrics {
+    pub rounds: Vec<RoundRecord>,
+}
+
+impl RunMetrics {
+    /// Held-out loss series as (round, loss).
+    pub fn loss_curve(&self) -> Vec<(u64, f64)> {
+        self.rounds
+            .iter()
+            .filter_map(|r| r.heldout_loss.map(|l| (r.round, l)))
+            .collect()
+    }
+
+    /// Final cumulative balance per uid (the "real-valued tokens paid").
+    pub fn final_balances(&self) -> Vec<(Uid, f64)> {
+        match self.rounds.last() {
+            Some(r) => r.peers.iter().map(|p| (p.uid, p.balance)).collect(),
+            None => vec![],
+        }
+    }
+
+    /// Per-peer series of a metric, keyed by uid.
+    pub fn series<F: Fn(&PeerRoundStats) -> f64>(&self, f: F) -> BTreeMap<Uid, Vec<f64>> {
+        let mut out: BTreeMap<Uid, Vec<f64>> = BTreeMap::new();
+        for r in &self.rounds {
+            for p in &r.peers {
+                out.entry(p.uid).or_default().push(f(p));
+            }
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Value {
+        let rounds: Vec<Value> = self
+            .rounds
+            .iter()
+            .map(|r| {
+                minjson::obj(vec![
+                    ("round", minjson::num(r.round as f64)),
+                    (
+                        "heldout_loss",
+                        r.heldout_loss.map(minjson::num).unwrap_or(Value::Null),
+                    ),
+                    ("mean_local_loss", minjson::num(r.mean_local_loss)),
+                    ("n_valid", minjson::num(r.n_valid_submissions as f64)),
+                    ("tokens", minjson::num(r.tokens_processed as f64)),
+                    (
+                        "peers",
+                        Value::Arr(
+                            r.peers
+                                .iter()
+                                .map(|p| {
+                                    minjson::obj(vec![
+                                        ("uid", minjson::num(p.uid as f64)),
+                                        ("label", minjson::s(&p.label)),
+                                        ("score", minjson::num(p.peer_score)),
+                                        ("rating_mu", minjson::num(p.rating_mu)),
+                                        ("mu", minjson::num(p.mu)),
+                                        ("incentive", minjson::num(p.incentive)),
+                                        ("balance", minjson::num(p.balance)),
+                                        ("fast_pass", Value::Bool(p.fast_pass)),
+                                        ("top_g", Value::Bool(p.in_top_g)),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ),
+                ])
+            })
+            .collect();
+        minjson::obj(vec![("rounds", Value::Arr(rounds))])
+    }
+}
+
+/// The live system.
+pub struct TemplarRun {
+    pub cfg: RunConfig,
+    pub exec: Executor,
+    pub chain: Chain,
+    pub store: ObjectStore,
+    pub corpus: Corpus,
+    pub clock: RoundClock,
+    pub validators: Vec<Validator>,
+    pub peers: Vec<PeerRunner>,
+    pub theta: Vec<f32>,
+    pub checkpoints: CheckpointStore,
+    pub round: u64,
+    /// Scratch dense coefficient buffer (perf: reused across rounds).
+    dense: Vec<f32>,
+    /// Last round's aggregated coefficients (for divergent peers).
+    last_coeff: Option<Vec<f32>>,
+}
+
+impl TemplarRun {
+    pub fn new(mut cfg: RunConfig) -> Result<TemplarRun> {
+        let exec = Executor::load(artifact_dir(&cfg.model))
+            .with_context(|| format!("loading artifacts for {:?}", cfg.model))?;
+        let theta = exec.init_params()?;
+        let meta = &exec.meta;
+        if cfg.params.lr <= 0.0 {
+            cfg.params.lr = meta.hyper.lr;
+        }
+
+        let mut chain = Chain::new();
+        let mut store = ObjectStore::new(cfg.provider.clone(), cfg.seed ^ 0x5702);
+        let corpus = Corpus::new(meta.vocab as u32, cfg.seed);
+
+        // Validators register and stake first (uids 1000+ keep peer uids
+        // dense from 0).
+        let mut validators = Vec::new();
+        for v in 0..cfg.n_validators.max(1) {
+            let uid = chain.register(&format!("validator-{v}"))?;
+            chain.add_stake(uid, 1_000.0 / (v as f64 + 1.0))?;
+            validators.push(Validator::new(uid, cfg.params.clone(), meta.padded_count, cfg.seed));
+        }
+
+        // Permissionless peer registration: each creates a bucket and posts
+        // its read key (§5).
+        let mut peers = Vec::new();
+        for (i, behavior) in cfg.peers.iter().enumerate() {
+            let uid = chain.register(&format!("peer-hotkey-{i}"))?;
+            let bucket = format!("peer-{uid}");
+            let rk = store.create_bucket(&bucket, &bucket);
+            chain.post_read_key(uid, rk)?;
+            peers.push(PeerRunner::new(uid, behavior.clone(), meta.param_count, cfg.seed));
+        }
+
+        let checkpoints = CheckpointStore::new(cfg.params.checkpoint_every);
+        let dense = vec![0.0; meta.padded_count];
+        let clock = cfg.clock;
+        Ok(TemplarRun {
+            cfg,
+            exec,
+            chain,
+            store,
+            corpus,
+            clock,
+            validators,
+            peers,
+            theta,
+            checkpoints,
+            round: 0,
+            dense,
+            last_coeff: None,
+        })
+    }
+
+    pub fn peer_uids(&self) -> Vec<Uid> {
+        self.peers.iter().map(|p| p.uid).collect()
+    }
+
+    /// Permissionless mid-run registration (§6: "peers joining later or
+    /// restarting"): the newcomer registers a hotkey, creates its bucket,
+    /// posts the read key, and starts contributing next round. It obtains
+    /// the current model via checkpoint + signed-update replay (the same
+    /// state the network holds, verified by `checkpoints.catchup`).
+    pub fn register_peer(&mut self, behavior: Behavior) -> Result<Uid> {
+        let i = self.peers.len();
+        let uid = self.chain.register(&format!("peer-hotkey-{i}"))?;
+        let bucket = format!("peer-{uid}");
+        let rk = self.store.create_bucket(&bucket, &bucket);
+        self.chain.post_read_key(uid, rk)?;
+        self.peers.push(PeerRunner::new(
+            uid,
+            behavior,
+            self.exec.meta.param_count,
+            self.cfg.seed,
+        ));
+        Ok(uid)
+    }
+
+    /// Drive the whole run.
+    pub fn run(&mut self) -> Result<RunMetrics> {
+        let mut metrics = RunMetrics::default();
+        for _ in 0..self.cfg.rounds {
+            metrics.rounds.push(self.run_round()?);
+        }
+        Ok(metrics)
+    }
+
+    /// One synchronous communication round.
+    pub fn run_round(&mut self) -> Result<RoundRecord> {
+        let round = self.round;
+        let meta_batch = self.exec.meta.batch;
+        let meta_seq = self.exec.meta.seq;
+        // alpha_t from the schedule (§3.1); everything downstream — signed
+        // step, SyncScore units, beta_t — uses this round's value.
+        let lr_t = self.cfg.params.schedule.lr_at(round, self.cfg.params.lr);
+        self.checkpoints.maybe_checkpoint(round, &self.theta);
+
+        // ------------------------- peers act -----------------------------
+        let mut local_losses = Vec::new();
+        let mut tokens: u64 = 0;
+        let mut submitted: BTreeMap<Uid, bool> = BTreeMap::new();
+        // First pass: independent behaviours.
+        for i in 0..self.peers.len() {
+            if self.peers[i].behavior.is_second_pass() {
+                continue;
+            }
+            let ctx = PeerCtx {
+                exec: &self.exec,
+                corpus: &self.corpus,
+                global_theta: &self.theta,
+                round,
+                clock: &self.clock,
+                params: &self.cfg.params,
+            };
+            let out = self.peers[i].step(&ctx)?;
+            let uid = self.peers[i].uid;
+            if self.peers[i].last_local_loss.is_finite() {
+                local_losses.push(self.peers[i].last_local_loss);
+            }
+            tokens +=
+                (self.peers[i].last_microbatches * meta_batch * meta_seq) as u64;
+            submitted.insert(uid, self.put_output(uid, out));
+        }
+        // Second pass: copiers / duplicators read their source's public
+        // object and re-post it.
+        for i in 0..self.peers.len() {
+            if !self.peers[i].behavior.is_second_pass() {
+                continue;
+            }
+            let uid = self.peers[i].uid;
+            let src_uid = self.peers[i].behavior.source_uid().unwrap();
+            let src_bytes = self.read_public(src_uid, round);
+            let ctx = PeerCtx {
+                exec: &self.exec,
+                corpus: &self.corpus,
+                global_theta: &self.theta,
+                round,
+                clock: &self.clock,
+                params: &self.cfg.params,
+            };
+            let out = self.peers[i].step_copy(&ctx, src_bytes.as_deref())?;
+            submitted.insert(uid, self.put_output(uid, out));
+        }
+
+        // ---------------------- validators evaluate ----------------------
+        let peer_uids = self.peer_uids();
+        let mut lead_outcome = None;
+        for v in 0..self.validators.len() {
+            let outcome = self.validators[v].process_round(
+                &self.exec,
+                &self.corpus,
+                &self.theta,
+                round,
+                &self.clock,
+                &self.store,
+                &mut self.chain,
+                &peer_uids,
+                lr_t,
+            )?;
+            if v == 0 {
+                lead_outcome = Some(outcome);
+            }
+        }
+        let outcome = lead_outcome.expect("at least one validator");
+
+        // ------------------------ chain epoch ----------------------------
+        let chain_incentives = self.chain.run_epoch();
+        let incentive_of = |uid: Uid| {
+            chain_incentives.iter().find(|(u, _)| *u == uid).map(|(_, x)| *x).unwrap_or(0.0)
+        };
+
+        // ------------------------- aggregation ---------------------------
+        // Lead validator's top-G weights drive aggregation (§3.3
+        // "Coordinated Aggregation" / "Validator Consensus and Stake").
+        let weights = if outcome.agg_weights.is_empty() {
+            // Bootstrap: before any primary evaluations have separated the
+            // peers, aggregate every fast-valid submission equally.
+            let n = outcome.valid_submissions.len().max(1);
+            outcome
+                .valid_submissions
+                .keys()
+                .map(|&u| (u, 1.0 / n as f64))
+                .collect::<Vec<_>>()
+        } else {
+            outcome
+                .agg_weights
+                .iter()
+                .filter(|(u, _)| outcome.valid_submissions.contains_key(u))
+                .copied()
+                .collect()
+        };
+        let top_g: Vec<Uid> = weights.iter().map(|(u, _)| *u).collect();
+
+        let theta_before = std::mem::take(&mut self.theta);
+        let (theta_after, had_update) = if weights.is_empty() {
+            (theta_before.clone(), false)
+        } else {
+            self.dense.iter_mut().for_each(|x| *x = 0.0);
+            let contributions: Vec<(&crate::demo::SparseGrad, f64)> = weights
+                .iter()
+                .map(|(u, w)| (&outcome.valid_submissions[u].grad, *w))
+                .collect();
+            aggregate_into(&contributions, &mut self.dense, &self.cfg.agg);
+            let new_theta = self.exec.apply_update(&theta_before, &self.dense, lr_t)?;
+            (new_theta, true)
+        };
+        if had_update {
+            self.checkpoints.record_update(round, &theta_before, &theta_after, lr_t)?;
+            self.last_coeff = Some(self.dense.clone());
+        } else {
+            self.last_coeff = None;
+        }
+        self.theta = theta_after;
+
+        // -------------------- peers synchronize --------------------------
+        for p in &mut self.peers {
+            p.on_round_end(
+                round,
+                &self.theta,
+                &self.exec,
+                self.last_coeff.as_deref(),
+                lr_t,
+            )?;
+        }
+
+        // ------------------------- metrics -------------------------------
+        let heldout_loss = if self.cfg.eval_every > 0 && round % self.cfg.eval_every == 0 {
+            let toks = self.corpus.heldout(0, meta_batch, meta_seq + 1);
+            Some(self.exec.loss(&self.theta, &toks)? as f64)
+        } else {
+            None
+        };
+
+        let book = &self.validators[0].book;
+        let peers_stats: Vec<PeerRoundStats> = self
+            .peers
+            .iter()
+            .map(|p| {
+                let st = book.get(p.uid);
+                let ev = outcome.evaluated.iter().find(|(u, _)| *u == p.uid).map(|(_, e)| e);
+                PeerRoundStats {
+                    uid: p.uid,
+                    label: p.behavior.label(),
+                    submitted: *submitted.get(&p.uid).unwrap_or(&false),
+                    fast_pass: *outcome.fast_pass.get(&p.uid).unwrap_or(&false),
+                    peer_score: book.peer_score(p.uid),
+                    rating_mu: st.map(|s| s.rating.mu).unwrap_or(0.0),
+                    rating_ordinal: st.map(|s| s.rating.ordinal()).unwrap_or(0.0),
+                    mu: st.map(|s| s.mu.value).unwrap_or(0.0),
+                    incentive: incentive_of(p.uid),
+                    in_top_g: top_g.contains(&p.uid),
+                    loss_score_rand: ev.map(|e| e.score_rand),
+                    loss_score_assigned: ev.map(|e| e.score_assigned),
+                    balance: self.chain.neuron(p.uid).map(|n| n.balance).unwrap_or(0.0),
+                }
+            })
+            .collect();
+
+        // Advance chain time to the start of the next round.
+        let blocks_per_round = self.clock.round_ms / crate::chain::BLOCK_MS;
+        self.chain.advance_blocks(blocks_per_round.max(1));
+        self.round += 1;
+
+        Ok(RoundRecord {
+            round,
+            heldout_loss,
+            mean_local_loss: crate::util::mean(&local_losses),
+            n_valid_submissions: outcome.valid_submissions.len(),
+            top_g,
+            peers: peers_stats,
+            tokens_processed: tokens,
+        })
+    }
+
+    fn put_output(&mut self, uid: Uid, out: PeerOutput) -> bool {
+        match out {
+            PeerOutput::Submit { time, bytes } => {
+                let bucket = format!("peer-{uid}");
+                let key = Submission::object_key(uid, self.round);
+                self.store.put(&bucket, &bucket, &key, bytes, time).is_ok()
+            }
+            PeerOutput::Skip => false,
+        }
+    }
+
+    /// Read another peer's public object (pseudo-gradients are broadcast:
+    /// every peer's read key is on the chain).
+    fn read_public(&self, uid: Uid, round: u64) -> Option<Vec<u8>> {
+        let rk = self.chain.neuron(uid)?.bucket_read_key.clone()?;
+        let bucket = format!("peer-{uid}");
+        let key = Submission::object_key(uid, round);
+        self.store.get(&bucket, &rk, &key).ok()?.map(|o| o.bytes.clone())
+    }
+}

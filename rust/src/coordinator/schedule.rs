@@ -1,0 +1,161 @@
+//! Learning-rate schedules (§3.1: "In practice, when using a learning rate
+//! scheduler, we found it was sufficient to set beta_t = c * alpha_t").
+//!
+//! The round loop evaluates alpha_t = schedule(round) each communication
+//! round; the validator's evaluation step size follows automatically as
+//! beta_t = beta_frac * alpha_t, and the SyncScore denominator uses the
+//! same alpha_t so "one unit" always means "one current signed step".
+
+/// Per-round learning-rate schedule.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum LrSchedule {
+    /// alpha_t = base for all t.
+    Constant,
+    /// Linear warmup over `warmup` rounds from base/10, then cosine decay
+    /// to `min_frac * base` at round `total` (clamped afterwards).
+    WarmupCosine { warmup: u64, total: u64, min_frac: f64 },
+    /// Step decay: alpha halves every `every` rounds.
+    StepHalving { every: u64 },
+}
+
+impl Default for LrSchedule {
+    fn default() -> Self {
+        LrSchedule::Constant
+    }
+}
+
+impl LrSchedule {
+    /// The learning rate for communication round `round`.
+    pub fn lr_at(&self, round: u64, base: f32) -> f32 {
+        match *self {
+            LrSchedule::Constant => base,
+            LrSchedule::WarmupCosine { warmup, total, min_frac } => {
+                let base = base as f64;
+                let lr = if warmup > 0 && round < warmup {
+                    // from 10% to 100% of base across the warmup
+                    base * (0.1 + 0.9 * (round as f64 + 1.0) / warmup as f64)
+                } else {
+                    let t0 = warmup.min(total);
+                    let span = total.saturating_sub(t0).max(1) as f64;
+                    let p = ((round.saturating_sub(t0)) as f64 / span).min(1.0);
+                    let floor = base * min_frac;
+                    floor + 0.5 * (base - floor) * (1.0 + (std::f64::consts::PI * p).cos())
+                };
+                lr as f32
+            }
+            LrSchedule::StepHalving { every } => {
+                let k = if every == 0 { 0 } else { round / every };
+                base / 2f32.powi(k.min(30) as i32)
+            }
+        }
+    }
+
+    /// Parse a CLI spec: "constant", "cosine:<warmup>:<total>[:<min_frac>]",
+    /// "halve:<every>".
+    pub fn parse(spec: &str) -> Result<LrSchedule, String> {
+        let parts: Vec<&str> = spec.split(':').collect();
+        match parts[0] {
+            "constant" => Ok(LrSchedule::Constant),
+            "cosine" => {
+                let warmup = parts.get(1).ok_or("cosine needs :<warmup>")?.parse()
+                    .map_err(|e| format!("warmup: {e}"))?;
+                let total = parts.get(2).ok_or("cosine needs :<total>")?.parse()
+                    .map_err(|e| format!("total: {e}"))?;
+                let min_frac = match parts.get(3) {
+                    Some(f) => f.parse().map_err(|e| format!("min_frac: {e}"))?,
+                    None => 0.1,
+                };
+                Ok(LrSchedule::WarmupCosine { warmup, total, min_frac })
+            }
+            "halve" => {
+                let every = parts.get(1).ok_or("halve needs :<every>")?.parse()
+                    .map_err(|e| format!("every: {e}"))?;
+                Ok(LrSchedule::StepHalving { every })
+            }
+            other => Err(format!("unknown schedule {other:?}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop;
+    use crate::prop_assert;
+
+    #[test]
+    fn constant_is_constant() {
+        let s = LrSchedule::Constant;
+        assert_eq!(s.lr_at(0, 0.02), 0.02);
+        assert_eq!(s.lr_at(10_000, 0.02), 0.02);
+    }
+
+    #[test]
+    fn warmup_rises_then_cosine_falls() {
+        let s = LrSchedule::WarmupCosine { warmup: 10, total: 100, min_frac: 0.1 };
+        let base = 0.01f32;
+        // warmup monotone rising
+        for r in 1..10 {
+            assert!(s.lr_at(r, base) >= s.lr_at(r - 1, base), "warmup at {r}");
+        }
+        // peak at end of warmup equals base
+        assert!((s.lr_at(9, base) - base).abs() < 1e-6);
+        // decay monotone falling
+        for r in 11..100 {
+            assert!(s.lr_at(r, base) <= s.lr_at(r - 1, base) + 1e-9, "decay at {r}");
+        }
+        // floor respected and held after `total`
+        let floor = base * 0.1;
+        assert!((s.lr_at(100, base) - floor).abs() < 1e-6);
+        assert!((s.lr_at(5000, base) - floor).abs() < 1e-6);
+    }
+
+    #[test]
+    fn step_halving() {
+        let s = LrSchedule::StepHalving { every: 5 };
+        assert_eq!(s.lr_at(0, 0.04), 0.04);
+        assert_eq!(s.lr_at(4, 0.04), 0.04);
+        assert_eq!(s.lr_at(5, 0.04), 0.02);
+        assert_eq!(s.lr_at(14, 0.04), 0.01);
+    }
+
+    #[test]
+    fn parse_roundtrips() {
+        assert_eq!(LrSchedule::parse("constant").unwrap(), LrSchedule::Constant);
+        assert_eq!(
+            LrSchedule::parse("cosine:5:50").unwrap(),
+            LrSchedule::WarmupCosine { warmup: 5, total: 50, min_frac: 0.1 }
+        );
+        assert_eq!(
+            LrSchedule::parse("cosine:5:50:0.25").unwrap(),
+            LrSchedule::WarmupCosine { warmup: 5, total: 50, min_frac: 0.25 }
+        );
+        assert_eq!(LrSchedule::parse("halve:7").unwrap(), LrSchedule::StepHalving { every: 7 });
+        assert!(LrSchedule::parse("exponential").is_err());
+        assert!(LrSchedule::parse("cosine").is_err());
+        assert!(LrSchedule::parse("cosine:x:50").is_err());
+    }
+
+    #[test]
+    fn prop_lr_always_positive_and_bounded_by_base() {
+        prop::check("schedule-bounds", 40, |rng, size| {
+            let base = rng.range_f64(1e-4, 0.1) as f32;
+            let s = match size % 3 {
+                0 => LrSchedule::Constant,
+                1 => LrSchedule::WarmupCosine {
+                    warmup: rng.below(20),
+                    total: 20 + rng.below(200),
+                    min_frac: rng.range_f64(0.0, 1.0),
+                },
+                _ => LrSchedule::StepHalving { every: 1 + rng.below(50) },
+            };
+            for _ in 0..30 {
+                let r = rng.below(5000);
+                let lr = s.lr_at(r, base);
+                prop_assert!(lr > 0.0, "non-positive lr {lr} at {r} for {s:?}");
+                prop_assert!(lr <= base * 1.0001, "lr {lr} exceeds base {base} for {s:?}");
+            }
+            Ok(())
+        });
+    }
+}

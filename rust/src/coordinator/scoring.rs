@@ -1,0 +1,266 @@
+//! Peer score bookkeeping: PEERSCORE (eq. 4), the power normalization
+//! (eq. 5) and top-G aggregation weights (eq. 6).
+
+use std::collections::BTreeMap;
+
+use crate::chain::Uid;
+use crate::openskill::{PlackettLuce, Rating};
+use crate::util::Ema;
+
+/// Validator-local state for one peer.
+#[derive(Clone, Debug)]
+pub struct PeerState {
+    /// OpenSkill LossRating (updated by ranked primary evaluations).
+    pub rating: Rating,
+    /// Proof-of-computation EMA mu_p (eq. 3), also the phi penalty target.
+    pub mu: Ema,
+    /// Diagnostics: last primary-eval loss scores.
+    pub last_loss_score_rand: f64,
+    pub last_loss_score_assigned: f64,
+    pub evals: u64,
+    pub fast_fails: u64,
+}
+
+/// The validator's score table.
+#[derive(Clone, Debug)]
+pub struct ScoreBook {
+    pub model: PlackettLuce,
+    pub gamma: f64,
+    states: BTreeMap<Uid, PeerState>,
+}
+
+impl ScoreBook {
+    pub fn new(gamma: f64) -> Self {
+        ScoreBook { model: PlackettLuce::default(), gamma, states: BTreeMap::new() }
+    }
+
+    pub fn ensure(&mut self, uid: Uid) -> &mut PeerState {
+        let model = self.model;
+        let gamma = self.gamma;
+        self.states.entry(uid).or_insert_with(|| PeerState {
+            rating: model.initial(),
+            mu: Ema::new(gamma),
+            last_loss_score_rand: 0.0,
+            last_loss_score_assigned: 0.0,
+            evals: 0,
+            fast_fails: 0,
+        })
+    }
+
+    pub fn get(&self, uid: Uid) -> Option<&PeerState> {
+        self.states.get(&uid)
+    }
+
+    pub fn uids(&self) -> Vec<Uid> {
+        self.states.keys().copied().collect()
+    }
+
+    /// Apply the fast-evaluation outcome: phi < 1 on failure (§3.2).
+    pub fn apply_fast_penalty(&mut self, uid: Uid, phi: f64) {
+        let s = self.ensure(uid);
+        if phi < 1.0 {
+            s.fast_fails += 1;
+        }
+        s.mu.scale(phi);
+    }
+
+    /// Record one primary evaluation for `uid` (eq. 3 EMA update).
+    pub fn record_primary(&mut self, uid: Uid, score_assigned: f64, score_rand: f64) {
+        let s = self.ensure(uid);
+        s.last_loss_score_assigned = score_assigned;
+        s.last_loss_score_rand = score_rand;
+        s.evals += 1;
+        s.mu.update(crate::util::sign(score_assigned - score_rand));
+    }
+
+    /// Rank an evaluated subset by their random-data LossScores and update
+    /// OpenSkill ratings (the `OpenSkillMatch` step of Algorithm 1).
+    pub fn rate_match(&mut self, uids: &[Uid], loss_scores_rand: &[f64]) {
+        assert_eq!(uids.len(), loss_scores_rand.len());
+        if uids.len() < 2 {
+            return;
+        }
+        let ratings: Vec<Rating> = uids.iter().map(|u| self.ensure(*u).rating).collect();
+        let updated = self.model.rate_by_scores(&ratings, loss_scores_rand);
+        for (u, r) in uids.iter().zip(updated) {
+            self.ensure(*u).rating = r;
+        }
+    }
+
+    /// PEERSCORE_p = mu_p * LossRating_p (eq. 4). We use the OpenSkill mu
+    /// as the rating magnitude (clamped at zero): early in a run the
+    /// conservative ordinal (mu - 3 sigma) is ~0 for everyone, which would
+    /// leave the incentive signal flat for many rounds; mu separates peers
+    /// as soon as the first matches are played, while the mu_p factor
+    /// already gates unevaluated peers at zero.
+    pub fn peer_score(&self, uid: Uid) -> f64 {
+        match self.states.get(&uid) {
+            Some(s) => s.mu.value * s.rating.mu.max(0.0),
+            None => 0.0,
+        }
+    }
+
+    pub fn all_peer_scores(&self) -> Vec<(Uid, f64)> {
+        self.states.keys().map(|&u| (u, self.peer_score(u))).collect()
+    }
+}
+
+/// Incentive normalization (eq. 5):
+/// `x_p = (s_p - min s)^c / sum_k (s_k - min s)^c`.
+/// Returns zeros when all scores are equal (no signal yet).
+pub fn normalize_scores(scores: &[f64], power: f64) -> Vec<f64> {
+    if scores.is_empty() {
+        return vec![];
+    }
+    let min = scores.iter().cloned().fold(f64::INFINITY, f64::min);
+    let shifted: Vec<f64> = scores.iter().map(|s| (s - min).max(0.0).powf(power)).collect();
+    let total: f64 = shifted.iter().sum();
+    if total <= 0.0 {
+        return vec![0.0; scores.len()];
+    }
+    shifted.into_iter().map(|x| x / total).collect()
+}
+
+/// Top-G selection + aggregation weights (eq. 6): 1/G for the top G peers
+/// by normalized incentive, 0 otherwise. Ties are broken by uid for
+/// determinism. Peers with zero incentive are never selected.
+pub fn top_g_weights(incentives: &[(Uid, f64)], g: usize) -> Vec<(Uid, f64)> {
+    let mut ranked: Vec<(Uid, f64)> =
+        incentives.iter().copied().filter(|(_, x)| *x > 0.0).collect();
+    ranked.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+    ranked.truncate(g);
+    if ranked.is_empty() {
+        return vec![];
+    }
+    let w = 1.0 / ranked.len() as f64;
+    ranked.into_iter().map(|(u, _)| (u, w)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop;
+    use crate::prop_assert;
+
+    #[test]
+    fn peer_score_combines_mu_and_rating() {
+        let mut b = ScoreBook::new(0.0); // gamma 0: mu = latest sign
+        assert_eq!(b.peer_score(1), 0.0, "unknown peer scores 0");
+        b.record_primary(1, 0.5, 0.3); // assigned > rand -> mu = +1
+        let s = b.peer_score(1);
+        assert!(s > 0.0, "compliant evaluated peer scores positive: {s}");
+        b.record_primary(2, 0.1, 0.3); // assigned < rand -> mu = -1
+        assert!(b.peer_score(2) < 0.0);
+    }
+
+    #[test]
+    fn fast_penalty_decays_mu_geometrically() {
+        let mut b = ScoreBook::new(0.0);
+        b.record_primary(1, 1.0, 0.5);
+        let before = b.get(1).unwrap().mu.value;
+        b.apply_fast_penalty(1, 0.75);
+        b.apply_fast_penalty(1, 0.75);
+        let after = b.get(1).unwrap().mu.value;
+        assert!((after - before * 0.5625).abs() < 1e-12);
+        assert_eq!(b.get(1).unwrap().fast_fails, 2);
+    }
+
+    #[test]
+    fn passing_fast_eval_is_noop() {
+        let mut b = ScoreBook::new(0.0);
+        b.record_primary(1, 1.0, 0.5);
+        let before = b.get(1).unwrap().mu.value;
+        b.apply_fast_penalty(1, 1.0);
+        assert_eq!(b.get(1).unwrap().mu.value, before);
+        assert_eq!(b.get(1).unwrap().fast_fails, 0);
+    }
+
+    #[test]
+    fn rate_match_orders_ratings_by_score() {
+        let mut b = ScoreBook::new(0.9);
+        for _ in 0..20 {
+            b.rate_match(&[1, 2, 3], &[0.9, 0.5, 0.1]);
+        }
+        let r1 = b.get(1).unwrap().rating.ordinal();
+        let r2 = b.get(2).unwrap().rating.ordinal();
+        let r3 = b.get(3).unwrap().rating.ordinal();
+        assert!(r1 > r2 && r2 > r3, "{r1} {r2} {r3}");
+    }
+
+    #[test]
+    fn normalize_matches_paper_example() {
+        // two peers, c=2: scores (3, 1) -> shifted (2, 0) -> (1, 0)
+        let x = normalize_scores(&[3.0, 1.0], 2.0);
+        assert_eq!(x, vec![1.0, 0.0]);
+        // c=2 concentrates: (2,1,0) -> (4,1,0)/5
+        let x = normalize_scores(&[2.0, 1.0, 0.0], 2.0);
+        assert!((x[0] - 0.8).abs() < 1e-12 && (x[1] - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn normalize_degenerate_cases() {
+        assert_eq!(normalize_scores(&[], 2.0), Vec::<f64>::new());
+        assert_eq!(normalize_scores(&[5.0, 5.0], 2.0), vec![0.0, 0.0]);
+        assert_eq!(normalize_scores(&[1.0], 2.0), vec![0.0]);
+    }
+
+    #[test]
+    fn higher_power_concentrates_incentive() {
+        // The design rationale in §3.3: one strong peer should out-earn
+        // many weak peers more at c=2 than c=1.
+        let scores = [10.0, 6.0, 5.0, 4.0, 0.0];
+        let c1 = normalize_scores(&scores, 1.0);
+        let c2 = normalize_scores(&scores, 2.0);
+        assert!(c2[0] > c1[0], "top share should grow with c: {} vs {}", c2[0], c1[0]);
+    }
+
+    #[test]
+    fn top_g_weights_are_uniform_and_exclude_zero() {
+        let inc = vec![(0, 0.5), (1, 0.3), (2, 0.2), (3, 0.0)];
+        let w = top_g_weights(&inc, 2);
+        assert_eq!(w, vec![(0, 0.5), (1, 0.5)]);
+        let w = top_g_weights(&inc, 10);
+        assert_eq!(w.len(), 3, "zero-incentive peer excluded");
+        assert!((w[0].1 - 1.0 / 3.0).abs() < 1e-12);
+        assert!(top_g_weights(&[(0, 0.0)], 3).is_empty());
+    }
+
+    #[test]
+    fn top_g_ties_break_by_uid() {
+        let inc = vec![(5, 0.4), (2, 0.4), (9, 0.2)];
+        let w = top_g_weights(&inc, 2);
+        assert_eq!(w.iter().map(|(u, _)| *u).collect::<Vec<_>>(), vec![2, 5]);
+    }
+
+    #[test]
+    fn prop_normalized_scores_sum_to_one_and_are_monotone() {
+        prop::check("normalize-eq5", 50, |rng, size| {
+            let n = 2 + size % 10;
+            let scores: Vec<f64> = (0..n).map(|_| rng.range_f64(-5.0, 5.0)).collect();
+            let x = normalize_scores(&scores, 2.0);
+            let total: f64 = x.iter().sum();
+            prop_assert!(
+                total.abs() < 1e-12 || (total - 1.0).abs() < 1e-9,
+                "sum {total}"
+            );
+            // monotone: higher raw score never yields lower incentive
+            for i in 0..n {
+                for j in 0..n {
+                    if scores[i] > scores[j] {
+                        prop_assert!(
+                            x[i] >= x[j] - 1e-12,
+                            "monotonicity broken at {i},{j}"
+                        );
+                    }
+                }
+            }
+            // shift invariance: adding a constant changes nothing
+            let shifted: Vec<f64> = scores.iter().map(|s| s + 3.7).collect();
+            let y = normalize_scores(&shifted, 2.0);
+            for (a, b) in x.iter().zip(&y) {
+                prop_assert!((a - b).abs() < 1e-9, "shift invariance broken");
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,165 @@
+//! One Gauntlet validator: fast eval over all peers, primary eval over a
+//! random subset, score maintenance, and the weight vector it commits to
+//! the chain each round (Algorithm 1, validator loop).
+
+use std::collections::BTreeMap;
+
+use anyhow::{Context, Result};
+
+use super::fast_eval::{fast_evaluate, FastEvalCtx, FastEvalOutcome};
+use super::primary_eval::{PrimaryEval, PrimaryEvaluator};
+use super::round::RoundClock;
+use super::scoring::{normalize_scores, top_g_weights, ScoreBook};
+use super::GauntletParams;
+use crate::chain::{Chain, Uid};
+use crate::data::Corpus;
+use crate::demo::wire::Submission;
+use crate::runtime::Executor;
+use crate::storage::ObjectStore;
+use crate::util::Rng;
+
+/// Everything a validator decided in one round.
+#[derive(Debug, Default)]
+pub struct RoundOutcome {
+    /// Fast-evaluation pass/fail per peer.
+    pub fast_pass: BTreeMap<Uid, bool>,
+    /// Primary evaluations performed this round (the sampled S_t).
+    pub evaluated: Vec<(Uid, PrimaryEval)>,
+    /// Normalized incentives x^norm (eq. 5) over all known peers.
+    pub incentives: Vec<(Uid, f64)>,
+    /// Aggregation weights w_p (eq. 6) — peers in the top G.
+    pub agg_weights: Vec<(Uid, f64)>,
+    /// Submissions that passed every fast check (aggregation candidates).
+    pub valid_submissions: BTreeMap<Uid, Submission>,
+}
+
+pub struct Validator {
+    /// Chain identity (a staked neuron).
+    pub uid: Uid,
+    pub book: ScoreBook,
+    pub params: GauntletParams,
+    evaluator: PrimaryEvaluator,
+    rng: Rng,
+}
+
+impl Validator {
+    pub fn new(uid: Uid, params: GauntletParams, padded_count: usize, seed: u64) -> Self {
+        Validator {
+            uid,
+            book: ScoreBook::new(params.gamma),
+            rng: Rng::from_parts(&["validator", &uid.to_string(), &seed.to_string()]),
+            evaluator: PrimaryEvaluator::new(padded_count),
+            params,
+        }
+    }
+
+    /// Process one communication round end-to-end for this validator and
+    /// commit the resulting weights to the chain.
+    #[allow(clippy::too_many_arguments)]
+    pub fn process_round(
+        &mut self,
+        exec: &Executor,
+        corpus: &Corpus,
+        theta: &[f32],
+        round: u64,
+        clock: &RoundClock,
+        store: &ObjectStore,
+        chain: &mut Chain,
+        peer_uids: &[Uid],
+        lr_t: f32,
+    ) -> Result<RoundOutcome> {
+        let meta = &exec.meta;
+        let probe = meta.sync_probe(theta);
+        let (w_open, w_close) = clock.put_window(round);
+        let mut out = RoundOutcome::default();
+
+        // ---- fast evaluation over ALL peers (F_t; §3.2 — this always
+        // includes the current top-G so bad actors are evicted quickly) ---
+        for &uid in peer_uids {
+            let bucket = format!("peer-{uid}");
+            let rk = chain
+                .neuron(uid)
+                .and_then(|n| n.bucket_read_key.clone())
+                .with_context(|| format!("peer {uid} has no read key on chain"))?;
+            let key = Submission::object_key(uid, round);
+            let get = store
+                .get_within_window(&bucket, &rk, &key, w_open, w_close)
+                .with_context(|| format!("reading {bucket}/{key}"))?;
+            let ctx = FastEvalCtx {
+                uid,
+                round,
+                coeff_count: meta.coeff_count,
+                padded_count: meta.padded_count,
+                probe_len: probe.len(),
+                validator_probe: &probe,
+                lr: lr_t,
+                sync_threshold: self.params.sync_threshold,
+            };
+            let outcome: FastEvalOutcome = fast_evaluate(&get, &ctx);
+            let passed = outcome.passed();
+            self.book.ensure(uid);
+            self.book.apply_fast_penalty(uid, outcome.phi(self.params.phi_penalty));
+            out.fast_pass.insert(uid, passed);
+            if passed {
+                if let Some(sub) = outcome.submission {
+                    out.valid_submissions.insert(uid, sub);
+                }
+            }
+        }
+
+        // ---- primary evaluation on a random subset S_t of valid peers ---
+        let candidates: Vec<Uid> = out.valid_submissions.keys().copied().collect();
+        let sample = self.rng.choose_k(&candidates, self.params.eval_sample);
+        let beta = self.params.beta_frac * lr_t; // beta_t = c * alpha_t
+        let mut scores_rand = Vec::with_capacity(sample.len());
+        for &uid in &sample {
+            let sub = &out.valid_submissions[&uid];
+            let ev = self.evaluator.evaluate(
+                exec, theta, uid, round, &sub.grad, corpus, beta,
+            )?;
+            self.book.record_primary(uid, ev.score_assigned, ev.score_rand);
+            scores_rand.push(ev.score_rand);
+            out.evaluated.push((uid, ev));
+        }
+        self.book.rate_match(&sample, &scores_rand);
+
+        // ---- PEERSCORE -> eq.5 normalization -> eq.6 top-G weights ------
+        let raw: Vec<(Uid, f64)> =
+            peer_uids.iter().map(|&u| (u, self.book.peer_score(u))).collect();
+        let normed = normalize_scores(
+            &raw.iter().map(|(_, s)| *s).collect::<Vec<_>>(),
+            self.params.norm_power,
+        );
+        out.incentives = raw.iter().map(|(u, _)| *u).zip(normed).collect();
+        out.agg_weights = top_g_weights(&out.incentives, self.params.top_g);
+
+        // ---- commit to chain --------------------------------------------
+        chain.set_weights(self.uid, &out.incentives)?;
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! Validator round-loop integration tests (needing artifacts) live in
+    //! `rust/tests/integration.rs`; scoring/fast-eval units are tested in
+    //! their own modules.
+
+    use super::*;
+
+    #[test]
+    fn round_outcome_default_is_empty() {
+        let o = RoundOutcome::default();
+        assert!(o.fast_pass.is_empty() && o.evaluated.is_empty());
+        assert!(o.incentives.is_empty() && o.agg_weights.is_empty());
+    }
+
+    #[test]
+    fn validator_rng_is_deterministic_per_uid() {
+        let a = Validator::new(7, GauntletParams::default(), 16, 1);
+        let b = Validator::new(7, GauntletParams::default(), 16, 1);
+        let mut ra = a.rng.clone();
+        let mut rb = b.rng.clone();
+        assert_eq!(ra.next_u64(), rb.next_u64());
+    }
+}

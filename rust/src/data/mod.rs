@@ -1,0 +1,197 @@
+//! Synthetic training corpus + deterministic shard assignment.
+//!
+//! Substitutes FineWebEdu (paper §6): the incentive mechanics only require
+//! (a) a corpus with learnable structure so losses fall and LossScores are
+//! informative, and (b) the `SelectData(seed, p, t)` contract — the
+//! validator and an honest peer must derive the *identical* unique data
+//! subset for peer p at round t from public information, while random
+//! evaluation subsets come from a disjoint namespace.
+//!
+//! The corpus is a mixture of `n_patterns` affine token processes: within a
+//! document, `next = (a_p * cur + b_p) mod V` for a per-document pattern p,
+//! with occasional random "switch" tokens. Two consecutive tokens identify
+//! the pattern, so a small transformer can drive next-token loss from
+//! ln(V) down toward the switch-noise floor — fast enough convergence to
+//! reproduce the paper's loss-curve shapes at hundreds of rounds.
+
+use crate::util::Rng;
+
+/// Token type matching the artifacts' i32 ABI.
+pub type Token = i32;
+
+#[derive(Clone, Debug)]
+pub struct Corpus {
+    pub vocab: u32,
+    pub n_patterns: u32,
+    /// Probability of an entropy-injecting random token at each position.
+    pub switch_prob: f64,
+    /// Global run seed: all shards derive from it.
+    pub seed: u64,
+}
+
+impl Corpus {
+    pub fn new(vocab: u32, seed: u64) -> Self {
+        Corpus { vocab, n_patterns: 4, switch_prob: 0.02, seed }
+    }
+
+    /// Pattern p's affine map (odd multiplier => bijective mod 2^k vocab).
+    fn pattern(&self, p: u32) -> (u64, u64) {
+        let mut r = Rng::from_parts(&["pattern", &self.seed.to_string(), &p.to_string()]);
+        let a = 2 * r.below(self.vocab as u64 / 2) + 1;
+        let b = r.below(self.vocab as u64);
+        (a, b)
+    }
+
+    /// One document of `len` tokens driven by `rng`.
+    fn document(&self, rng: &mut Rng, len: usize) -> Vec<Token> {
+        let p = rng.below(self.n_patterns as u64) as u32;
+        let (a, b) = self.pattern(p);
+        let v = self.vocab as u64;
+        let mut cur = rng.below(v);
+        let mut out = Vec::with_capacity(len);
+        for _ in 0..len {
+            out.push(cur as Token);
+            if rng.chance(self.switch_prob) {
+                cur = rng.below(v);
+            } else {
+                cur = (a * cur + b) % v;
+            }
+        }
+        out
+    }
+
+    /// Deterministic batch: `parts` name the shard (namespace + ids); the
+    /// same parts always yield the same tokens. Shape: batch * (seq+1),
+    /// row-major, matching the artifacts' `tokens i32[B, S+1]` input.
+    pub fn batch(&self, parts: &[&str], batch: usize, seq_plus1: usize) -> Vec<Token> {
+        let seed_s = self.seed.to_string();
+        let mut all_parts = vec!["corpus", seed_s.as_str()];
+        all_parts.extend_from_slice(parts);
+        let mut rng = Rng::from_parts(&all_parts);
+        let mut out = Vec::with_capacity(batch * seq_plus1);
+        for _ in 0..batch {
+            out.extend(self.document(&mut rng, seq_plus1));
+        }
+        out
+    }
+
+    /// Peer p's **assigned** unique shard for round t, microbatch `mb`
+    /// (paper: D_t^p). Honest peers train on these; the validator
+    /// re-derives them for the proof-of-computation check.
+    pub fn assigned_shard(
+        &self,
+        uid: u32,
+        round: u64,
+        mb: u32,
+        batch: usize,
+        seq_plus1: usize,
+    ) -> Vec<Token> {
+        self.batch(
+            &["assigned", &uid.to_string(), &round.to_string(), &mb.to_string()],
+            batch,
+            seq_plus1,
+        )
+    }
+
+    /// A random evaluation subset for round t (paper: D_t^rand). The
+    /// namespace is disjoint from every assigned shard by construction.
+    pub fn random_eval(&self, round: u64, draw: u32, batch: usize, seq_plus1: usize) -> Vec<Token> {
+        self.batch(&["rand", &round.to_string(), &draw.to_string()], batch, seq_plus1)
+    }
+
+    /// A fixed held-out batch for loss-curve tracking (never trained on).
+    pub fn heldout(&self, draw: u32, batch: usize, seq_plus1: usize) -> Vec<Token> {
+        self.batch(&["heldout", &draw.to_string()], batch, seq_plus1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop;
+    use crate::prop_assert;
+
+    fn corpus() -> Corpus {
+        Corpus::new(512, 7)
+    }
+
+    #[test]
+    fn batches_are_deterministic() {
+        let c = corpus();
+        assert_eq!(c.assigned_shard(3, 17, 0, 4, 33), c.assigned_shard(3, 17, 0, 4, 33));
+        assert_eq!(c.random_eval(17, 1, 4, 33), c.random_eval(17, 1, 4, 33));
+    }
+
+    #[test]
+    fn shards_differ_across_peers_rounds_and_namespaces() {
+        let c = corpus();
+        let base = c.assigned_shard(0, 0, 0, 2, 33);
+        assert_ne!(base, c.assigned_shard(1, 0, 0, 2, 33), "peer disjoint");
+        assert_ne!(base, c.assigned_shard(0, 1, 0, 2, 33), "round disjoint");
+        assert_ne!(base, c.assigned_shard(0, 0, 1, 2, 33), "microbatch disjoint");
+        assert_ne!(base, c.random_eval(0, 0, 2, 33), "namespace disjoint");
+        assert_ne!(base, c.heldout(0, 2, 33), "heldout disjoint");
+    }
+
+    #[test]
+    fn tokens_in_vocab_range() {
+        let c = corpus();
+        for t in c.assigned_shard(5, 9, 0, 8, 65) {
+            assert!((0..512).contains(&t));
+        }
+    }
+
+    #[test]
+    fn corpus_seed_changes_data() {
+        let a = Corpus::new(512, 1).assigned_shard(0, 0, 0, 2, 33);
+        let b = Corpus::new(512, 2).assigned_shard(0, 0, 0, 2, 33);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn documents_follow_affine_pattern_mostly() {
+        // Within a document, consecutive pairs should usually satisfy one
+        // of the n_patterns affine maps.
+        let c = corpus();
+        let doc = c.batch(&["probe"], 1, 257);
+        let maps: Vec<(u64, u64)> = (0..c.n_patterns).map(|p| c.pattern(p)).collect();
+        let v = c.vocab as u64;
+        let mut hits = 0;
+        for w in doc.windows(2) {
+            let (x, y) = (w[0] as u64, w[1] as u64);
+            if maps.iter().any(|(a, b)| (a * x + b) % v == y) {
+                hits += 1;
+            }
+        }
+        let frac = hits as f64 / (doc.len() - 1) as f64;
+        assert!(frac > 0.9, "pattern hit rate too low: {frac}");
+    }
+
+    #[test]
+    fn pattern_multiplier_is_odd() {
+        let c = corpus();
+        for p in 0..c.n_patterns {
+            assert_eq!(c.pattern(p).0 % 2, 1);
+        }
+    }
+
+    #[test]
+    fn prop_batch_shape_and_determinism() {
+        prop::check("corpus-batch", 30, |rng, size| {
+            let c = Corpus::new(256, rng.next_u64());
+            let b = 1 + size % 5;
+            let s = 2 + size % 40;
+            let uid = rng.below(100) as u32;
+            let round = rng.below(1000);
+            let x = c.assigned_shard(uid, round, 0, b, s);
+            prop_assert!(x.len() == b * s, "len {} != {}", x.len(), b * s);
+            prop_assert!(
+                x.iter().all(|&t| (0..256).contains(&t)),
+                "token out of range"
+            );
+            let y = c.assigned_shard(uid, round, 0, b, s);
+            prop_assert!(x == y, "not deterministic");
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,180 @@
+//! Validator-side aggregation of compressed pseudo-gradients
+//! (Algorithm 2, `DeMoAggregation`, lines 10–16 — minus the final IDCT +
+//! sign, which run inside the `apply_update` XLA artifact).
+//!
+//! Per §4, each peer's encoded vector is L2-normalized before the weighted
+//! sum so no single peer can dominate the aggregate by rescaling its
+//! contribution — the paper's primary byzantine defense alongside the
+//! post-aggregation sign.
+
+use super::SparseGrad;
+
+#[derive(Clone, Copy, Debug)]
+pub struct AggregateOpts {
+    /// Normalize each peer's encoded vector to unit L2 norm before summing
+    /// (paper Algorithm 2 line 12). Exposed so the ablation bench can
+    /// reproduce the §4 with/without-normalization comparison.
+    pub normalize: bool,
+    /// Norm floor: contributions with smaller L2 norm are dropped rather
+    /// than amplified by a huge 1/norm factor.
+    pub min_norm: f64,
+}
+
+impl Default for AggregateOpts {
+    fn default() -> Self {
+        AggregateOpts { normalize: true, min_norm: 1e-12 }
+    }
+}
+
+/// Weighted aggregation into a dense DCT-coefficient vector f32[padded].
+///
+/// `contributions` pairs each peer's sparse gradient with its aggregation
+/// weight w_p (eq. 6: 1/G for top-G peers). Weights are used as given;
+/// zero-weight entries are skipped.
+pub fn aggregate(
+    contributions: &[(&SparseGrad, f64)],
+    padded_count: usize,
+    opts: &AggregateOpts,
+) -> Vec<f32> {
+    let mut dense = vec![0.0f32; padded_count];
+    aggregate_into(contributions, &mut dense, opts);
+    dense
+}
+
+/// Allocation-free variant for the hot loop: accumulates into `dense`
+/// (which must be zeroed by the caller if a fresh aggregate is wanted).
+pub fn aggregate_into(
+    contributions: &[(&SparseGrad, f64)],
+    dense: &mut [f32],
+    opts: &AggregateOpts,
+) {
+    for (grad, w) in contributions {
+        if *w == 0.0 || grad.is_empty() {
+            continue;
+        }
+        let scale = if opts.normalize {
+            let n = grad.l2_norm();
+            if n < opts.min_norm {
+                continue;
+            }
+            (*w / n) as f32
+        } else {
+            *w as f32
+        };
+        grad.scatter_into(dense, scale);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop;
+    use crate::prop_assert;
+    use crate::util::Rng;
+
+    fn sg(vals: Vec<f32>, idx: Vec<i32>) -> SparseGrad {
+        SparseGrad { vals, idx }
+    }
+
+    #[test]
+    fn unweighted_sum_without_normalization() {
+        let a = sg(vec![1.0, 2.0], vec![0, 2]);
+        let b = sg(vec![4.0], vec![2]);
+        let opts = AggregateOpts { normalize: false, ..Default::default() };
+        let d = aggregate(&[(&a, 1.0), (&b, 1.0)], 4, &opts);
+        assert_eq!(d, vec![1.0, 0.0, 6.0, 0.0]);
+    }
+
+    #[test]
+    fn normalization_equalizes_scaled_copies() {
+        // The §4 rescaling attack: a 1000x-scaled copy of the same gradient
+        // must contribute identically to an honest one.
+        let honest = sg(vec![0.6, 0.8], vec![1, 3]);
+        let attacker = sg(vec![600.0, 800.0], vec![1, 3]);
+        let opts = AggregateOpts::default();
+        let d_h = aggregate(&[(&honest, 1.0)], 4, &opts);
+        let d_a = aggregate(&[(&attacker, 1.0)], 4, &opts);
+        for (x, y) in d_h.iter().zip(&d_a) {
+            assert!((x - y).abs() < 1e-6, "{d_h:?} vs {d_a:?}");
+        }
+    }
+
+    #[test]
+    fn without_normalization_attacker_dominates() {
+        let honest = sg(vec![0.6, 0.8], vec![0, 1]);
+        let attacker = sg(vec![-600.0, 800.0], vec![0, 1]);
+        let opts = AggregateOpts { normalize: false, ..Default::default() };
+        let d = aggregate(&[(&honest, 0.5), (&attacker, 0.5)], 2, &opts);
+        // attacker flipped the sign of coordinate 0 despite equal weight
+        assert!(d[0] < 0.0);
+    }
+
+    #[test]
+    fn zero_weight_and_empty_grads_skipped() {
+        let a = sg(vec![1.0], vec![0]);
+        let empty = sg(vec![], vec![]);
+        let d = aggregate(&[(&a, 0.0), (&empty, 1.0)], 2, &AggregateOpts::default());
+        assert_eq!(d, vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn tiny_norm_contributions_dropped() {
+        let eps = sg(vec![1e-20], vec![0]);
+        let d = aggregate(&[(&eps, 1.0)], 1, &AggregateOpts::default());
+        assert_eq!(d, vec![0.0], "should drop, not amplify by 1e20");
+    }
+
+    #[test]
+    fn aggregate_into_accumulates_across_calls() {
+        let a = sg(vec![2.0], vec![0]);
+        let mut dense = vec![0.0f32; 1];
+        let opts = AggregateOpts { normalize: false, ..Default::default() };
+        aggregate_into(&[(&a, 1.0)], &mut dense, &opts);
+        aggregate_into(&[(&a, 1.0)], &mut dense, &opts);
+        assert_eq!(dense, vec![4.0]);
+    }
+
+    #[test]
+    fn prop_linearity_and_norm_invariance() {
+        prop::check("aggregate-invariants", 40, |rng, size| {
+            let p_pad = 16 + size * 4;
+            let c = 1 + size % 8;
+            let mk = |rng: &mut Rng| {
+                let idx: Vec<i32> =
+                    (0..c).map(|_| rng.below(p_pad as u64) as i32).collect();
+                let vals: Vec<f32> = (0..c).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+                sg(vals, idx)
+            };
+            let g1 = mk(rng);
+            let g2 = mk(rng);
+            // (a) weighted sum is linear in weights (normalize=false)
+            let opts = AggregateOpts { normalize: false, ..Default::default() };
+            let d1 = aggregate(&[(&g1, 2.0), (&g2, 3.0)], p_pad, &opts);
+            let a1 = aggregate(&[(&g1, 1.0)], p_pad, &opts);
+            let a2 = aggregate(&[(&g2, 1.0)], p_pad, &opts);
+            for i in 0..p_pad {
+                let want = 2.0 * a1[i] + 3.0 * a2[i];
+                prop_assert!((d1[i] - want).abs() < 1e-4, "linearity at {i}");
+            }
+            // (b) with normalization, scaling a contribution is a no-op
+            let scaled = sg(g1.vals.iter().map(|v| v * 123.0).collect(), g1.idx.clone());
+            let n1 = aggregate(&[(&g1, 1.0)], p_pad, &AggregateOpts::default());
+            let n2 = aggregate(&[(&scaled, 1.0)], p_pad, &AggregateOpts::default());
+            for i in 0..p_pad {
+                prop_assert!((n1[i] - n2[i]).abs() < 1e-5, "norm invariance at {i}");
+            }
+            // (c) when indices don't collide, the scatter preserves the
+            // normalized norm exactly (collisions may sum values, so the
+            // check only applies to duplicate-free index sets)
+            let mut uniq = g1.idx.clone();
+            uniq.sort_unstable();
+            uniq.dedup();
+            if uniq.len() == g1.idx.len() && g1.l2_norm() > 1e-12 {
+                let norm: f64 =
+                    n1.iter().map(|v| (*v as f64) * (*v as f64)).sum::<f64>().sqrt();
+                prop_assert!((norm - 1.0).abs() < 1e-5, "unit norm broken: {norm}");
+            }
+            Ok(())
+        });
+    }
+}

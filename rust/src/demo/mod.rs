@@ -1,0 +1,99 @@
+//! DeMo compressed-domain plumbing on the coordinator side (Algorithm 2).
+//!
+//! Peers transmit pseudo-gradients as sparse top-k DCT coefficients
+//! (values + global coefficient indices, produced by the `demo_compress`
+//! artifact). The validator-side aggregation — per-peer L2 normalization in
+//! the *encoded* domain (the §4 byzantine defense) followed by a weighted
+//! sparse sum — is pure bookkeeping and runs natively in Rust on the hot
+//! path; only the IDCT + sign + parameter step happens inside XLA
+//! (`apply_update` artifact).
+
+pub mod aggregate;
+pub mod wire;
+
+pub use aggregate::{aggregate, AggregateOpts};
+pub use wire::{Submission, WireError};
+
+/// A sparse pseudo-gradient in the DCT-encoded domain.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SparseGrad {
+    /// Kept coefficient values (with sign), length C.
+    pub vals: Vec<f32>,
+    /// Global coefficient indices (chunk_id * chunk^2 + local), length C.
+    pub idx: Vec<i32>,
+}
+
+impl SparseGrad {
+    pub fn len(&self) -> usize {
+        self.vals.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.vals.is_empty()
+    }
+
+    pub fn l2_norm(&self) -> f64 {
+        self.vals.iter().map(|v| (*v as f64) * (*v as f64)).sum::<f64>().sqrt()
+    }
+
+    /// Structural validation against the config's expected dimensions —
+    /// the §3.2 "basic checks (c)" format rule.
+    pub fn validate(&self, coeff_count: usize, padded_count: usize) -> Result<(), String> {
+        if self.vals.len() != coeff_count || self.idx.len() != coeff_count {
+            return Err(format!(
+                "bad length: {} vals / {} idx, expected {coeff_count}",
+                self.vals.len(),
+                self.idx.len()
+            ));
+        }
+        if self.vals.iter().any(|v| !v.is_finite()) {
+            return Err("non-finite coefficient value".into());
+        }
+        if self.idx.iter().any(|&i| i < 0 || i as usize >= padded_count) {
+            return Err("coefficient index out of range".into());
+        }
+        Ok(())
+    }
+
+    /// Scatter into a dense coefficient vector of length `padded_count`,
+    /// scaling values by `scale`. Duplicate indices accumulate.
+    pub fn scatter_into(&self, dense: &mut [f32], scale: f32) {
+        debug_assert_eq!(self.vals.len(), self.idx.len());
+        for (&v, &i) in self.vals.iter().zip(&self.idx) {
+            dense[i as usize] += v * scale;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sg(vals: Vec<f32>, idx: Vec<i32>) -> SparseGrad {
+        SparseGrad { vals, idx }
+    }
+
+    #[test]
+    fn l2_norm() {
+        let g = sg(vec![3.0, 4.0], vec![0, 1]);
+        assert!((g.l2_norm() - 5.0).abs() < 1e-12);
+        assert_eq!(sg(vec![], vec![]).l2_norm(), 0.0);
+    }
+
+    #[test]
+    fn validate_catches_format_violations() {
+        let ok = sg(vec![1.0, 2.0], vec![0, 5]);
+        assert!(ok.validate(2, 10).is_ok());
+        assert!(ok.validate(3, 10).is_err(), "wrong count");
+        assert!(sg(vec![f32::NAN, 1.0], vec![0, 1]).validate(2, 10).is_err(), "nan");
+        assert!(sg(vec![1.0, 1.0], vec![0, 10]).validate(2, 10).is_err(), "idx overflow");
+        assert!(sg(vec![1.0, 1.0], vec![-1, 0]).validate(2, 10).is_err(), "negative idx");
+    }
+
+    #[test]
+    fn scatter_accumulates_duplicates() {
+        let g = sg(vec![1.0, 2.0, 4.0], vec![1, 1, 3]);
+        let mut dense = vec![0.0f32; 4];
+        g.scatter_into(&mut dense, 0.5);
+        assert_eq!(dense, vec![0.0, 1.5, 0.0, 2.0]);
+    }
+}

@@ -1,0 +1,219 @@
+//! Wire format for pseudo-gradient submissions placed in cloud buckets.
+//!
+//! One object per (peer, round): a small header, the sparse DCT
+//! coefficients, the SyncScore probe (2 sampled parameter values per
+//! tensor, §3.2), and a SHA-256 integrity digest. The digest plus strict
+//! structural validation is what lets the validator's *fast evaluation*
+//! reject malformed submissions ("violating the format — e.g. tensors with
+//! incorrect dimensions or data types") in microseconds, without touching
+//! the model.
+//!
+//! Layout (little-endian):
+//!   magic  u32 = 0x474E_544C ("GNTL")
+//!   version u16 = 1, flags u16 = 0
+//!   uid u32, round u64
+//!   coeff_count u32, probe_count u32
+//!   vals  f32 * coeff_count
+//!   idx   i32 * coeff_count
+//!   probe f32 * probe_count
+//!   digest = sha256(everything above), 32 bytes
+
+use sha2::{Digest, Sha256};
+
+use super::SparseGrad;
+
+pub const MAGIC: u32 = 0x474E_544C;
+pub const VERSION: u16 = 1;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Submission {
+    pub uid: u32,
+    pub round: u64,
+    pub grad: SparseGrad,
+    /// SyncScore probe: sampled parameter values (2 per tensor).
+    pub probe: Vec<f32>,
+}
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum WireError {
+    #[error("object too short ({0} bytes)")]
+    Truncated(usize),
+    #[error("bad magic {0:#x}")]
+    BadMagic(u32),
+    #[error("unsupported version {0}")]
+    BadVersion(u16),
+    #[error("length mismatch: header says {expected} bytes, object has {actual}")]
+    LengthMismatch { expected: usize, actual: usize },
+    #[error("integrity digest mismatch")]
+    BadDigest,
+}
+
+impl Submission {
+    pub fn encode(&self) -> Vec<u8> {
+        let c = self.grad.vals.len();
+        let p = self.probe.len();
+        let mut out = Vec::with_capacity(28 + 8 * c + 4 * p + 32);
+        out.extend_from_slice(&MAGIC.to_le_bytes());
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.extend_from_slice(&0u16.to_le_bytes());
+        out.extend_from_slice(&self.uid.to_le_bytes());
+        out.extend_from_slice(&self.round.to_le_bytes());
+        out.extend_from_slice(&(c as u32).to_le_bytes());
+        out.extend_from_slice(&(p as u32).to_le_bytes());
+        for v in &self.grad.vals {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        for i in &self.grad.idx {
+            out.extend_from_slice(&i.to_le_bytes());
+        }
+        for v in &self.probe {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        let digest = Sha256::digest(&out);
+        out.extend_from_slice(&digest);
+        out
+    }
+
+    pub fn decode(bytes: &[u8]) -> Result<Submission, WireError> {
+        const HEADER: usize = 4 + 2 + 2 + 4 + 8 + 4 + 4;
+        if bytes.len() < HEADER + 32 {
+            return Err(WireError::Truncated(bytes.len()));
+        }
+        let rd_u32 = |o: usize| u32::from_le_bytes(bytes[o..o + 4].try_into().unwrap());
+        let rd_u16 = |o: usize| u16::from_le_bytes(bytes[o..o + 2].try_into().unwrap());
+        let magic = rd_u32(0);
+        if magic != MAGIC {
+            return Err(WireError::BadMagic(magic));
+        }
+        let version = rd_u16(4);
+        if version != VERSION {
+            return Err(WireError::BadVersion(version));
+        }
+        let uid = rd_u32(8);
+        let round = u64::from_le_bytes(bytes[12..20].try_into().unwrap());
+        let c = rd_u32(20) as usize;
+        let p = rd_u32(24) as usize;
+        let expected = HEADER + 8 * c + 4 * p + 32;
+        if bytes.len() != expected {
+            return Err(WireError::LengthMismatch { expected, actual: bytes.len() });
+        }
+        let body_end = expected - 32;
+        let digest = Sha256::digest(&bytes[..body_end]);
+        if digest.as_slice() != &bytes[body_end..] {
+            return Err(WireError::BadDigest);
+        }
+        let mut off = HEADER;
+        let mut vals = Vec::with_capacity(c);
+        for _ in 0..c {
+            vals.push(f32::from_le_bytes(bytes[off..off + 4].try_into().unwrap()));
+            off += 4;
+        }
+        let mut idx = Vec::with_capacity(c);
+        for _ in 0..c {
+            idx.push(i32::from_le_bytes(bytes[off..off + 4].try_into().unwrap()));
+            off += 4;
+        }
+        let mut probe = Vec::with_capacity(p);
+        for _ in 0..p {
+            probe.push(f32::from_le_bytes(bytes[off..off + 4].try_into().unwrap()));
+            off += 4;
+        }
+        Ok(Submission { uid, round, grad: SparseGrad { vals, idx }, probe })
+    }
+
+    /// The object key a submission is stored under in its peer's bucket.
+    pub fn object_key(uid: u32, round: u64) -> String {
+        format!("grad/round-{round:08}/uid-{uid}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop;
+    use crate::prop_assert;
+
+    fn sub() -> Submission {
+        Submission {
+            uid: 42,
+            round: 1234,
+            grad: SparseGrad { vals: vec![1.5, -2.25, 0.0], idx: vec![7, 0, 99] },
+            probe: vec![0.5, -0.5],
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let s = sub();
+        assert_eq!(Submission::decode(&s.encode()).unwrap(), s);
+    }
+
+    #[test]
+    fn empty_grad_roundtrips() {
+        let s = Submission { uid: 0, round: 0, grad: SparseGrad { vals: vec![], idx: vec![] }, probe: vec![] };
+        assert_eq!(Submission::decode(&s.encode()).unwrap(), s);
+    }
+
+    #[test]
+    fn detects_truncation() {
+        let b = sub().encode();
+        assert!(matches!(Submission::decode(&b[..10]), Err(WireError::Truncated(10))));
+        assert!(matches!(
+            Submission::decode(&b[..b.len() - 1]),
+            Err(WireError::LengthMismatch { .. })
+        ));
+    }
+
+    #[test]
+    fn detects_bitflip() {
+        let mut b = sub().encode();
+        let mid = b.len() / 2;
+        b[mid] ^= 0x40;
+        assert_eq!(Submission::decode(&b), Err(WireError::BadDigest));
+    }
+
+    #[test]
+    fn detects_bad_magic_and_version() {
+        let mut b = sub().encode();
+        b[0] ^= 1;
+        assert!(matches!(Submission::decode(&b), Err(WireError::BadMagic(_))));
+        let mut b = sub().encode();
+        b[4] = 99;
+        assert!(matches!(Submission::decode(&b), Err(WireError::BadVersion(99))));
+    }
+
+    #[test]
+    fn rejects_inflated_counts() {
+        let mut b = sub().encode();
+        // inflate coeff_count field
+        b[20..24].copy_from_slice(&1000u32.to_le_bytes());
+        assert!(matches!(Submission::decode(&b), Err(WireError::LengthMismatch { .. })));
+    }
+
+    #[test]
+    fn object_keys_sort_by_round() {
+        let a = Submission::object_key(1, 9);
+        let b = Submission::object_key(1, 10);
+        assert!(a < b, "zero-padded rounds must sort lexicographically");
+    }
+
+    #[test]
+    fn prop_roundtrip_arbitrary() {
+        prop::check("wire-roundtrip", 40, |rng, size| {
+            let c = size % 20;
+            let p = size % 9;
+            let s = Submission {
+                uid: rng.below(u32::MAX as u64) as u32,
+                round: rng.next_u64() % 1_000_000,
+                grad: SparseGrad {
+                    vals: (0..c).map(|_| rng.normal_f32(0.0, 10.0)).collect(),
+                    idx: (0..c).map(|_| rng.below(1 << 20) as i32).collect(),
+                },
+                probe: (0..p).map(|_| rng.normal_f32(0.0, 1.0)).collect(),
+            };
+            let d = Submission::decode(&s.encode()).map_err(|e| e.to_string())?;
+            prop_assert!(d == s, "roundtrip mismatch");
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,31 @@
+//! # Gauntlet — Incentivizing Permissionless Distributed Learning of LLMs
+//!
+//! A full reproduction of the Templar *Gauntlet* incentive system (Lidin et
+//! al., 2025) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! - **Layer 1/2 (build-time Python)**: a llama-style transformer and the
+//!   DeMo compressor (chunked 2-D DCT + top-k Pallas kernels), AOT-lowered
+//!   to HLO-text artifacts (`make artifacts`).
+//! - **Layer 3 (this crate)**: everything the paper deploys — the Gauntlet
+//!   validator (fast + primary evaluation, OpenSkill ratings,
+//!   proof-of-computation, PEERSCORE, top-G aggregation), simulated
+//!   S3-compatible cloud storage, a simulated Bittensor chain with Yuma
+//!   consensus, honest and byzantine peer behaviours, and the PJRT runtime
+//!   that executes the artifacts natively. Python is never on this path.
+//!
+//! Start with [`coordinator::run::TemplarRun`] (the end-to-end system) or
+//! the `examples/` directory.
+
+pub mod bench;
+pub mod chain;
+pub mod coordinator;
+pub mod data;
+pub mod demo;
+pub mod eval;
+pub mod minjson;
+pub mod openskill;
+pub mod peers;
+pub mod prop;
+pub mod runtime;
+pub mod storage;
+pub mod util;

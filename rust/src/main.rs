@@ -1,0 +1,298 @@
+//! `gauntlet` — CLI launcher for the Templar/Gauntlet reproduction.
+//!
+//! Subcommands:
+//!   run       permissionless Gauntlet training run (the paper's system)
+//!   baseline  centralized AdamW DDP comparison run
+//!   eval      downstream zero-shot suites on the initial model
+//!   info      print a config's artifact/ABI summary
+//!
+//! Examples:
+//!   gauntlet run --model nano --rounds 20 --peers 6 --topg 3
+//!   gauntlet run --model tiny --rounds 100 --peers "honest,honest:2,desync,poisoner"
+//!   gauntlet baseline --model nano --rounds 20 --workers 4
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use gauntlet::bench::{sparkline, Table};
+use gauntlet::coordinator::baseline::{AdamWParams, AdamWTrainer};
+use gauntlet::coordinator::run::{RunConfig, TemplarRun};
+use gauntlet::data::Corpus;
+use gauntlet::eval::{evaluate_suite, Suite};
+use gauntlet::peers::Behavior;
+use gauntlet::runtime::{artifact_dir, Executor};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &[String]) -> Result<()> {
+    let Some(cmd) = args.first() else {
+        print_usage();
+        return Ok(());
+    };
+    let flags = parse_flags(&args[1..])?;
+    match cmd.as_str() {
+        "run" => cmd_run(&flags),
+        "baseline" => cmd_baseline(&flags),
+        "eval" => cmd_eval(&flags),
+        "info" => cmd_info(&flags),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}; try `gauntlet help`"),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "gauntlet — Incentivizing Permissionless Distributed Learning of LLMs\n\
+         \n\
+         USAGE: gauntlet <command> [--flag value ...]\n\
+         \n\
+         COMMANDS\n\
+         \x20 run       Gauntlet permissionless training run\n\
+         \x20           --model <cfg>      artifact config (default nano)\n\
+         \x20           --rounds <n>       communication rounds (default 20)\n\
+         \x20           --peers <spec>     count or comma list, e.g.\n\
+         \x20                              \"honest,honest:2,desync,poisoner,copier:0\"\n\
+         \x20           --topg <g>         aggregation size (default 4)\n\
+         \x20           --eval-sample <s>  peers primary-evaluated per round\n\
+         \x20           --seed <s>         run seed\n\
+         \x20           --lr <f> --schedule constant|cosine:<w>:<t>[:<min>]|halve:<n>\n\
+         \x20           --no-normalize     disable encoded-domain normalization (§4 ablation)\n\
+         \x20 baseline  AdamW DDP comparison\n\
+         \x20           --model/--rounds/--workers/--seed\n\
+         \x20 eval      downstream suites on the init model\n\
+         \x20           --model/--items\n\
+         \x20 info      print a config's ABI summary (--model)\n"
+    );
+}
+
+fn parse_flags(args: &[String]) -> Result<BTreeMap<String, String>> {
+    let mut out = BTreeMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        let Some(name) = a.strip_prefix("--") else {
+            bail!("expected --flag, got {a:?}");
+        };
+        // boolean flags
+        if name == "no-normalize" {
+            out.insert(name.to_string(), "true".to_string());
+            i += 1;
+            continue;
+        }
+        let v = args.get(i + 1).with_context(|| format!("--{name} needs a value"))?;
+        out.insert(name.to_string(), v.clone());
+        i += 2;
+    }
+    Ok(out)
+}
+
+fn flag<T: std::str::FromStr>(flags: &BTreeMap<String, String>, name: &str, default: T) -> Result<T>
+where
+    T::Err: std::fmt::Display,
+{
+    match flags.get(name) {
+        None => Ok(default),
+        Some(v) => v.parse().map_err(|e| anyhow::anyhow!("--{name} {v:?}: {e}")),
+    }
+}
+
+/// Parse a peer spec: either a count ("6" = that many honest peers) or a
+/// comma list of behaviours:
+///   honest | honest:<mult> | freeloader | desync | desync:<at>:<pause> |
+///   late | silent | format | rescaler:<f> | poisoner | copier:<uid> |
+///   duplicator:<uid>
+pub fn parse_peers(spec: &str) -> Result<Vec<Behavior>> {
+    if let Ok(n) = spec.parse::<usize>() {
+        return Ok(vec![Behavior::Honest { data_mult: 1.0 }; n]);
+    }
+    let mut out = Vec::new();
+    for part in spec.split(',') {
+        let fields: Vec<&str> = part.trim().split(':').collect();
+        let b = match fields[0] {
+            "honest" => Behavior::Honest {
+                data_mult: fields.get(1).map(|f| f.parse()).transpose()?.unwrap_or(1.0),
+            },
+            "freeloader" => Behavior::Freeloader,
+            "desync" => Behavior::Desync {
+                at: fields.get(1).map(|f| f.parse()).transpose()?.unwrap_or(3),
+                pause: fields.get(2).map(|f| f.parse()).transpose()?.unwrap_or(3),
+            },
+            "late" => Behavior::Late { prob: 0.8 },
+            "silent" => Behavior::Silent { prob: 0.8 },
+            "format" => Behavior::FormatViolator,
+            "rescaler" => Behavior::Rescaler {
+                factor: fields.get(1).map(|f| f.parse()).transpose()?.unwrap_or(100.0),
+            },
+            "poisoner" => Behavior::Poisoner { scale: 100.0 },
+            "copier" => Behavior::Copier {
+                victim: fields.get(1).map(|f| f.parse()).transpose()?.unwrap_or(0),
+            },
+            "duplicator" => Behavior::Duplicator {
+                original: fields.get(1).map(|f| f.parse()).transpose()?.unwrap_or(0),
+            },
+            other => bail!("unknown peer behaviour {other:?}"),
+        };
+        out.push(b);
+    }
+    Ok(out)
+}
+
+fn cmd_run(flags: &BTreeMap<String, String>) -> Result<()> {
+    let model: String = flag(flags, "model", "nano".to_string())?;
+    let rounds: u64 = flag(flags, "rounds", 20)?;
+    let peers = parse_peers(&flag(flags, "peers", "6".to_string())?)?;
+    let mut cfg = RunConfig::quick(&model, rounds, peers);
+    cfg.params.top_g = flag(flags, "topg", cfg.params.top_g)?;
+    cfg.params.eval_sample = flag(flags, "eval-sample", cfg.params.eval_sample)?;
+    cfg.params.lr = flag(flags, "lr", cfg.params.lr)?;
+    if let Some(spec) = flags.get("schedule") {
+        cfg.params.schedule = gauntlet::coordinator::schedule::LrSchedule::parse(spec)
+            .map_err(|e| anyhow::anyhow!("--schedule: {e}"))?;
+    }
+    cfg.seed = flag(flags, "seed", 0)?;
+    cfg.eval_every = flag(flags, "eval-every", 5)?;
+    if flags.contains_key("no-normalize") {
+        cfg.agg.normalize = false;
+    }
+
+    println!(
+        "Gauntlet run: model={model} rounds={rounds} peers={} topG={} S={} normalize={}",
+        cfg.peers.len(),
+        cfg.params.top_g,
+        cfg.params.eval_sample,
+        cfg.agg.normalize,
+    );
+    let mut run = TemplarRun::new(cfg)?;
+    let mut losses = Vec::new();
+    for r in 0..rounds {
+        let rec = run.run_round()?;
+        if let Some(l) = rec.heldout_loss {
+            losses.push(l);
+            println!(
+                "round {r:>4}  heldout={l:.4}  local={:.4}  valid={}  topG={:?}",
+                rec.mean_local_loss, rec.n_valid_submissions, rec.top_g
+            );
+        }
+    }
+    println!("\nloss curve: {}", sparkline(&losses, 60));
+
+    // final scoreboard
+    let mut t = Table::new(
+        "final peer standings",
+        &["uid", "behaviour", "mu", "rating", "score", "balance"],
+    );
+    let book = &run.validators[0].book;
+    for p in &run.peers {
+        let st = book.get(p.uid);
+        t.row(&[
+            p.uid.to_string(),
+            p.behavior.label(),
+            st.map(|s| format!("{:+.3}", s.mu.value)).unwrap_or_default(),
+            st.map(|s| format!("{:.2}", s.rating.mu)).unwrap_or_default(),
+            format!("{:.3}", book.peer_score(p.uid)),
+            format!("{:.3}", run.chain.neuron(p.uid).map(|n| n.balance).unwrap_or(0.0)),
+        ]);
+    }
+    t.print();
+    print_exec_stats(&run.exec);
+    Ok(())
+}
+
+fn cmd_baseline(flags: &BTreeMap<String, String>) -> Result<()> {
+    let model: String = flag(flags, "model", "nano".to_string())?;
+    let rounds: u64 = flag(flags, "rounds", 20)?;
+    let workers: usize = flag(flags, "workers", 4)?;
+    let seed: u64 = flag(flags, "seed", 0)?;
+    let exec = Executor::load(artifact_dir(&model))?;
+    let corpus = Corpus::new(exec.meta.vocab as u32, seed);
+    let mut trainer = AdamWTrainer::new(exec.init_params()?, AdamWParams::default(), workers);
+    println!("AdamW DDP baseline: model={model} rounds={rounds} workers={workers}");
+    let mut losses = Vec::new();
+    for r in 0..rounds {
+        let loss = trainer.step(&exec, &corpus, r)?;
+        losses.push(loss);
+        if r % 5 == 0 {
+            let toks = corpus.heldout(0, exec.meta.batch, exec.meta.seq + 1);
+            let hl = exec.loss(&trainer.theta, &toks)?;
+            println!("round {r:>4}  train={loss:.4}  heldout={hl:.4}");
+        }
+    }
+    println!("\ntrain curve: {}", sparkline(&losses, 60));
+    print_exec_stats(&exec);
+    Ok(())
+}
+
+fn cmd_eval(flags: &BTreeMap<String, String>) -> Result<()> {
+    let model: String = flag(flags, "model", "nano".to_string())?;
+    let items: usize = flag(flags, "items", 50)?;
+    let exec = Executor::load(artifact_dir(&model))?;
+    let corpus = Corpus::new(exec.meta.vocab as u32, 0);
+    let theta = exec.init_params()?;
+    let mut t = Table::new("downstream (init model)", &["suite", "items", "acc_norm", "chance"]);
+    for suite in Suite::all() {
+        let r = evaluate_suite(&exec, &theta, &corpus, suite, items)?;
+        t.row(&[
+            r.suite.name().to_string(),
+            r.n_items.to_string(),
+            format!("{:.3}", r.acc_norm),
+            format!("{:.3}", r.chance),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_info(flags: &BTreeMap<String, String>) -> Result<()> {
+    let model: String = flag(flags, "model", "nano".to_string())?;
+    let exec = Executor::load(artifact_dir(&model))?;
+    let m = &exec.meta;
+    println!("config {}", m.name);
+    println!(
+        "  d_model={} layers={} vocab={} seq={} batch={}",
+        m.d_model, m.n_layers, m.vocab, m.seq, m.batch
+    );
+    println!(
+        "  params={} padded={} chunks={}x{}  topk={}  coeffs/pseudograd={}",
+        m.param_count,
+        m.padded_count,
+        m.n_chunks,
+        m.chunk * m.chunk,
+        m.topk,
+        m.coeff_count
+    );
+    println!(
+        "  compression ratio: {:.0}x (dense f32 vs sparse val+idx)",
+        (m.param_count as f64 * 4.0) / (m.coeff_count as f64 * 8.0)
+    );
+    println!("  artifacts: {}", m.artifacts.join(", "));
+    println!("  tensors: {}", m.params.len());
+    Ok(())
+}
+
+fn print_exec_stats(exec: &Executor) {
+    let stats = exec.stats();
+    if stats.is_empty() {
+        return;
+    }
+    let mut t = Table::new("XLA executor stats", &["artifact", "calls", "total", "mean"]);
+    for (name, s) in stats {
+        let mean = if s.calls > 0 { s.total.as_secs_f64() / s.calls as f64 } else { 0.0 };
+        t.row(&[
+            name,
+            s.calls.to_string(),
+            format!("{:.2}s", s.total.as_secs_f64()),
+            gauntlet::bench::human_duration(mean),
+        ]);
+    }
+    t.print();
+}

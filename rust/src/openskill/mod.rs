@@ -1,0 +1,267 @@
+//! OpenSkill rating system — Plackett–Luce model (Weng & Lin 2011, JMLR;
+//! Joshy 2024 "OpenSkill" [paper ref 8]).
+//!
+//! The Gauntlet validator ranks the sampled peer subset S_t by LossScore
+//! each round and feeds the ranking through this model; the resulting
+//! `LossRating` (we use the conservative ordinal estimate, as openskill.py
+//! does for leaderboards) is one of the two factors of PEERSCORE (eq. 4).
+//!
+//! This is a faithful port of the PlackettLuce update in openskill.py
+//! (one-player teams, which is all Gauntlet needs): for each match the
+//! sampled peers are a free-for-all ranked by score, with ties sharing a
+//! rank.
+
+/// A peer's rating: belief over skill as a Gaussian (mu, sigma).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Rating {
+    pub mu: f64,
+    pub sigma: f64,
+}
+
+impl Rating {
+    /// Conservative point estimate used for ranking/leaderboards.
+    pub fn ordinal(&self) -> f64 {
+        self.mu - 3.0 * self.sigma
+    }
+}
+
+/// Plackett–Luce model parameters (openskill.py defaults).
+#[derive(Clone, Copy, Debug)]
+pub struct PlackettLuce {
+    pub mu0: f64,
+    pub sigma0: f64,
+    pub beta: f64,
+    /// Additive dynamics variance (tau^2) applied before each update so
+    /// sigma never collapses to zero and ratings stay adaptive.
+    pub tau: f64,
+    /// Numerical floor for the sigma update factor.
+    pub kappa: f64,
+}
+
+impl Default for PlackettLuce {
+    fn default() -> Self {
+        let mu0 = 25.0;
+        let sigma0 = mu0 / 3.0;
+        PlackettLuce { mu0, sigma0, beta: sigma0 / 2.0, tau: mu0 / 300.0, kappa: 1e-4 }
+    }
+}
+
+impl PlackettLuce {
+    pub fn initial(&self) -> Rating {
+        Rating { mu: self.mu0, sigma: self.sigma0 }
+    }
+
+    /// Update ratings for one match.
+    ///
+    /// `ranks[i]` is the rank of player i: **lower is better**, equal values
+    /// are ties. Returns updated ratings in the same order.
+    pub fn rate(&self, ratings: &[Rating], ranks: &[usize]) -> Vec<Rating> {
+        assert_eq!(ratings.len(), ranks.len());
+        let n = ratings.len();
+        if n < 2 {
+            return ratings.to_vec(); // no information in a 1-player match
+        }
+
+        // Dynamics: inflate sigma before the update (tau), as openskill.py
+        // does, keeping long-lived ratings adaptive.
+        let rs: Vec<Rating> = ratings
+            .iter()
+            .map(|r| Rating { mu: r.mu, sigma: (r.sigma * r.sigma + self.tau * self.tau).sqrt() })
+            .collect();
+
+        let beta_sq = self.beta * self.beta;
+        // c = sqrt(sum_i (sigma_i^2 + beta^2))
+        let c: f64 = rs.iter().map(|r| r.sigma * r.sigma + beta_sq).sum::<f64>().sqrt();
+
+        // sum_q[q] = sum over players i with rank_i >= rank_q of exp(mu_i/c)
+        let exp_mu: Vec<f64> = rs.iter().map(|r| (r.mu / c).exp()).collect();
+        let sum_q: Vec<f64> = (0..n)
+            .map(|q| {
+                (0..n)
+                    .filter(|&i| ranks[i] >= ranks[q])
+                    .map(|i| exp_mu[i])
+                    .sum::<f64>()
+            })
+            .collect();
+        // a[i] = number of players tied with player i (including itself)
+        let a: Vec<f64> =
+            (0..n).map(|i| ranks.iter().filter(|&&r| r == ranks[i]).count() as f64).collect();
+
+        let mut out = Vec::with_capacity(n);
+        for i in 0..n {
+            let mut omega = 0.0;
+            let mut delta = 0.0;
+            for q in 0..n {
+                if ranks[q] > ranks[i] {
+                    continue; // only q with rank_q <= rank_i contribute
+                }
+                let quotient = exp_mu[i] / sum_q[q];
+                omega += (if i == q { 1.0 - quotient } else { -quotient }) / a[q];
+                delta += quotient * (1.0 - quotient) / a[q];
+            }
+            let sigma_sq = rs[i].sigma * rs[i].sigma;
+            omega *= sigma_sq / c;
+            delta *= sigma_sq / (c * c);
+            // gamma regularizer (openskill.py default: sigma / c)
+            let gamma = rs[i].sigma / c;
+            let mu = rs[i].mu + omega;
+            let sigma = (sigma_sq * (1.0 - gamma * delta).max(self.kappa)).sqrt();
+            out.push(Rating { mu, sigma });
+        }
+        out
+    }
+
+    /// Convenience: rank players by a score (**higher score is better**),
+    /// handling exact ties, then update.
+    pub fn rate_by_scores(&self, ratings: &[Rating], scores: &[f64]) -> Vec<Rating> {
+        let ranks = ranks_from_scores(scores);
+        self.rate(ratings, &ranks)
+    }
+}
+
+/// Dense ranks from scores: best score gets rank 0; exact ties share a rank.
+pub fn ranks_from_scores(scores: &[f64]) -> Vec<usize> {
+    let n = scores.len();
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&i, &j| scores[j].partial_cmp(&scores[i]).unwrap_or(std::cmp::Ordering::Equal));
+    let mut ranks = vec![0usize; n];
+    let mut rank = 0;
+    for (pos, &i) in order.iter().enumerate() {
+        if pos > 0 && scores[order[pos - 1]] > scores[i] {
+            rank = pos;
+        }
+        ranks[i] = rank;
+    }
+    ranks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop;
+    use crate::prop_assert;
+    use crate::util::Rng;
+
+    fn model() -> PlackettLuce {
+        PlackettLuce::default()
+    }
+
+    #[test]
+    fn winner_gains_loser_loses() {
+        let m = model();
+        let r = vec![m.initial(), m.initial()];
+        let out = m.rate(&r, &[0, 1]);
+        assert!(out[0].mu > r[0].mu, "winner mu should rise");
+        assert!(out[1].mu < r[1].mu, "loser mu should fall");
+        assert!(out[0].sigma < r[0].sigma * 1.001, "sigma should not blow up");
+    }
+
+    #[test]
+    fn symmetric_two_player_update_is_antisymmetric() {
+        let m = model();
+        let r = vec![m.initial(), m.initial()];
+        let out = m.rate(&r, &[0, 1]);
+        let gain = out[0].mu - m.mu0;
+        let loss = m.mu0 - out[1].mu;
+        assert!((gain - loss).abs() < 1e-9, "equal-rating match should be zero-sum in mu");
+    }
+
+    #[test]
+    fn ties_between_equals_leave_mu_unchanged() {
+        let m = model();
+        let r = vec![m.initial(), m.initial()];
+        let out = m.rate(&r, &[0, 0]);
+        assert!((out[0].mu - m.mu0).abs() < 1e-9);
+        assert!((out[1].mu - m.mu0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn upset_moves_more_than_expected_win() {
+        let m = model();
+        let strong = Rating { mu: 30.0, sigma: 2.0 };
+        let weak = Rating { mu: 20.0, sigma: 2.0 };
+        let expected = m.rate(&[strong, weak], &[0, 1]); // strong wins
+        let upset = m.rate(&[strong, weak], &[1, 0]); // weak wins
+        let expected_gain = expected[0].mu - strong.mu;
+        let upset_gain = upset[1].mu - weak.mu;
+        assert!(upset_gain > expected_gain, "{upset_gain} <= {expected_gain}");
+    }
+
+    #[test]
+    fn repeated_wins_separate_ratings() {
+        let m = model();
+        let mut rs = vec![m.initial(), m.initial(), m.initial()];
+        for _ in 0..30 {
+            rs = m.rate(&rs, &[0, 1, 2]);
+        }
+        assert!(rs[0].ordinal() > rs[1].ordinal());
+        assert!(rs[1].ordinal() > rs[2].ordinal());
+        assert!(rs[0].mu - rs[2].mu > 5.0, "spread should be substantial");
+    }
+
+    #[test]
+    fn single_player_match_is_noop() {
+        let m = model();
+        let r = vec![Rating { mu: 27.0, sigma: 1.5 }];
+        assert_eq!(m.rate(&r, &[0]), r);
+    }
+
+    #[test]
+    fn ranks_from_scores_handles_ties_and_order() {
+        assert_eq!(ranks_from_scores(&[3.0, 1.0, 2.0]), vec![0, 2, 1]);
+        assert_eq!(ranks_from_scores(&[1.0, 1.0, 0.5]), vec![0, 0, 2]);
+        assert_eq!(ranks_from_scores(&[]), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn prop_sigma_never_increases_much_and_mu_order_follows_ranks() {
+        prop::check("openskill-invariants", 40, |rng, size| {
+            let m = model();
+            let n = 2 + size % 6;
+            let ratings: Vec<Rating> = (0..n)
+                .map(|_| Rating {
+                    mu: rng.range_f64(10.0, 40.0),
+                    sigma: rng.range_f64(0.5, 8.0),
+                })
+                .collect();
+            let scores: Vec<f64> = (0..n).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+            let out = m.rate_by_scores(&ratings, &scores);
+            for (i, (b, a)) in ratings.iter().zip(&out).enumerate() {
+                prop_assert!(a.sigma.is_finite() && a.mu.is_finite(), "non-finite at {i}");
+                // sigma after tau-inflation can exceed input slightly, bound it
+                let max_sigma = (b.sigma * b.sigma + m.tau * m.tau).sqrt() + 1e-12;
+                prop_assert!(a.sigma <= max_sigma, "sigma grew: {} -> {}", b.sigma, a.sigma);
+            }
+            // The best-scoring among identical priors must end with max mu.
+            let same: Vec<Rating> = (0..n).map(|_| m.initial()).collect();
+            let out2 = m.rate_by_scores(&same, &scores);
+            let best = scores
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            let max_mu = out2.iter().map(|r| r.mu).fold(f64::MIN, f64::max);
+            prop_assert!(
+                (out2[best].mu - max_mu).abs() < 1e-9,
+                "best scorer should have max mu"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_total_mu_roughly_conserved_for_identical_priors() {
+        prop::check("openskill-mu-conservation", 30, |rng, size| {
+            let m = model();
+            let n = 2 + size % 5;
+            let rs: Vec<Rating> = (0..n).map(|_| m.initial()).collect();
+            let scores: Vec<f64> = (0..n).map(|_| rng.range_f64(0.0, 1.0)).collect();
+            let out = m.rate_by_scores(&rs, &scores);
+            let before: f64 = rs.iter().map(|r| r.mu).sum();
+            let after: f64 = out.iter().map(|r| r.mu).sum();
+            prop_assert!((before - after).abs() < 1e-6, "mu sum drifted {before} -> {after}");
+            Ok(())
+        });
+    }
+}

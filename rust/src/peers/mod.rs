@@ -1,0 +1,125 @@
+//! Peer behaviours: honest miners and the §3/§4 adversaries.
+//!
+//! The live network's peers are humans running (possibly modified) training
+//! scripts; the paper's own controlled experiments (Fig. 2, §4) script them
+//! instead. Each [`Behavior`] reproduces one participant archetype the
+//! incentive mechanism must handle:
+//!
+//! | behaviour        | attack surface                    | caught by      |
+//! |------------------|-----------------------------------|----------------|
+//! | Honest{mult}     | — (mult>1: more data, more reward)| rewarded       |
+//! | Freeloader       | trains on non-assigned data       | PoC mu (eq. 3) |
+//! | Copier           | re-posts another peer's gradient  | PoC mu         |
+//! | Duplicator       | sybil posting identical gradients | PoC mu         |
+//! | Desync           | stale model (3 rounds behind)     | SyncScore + LossRating |
+//! | Late / Silent    | misses the put window             | fast checks    |
+//! | FormatViolator   | malformed tensors                 | fast checks    |
+//! | Rescaler         | norm inflation of the aggregate   | encoded-domain normalization (§4) |
+//! | Poisoner         | garbage coefficients              | LossScore + normalization |
+
+pub mod runner;
+
+pub use runner::{PeerCtx, PeerOutput, PeerRunner};
+
+use crate::chain::Uid;
+
+/// What a peer does each round.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Behavior {
+    /// Follows the baseline script; `data_mult` scales how many assigned
+    /// microbatches it trains on per round (the "peer processing more
+    /// data" of Fig. 2 uses 2.0).
+    Honest { data_mult: f64 },
+    /// Computes real gradients but on self-chosen (non-assigned) data.
+    Freeloader,
+    /// Pauses for `pause` rounds starting at `at`, then continues from the
+    /// stale model (the Fig. 2 "desynchronized" peer; pause = 3).
+    Desync { at: u64, pause: u64 },
+    /// Honest compute, but uploads after the put window with prob. `prob`.
+    Late { prob: f64 },
+    /// Skips submitting entirely with probability `prob`.
+    Silent { prob: f64 },
+    /// Posts structurally corrupt objects.
+    FormatViolator,
+    /// Honest gradient scaled by `factor` (§4 norm attack).
+    Rescaler { factor: f32 },
+    /// Posts random large coefficients (§4 poisoning).
+    Poisoner { scale: f32 },
+    /// Copies `victim`'s submission from its public bucket and re-posts it
+    /// under its own uid before the window closes.
+    Copier { victim: Uid },
+    /// Second registration of the same operator as `original`: posts the
+    /// identical pseudo-gradient under a different uid.
+    Duplicator { original: Uid },
+}
+
+impl Behavior {
+    /// Behaviours that need another peer's submission first (evaluated in
+    /// the second pass of the round loop).
+    pub fn is_second_pass(&self) -> bool {
+        matches!(self, Behavior::Copier { .. } | Behavior::Duplicator { .. })
+    }
+
+    /// The uid this behaviour sources its gradient from, if any.
+    pub fn source_uid(&self) -> Option<Uid> {
+        match self {
+            Behavior::Copier { victim } => Some(*victim),
+            Behavior::Duplicator { original } => Some(*original),
+            _ => None,
+        }
+    }
+
+    /// Short label for metrics output.
+    pub fn label(&self) -> String {
+        match self {
+            Behavior::Honest { data_mult } if *data_mult == 1.0 => "honest".into(),
+            Behavior::Honest { data_mult } => format!("honest-x{data_mult}"),
+            Behavior::Freeloader => "freeloader".into(),
+            Behavior::Desync { .. } => "desync".into(),
+            Behavior::Late { .. } => "late".into(),
+            Behavior::Silent { .. } => "silent".into(),
+            Behavior::FormatViolator => "format-violator".into(),
+            Behavior::Rescaler { factor } => format!("rescaler-x{factor}"),
+            Behavior::Poisoner { .. } => "poisoner".into(),
+            Behavior::Copier { victim } => format!("copier-of-{victim}"),
+            Behavior::Duplicator { original } => format!("duplicator-of-{original}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn second_pass_classification() {
+        assert!(Behavior::Copier { victim: 1 }.is_second_pass());
+        assert!(Behavior::Duplicator { original: 2 }.is_second_pass());
+        assert!(!Behavior::Honest { data_mult: 1.0 }.is_second_pass());
+        assert!(!Behavior::Poisoner { scale: 100.0 }.is_second_pass());
+    }
+
+    #[test]
+    fn source_uid() {
+        assert_eq!(Behavior::Copier { victim: 7 }.source_uid(), Some(7));
+        assert_eq!(Behavior::Duplicator { original: 3 }.source_uid(), Some(3));
+        assert_eq!(Behavior::Freeloader.source_uid(), None);
+    }
+
+    #[test]
+    fn labels_are_distinct() {
+        let labels: Vec<String> = [
+            Behavior::Honest { data_mult: 1.0 },
+            Behavior::Honest { data_mult: 2.0 },
+            Behavior::Freeloader,
+            Behavior::Desync { at: 5, pause: 3 },
+            Behavior::Rescaler { factor: 100.0 },
+        ]
+        .iter()
+        .map(|b| b.label())
+        .collect();
+        let mut dedup = labels.clone();
+        dedup.dedup();
+        assert_eq!(labels, dedup);
+    }
+}

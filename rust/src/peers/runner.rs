@@ -1,0 +1,313 @@
+//! The peer-side training loop: local gradient work, DeMo compression and
+//! bucket upload, parameterized by [`Behavior`].
+//!
+//! Honest flow per round (the paper's baseline miner script):
+//!   1. derive the assigned shards `D_t^p` from public seeds,
+//!   2. accumulate gradients over `n` microbatches via the `grad` artifact,
+//!   3. fold into the DeMo error-feedback buffer and compress
+//!      (`demo_compress` artifact: e <- decay*e + g, DCT, top-k),
+//!   4. sample the SyncScore probe from the local model view,
+//!   5. upload the wire-encoded submission inside the put window.
+//!
+//! Adversarial behaviours deviate at specific steps — see `peers/mod.rs`.
+
+use anyhow::Result;
+
+use super::Behavior;
+use crate::coordinator::round::RoundClock;
+use crate::coordinator::GauntletParams;
+use crate::data::Corpus;
+use crate::demo::wire::Submission;
+use crate::demo::SparseGrad;
+use crate::runtime::Executor;
+use crate::storage::SimTime;
+use crate::util::Rng;
+
+/// Everything a peer sees when taking its turn in a round.
+pub struct PeerCtx<'a> {
+    pub exec: &'a Executor,
+    pub corpus: &'a Corpus,
+    /// The globally agreed model at the start of the round (what a
+    /// synchronized peer holds after applying the previous aggregation).
+    pub global_theta: &'a [f32],
+    pub round: u64,
+    pub clock: &'a RoundClock,
+    pub params: &'a GauntletParams,
+}
+
+/// What the peer does with the storage layer this round.
+#[derive(Debug)]
+pub enum PeerOutput {
+    Submit { time: SimTime, bytes: Vec<u8> },
+    Skip,
+}
+
+/// Per-peer persistent state across rounds.
+pub struct PeerRunner {
+    pub uid: u32,
+    pub behavior: Behavior,
+    /// DeMo error-feedback buffer (zeros at start, like the reference
+    /// miner script).
+    error: Vec<f32>,
+    /// Divergent local model, if this peer is not tracking the global one
+    /// (Desync after its pause).
+    theta_local: Option<Vec<f32>>,
+    rng: Rng,
+    /// ms of compute per microbatch (speed heterogeneity).
+    pub compute_ms_per_mb: u64,
+    /// Diagnostics: microbatches processed in the last round.
+    pub last_microbatches: usize,
+    pub last_local_loss: f64,
+}
+
+impl PeerRunner {
+    pub fn new(uid: u32, behavior: Behavior, param_count: usize, seed: u64) -> Self {
+        let mut rng = Rng::from_parts(&["peer", &uid.to_string(), &seed.to_string()]);
+        let compute_ms_per_mb = 2_000 + rng.below(2_000);
+        PeerRunner {
+            uid,
+            behavior,
+            error: vec![0.0; param_count],
+            theta_local: None,
+            rng,
+            compute_ms_per_mb,
+            last_microbatches: 0,
+            last_local_loss: f64::NAN,
+        }
+    }
+
+    /// The model this peer trains on / probes from.
+    fn theta_view<'a>(&'a self, ctx: &'a PeerCtx<'_>) -> &'a [f32] {
+        self.theta_local.as_deref().unwrap_or(ctx.global_theta)
+    }
+
+    /// Whether this peer is currently in its Desync pause.
+    fn paused(&self, round: u64) -> bool {
+        matches!(self.behavior, Behavior::Desync { at, pause } if (at..at + pause).contains(&round))
+    }
+
+    /// First-pass step (every behaviour except Copier/Duplicator).
+    pub fn step(&mut self, ctx: &PeerCtx<'_>) -> Result<PeerOutput> {
+        assert!(!self.behavior.is_second_pass(), "second-pass peer stepped in pass 1");
+        match self.behavior.clone() {
+            Behavior::Honest { data_mult } => self.honest_step(ctx, data_mult, 1.0),
+            Behavior::Rescaler { factor } => self.honest_step(ctx, 1.0, factor),
+            Behavior::Freeloader => self.freeload_step(ctx),
+            Behavior::Desync { .. } => {
+                if self.paused(ctx.round) {
+                    Ok(PeerOutput::Skip)
+                } else {
+                    self.honest_step(ctx, 1.0, 1.0)
+                }
+            }
+            Behavior::Late { prob } => {
+                let out = self.honest_step(ctx, 1.0, 1.0)?;
+                if let PeerOutput::Submit { bytes, .. } = out {
+                    let (_, close) = ctx.clock.put_window(ctx.round);
+                    let time = if self.rng.chance(prob) {
+                        close + 1 + self.rng.below(5_000) // missed the window
+                    } else {
+                        self.upload_time(ctx, 1)
+                    };
+                    Ok(PeerOutput::Submit { time, bytes })
+                } else {
+                    Ok(out)
+                }
+            }
+            Behavior::Silent { prob } => {
+                if self.rng.chance(prob) {
+                    Ok(PeerOutput::Skip)
+                } else {
+                    self.honest_step(ctx, 1.0, 1.0)
+                }
+            }
+            Behavior::FormatViolator => {
+                // Real-looking header, wrong payload dimensions: claims one
+                // extra coefficient, breaking the meta.json contract.
+                let c = ctx.exec.meta.coeff_count + 1;
+                let grad = SparseGrad {
+                    vals: vec![0.1; c],
+                    idx: (0..c as i32).collect(),
+                };
+                let sub = Submission {
+                    uid: self.uid,
+                    round: ctx.round,
+                    grad,
+                    probe: ctx.exec.meta.sync_probe(self.theta_view(ctx)),
+                };
+                Ok(PeerOutput::Submit { time: self.upload_time(ctx, 1), bytes: sub.encode() })
+            }
+            Behavior::Poisoner { scale } => {
+                let meta = &ctx.exec.meta;
+                let c = meta.coeff_count;
+                let grad = SparseGrad {
+                    vals: (0..c).map(|_| self.rng.normal_f32(0.0, scale)).collect(),
+                    idx: (0..c).map(|_| self.rng.below(meta.padded_count as u64) as i32).collect(),
+                };
+                let sub = Submission {
+                    uid: self.uid,
+                    round: ctx.round,
+                    grad,
+                    probe: meta.sync_probe(ctx.global_theta),
+                };
+                Ok(PeerOutput::Submit { time: self.upload_time(ctx, 1), bytes: sub.encode() })
+            }
+            Behavior::Copier { .. } | Behavior::Duplicator { .. } => unreachable!(),
+        }
+    }
+
+    /// Second-pass step for Copier/Duplicator: given the source peer's
+    /// published bytes (if any), re-post the gradient under this uid.
+    pub fn step_copy(&mut self, ctx: &PeerCtx<'_>, source_bytes: Option<&[u8]>) -> Result<PeerOutput> {
+        let Some(bytes) = source_bytes else { return Ok(PeerOutput::Skip) };
+        let Ok(src) = Submission::decode(bytes) else { return Ok(PeerOutput::Skip) };
+        let sub = Submission {
+            uid: self.uid,
+            round: ctx.round,
+            grad: src.grad,
+            // The copier is synchronized (it follows the public aggregate),
+            // so its probe is honest — only PoC can catch it.
+            probe: ctx.exec.meta.sync_probe(self.theta_view(ctx)),
+        };
+        // Copying is fast; it posts shortly after the source appears.
+        let (open, close) = ctx.clock.put_window(ctx.round);
+        let t = (open + self.rng.below(close - open)).min(close - 1);
+        Ok(PeerOutput::Submit { time: t, bytes: sub.encode() })
+    }
+
+    fn upload_time(&mut self, ctx: &PeerCtx<'_>, n_mb: usize) -> SimTime {
+        let compute = self.compute_ms_per_mb * n_mb as u64 + self.rng.below(500);
+        ctx.clock.compliant_upload_time(ctx.round, compute)
+    }
+
+    /// The honest miner loop; `grad_scale` rescales the transmitted values
+    /// (1.0 for honest peers, the attack factor for Rescaler).
+    fn honest_step(&mut self, ctx: &PeerCtx<'_>, data_mult: f64, grad_scale: f32) -> Result<PeerOutput> {
+        let meta = &ctx.exec.meta;
+        let (b, s1) = (meta.batch, meta.seq + 1);
+        let n_mb = ((ctx.params.base_microbatches as f64 * data_mult).round() as usize).max(1);
+        self.last_microbatches = n_mb;
+
+        let theta = self.theta_view(ctx).to_vec();
+        let mut acc = vec![0.0f32; meta.param_count];
+        let mut loss_sum = 0.0f64;
+        for mb in 0..n_mb {
+            let toks = ctx.corpus.assigned_shard(self.uid, ctx.round, mb as u32, b, s1);
+            let (loss, g) = ctx.exec.grad(&theta, &toks)?;
+            loss_sum += loss as f64;
+            for (a, gi) in acc.iter_mut().zip(&g) {
+                *a += gi / n_mb as f32;
+            }
+        }
+        self.last_local_loss = loss_sum / n_mb as f64;
+
+        let (mut vals, idx, e2) =
+            ctx.exec.demo_compress(&self.error, &acc, ctx.params.demo_decay)?;
+        self.error = e2;
+        if grad_scale != 1.0 {
+            for v in &mut vals {
+                *v *= grad_scale;
+            }
+        }
+        let sub = Submission {
+            uid: self.uid,
+            round: ctx.round,
+            grad: SparseGrad { vals, idx },
+            probe: meta.sync_probe(&theta),
+        };
+        Ok(PeerOutput::Submit { time: self.upload_time(ctx, n_mb), bytes: sub.encode() })
+    }
+
+    /// Freeloader: real gradient work, wrong (self-chosen) data.
+    fn freeload_step(&mut self, ctx: &PeerCtx<'_>) -> Result<PeerOutput> {
+        let meta = &ctx.exec.meta;
+        let (b, s1) = (meta.batch, meta.seq + 1);
+        let theta = self.theta_view(ctx).to_vec();
+        // deliberately NOT the assigned shard
+        let toks = ctx.corpus.batch(
+            &["freeload", &self.uid.to_string(), &ctx.round.to_string()],
+            b,
+            s1,
+        );
+        let (loss, g) = ctx.exec.grad(&theta, &toks)?;
+        self.last_local_loss = loss as f64;
+        self.last_microbatches = 1;
+        let (vals, idx, e2) = ctx.exec.demo_compress(&self.error, &g, ctx.params.demo_decay)?;
+        self.error = e2;
+        let sub = Submission {
+            uid: self.uid,
+            round: ctx.round,
+            grad: SparseGrad { vals, idx },
+            probe: meta.sync_probe(&theta),
+        };
+        Ok(PeerOutput::Submit { time: self.upload_time(ctx, 1), bytes: sub.encode() })
+    }
+
+    /// End-of-round model maintenance: synchronized peers adopt the new
+    /// global model; a Desync peer in/after its pause maintains its own
+    /// divergent copy by applying the aggregate to the stale base.
+    pub fn on_round_end(&mut self, round: u64, new_global: &[f32], exec: &Executor, agg_coeff: Option<&[f32]>, lr: f32) -> Result<()> {
+        match self.behavior {
+            Behavior::Desync { at, pause } => {
+                if round + 1 == at {
+                    // entering the pause: freeze the current global model
+                    self.theta_local = Some(new_global.to_vec());
+                } else if let Some(local) = &self.theta_local {
+                    if round + 1 >= at + pause {
+                        // resumed: keep applying aggregations to the stale
+                        // base (permanently ~`pause` steps divergent)
+                        if let Some(coeff) = agg_coeff {
+                            let updated = exec.apply_update(local, coeff, lr)?;
+                            self.theta_local = Some(updated);
+                        }
+                    }
+                    // during the pause: do nothing (model frozen)
+                }
+            }
+            _ => {
+                // synchronized peers hold the global model by reference
+                self.theta_local = None;
+            }
+        }
+        Ok(())
+    }
+
+    /// Expose the error-feedback buffer length (tests).
+    pub fn error_norm(&self) -> f64 {
+        self.error.iter().map(|x| (*x as f64).powi(2)).sum::<f64>().sqrt()
+    }
+
+    pub fn is_divergent(&self) -> bool {
+        self.theta_local.is_some()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paused_window_is_half_open() {
+        let p = PeerRunner::new(0, Behavior::Desync { at: 5, pause: 3 }, 4, 0);
+        assert!(!p.paused(4));
+        assert!(p.paused(5));
+        assert!(p.paused(7));
+        assert!(!p.paused(8));
+    }
+
+    #[test]
+    fn new_runner_has_zero_error_buffer() {
+        let p = PeerRunner::new(3, Behavior::Honest { data_mult: 1.0 }, 128, 1);
+        assert_eq!(p.error_norm(), 0.0);
+        assert!(!p.is_divergent());
+    }
+
+    #[test]
+    fn compute_speed_is_deterministic_per_uid_seed() {
+        let a = PeerRunner::new(3, Behavior::Freeloader, 4, 9);
+        let b = PeerRunner::new(3, Behavior::Freeloader, 4, 9);
+        assert_eq!(a.compute_ms_per_mb, b.compute_ms_per_mb);
+        let c = PeerRunner::new(4, Behavior::Freeloader, 4, 9);
+        assert_ne!(a.compute_ms_per_mb, c.compute_ms_per_mb);
+    }
+}

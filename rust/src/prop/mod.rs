@@ -1,0 +1,75 @@
+//! Miniature property-based testing harness (proptest is not available in
+//! this vendored environment — see DESIGN.md §4 substitutions).
+//!
+//! A property runs against `cases` deterministic pseudo-random inputs; on
+//! failure it reports the case index and seed so the exact input can be
+//! reproduced with `Rng::new(seed)`. A greedy "shrink by retrying smaller
+//! size hints" pass is intentionally omitted: generators take a `size`
+//! parameter and the harness retries failing properties at smaller sizes to
+//! report the smallest size class that still fails.
+
+use crate::util::Rng;
+
+/// Run `prop(rng, size)` for `cases` seeds. Panics with a reproducible
+/// report on the first failure, after probing smaller sizes.
+pub fn check<F>(name: &str, cases: u64, prop: F)
+where
+    F: Fn(&mut Rng, usize) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = 0x9A0C_u64 << 32 | case;
+        let size = 1 + (case as usize * 7) % 64;
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng, size) {
+            // Probe smaller size classes with the same seed for a more
+            // readable failure report.
+            let mut min_fail = (size, msg.clone());
+            for s in (1..size).rev() {
+                let mut r2 = Rng::new(seed);
+                if let Err(m) = prop(&mut r2, s) {
+                    min_fail = (s, m);
+                }
+            }
+            panic!(
+                "property {name:?} failed: case={case} seed={seed:#x} size={} \
+                 (first failure at size={size})\n  {}",
+                min_fail.0, min_fail.1
+            );
+        }
+    }
+}
+
+/// Assert helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        check("sum-commutes", 32, |rng, size| {
+            let a: Vec<f64> = (0..size).map(|_| rng.next_f64()).collect();
+            let s1: f64 = a.iter().sum();
+            let s2: f64 = a.iter().rev().sum();
+            prop_assert!((s1 - s2).abs() < 1e-9, "sums differ: {s1} vs {s2}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn failing_property_panics_with_seed() {
+        check("always-fails-at-size-10", 64, |_rng, size| {
+            prop_assert!(size < 10, "failed as designed at size {size}");
+            Ok(())
+        });
+    }
+}

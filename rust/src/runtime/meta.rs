@@ -1,0 +1,206 @@
+//! `meta.json` — the Rust<->Python ABI contract for one model config.
+//!
+//! Produced by `python -m compile.aot` alongside the HLO artifacts; parsed
+//! here with `minjson`. Everything the coordinator needs to know about a
+//! config (shapes, DCT dimensions, default hyperparameters, the flat
+//! parameter layout used for SyncScore probes) lives in this file, so the
+//! two languages can never drift silently: any mismatch fails loudly at
+//! load time.
+
+use anyhow::{bail, Context, Result};
+
+use crate::minjson::Value;
+
+/// One tensor inside the flat parameter vector.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub size: usize,
+}
+
+/// Default optimizer hyperparameters chosen at AOT time.
+#[derive(Clone, Debug)]
+pub struct Hyper {
+    pub lr: f32,
+    pub demo_decay: f32,
+    pub adamw_lr: f32,
+}
+
+#[derive(Clone, Debug)]
+pub struct ModelMeta {
+    pub name: String,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub vocab: usize,
+    pub seq: usize,
+    pub batch: usize,
+    pub chunk: usize,
+    pub topk: usize,
+    pub param_count: usize,
+    pub padded_count: usize,
+    pub n_chunks: usize,
+    pub coeff_count: usize,
+    pub hyper: Hyper,
+    pub params: Vec<ParamSpec>,
+    pub artifacts: Vec<String>,
+}
+
+impl ModelMeta {
+    pub fn parse(text: &str) -> Result<ModelMeta> {
+        let v = Value::parse(text).context("parsing meta.json")?;
+        let need = |key: &str| -> Result<usize> {
+            v.get(key).as_usize().with_context(|| format!("meta.json missing {key}"))
+        };
+        let hyper = Hyper {
+            lr: v.get("hyper").get("lr").as_f64().context("hyper.lr")? as f32,
+            demo_decay: v.get("hyper").get("demo_decay").as_f64().context("hyper.demo_decay")?
+                as f32,
+            adamw_lr: v.get("hyper").get("adamw_lr").as_f64().context("hyper.adamw_lr")? as f32,
+        };
+        let mut params = Vec::new();
+        let mut expected_offset = 0usize;
+        for p in v.get("params").as_arr().context("meta.json params")? {
+            let spec = ParamSpec {
+                name: p.get("name").as_str().context("param name")?.to_string(),
+                shape: p
+                    .get("shape")
+                    .as_arr()
+                    .context("param shape")?
+                    .iter()
+                    .map(|d| d.as_usize().context("dim"))
+                    .collect::<Result<_>>()?,
+                offset: p.get("offset").as_usize().context("param offset")?,
+                size: p.get("size").as_usize().context("param size")?,
+            };
+            if spec.offset != expected_offset {
+                bail!("param {} offset {} != expected {}", spec.name, spec.offset, expected_offset);
+            }
+            if spec.size != spec.shape.iter().product::<usize>() {
+                bail!("param {} size/shape mismatch", spec.name);
+            }
+            expected_offset += spec.size;
+            params.push(spec);
+        }
+        let meta = ModelMeta {
+            name: v.get("name").as_str().context("name")?.to_string(),
+            d_model: need("d_model")?,
+            n_layers: need("n_layers")?,
+            vocab: need("vocab")?,
+            seq: need("seq")?,
+            batch: need("batch")?,
+            chunk: need("chunk")?,
+            topk: need("topk")?,
+            param_count: need("param_count")?,
+            padded_count: need("padded_count")?,
+            n_chunks: need("n_chunks")?,
+            coeff_count: need("coeff_count")?,
+            hyper,
+            params,
+            artifacts: v
+                .get("artifacts")
+                .as_arr()
+                .context("artifacts")?
+                .iter()
+                .map(|a| a.as_str().map(String::from).context("artifact name"))
+                .collect::<Result<_>>()?,
+        };
+        if expected_offset != meta.param_count {
+            bail!("param specs cover {expected_offset}, expected {}", meta.param_count);
+        }
+        let m = meta.chunk * meta.chunk;
+        if meta.padded_count != meta.n_chunks * m {
+            bail!("padded_count inconsistent with chunk layout");
+        }
+        if meta.coeff_count != meta.n_chunks * meta.topk {
+            bail!("coeff_count inconsistent with topk layout");
+        }
+        Ok(meta)
+    }
+
+    /// Flat indices sampled for the SyncScore probe: the first and last
+    /// element of every tensor (2 values per tensor, §3.2). Deterministic,
+    /// so peer and validator agree without communication.
+    pub fn sync_probe_indices(&self) -> Vec<usize> {
+        let mut out = Vec::with_capacity(self.params.len() * 2);
+        for p in &self.params {
+            out.push(p.offset);
+            out.push(p.offset + p.size - 1);
+        }
+        out
+    }
+
+    /// Gather a probe vector from a flat parameter vector.
+    pub fn sync_probe(&self, theta: &[f32]) -> Vec<f32> {
+        self.sync_probe_indices().iter().map(|&i| theta[i]).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "name": "test", "d_model": 8, "n_layers": 1, "n_heads": 2, "d_ff": 16,
+      "vocab": 32, "seq": 4, "batch": 2, "chunk": 4, "topk": 2,
+      "param_count": 20, "padded_count": 32, "n_chunks": 2, "coeff_count": 4,
+      "hyper": {"lr": 0.02, "demo_decay": 0.999, "adamw_lr": 0.0003,
+                "adamw_beta1": 0.9, "adamw_beta2": 0.95, "adamw_eps": 1e-8,
+                "adamw_wd": 0.1},
+      "params": [
+        {"name": "a", "shape": [4, 4], "offset": 0, "size": 16},
+        {"name": "b", "shape": [4], "offset": 16, "size": 4}
+      ],
+      "artifacts": ["loss"]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = ModelMeta::parse(SAMPLE).unwrap();
+        assert_eq!(m.name, "test");
+        assert_eq!(m.param_count, 20);
+        assert_eq!(m.params.len(), 2);
+        assert_eq!(m.params[1].offset, 16);
+        assert_eq!(m.artifacts, vec!["loss"]);
+        assert!((m.hyper.lr - 0.02).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sync_probe_takes_first_and_last_of_each_tensor() {
+        let m = ModelMeta::parse(SAMPLE).unwrap();
+        assert_eq!(m.sync_probe_indices(), vec![0, 15, 16, 19]);
+        let theta: Vec<f32> = (0..20).map(|i| i as f32).collect();
+        assert_eq!(m.sync_probe(&theta), vec![0.0, 15.0, 16.0, 19.0]);
+    }
+
+    #[test]
+    fn rejects_gapped_offsets() {
+        let bad = SAMPLE.replace(r#""offset": 16"#, r#""offset": 17"#);
+        assert!(ModelMeta::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_size_shape_mismatch() {
+        let bad = SAMPLE.replace(r#""shape": [4], "offset": 16, "size": 4"#,
+                                 r#""shape": [4], "offset": 16, "size": 5"#);
+        assert!(ModelMeta::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_inconsistent_chunk_layout() {
+        let bad = SAMPLE.replace(r#""padded_count": 32"#, r#""padded_count": 33"#);
+        assert!(ModelMeta::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn parses_real_artifact_meta_when_built() {
+        let path = super::super::artifact_dir("nano").join("meta.json");
+        if let Ok(text) = std::fs::read_to_string(path) {
+            let m = ModelMeta::parse(&text).unwrap();
+            assert_eq!(m.name, "nano");
+            assert_eq!(m.artifacts.len(), 7);
+            assert_eq!(m.padded_count, m.n_chunks * m.chunk * m.chunk);
+        }
+    }
+}

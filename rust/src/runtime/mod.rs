@@ -1,0 +1,240 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts and executes them.
+//!
+//! This is the only place the coordinator touches XLA. Each model config's
+//! `artifacts/<cfg>/` directory (produced by `make artifacts`, i.e.
+//! `python -m compile.aot`) contains HLO-text entry points plus the
+//! `meta.json` ABI contract; [`Executor`] compiles each entry point once at
+//! startup and exposes typed wrappers. Python is never on this path.
+//!
+//! Note on threading: the `xla` crate's handles wrap raw PJRT pointers and
+//! are not `Send`; the coordinator therefore funnels all XLA execution
+//! through the thread that created the [`Executor`] (the simulation loop is
+//! synchronous-by-design, mirroring the paper's synchronous training
+//! framework — see DESIGN.md).
+
+pub mod meta;
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+pub use meta::{ModelMeta, ParamSpec};
+
+/// Per-entry-point execution statistics (perf accounting, §Perf).
+#[derive(Clone, Debug, Default)]
+pub struct ExecStats {
+    pub calls: u64,
+    pub total: Duration,
+}
+
+/// Compiled artifacts for one model config.
+pub struct Executor {
+    pub meta: ModelMeta,
+    pub dir: PathBuf,
+    client: xla::PjRtClient,
+    exes: BTreeMap<String, xla::PjRtLoadedExecutable>,
+    stats: RefCell<BTreeMap<String, ExecStats>>,
+}
+
+impl Executor {
+    /// Load and compile every artifact listed in `<dir>/meta.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Executor> {
+        let dir = dir.as_ref().to_path_buf();
+        let meta_path = dir.join("meta.json");
+        let meta_text = std::fs::read_to_string(&meta_path)
+            .with_context(|| format!("reading {meta_path:?} (run `make artifacts`?)"))?;
+        let meta = ModelMeta::parse(&meta_text)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let mut exes = BTreeMap::new();
+        for name in &meta.artifacts {
+            let path = dir.join(format!("{name}.hlo.txt"));
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 path")?,
+            )
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp).with_context(|| format!("compiling {name}"))?;
+            exes.insert(name.clone(), exe);
+        }
+        Ok(Executor { meta, dir, client, exes, stats: RefCell::new(BTreeMap::new()) })
+    }
+
+    /// Deterministic initial parameter vector produced at AOT time.
+    pub fn init_params(&self) -> Result<Vec<f32>> {
+        let path = self.dir.join("init_params.bin");
+        let bytes = std::fs::read(&path).with_context(|| format!("reading {path:?}"))?;
+        let v = crate::util::f32_from_le_bytes(&bytes);
+        if v.len() != self.meta.param_count {
+            bail!("init_params has {} values, expected {}", v.len(), self.meta.param_count);
+        }
+        Ok(v)
+    }
+
+    pub fn stats(&self) -> BTreeMap<String, ExecStats> {
+        self.stats.borrow().clone()
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    /// Raw tuple-call on an artifact with literal arguments.
+    fn call(&self, name: &str, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self.exes.get(name).with_context(|| format!("no artifact {name:?}"))?;
+        let t0 = Instant::now();
+        let out = exe.execute::<xla::Literal>(args).with_context(|| format!("executing {name}"))?;
+        let lit = out[0][0].to_literal_sync()?;
+        // Lowered with return_tuple=True: the single output is a tuple.
+        let items = lit.to_tuple()?;
+        let mut st = self.stats.borrow_mut();
+        let e = st.entry(name.to_string()).or_default();
+        e.calls += 1;
+        e.total += t0.elapsed();
+        Ok(items)
+    }
+
+    // ------------------------------------------------------------------
+    // typed entry points (shapes per meta.json)
+    // ------------------------------------------------------------------
+
+    fn theta_lit(&self, theta: &[f32]) -> Result<xla::Literal> {
+        if theta.len() != self.meta.param_count {
+            bail!("theta has {} values, expected {}", theta.len(), self.meta.param_count);
+        }
+        Ok(xla::Literal::vec1(theta))
+    }
+
+    fn tokens_lit(&self, tokens: &[i32]) -> Result<xla::Literal> {
+        let (b, s1) = (self.meta.batch, self.meta.seq + 1);
+        if tokens.len() != b * s1 {
+            bail!("tokens has {} values, expected {}x{}", tokens.len(), b, s1);
+        }
+        Ok(xla::Literal::vec1(tokens).reshape(&[b as i64, s1 as i64])?)
+    }
+
+    fn coeff_lit(&self, coeff: &[f32]) -> Result<xla::Literal> {
+        if coeff.len() != self.meta.padded_count {
+            bail!("coeff has {} values, expected {}", coeff.len(), self.meta.padded_count);
+        }
+        Ok(xla::Literal::vec1(coeff))
+    }
+
+    fn scalar(v: f32) -> xla::Literal {
+        xla::Literal::scalar(v)
+    }
+
+    /// `loss(theta, tokens) -> loss`
+    pub fn loss(&self, theta: &[f32], tokens: &[i32]) -> Result<f32> {
+        let out = self.call("loss", &[self.theta_lit(theta)?, self.tokens_lit(tokens)?])?;
+        Ok(out[0].get_first_element::<f32>()?)
+    }
+
+    /// `loss_per_seq(theta, tokens) -> f32[B]` — per-sequence mean loss
+    /// (length-normalized logprob scoring for the downstream eval harness).
+    pub fn loss_per_seq(&self, theta: &[f32], tokens: &[i32]) -> Result<Vec<f32>> {
+        let out =
+            self.call("loss_per_seq", &[self.theta_lit(theta)?, self.tokens_lit(tokens)?])?;
+        Ok(out[0].to_vec::<f32>()?)
+    }
+
+    /// `grad(theta, tokens) -> (loss, grad)`
+    pub fn grad(&self, theta: &[f32], tokens: &[i32]) -> Result<(f32, Vec<f32>)> {
+        let out = self.call("grad", &[self.theta_lit(theta)?, self.tokens_lit(tokens)?])?;
+        Ok((out[0].get_first_element::<f32>()?, out[1].to_vec::<f32>()?))
+    }
+
+    /// `demo_compress(e, g, decay) -> (vals, idx, e')`
+    pub fn demo_compress(
+        &self,
+        error: &[f32],
+        grad: &[f32],
+        decay: f32,
+    ) -> Result<(Vec<f32>, Vec<i32>, Vec<f32>)> {
+        let out = self.call(
+            "demo_compress",
+            &[self.theta_lit(error)?, self.theta_lit(grad)?, Self::scalar(decay)],
+        )?;
+        Ok((out[0].to_vec::<f32>()?, out[1].to_vec::<i32>()?, out[2].to_vec::<f32>()?))
+    }
+
+    /// `apply_update(theta, coeff, lr) -> theta'` (IDCT + sign + step)
+    pub fn apply_update(&self, theta: &[f32], coeff: &[f32], lr: f32) -> Result<Vec<f32>> {
+        let out = self.call(
+            "apply_update",
+            &[self.theta_lit(theta)?, self.coeff_lit(coeff)?, Self::scalar(lr)],
+        )?;
+        Ok(out[0].to_vec::<f32>()?)
+    }
+
+    /// `eval_peer(theta, coeff, beta, tok_assigned, tok_rand)
+    ///    -> (L_assigned_before, L_assigned_after, L_rand_before, L_rand_after)`
+    pub fn eval_peer(
+        &self,
+        theta: &[f32],
+        coeff: &[f32],
+        beta: f32,
+        tok_assigned: &[i32],
+        tok_rand: &[i32],
+    ) -> Result<(f32, f32, f32, f32)> {
+        let out = self.call(
+            "eval_peer",
+            &[
+                self.theta_lit(theta)?,
+                self.coeff_lit(coeff)?,
+                Self::scalar(beta),
+                self.tokens_lit(tok_assigned)?,
+                self.tokens_lit(tok_rand)?,
+            ],
+        )?;
+        Ok((
+            out[0].get_first_element::<f32>()?,
+            out[1].get_first_element::<f32>()?,
+            out[2].get_first_element::<f32>()?,
+            out[3].get_first_element::<f32>()?,
+        ))
+    }
+
+    /// `adamw_step(theta, m, v, tokens, lr, t) -> (loss, theta', m', v')`
+    pub fn adamw_step(
+        &self,
+        theta: &[f32],
+        m: &[f32],
+        v: &[f32],
+        tokens: &[i32],
+        lr: f32,
+        t: f32,
+    ) -> Result<(f32, Vec<f32>, Vec<f32>, Vec<f32>)> {
+        let out = self.call(
+            "adamw_step",
+            &[
+                self.theta_lit(theta)?,
+                self.theta_lit(m)?,
+                self.theta_lit(v)?,
+                self.tokens_lit(tokens)?,
+                Self::scalar(lr),
+                Self::scalar(t),
+            ],
+        )?;
+        Ok((
+            out[0].get_first_element::<f32>()?,
+            out[1].to_vec::<f32>()?,
+            out[2].to_vec::<f32>()?,
+            out[3].to_vec::<f32>()?,
+        ))
+    }
+}
+
+/// Locate `artifacts/<cfg>` relative to the crate root (works from
+/// examples, tests, and benches).
+pub fn artifact_dir(cfg: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts").join(cfg)
+}
+
+/// True if a config's artifacts are present (used by tests to skip
+/// gracefully when `make artifacts` has not run).
+pub fn artifacts_available(cfg: &str) -> bool {
+    artifact_dir(cfg).join("meta.json").exists()
+}

@@ -1,0 +1,322 @@
+//! Simulated S3-compatible cloud storage (paper §5, "Cloud-Based
+//! Communication").
+//!
+//! In the deployed system every peer owns a bucket at an S3-compliant
+//! provider (Cloudflare R2), posts its *read* credentials to the chain, and
+//! broadcasts pseudo-gradients by writing into its own bucket; validators
+//! read from peers' buckets and trust the provider's object timestamps
+//! (anchored to blockchain time) to enforce the per-round put window.
+//!
+//! This module reproduces that API surface in-process:
+//!   - buckets with owner-only writes and key-holder reads,
+//!   - robust server-side timestamps (simulation clock, not wall clock),
+//!   - configurable upload latency and fault injection (outages model the
+//!     "reliability of the cloud provider" caveat in §5),
+//!   - put-window enforcement as a *reader-side* filter, exactly like the
+//!     validator ignores out-of-window objects in the live system.
+
+use std::collections::BTreeMap;
+
+use crate::util::Rng;
+
+/// Simulation time in milliseconds since run start.
+pub type SimTime = u64;
+
+/// A stored object with its server-assigned timestamp.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Object {
+    pub key: String,
+    pub bytes: Vec<u8>,
+    /// Server-side receive time — what the validator trusts.
+    pub stored_at: SimTime,
+}
+
+/// Read credential a peer publishes on-chain (paper: read-access keys).
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct ReadKey(pub String);
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum StorageError {
+    #[error("no such bucket {0:?}")]
+    NoBucket(String),
+    #[error("access denied to bucket {0:?}")]
+    AccessDenied(String),
+    #[error("provider outage")]
+    Outage,
+    #[error("object too large: {size} > {limit}")]
+    TooLarge { size: usize, limit: usize },
+}
+
+struct Bucket {
+    owner: String,
+    read_key: ReadKey,
+    objects: BTreeMap<String, Object>,
+}
+
+/// Latency / reliability model for the simulated provider.
+#[derive(Clone, Debug)]
+pub struct ProviderModel {
+    /// Mean upload latency (ms); actual draws are log-normal-ish around it.
+    pub mean_upload_ms: f64,
+    pub jitter_ms: f64,
+    /// Probability an individual PUT is lost to a transient outage.
+    pub outage_prob: f64,
+    pub max_object_bytes: usize,
+}
+
+impl Default for ProviderModel {
+    fn default() -> Self {
+        ProviderModel {
+            mean_upload_ms: 800.0,
+            jitter_ms: 300.0,
+            outage_prob: 0.0,
+            max_object_bytes: 256 << 20,
+        }
+    }
+}
+
+/// The simulated S3 provider: all buckets, one global object namespace per
+/// bucket, server-side clocks.
+pub struct ObjectStore {
+    buckets: BTreeMap<String, Bucket>,
+    pub model: ProviderModel,
+    rng: Rng,
+    next_key_id: u64,
+}
+
+impl ObjectStore {
+    pub fn new(model: ProviderModel, seed: u64) -> Self {
+        ObjectStore { buckets: BTreeMap::new(), model, rng: Rng::new(seed), next_key_id: 0 }
+    }
+
+    /// Create a bucket owned by `owner`; returns the read key the owner
+    /// would post on-chain.
+    pub fn create_bucket(&mut self, name: &str, owner: &str) -> ReadKey {
+        self.next_key_id += 1;
+        let key = ReadKey(format!("rk-{}-{:08x}", name, self.next_key_id));
+        self.buckets.insert(
+            name.to_string(),
+            Bucket { owner: owner.to_string(), read_key: key.clone(), objects: BTreeMap::new() },
+        );
+        key
+    }
+
+    pub fn bucket_exists(&self, name: &str) -> bool {
+        self.buckets.contains_key(name)
+    }
+
+    /// PUT an object. `now` is the client's send time; the stored timestamp
+    /// is send time + simulated upload latency. Returns the server-side
+    /// stored-at time, or an error on outage / size limit / ACL.
+    pub fn put(
+        &mut self,
+        bucket: &str,
+        writer: &str,
+        key: &str,
+        bytes: Vec<u8>,
+        now: SimTime,
+    ) -> Result<SimTime, StorageError> {
+        if bytes.len() > self.model.max_object_bytes {
+            return Err(StorageError::TooLarge {
+                size: bytes.len(),
+                limit: self.model.max_object_bytes,
+            });
+        }
+        if self.model.outage_prob > 0.0 && self.rng.chance(self.model.outage_prob) {
+            return Err(StorageError::Outage);
+        }
+        let latency = (self.model.mean_upload_ms
+            + self.rng.normal() * self.model.jitter_ms)
+            .max(1.0) as u64;
+        let b = self
+            .buckets
+            .get_mut(bucket)
+            .ok_or_else(|| StorageError::NoBucket(bucket.to_string()))?;
+        if b.owner != writer {
+            return Err(StorageError::AccessDenied(bucket.to_string()));
+        }
+        let stored_at = now + latency;
+        b.objects.insert(key.to_string(), Object { key: key.to_string(), bytes, stored_at });
+        Ok(stored_at)
+    }
+
+    /// GET with a read key (as validators do, using the on-chain key).
+    pub fn get(&self, bucket: &str, rk: &ReadKey, key: &str) -> Result<Option<&Object>, StorageError> {
+        let b = self
+            .buckets
+            .get(bucket)
+            .ok_or_else(|| StorageError::NoBucket(bucket.to_string()))?;
+        if &b.read_key != rk {
+            return Err(StorageError::AccessDenied(bucket.to_string()));
+        }
+        Ok(b.objects.get(key))
+    }
+
+    /// List all objects in a bucket (metadata view).
+    pub fn list(&self, bucket: &str, rk: &ReadKey) -> Result<Vec<(String, SimTime)>, StorageError> {
+        let b = self
+            .buckets
+            .get(bucket)
+            .ok_or_else(|| StorageError::NoBucket(bucket.to_string()))?;
+        if &b.read_key != rk {
+            return Err(StorageError::AccessDenied(bucket.to_string()));
+        }
+        Ok(b.objects.values().map(|o| (o.key.clone(), o.stored_at)).collect())
+    }
+
+    /// Reader-side put-window filter: fetch `key` only if its server
+    /// timestamp falls inside `[window_start, window_end]` — the §3.2
+    /// "basic checks (a)" rule. Returns:
+    ///   Ok(Some(..))  in-window object
+    ///   Ok(None)      object missing (basic check (b) fails)
+    ///   Err(OutOfWindow { .. }) present but early/late
+    pub fn get_within_window(
+        &self,
+        bucket: &str,
+        rk: &ReadKey,
+        key: &str,
+        window_start: SimTime,
+        window_end: SimTime,
+    ) -> Result<WindowedGet<'_>, StorageError> {
+        match self.get(bucket, rk, key)? {
+            None => Ok(WindowedGet::Missing),
+            Some(o) if o.stored_at < window_start => Ok(WindowedGet::TooEarly(o.stored_at)),
+            Some(o) if o.stored_at > window_end => Ok(WindowedGet::TooLate(o.stored_at)),
+            Some(o) => Ok(WindowedGet::InWindow(o)),
+        }
+    }
+
+    /// Garbage-collect objects stored before `cutoff` (peers prune old
+    /// rounds so buckets stay small).
+    pub fn prune_before(&mut self, bucket: &str, writer: &str, cutoff: SimTime) -> usize {
+        let Some(b) = self.buckets.get_mut(bucket) else { return 0 };
+        if b.owner != writer {
+            return 0;
+        }
+        let before = b.objects.len();
+        b.objects.retain(|_, o| o.stored_at >= cutoff);
+        before - b.objects.len()
+    }
+}
+
+/// Result of a windowed GET (see [`ObjectStore::get_within_window`]).
+#[derive(Debug)]
+pub enum WindowedGet<'a> {
+    InWindow(&'a Object),
+    Missing,
+    TooEarly(SimTime),
+    TooLate(SimTime),
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn store() -> ObjectStore {
+        let model = ProviderModel { mean_upload_ms: 100.0, jitter_ms: 0.0, ..Default::default() };
+        ObjectStore::new(model, 42)
+    }
+
+    #[test]
+    fn put_get_roundtrip_with_read_key() {
+        let mut s = store();
+        let rk = s.create_bucket("peer-0", "peer-0");
+        let t = s.put("peer-0", "peer-0", "grad-17", vec![1, 2, 3], 1000).unwrap();
+        assert!(t >= 1100, "latency applied");
+        let o = s.get("peer-0", &rk, "grad-17").unwrap().unwrap();
+        assert_eq!(o.bytes, vec![1, 2, 3]);
+        assert_eq!(o.stored_at, t);
+    }
+
+    #[test]
+    fn wrong_read_key_denied() {
+        let mut s = store();
+        let _rk = s.create_bucket("peer-0", "peer-0");
+        let bad = ReadKey("rk-fake".into());
+        assert_eq!(s.get("peer-0", &bad, "x"), Err(StorageError::AccessDenied("peer-0".into())));
+    }
+
+    #[test]
+    fn only_owner_can_write() {
+        let mut s = store();
+        s.create_bucket("peer-0", "peer-0");
+        let err = s.put("peer-0", "peer-1", "k", vec![], 0).unwrap_err();
+        assert_eq!(err, StorageError::AccessDenied("peer-0".into()));
+    }
+
+    #[test]
+    fn missing_bucket_errors() {
+        let s = store();
+        assert!(matches!(
+            s.get("nope", &ReadKey("rk".into()), "k"),
+            Err(StorageError::NoBucket(_))
+        ));
+    }
+
+    #[test]
+    fn window_filter_classifies_early_late_missing() {
+        let mut s = store();
+        let rk = s.create_bucket("b", "b");
+        s.put("b", "b", "ontime", vec![1], 1000).unwrap(); // stored ~1100
+        s.put("b", "b", "early", vec![2], 0).unwrap(); // stored ~100
+        s.put("b", "b", "late", vec![3], 99_000).unwrap(); // stored ~99100
+
+        let w = |k: &str| s.get_within_window("b", &rk, k, 500, 2000).unwrap();
+        assert!(matches!(w("ontime"), WindowedGet::InWindow(_)));
+        assert!(matches!(w("early"), WindowedGet::TooEarly(_)));
+        assert!(matches!(w("late"), WindowedGet::TooLate(_)));
+        assert!(matches!(w("absent"), WindowedGet::Missing));
+    }
+
+    #[test]
+    fn outage_injection_fails_puts() {
+        let model = ProviderModel { outage_prob: 1.0, ..Default::default() };
+        let mut s = ObjectStore::new(model, 1);
+        s.create_bucket("b", "b");
+        assert_eq!(s.put("b", "b", "k", vec![], 0), Err(StorageError::Outage));
+    }
+
+    #[test]
+    fn size_limit_enforced() {
+        let model = ProviderModel { max_object_bytes: 4, ..Default::default() };
+        let mut s = ObjectStore::new(model, 1);
+        s.create_bucket("b", "b");
+        assert!(matches!(
+            s.put("b", "b", "k", vec![0; 5], 0),
+            Err(StorageError::TooLarge { size: 5, limit: 4 })
+        ));
+    }
+
+    #[test]
+    fn overwrite_updates_timestamp() {
+        let mut s = store();
+        let rk = s.create_bucket("b", "b");
+        let t1 = s.put("b", "b", "k", vec![1], 0).unwrap();
+        let t2 = s.put("b", "b", "k", vec![2], 5000).unwrap();
+        assert!(t2 > t1);
+        assert_eq!(s.get("b", &rk, "k").unwrap().unwrap().bytes, vec![2]);
+    }
+
+    #[test]
+    fn prune_removes_old_objects_only_for_owner() {
+        let mut s = store();
+        let rk = s.create_bucket("b", "b");
+        s.put("b", "b", "old", vec![1], 0).unwrap();
+        s.put("b", "b", "new", vec![2], 10_000).unwrap();
+        assert_eq!(s.prune_before("b", "intruder", 50_000), 0);
+        assert_eq!(s.prune_before("b", "b", 5_000), 1);
+        assert!(s.get("b", &rk, "old").unwrap().is_none());
+        assert!(s.get("b", &rk, "new").unwrap().is_some());
+    }
+
+    #[test]
+    fn list_returns_metadata() {
+        let mut s = store();
+        let rk = s.create_bucket("b", "b");
+        s.put("b", "b", "a", vec![1], 0).unwrap();
+        s.put("b", "b", "c", vec![2], 0).unwrap();
+        let ls = s.list("b", &rk).unwrap();
+        assert_eq!(ls.len(), 2);
+        assert!(ls.iter().any(|(k, _)| k == "a"));
+    }
+}

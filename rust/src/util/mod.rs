@@ -1,0 +1,60 @@
+//! Small shared utilities: deterministic RNG, statistics, timing tables.
+//!
+//! The environment has no `rand` crate, so [`Rng`] is a hand-rolled
+//! SplitMix64 (Steele et al., "Fast splittable pseudorandom number
+//! generators") — more than adequate for simulation workloads and fully
+//! deterministic across platforms, which the seeded data-assignment scheme
+//! (`SelectData(seed, p, t)` in the paper's Algorithm 1) relies on.
+
+pub mod rng;
+pub mod stats;
+
+pub use rng::Rng;
+pub use stats::{mean, percentile, std_dev, Ema, OnlineStats};
+
+/// Mathematical sign with sign(0) = 0 (Rust's `f64::signum` maps +0.0 to
+/// +1.0, which would bias the paper's eq. 3 EMA on exact ties).
+pub fn sign(x: f64) -> f64 {
+    if x > 0.0 {
+        1.0
+    } else if x < 0.0 {
+        -1.0
+    } else {
+        0.0
+    }
+}
+
+/// Convert a byte slice (little-endian f32) into a vector of f32.
+pub fn f32_from_le_bytes(bytes: &[u8]) -> Vec<f32> {
+    bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect()
+}
+
+/// Serialize a f32 slice as little-endian bytes.
+pub fn f32_to_le_bytes(vals: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(vals.len() * 4);
+    for v in vals {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip() {
+        let xs = vec![0.0f32, -1.5, 3.25e7, f32::MIN_POSITIVE];
+        assert_eq!(f32_from_le_bytes(&f32_to_le_bytes(&xs)), xs);
+    }
+
+    #[test]
+    fn f32_from_le_ignores_trailing_partial() {
+        let mut b = f32_to_le_bytes(&[1.0, 2.0]);
+        b.push(0xff);
+        assert_eq!(f32_from_le_bytes(&b), vec![1.0, 2.0]);
+    }
+}

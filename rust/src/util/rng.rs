@@ -1,0 +1,185 @@
+//! Deterministic SplitMix64 RNG with the distribution helpers the
+//! simulation needs (uniform, normal, shuffling, subset sampling).
+//!
+//! Determinism matters twice here: (a) experiments are reproducible from a
+//! single seed, and (b) the paper's `SelectData(seed, p, t)` contract
+//! requires the validator and an honest peer to derive the *same* data
+//! shard from public inputs — see [`Rng::from_parts`], which mixes the
+//! parts through SHA-256 so shard seeds cannot collide by accident.
+
+use sha2::{Digest, Sha256};
+
+/// SplitMix64: tiny, fast, passes BigCrush for this mixing constant.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        Rng { state: seed }
+    }
+
+    /// Derive a generator from a structured seed, e.g.
+    /// `Rng::from_parts(&["shard", "42", "peer=3", "round=17"])`.
+    pub fn from_parts(parts: &[&str]) -> Self {
+        let mut h = Sha256::new();
+        for p in parts {
+            h.update(p.as_bytes());
+            h.update([0u8]); // unambiguous separator
+        }
+        let d = h.finalize();
+        Rng::new(u64::from_le_bytes(d[..8].try_into().unwrap()))
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in [0, 1).
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    pub fn next_f32(&mut self) -> f32 {
+        self.next_f64() as f32
+    }
+
+    /// Uniform integer in [0, n). Uses rejection sampling to stay unbiased.
+    pub fn below(&mut self, n: u64) -> u64 {
+        assert!(n > 0, "below(0)");
+        let zone = u64::MAX - u64::MAX % n;
+        loop {
+            let v = self.next_u64();
+            if v < zone {
+                return v % n;
+            }
+        }
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.next_f64()
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn normal(&mut self) -> f64 {
+        let u1 = self.next_f64().max(1e-300);
+        let u2 = self.next_f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    pub fn normal_f32(&mut self, mean: f32, std: f32) -> f32 {
+        mean + std * self.normal() as f32
+    }
+
+    /// Bernoulli with probability p.
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.next_f64() < p
+    }
+
+    /// In-place Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// k distinct elements sampled uniformly from `xs` (order random).
+    pub fn choose_k<T: Clone>(&mut self, xs: &[T], k: usize) -> Vec<T> {
+        let mut idx: Vec<usize> = (0..xs.len()).collect();
+        self.shuffle(&mut idx);
+        idx.truncate(k.min(xs.len()));
+        idx.into_iter().map(|i| xs[i].clone()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_from_seed() {
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn from_parts_separator_is_unambiguous() {
+        // ("ab", "c") must differ from ("a", "bc").
+        let a = Rng::from_parts(&["ab", "c"]).state;
+        let b = Rng::from_parts(&["a", "bc"]).state;
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn uniform_mean_is_half() {
+        let mut r = Rng::new(1);
+        let n = 20_000;
+        let s: f64 = (0..n).map(|_| r.next_f64()).sum();
+        assert!((s / n as f64 - 0.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn below_is_in_range_and_covers() {
+        let mut r = Rng::new(2);
+        let mut seen = [false; 7];
+        for _ in 0..1000 {
+            let v = r.below(7) as usize;
+            assert!(v < 7);
+            seen[v] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(3);
+        let n = 20_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.03, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(4);
+        let mut xs: Vec<u32> = (0..50).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+        assert_ne!(xs, (0..50).collect::<Vec<_>>()); // overwhelmingly likely
+    }
+
+    #[test]
+    fn choose_k_distinct() {
+        let mut r = Rng::new(5);
+        let xs: Vec<u32> = (0..20).collect();
+        let picked = r.choose_k(&xs, 8);
+        assert_eq!(picked.len(), 8);
+        let mut s = picked.clone();
+        s.sort();
+        s.dedup();
+        assert_eq!(s.len(), 8);
+    }
+
+    #[test]
+    fn choose_k_larger_than_len_returns_all() {
+        let mut r = Rng::new(6);
+        let xs = vec![1, 2, 3];
+        let mut picked = r.choose_k(&xs, 10);
+        picked.sort();
+        assert_eq!(picked, xs);
+    }
+}

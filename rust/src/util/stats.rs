@@ -1,0 +1,173 @@
+//! Streaming statistics used by the scoring, metrics, and bench code.
+
+/// Arithmetic mean; 0.0 for an empty slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Sample standard deviation (n-1 denominator); 0.0 below two samples.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+/// Linear-interpolated percentile, q in [0, 100]. Sorts a copy.
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = (q / 100.0) * (v.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (v[hi] - v[lo]) * (pos - lo as f64)
+    }
+}
+
+/// Exponential moving average with the paper's `gamma` semantics:
+/// `mu <- gamma * mu + (1 - gamma) * x` (eq. 3).
+#[derive(Clone, Copy, Debug)]
+pub struct Ema {
+    pub gamma: f64,
+    pub value: f64,
+}
+
+impl Ema {
+    pub fn new(gamma: f64) -> Self {
+        assert!((0.0..=1.0).contains(&gamma), "gamma out of [0,1]");
+        Ema { gamma, value: 0.0 }
+    }
+
+    pub fn update(&mut self, x: f64) -> f64 {
+        self.value = self.gamma * self.value + (1.0 - self.gamma) * x;
+        self.value
+    }
+
+    /// Multiplicative penalty (the fast-evaluation phi in §3.2).
+    pub fn scale(&mut self, phi: f64) -> f64 {
+        self.value *= phi;
+        self.value
+    }
+}
+
+/// Welford online mean/variance/min/max.
+#[derive(Clone, Debug, Default)]
+pub struct OnlineStats {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl OnlineStats {
+    pub fn new() -> Self {
+        OnlineStats { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.mean
+        }
+    }
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_std() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((mean(&xs) - 5.0).abs() < 1e-12);
+        assert!((std_dev(&xs) - 2.138089935).abs() < 1e-6);
+    }
+
+    #[test]
+    fn empty_slices_are_safe() {
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(std_dev(&[]), 0.0);
+        assert_eq!(percentile(&[], 50.0), 0.0);
+    }
+
+    #[test]
+    fn percentiles() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+        assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ema_matches_paper_recurrence() {
+        let mut e = Ema::new(0.75);
+        e.update(1.0); // 0.25
+        e.update(1.0); // 0.4375
+        assert!((e.value - 0.4375).abs() < 1e-12);
+        e.scale(0.75);
+        assert!((e.value - 0.328125).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ema_converges_to_constant_input() {
+        let mut e = Ema::new(0.9);
+        for _ in 0..500 {
+            e.update(3.0);
+        }
+        assert!((e.value - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn online_stats_match_batch() {
+        let xs = [1.5, -2.0, 0.25, 9.0, 3.5];
+        let mut s = OnlineStats::new();
+        for &x in &xs {
+            s.push(x);
+        }
+        assert!((s.mean() - mean(&xs)).abs() < 1e-12);
+        assert!((s.std() - std_dev(&xs)).abs() < 1e-12);
+        assert_eq!(s.min(), -2.0);
+        assert_eq!(s.max(), 9.0);
+        assert_eq!(s.count(), 5);
+    }
+}
