@@ -1,0 +1,18 @@
+# Build-time entry points. The Rust runtime loads AOT artifacts from
+# rust/artifacts/<cfg>/ (override with GAUNTLET_ARTIFACT_DIR).
+
+CONFIGS ?= nano,tiny
+
+.PHONY: artifacts build test bench
+
+artifacts:
+	cd python && python -m compile.aot --configs $(CONFIGS) --out-dir ../rust/artifacts
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+bench:
+	cargo bench --bench hotpath

@@ -6,18 +6,24 @@
 //!   - OpenSkill match update
 //!   - Yuma consensus epoch at deployed scale (64 validators x 256 peers)
 //!   - corpus shard generation
+//!   - full-round evaluation pipeline: a 32-peer, 2-validator round on the
+//!     SimExec backend swept over worker-thread counts, asserting the
+//!     parallel pipeline's PEERSCOREs are bit-identical to the sequential
+//!     baseline
 //!   - XLA artifact round-trips (grad / demo_compress / eval_peer / apply)
 //!
 //!     cargo bench --bench hotpath
 
-use gauntlet::bench::{human_duration, save_json, time_it, Table};
+use gauntlet::bench::{format_speedup, human_duration, save_json, time_it, Table};
 use gauntlet::chain::yuma::{yuma_consensus, YumaParams};
+use gauntlet::coordinator::run::{RunConfig, TemplarRunWith};
 use gauntlet::data::Corpus;
 use gauntlet::demo::aggregate::{aggregate_into, AggregateOpts};
 use gauntlet::demo::wire::Submission;
 use gauntlet::demo::SparseGrad;
 use gauntlet::minjson::{self, Value};
 use gauntlet::openskill::{PlackettLuce, Rating};
+use gauntlet::peers::Behavior;
 use gauntlet::runtime::{artifact_dir, artifacts_available, Executor};
 use gauntlet::util::Rng;
 
@@ -119,12 +125,91 @@ fn main() -> anyhow::Result<()> {
     ]);
     results.push(("corpus_shard".into(), cg.mean_s));
 
+    // ---- parallel round-evaluation pipeline -----------------------------
+    // The tentpole path: one full communication round (32 peers taking
+    // turns, 2 validators fast-evaluating everyone + primary-evaluating a
+    // sample, chain epoch, aggregation) on the SimExec "mid" model, swept
+    // over worker-thread counts. PEERSCOREs must be bit-identical at every
+    // thread count; the speedup column is the parallelization win.
+    {
+        const ROUNDS: u64 = 3;
+        let mk_run = |threads: usize| {
+            let peers: Vec<Behavior> = (0..32)
+                .map(|i| match i % 8 {
+                    6 => Behavior::Freeloader,
+                    7 => Behavior::Poisoner { scale: 100.0 },
+                    _ => Behavior::Honest { data_mult: 1.0 },
+                })
+                .collect();
+            let mut cfg = RunConfig::quick("mid", ROUNDS, peers);
+            cfg.eval_every = 0;
+            cfg.seed = 11;
+            cfg.n_validators = 2;
+            cfg.params.top_g = 8;
+            cfg.params.eval_sample = 4;
+            cfg.threads = threads;
+            TemplarRunWith::new_sim(cfg).expect("sim run")
+        };
+        let score_bits = |threads: usize| -> Vec<u64> {
+            let mut run = mk_run(threads);
+            for _ in 0..ROUNDS {
+                run.run_round().expect("round");
+            }
+            let uids = run.peer_uids();
+            let mut bits = Vec::with_capacity(run.validators.len() * uids.len());
+            for v in &run.validators {
+                for &u in &uids {
+                    bits.push(v.book.peer_score(u).to_bits());
+                }
+            }
+            bits
+        };
+        let reference = score_bits(1);
+        for threads in [2usize, 4, 8] {
+            assert_eq!(
+                score_bits(threads),
+                reference,
+                "PEERSCOREs must be identical at {threads} threads"
+            );
+        }
+        let mut base_mean = 0.0;
+        for threads in [1usize, 2, 4, 8] {
+            // Pre-build one run per timing iteration so construction cost
+            // (init params, peer registration) stays out of the timed
+            // region — the sweep measures the round pipeline itself.
+            let mut prebuilt: Vec<_> = (0..4).map(|_| mk_run(threads)).collect();
+            let timing = time_it(1, 3, || {
+                let mut run = prebuilt.pop().expect("prebuilt run");
+                for _ in 0..ROUNDS {
+                    run.run_round().expect("round");
+                }
+            });
+            if threads == 1 {
+                base_mean = timing.mean_s;
+            }
+            t.row(&[
+                format!("round pipeline 32p/2v (threads={threads})"),
+                human_duration(timing.mean_s),
+                format_speedup(base_mean, timing.mean_s),
+            ]);
+            results.push((format!("round_pipeline_t{threads}"), timing.mean_s));
+        }
+    }
+
     // ---- XLA artifacts --------------------------------------------------
     for cfg in ["nano", "tiny"] {
         if !artifacts_available(cfg) {
             continue;
         }
-        let exec = Executor::load(artifact_dir(cfg))?;
+        // Artifacts exist but may not be executable (stub xla crate);
+        // skip rather than fail the whole bench.
+        let exec = match Executor::load(artifact_dir(cfg)) {
+            Ok(e) => e,
+            Err(e) => {
+                println!("[skipping xla {cfg} benches: {e:#}]");
+                continue;
+            }
+        };
         let meta = exec.meta.clone();
         let theta = exec.init_params()?;
         let toks = corpus_for(&meta).assigned_shard(1, 0, 0, meta.batch, meta.seq + 1);

@@ -6,15 +6,20 @@
 //! and reports the training-loss damage the attacker causes in each case,
 //! plus how quickly the incentive mechanism defunds it.
 //!
+//! Uses the `nano` artifacts when built, else the pure-Rust SimExec
+//! backend (same protocol, synthetic model).
+//!
 //!     cargo run --release --example byzantine_gauntlet [rounds]
 
 use gauntlet::bench::{sparkline, Table};
-use gauntlet::coordinator::run::{RunConfig, TemplarRun};
+use gauntlet::coordinator::run::{RunConfig, TemplarRun, TemplarRunWith};
 use gauntlet::peers::Behavior;
+use gauntlet::runtime::ExecBackend;
 
-fn losses(run_cfg: RunConfig) -> anyhow::Result<(Vec<f64>, f64, f64)> {
-    let rounds = run_cfg.rounds;
-    let mut run = TemplarRun::new(run_cfg)?;
+fn losses<E: ExecBackend + 'static>(
+    mut run: TemplarRunWith<E>,
+) -> anyhow::Result<(Vec<f64>, f64, f64)> {
+    let rounds = run.cfg.rounds;
     let mut curve = Vec::new();
     let mut attacker_balance = 0.0;
     let mut honest_balance = 0.0;
@@ -36,6 +41,18 @@ fn losses(run_cfg: RunConfig) -> anyhow::Result<(Vec<f64>, f64, f64)> {
     Ok((curve, attacker_balance, honest_balance))
 }
 
+fn run_config(cfg: RunConfig) -> anyhow::Result<(Vec<f64>, f64, f64)> {
+    // Artifact-backed when artifacts + native xla are available, else the
+    // deterministic SimExec fallback.
+    match TemplarRun::new(cfg.clone()) {
+        Ok(run) => losses(run),
+        Err(e) => {
+            println!("(artifact backend unavailable — using the pure-Rust SimExec backend: {e:#})\n");
+            losses(TemplarRunWith::new_sim(cfg)?)
+        }
+    }
+}
+
 fn main() -> anyhow::Result<()> {
     let rounds: u64 =
         std::env::args().nth(1).map(|s| s.parse()).transpose()?.unwrap_or(16);
@@ -49,12 +66,12 @@ fn main() -> anyhow::Result<()> {
 
     let mut cfg_on = RunConfig::quick("nano", rounds, peers());
     cfg_on.eval_every = 2;
-    let (on, att_on, hon_on) = losses(cfg_on)?;
+    let (on, att_on, hon_on) = run_config(cfg_on)?;
 
     let mut cfg_off = RunConfig::quick("nano", rounds, peers());
     cfg_off.eval_every = 2;
     cfg_off.agg.normalize = false;
-    let (off, att_off, hon_off) = losses(cfg_off)?;
+    let (off, att_off, hon_off) = run_config(cfg_off)?;
 
     println!("loss with normalization ON : {}  (end {:.4})", sparkline(&on, 40), on.last().unwrap());
     println!("loss with normalization OFF: {}  (end {:.4})", sparkline(&off, 40), off.last().unwrap());

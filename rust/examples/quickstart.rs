@@ -1,15 +1,18 @@
 //! Quickstart: the smallest end-to-end Gauntlet run.
 //!
-//! Loads the `nano` artifacts (run `make artifacts` first), registers four
-//! honest peers and one poisoner on the simulated chain, and runs ten
-//! communication rounds of incentivized DeMo training. Takes ~30 s on one
-//! CPU core.
+//! Registers four honest peers and one poisoner on the simulated chain and
+//! runs ten communication rounds of incentivized DeMo training. With the
+//! `nano` artifacts built (`python -m compile.aot --configs nano`) and the
+//! native xla bindings this executes the compiled transformer (~30 s on
+//! one CPU core); otherwise it falls back to the deterministic pure-Rust
+//! `SimExec` backend, so the example always runs (<1 s).
 //!
 //!     cargo run --release --example quickstart
 
 use gauntlet::bench::Table;
-use gauntlet::coordinator::run::{RunConfig, TemplarRun};
+use gauntlet::coordinator::run::{RunConfig, TemplarRun, TemplarRunWith};
 use gauntlet::peers::Behavior;
+use gauntlet::runtime::ExecBackend;
 
 fn main() -> anyhow::Result<()> {
     let peers = vec![
@@ -24,7 +27,20 @@ fn main() -> anyhow::Result<()> {
     cfg.eval_every = 2;
 
     println!("quickstart: 5 peers, 10 rounds, top-G=3, model=nano");
-    let mut run = TemplarRun::new(cfg)?;
+    // Try the artifact-backed runtime; fall back to SimExec when artifacts
+    // are missing OR the build uses the stub xla crate (see README
+    // "Runtime backends").
+    match TemplarRun::new(cfg.clone()) {
+        Ok(run) => drive(run),
+        Err(e) => {
+            println!("(artifact backend unavailable — using the pure-Rust SimExec backend)");
+            println!("  reason: {e:#}");
+            drive(TemplarRunWith::new_sim(cfg)?)
+        }
+    }
+}
+
+fn drive<E: ExecBackend + 'static>(mut run: TemplarRunWith<E>) -> anyhow::Result<()> {
     for r in 0..10 {
         let rec = run.run_round()?;
         if let Some(l) = rec.heldout_loss {

@@ -9,12 +9,16 @@
 //! the 2x-data peer's rating pulls ahead while the desynchronized peer's
 //! rating collapses after its pause.
 //!
+//! Uses the `nano` artifacts when built, else the pure-Rust SimExec
+//! backend.
+//!
 //!     cargo run --release --example rating_sim [rounds]
 
 use gauntlet::bench::{save_json, sparkline, Table};
-use gauntlet::coordinator::run::{RunConfig, TemplarRun};
+use gauntlet::coordinator::run::{RunConfig, TemplarRun, TemplarRunWith};
 use gauntlet::minjson::{self, Value};
 use gauntlet::peers::Behavior;
+use gauntlet::runtime::ExecBackend;
 
 fn main() -> anyhow::Result<()> {
     let rounds: u64 =
@@ -32,8 +36,20 @@ fn main() -> anyhow::Result<()> {
     cfg.eval_every = 0;
 
     println!("rating_sim: 3 peers (2x-data / desync@{desync_at} / baseline), {rounds} rounds\n");
-    let mut run = TemplarRun::new(cfg)?;
+    match TemplarRun::new(cfg.clone()) {
+        Ok(run) => drive(run, rounds),
+        Err(e) => {
+            println!("(artifact backend unavailable — using the pure-Rust SimExec backend)");
+            println!("  reason: {e:#}\n");
+            drive(TemplarRunWith::new_sim(cfg)?, rounds)
+        }
+    }
+}
 
+fn drive<E: ExecBackend + 'static>(
+    mut run: TemplarRunWith<E>,
+    rounds: u64,
+) -> anyhow::Result<()> {
     let mut series: Vec<(u64, Vec<(String, Option<f64>, f64, f64)>)> = Vec::new();
     for _ in 0..rounds {
         let rec = run.run_round()?;

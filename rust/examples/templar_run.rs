@@ -8,17 +8,19 @@
 //!
 //!     cargo run --release --example templar_run [model] [rounds]
 //!
-//! Defaults: model=tiny rounds=60 (~15 min on one CPU core). The run used
-//! for EXPERIMENTS.md §Fig.1 is `templar_run small 150`.
+//! Defaults: model=tiny rounds=60 (~15 min on one CPU core against the
+//! compiled artifacts; seconds on the SimExec fallback used when the
+//! artifacts are not built). The run used for EXPERIMENTS.md §Fig.1 is
+//! `templar_run small 150`.
 
 use gauntlet::bench::{save_json, series_json, sparkline, Table};
 use gauntlet::coordinator::baseline::{AdamWParams, AdamWTrainer};
-use gauntlet::coordinator::run::{RunConfig, TemplarRun};
+use gauntlet::coordinator::run::{RunConfig, TemplarRun, TemplarRunWith};
 use gauntlet::data::Corpus;
 use gauntlet::eval::{evaluate_suite, Suite};
 use gauntlet::minjson;
 use gauntlet::peers::Behavior;
-use gauntlet::runtime::{artifact_dir, Executor};
+use gauntlet::runtime::{artifact_dir, ExecBackend, Executor, SimExec};
 
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -37,22 +39,45 @@ fn main() -> anyhow::Result<()> {
         Behavior::Freeloader,
         Behavior::Poisoner { scale: 100.0 },
     ];
-    let n_honest_equiv = 5; // AdamW baseline worker count (same order of tokens/round)
 
     let mut cfg = RunConfig::quick(&model, rounds, peers);
     cfg.params.top_g = 4;
     cfg.params.eval_sample = 3;
     cfg.eval_every = 5;
     println!(
-        "templar_run: model={model} rounds={rounds} peers={} (top-G={}, S={})",
+        "templar_run: model={model} rounds={rounds} peers={} (top-G={}, S={}, threads={})",
         cfg.peers.len(),
         cfg.params.top_g,
-        cfg.params.eval_sample
+        cfg.params.eval_sample,
+        cfg.effective_threads(),
     );
+
+    // Try the artifact-backed runtime; fall back to SimExec when artifacts
+    // are missing OR the build uses the stub xla crate.
+    let attempt = TemplarRun::new(cfg.clone())
+        .and_then(|run| Ok((run, Executor::load(artifact_dir(&model))?)));
+    match attempt {
+        Ok((run, baseline_exec)) => drive(run, baseline_exec, rounds, &model),
+        Err(e) => {
+            println!("(artifact backend unavailable — using the pure-Rust SimExec backend)");
+            println!("  reason: {e:#}");
+            let run = TemplarRunWith::new_sim(cfg)?;
+            let baseline_exec = SimExec::from_model_name(&model, 0);
+            drive(run, baseline_exec, rounds, &model)
+        }
+    }
+}
+
+fn drive<E: ExecBackend + 'static>(
+    mut run: TemplarRunWith<E>,
+    exec: E,
+    rounds: u64,
+    model: &str,
+) -> anyhow::Result<()> {
+    let n_honest_equiv = 5; // AdamW baseline worker count (same order of tokens/round)
 
     // ---------------- Gauntlet permissionless run -----------------------
     let t0 = std::time::Instant::now();
-    let mut run = TemplarRun::new(cfg)?;
     let mut gauntlet_curve: Vec<(f64, f64)> = Vec::new();
     for r in 0..rounds {
         let rec = run.run_round()?;
@@ -68,8 +93,7 @@ fn main() -> anyhow::Result<()> {
     let theta_gauntlet = run.theta.clone();
 
     // ---------------- AdamW DDP baseline --------------------------------
-    let exec = Executor::load(artifact_dir(&model))?;
-    let corpus = Corpus::new(exec.meta.vocab as u32, 0);
+    let corpus = Corpus::new(exec.meta().vocab as u32, 0);
     let mut trainer =
         AdamWTrainer::new(exec.init_params()?, AdamWParams::default(), n_honest_equiv);
     let mut adamw_curve: Vec<(f64, f64)> = Vec::new();
@@ -77,7 +101,7 @@ fn main() -> anyhow::Result<()> {
     for r in 0..rounds {
         trainer.step(&exec, &corpus, r)?;
         if r % 5 == 0 {
-            let toks = corpus.heldout(0, exec.meta.batch, exec.meta.seq + 1);
+            let toks = corpus.heldout(0, exec.meta().batch, exec.meta().seq + 1);
             let l = exec.loss(&trainer.theta, &toks)? as f64;
             adamw_curve.push((r as f64, l));
             println!("  [adamw]    round {r:>4}  heldout={l:.4}");

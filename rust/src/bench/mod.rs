@@ -63,6 +63,17 @@ pub fn elapsed<T, F: FnOnce() -> T>(f: F) -> (T, Duration) {
     (out, t0.elapsed())
 }
 
+/// Speedup of `mean_s` relative to `baseline_s` (e.g. a sequential run),
+/// guarded against zero timings.
+pub fn speedup(baseline_s: f64, mean_s: f64) -> f64 {
+    baseline_s / mean_s.max(1e-12)
+}
+
+/// Render a speedup column ("1.00x" for the baseline itself).
+pub fn format_speedup(baseline_s: f64, mean_s: f64) -> String {
+    format!("{:.2}x", speedup(baseline_s, mean_s))
+}
+
 /// Plain-text table with aligned columns (the bench targets print the
 /// paper's tables/series in this shape).
 pub struct Table {
@@ -193,6 +204,14 @@ mod tests {
         assert_eq!(human_duration(2.0), "2.000 s");
         assert_eq!(human_duration(0.0021), "2.100 ms");
         assert!(human_duration(3e-6).contains("µs"));
+    }
+
+    #[test]
+    fn speedup_is_relative_to_baseline() {
+        assert!((speedup(2.0, 0.5) - 4.0).abs() < 1e-9);
+        assert_eq!(format_speedup(1.0, 1.0), "1.00x");
+        assert_eq!(format_speedup(3.0, 1.5), "2.00x");
+        assert!(speedup(1.0, 0.0).is_finite(), "zero timing guarded");
     }
 
     #[test]

@@ -15,7 +15,7 @@
 use anyhow::Result;
 
 use crate::data::Corpus;
-use crate::runtime::Executor;
+use crate::runtime::ExecBackend;
 
 /// AdamW hyperparameters (defaults mirror meta.json / DeMo's paper).
 #[derive(Clone, Copy, Debug)]
@@ -51,8 +51,8 @@ impl AdamWTrainer {
     }
 
     /// One synchronous DDP step at `round`; returns the mean worker loss.
-    pub fn step(&mut self, exec: &Executor, corpus: &Corpus, round: u64) -> Result<f64> {
-        let meta = &exec.meta;
+    pub fn step<E: ExecBackend>(&mut self, exec: &E, corpus: &Corpus, round: u64) -> Result<f64> {
+        let meta = exec.meta();
         let (b, s1) = (meta.batch, meta.seq + 1);
         let mut acc = vec![0.0f32; meta.param_count];
         let mut loss_sum = 0.0f64;

@@ -6,10 +6,18 @@
 //! violation yields phi = `phi_penalty` (< 1), applied multiplicatively to
 //! the peer's mu — repeated failures crash the peer's PEERSCORE and evict
 //! it from the top-G aggregation within a few rounds.
+//!
+//! Fast evaluation is the widest stage of the per-round pipeline — every
+//! validator runs it over *every* registered peer — and each peer's checks
+//! are independent, so [`fast_evaluate_all`] fans them out across a worker
+//! pool (see the README's "Scaling the round pipeline" section). Results
+//! come back in peer order, which keeps the validator's bookkeeping, and
+//! therefore PEERSCORE, bit-identical to a sequential sweep.
 
+use crate::chain::Uid;
 use crate::demo::wire::{Submission, WireError};
 use crate::demo::SparseGrad;
-use crate::storage::WindowedGet;
+use crate::storage::{ObjectStore, ReadKey, SimTime, WindowedGet};
 
 /// Why fast evaluation failed (diagnostics + tests).
 #[derive(Clone, Debug, PartialEq)]
@@ -37,7 +45,24 @@ impl FastEvalOutcome {
     pub fn passed(&self) -> bool {
         self.violations.is_empty()
     }
-    /// phi multiplier (§3.2): `penalty` on any failure, 1 otherwise.
+
+    /// phi multiplier (§3.2): `penalty` on any failure, 1 otherwise. The
+    /// validator applies it multiplicatively to the peer's
+    /// proof-of-computation EMA mu, so repeated failures decay the peer's
+    /// PEERSCORE geometrically.
+    ///
+    /// ```
+    /// use gauntlet::coordinator::fast_eval::{FastEvalOutcome, FastViolation};
+    ///
+    /// let clean = FastEvalOutcome { violations: vec![], submission: None };
+    /// assert_eq!(clean.phi(0.75), 1.0); // compliant: mu untouched
+    ///
+    /// let late = FastEvalOutcome {
+    ///     violations: vec![FastViolation::TooLate],
+    ///     submission: None,
+    /// };
+    /// assert_eq!(late.phi(0.75), 0.75); // any violation: mu *= phi_penalty
+    /// ```
     pub fn phi(&self, penalty: f64) -> f64 {
         if self.passed() {
             1.0
@@ -49,7 +74,10 @@ impl FastEvalOutcome {
 
 /// SyncScore (§3.2): mean absolute difference between the validator's and
 /// the peer's sampled parameters, in units of the signed step size alpha —
-/// a heuristic count of divergent update steps.
+/// a heuristic count of divergent update steps. Degenerate inputs (empty
+/// probe, or a paused schedule with `lr == 0`) score 0: with no step size
+/// there is no unit of divergence, and the check abstains rather than
+/// dividing by zero.
 pub fn sync_score(validator_probe: &[f32], peer_probe: &[f32], lr: f32) -> f64 {
     assert_eq!(validator_probe.len(), peer_probe.len());
     if validator_probe.is_empty() || lr == 0.0 {
@@ -81,7 +109,7 @@ pub struct FastEvalCtx<'a> {
 }
 
 /// Run every fast check against a windowed GET result.
-pub fn fast_evaluate(get: &WindowedGet<'_>, ctx: &FastEvalCtx<'_>) -> FastEvalOutcome {
+pub fn fast_evaluate(get: &WindowedGet, ctx: &FastEvalCtx<'_>) -> FastEvalOutcome {
     let mut violations = Vec::new();
     let bytes: &[u8] = match get {
         WindowedGet::InWindow(obj) => &obj.bytes,
@@ -134,6 +162,86 @@ pub fn fast_evaluate(get: &WindowedGet<'_>, ctx: &FastEvalCtx<'_>) -> FastEvalOu
     FastEvalOutcome { violations, submission: Some(sub) }
 }
 
+/// The per-round inputs shared by every peer's fast checks (everything in
+/// [`FastEvalCtx`] except the peer identity).
+pub struct RoundChecks<'a> {
+    pub round: u64,
+    pub coeff_count: usize,
+    pub padded_count: usize,
+    pub probe_len: usize,
+    pub validator_probe: &'a [f32],
+    pub lr: f32,
+    pub sync_threshold: f64,
+    /// Inclusive `[open, close]` put window for this round.
+    pub window: (SimTime, SimTime),
+}
+
+impl RoundChecks<'_> {
+    fn ctx_for(&self, uid: Uid) -> FastEvalCtx<'_> {
+        FastEvalCtx {
+            uid,
+            round: self.round,
+            coeff_count: self.coeff_count,
+            padded_count: self.padded_count,
+            probe_len: self.probe_len,
+            validator_probe: self.validator_probe,
+            lr: self.lr,
+            sync_threshold: self.sync_threshold,
+        }
+    }
+}
+
+fn fast_evaluate_chunk(
+    store: &ObjectStore,
+    peers: &[(Uid, ReadKey)],
+    checks: &RoundChecks<'_>,
+) -> anyhow::Result<Vec<(Uid, FastEvalOutcome)>> {
+    use anyhow::Context as _;
+    let (open, close) = checks.window;
+    let mut out = Vec::with_capacity(peers.len());
+    for (uid, rk) in peers {
+        let bucket = format!("peer-{uid}");
+        let key = Submission::object_key(*uid, checks.round);
+        let get = store
+            .get_within_window(&bucket, rk, &key, open, close)
+            .with_context(|| format!("reading {bucket}/{key}"))?;
+        out.push((*uid, fast_evaluate(&get, &checks.ctx_for(*uid))));
+    }
+    Ok(out)
+}
+
+/// Fast-evaluate every peer, fanning the independent per-peer checks out
+/// over at most `fanout` worker threads (1 = sequential). The result order
+/// is the input peer order regardless of `fanout`, so downstream score
+/// bookkeeping is deterministic.
+pub fn fast_evaluate_all(
+    store: &ObjectStore,
+    peers: &[(Uid, ReadKey)],
+    checks: &RoundChecks<'_>,
+    fanout: usize,
+) -> anyhow::Result<Vec<(Uid, FastEvalOutcome)>> {
+    if fanout <= 1 || peers.len() <= 1 {
+        return fast_evaluate_chunk(store, peers, checks);
+    }
+    let chunk = peers.len().div_ceil(fanout);
+    let per_chunk: Vec<anyhow::Result<Vec<(Uid, FastEvalOutcome)>>> =
+        std::thread::scope(|s| {
+            let handles: Vec<_> = peers
+                .chunks(chunk)
+                .map(|ch| s.spawn(move || fast_evaluate_chunk(store, ch, checks)))
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("fast-eval worker panicked"))
+                .collect()
+        });
+    let mut out = Vec::with_capacity(peers.len());
+    for r in per_chunk {
+        out.extend(r?);
+    }
+    Ok(out)
+}
+
 /// Convenience for tests/benches: fast-evaluate an in-memory submission.
 pub fn fast_evaluate_decoded(sub: &Submission, ctx: &FastEvalCtx<'_>) -> FastEvalOutcome {
     let obj = crate::storage::Object {
@@ -141,7 +249,7 @@ pub fn fast_evaluate_decoded(sub: &Submission, ctx: &FastEvalCtx<'_>) -> FastEva
         bytes: sub.encode(),
         stored_at: 0,
     };
-    fast_evaluate(&WindowedGet::InWindow(&obj), ctx)
+    fast_evaluate(&WindowedGet::InWindow(std::sync::Arc::new(obj)), ctx)
 }
 
 /// Sanity helper used by both validator and peers: a well-formed empty
@@ -153,9 +261,10 @@ pub fn empty_grad() -> SparseGrad {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::storage::Object;
+    use crate::storage::{Object, ProviderModel};
+    use std::sync::Arc;
 
-    fn ctx<'a>(probe: &'a [f32]) -> FastEvalCtx<'a> {
+    fn ctx(probe: &[f32]) -> FastEvalCtx<'_> {
         FastEvalCtx {
             uid: 1,
             round: 10,
@@ -205,7 +314,7 @@ mod tests {
     fn corrupt_bytes_fail_format() {
         let vp = vec![0.0];
         let obj = Object { key: "k".into(), bytes: vec![1, 2, 3], stored_at: 0 };
-        let out = fast_evaluate(&WindowedGet::InWindow(&obj), &ctx(&vp));
+        let out = fast_evaluate(&WindowedGet::InWindow(Arc::new(obj)), &ctx(&vp));
         assert!(matches!(out.violations[0], FastViolation::BadFormat(_)));
     }
 
@@ -264,7 +373,84 @@ mod tests {
 
     #[test]
     fn sync_score_empty_or_zero_lr_is_zero() {
-        assert_eq!(sync_score(&[], &[], 0.02), 0.0);
-        assert_eq!(sync_score(&[1.0], &[2.0], 0.0), 0.0);
+        assert_eq!(sync_score(&[], &[], 0.02), 0.0, "empty probes abstain");
+        assert_eq!(sync_score(&[1.0], &[2.0], 0.0), 0.0, "lr = 0 abstains");
+        assert_eq!(sync_score(&[], &[], 0.0), 0.0, "both degenerate cases at once");
+    }
+
+    #[test]
+    fn zero_lr_never_flags_desync() {
+        // A paused schedule (alpha_t = 0) must not mass-flag honest peers:
+        // with no step unit the SyncScore check abstains entirely.
+        let vp = vec![1.0, -1.0];
+        let pp = vec![9.0, 9.0]; // wildly different parameters
+        let mut c = ctx(&vp);
+        c.lr = 0.0;
+        let out = fast_evaluate_decoded(&good_sub(pp), &c);
+        assert!(
+            !out.violations.iter().any(|v| matches!(v, FastViolation::Desynchronized { .. })),
+            "{:?}",
+            out.violations
+        );
+    }
+
+    fn seeded_store_with_peers(n: usize, round: u64) -> (ObjectStore, Vec<(Uid, ReadKey)>, Vec<f32>) {
+        let model = ProviderModel { mean_upload_ms: 100.0, jitter_ms: 0.0, ..Default::default() };
+        let store = ObjectStore::new(model, 9);
+        let probe = vec![0.25f32, -0.75];
+        let mut peers = Vec::new();
+        for uid in 0..n as u32 {
+            let bucket = format!("peer-{uid}");
+            let rk = store.create_bucket(&bucket, &bucket);
+            // Peers 0, 3, 6, ... submit well-formed objects; 1 mod 3 are
+            // late; 2 mod 3 stay silent.
+            if uid % 3 == 0 {
+                let sub = Submission {
+                    uid,
+                    round,
+                    grad: SparseGrad { vals: vec![1.0, -1.0, 0.5], idx: vec![0, 5, 99] },
+                    probe: probe.clone(),
+                };
+                store
+                    .put(&bucket, &bucket, &Submission::object_key(uid, round), sub.encode(), 400)
+                    .unwrap();
+            } else if uid % 3 == 1 {
+                store
+                    .put(&bucket, &bucket, &Submission::object_key(uid, round), vec![0; 8], 9_999)
+                    .unwrap();
+            }
+            peers.push((uid, rk));
+        }
+        (store, peers, probe)
+    }
+
+    #[test]
+    fn fast_evaluate_all_parallel_matches_sequential() {
+        let round = 4;
+        let (store, peers, probe) = seeded_store_with_peers(13, round);
+        let checks = RoundChecks {
+            round,
+            coeff_count: 3,
+            padded_count: 100,
+            probe_len: probe.len(),
+            validator_probe: &probe,
+            lr: 0.02,
+            sync_threshold: 3.0,
+            window: (200, 2_000),
+        };
+        let seq = fast_evaluate_all(&store, &peers, &checks, 1).unwrap();
+        for fanout in [2, 4, 8, 32] {
+            let par = fast_evaluate_all(&store, &peers, &checks, fanout).unwrap();
+            assert_eq!(par.len(), seq.len());
+            for ((ua, a), (ub, b)) in seq.iter().zip(&par) {
+                assert_eq!(ua, ub, "peer order must be preserved at fanout {fanout}");
+                assert_eq!(a.violations, b.violations);
+                assert_eq!(a.submission, b.submission);
+            }
+        }
+        // sanity: the three behaviour classes are classified as expected
+        assert!(seq[0].1.passed());
+        assert!(seq[1].1.violations.contains(&FastViolation::TooLate));
+        assert!(seq[2].1.violations.contains(&FastViolation::Missing));
     }
 }

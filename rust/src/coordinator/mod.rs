@@ -31,6 +31,27 @@ pub mod validator;
 /// All Gauntlet hyperparameters in one place (defaults follow the paper
 /// where it states values: phi = 0.75, sync threshold = 3, c = 2, beta =
 /// c_beta * lr with c_beta < 1).
+///
+/// ```
+/// use gauntlet::coordinator::GauntletParams;
+///
+/// // Paper defaults out of the box…
+/// let p = GauntletParams::default();
+/// assert_eq!(p.phi_penalty, 0.75);
+/// assert_eq!(p.sync_threshold, 3.0);
+/// assert_eq!(p.norm_power, 2.0);
+///
+/// // …and the §3.1 schedule contract: the evaluation step size follows
+/// // the round's learning rate as beta_t = beta_frac * alpha_t, always
+/// // smaller than a full signed step.
+/// let alpha_t = p.schedule.lr_at(0, p.lr);
+/// let beta_t = p.beta_frac * alpha_t;
+/// assert!(beta_t < alpha_t);
+///
+/// // Tighter eviction for a small-population run:
+/// let strict = GauntletParams { phi_penalty: 0.5, top_g: 3, ..p };
+/// assert!(strict.phi_penalty < strict.sync_threshold);
+/// ```
 #[derive(Clone, Debug)]
 pub struct GauntletParams {
     /// EMA decay gamma for the proof-of-computation score mu_p (eq. 3).

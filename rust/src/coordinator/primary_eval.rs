@@ -17,7 +17,7 @@ use anyhow::Result;
 
 use crate::data::Corpus;
 use crate::demo::SparseGrad;
-use crate::runtime::Executor;
+use crate::runtime::ExecBackend;
 
 /// Result of one primary evaluation.
 #[derive(Clone, Copy, Debug)]
@@ -47,9 +47,13 @@ impl PrimaryEvaluator {
     /// `beta` is the scaled evaluation step size (beta = beta_frac * lr,
     /// with beta_frac < 1 — §3.1 explains why stepping with the full lr
     /// over-penalizes individual contributions).
-    pub fn evaluate(
+    ///
+    /// `exec` is any [`ExecBackend`]; in the parallel pipeline this is an
+    /// `ExecClient` whose calls are served on the backend's owning thread.
+    #[allow(clippy::too_many_arguments)]
+    pub fn evaluate<E: ExecBackend + ?Sized>(
         &mut self,
-        exec: &Executor,
+        exec: &E,
         theta: &[f32],
         uid: u32,
         round: u64,
@@ -57,7 +61,7 @@ impl PrimaryEvaluator {
         corpus: &Corpus,
         beta: f32,
     ) -> Result<PrimaryEval> {
-        let meta = &exec.meta;
+        let meta = exec.meta();
         // Validator-side decode: scatter the sparse submission into the
         // dense coefficient space (normalized exactly like aggregation
         // normalizes, so scale games don't help here either).

@@ -1,19 +1,41 @@
 //! The end-to-end Templar system: chain + cloud storage + peers +
 //! validator(s) + DeMo aggregation, driven round by round (§2, §3.3, §6).
 //!
-//! This is what `examples/templar_run.rs` and the Fig. 1 / Fig. 2 benches
-//! execute. One `TemplarRun` owns every substrate; `run_round()` performs:
+//! This is what `rust/examples/templar_run.rs` and the Fig. 1 / Fig. 2
+//! benches execute. One [`TemplarRun`] owns every substrate; `run_round()`
+//! performs a staged pipeline:
 //!
-//!   1. peers take their turns (first pass: independent behaviours; second
-//!      pass: copiers/duplicators, who need a victim's public object),
-//!   2. each validator fast-evaluates everyone, primary-evaluates a random
-//!      subset, updates its scores, and commits weights to the chain,
+//!   1. peers take their turns — first pass (independent behaviours)
+//!      produced **concurrently** across a worker pool, with storage PUTs
+//!      applied in peer order; second pass (copiers/duplicators, who need
+//!      a victim's public object) afterwards,
+//!   2. every validator fast-evaluates all peers (each validator's checks
+//!      fanned out over workers), primary-evaluates a random subset, and
+//!      updates its scores — **validators run concurrently**, then commit
+//!      weights to the chain in validator order,
 //!   3. the chain runs a Yuma epoch, combining validators into incentives
 //!      and paying emission,
 //!   4. the lead validator's top-G weights drive the DeMo aggregation
 //!      (encoded-domain normalization + weighted sparse sum -> IDCT ->
 //!      sign -> `theta -= lr * sign`), with checkpoint bookkeeping,
 //!   5. peers synchronize to the new model (or diverge, per behaviour).
+//!
+//! # Parallelism and determinism
+//!
+//! The worker count comes from [`RunConfig::threads`] (0 = auto: the
+//! `GAUNTLET_THREADS` environment variable, else the machine's available
+//! parallelism; 1 = fully sequential). Model execution is generic over
+//! [`ExecBackend`]. `Sync` backends (the pure-Rust `SimExec`) advertise
+//! themselves via `ExecBackend::as_shared` and are called by every worker
+//! directly; the PJRT [`Executor`] is not `Send`, so its workers instead
+//! hold [`ExecClient`](crate::runtime::ExecClient) handles and the
+//! coordinator thread serves their requests ([`exec_service`]) — every
+//! XLA call still runs on the owning thread (the constraint documented in
+//! `runtime`). All order-sensitive state — storage PUT latency draws, phi
+//! penalties, rating matches, sampling RNGs, chain commits — is applied in
+//! deterministic peer/validator order on stable threads, so a run's
+//! PEERSCOREs, weights, and parameters are bit-identical at any thread
+//! count (pinned by `tests/parallel_determinism.rs`).
 
 use std::collections::BTreeMap;
 
@@ -21,7 +43,7 @@ use anyhow::{Context, Result};
 
 use super::checkpoint::CheckpointStore;
 use super::round::RoundClock;
-use super::validator::Validator;
+use super::validator::{chain_read_keys, RoundOutcome, Validator};
 use super::GauntletParams;
 use crate::chain::{Chain, Uid};
 use crate::data::Corpus;
@@ -29,7 +51,7 @@ use crate::demo::aggregate::{aggregate_into, AggregateOpts};
 use crate::demo::wire::Submission;
 use crate::minjson::{self, Value};
 use crate::peers::{Behavior, PeerCtx, PeerOutput, PeerRunner};
-use crate::runtime::{artifact_dir, Executor};
+use crate::runtime::{artifact_dir, exec_service, ExecBackend, Executor, SimExec};
 use crate::storage::{ObjectStore, ProviderModel};
 
 /// Configuration for a full run.
@@ -51,6 +73,9 @@ pub struct RunConfig {
     pub n_validators: usize,
     /// Aggregation options (normalization on/off for the §4 ablation).
     pub agg: AggregateOpts,
+    /// Worker threads for the round pipeline: 0 = auto (`GAUNTLET_THREADS`
+    /// env var, else available parallelism), 1 = sequential.
+    pub threads: usize,
 }
 
 impl RunConfig {
@@ -68,7 +93,26 @@ impl RunConfig {
             eval_every: 5,
             n_validators: 1,
             agg: AggregateOpts::default(),
+            threads: 0,
         }
+    }
+
+    /// Resolve [`RunConfig::threads`]: explicit value, else the
+    /// `GAUNTLET_THREADS` environment variable, else available parallelism
+    /// (capped at 16 — the round pipeline's widest useful fan-out at
+    /// simulated scale).
+    pub fn effective_threads(&self) -> usize {
+        if self.threads > 0 {
+            return self.threads;
+        }
+        if let Some(n) = std::env::var("GAUNTLET_THREADS")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .filter(|&n| n > 0)
+        {
+            return n;
+        }
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(16)
     }
 }
 
@@ -180,10 +224,13 @@ impl RunMetrics {
     }
 }
 
-/// The live system.
-pub struct TemplarRun {
+/// The live system, generic over the execution backend. Use the
+/// [`TemplarRun`] alias for the PJRT-artifact-backed system, or
+/// [`TemplarRunWith::new_sim`] for the pure-Rust [`SimExec`] backend (no
+/// artifacts required).
+pub struct TemplarRunWith<E: ExecBackend + 'static> {
     pub cfg: RunConfig,
-    pub exec: Executor,
+    pub exec: E,
     pub chain: Chain,
     pub store: ObjectStore,
     pub corpus: Corpus,
@@ -199,18 +246,38 @@ pub struct TemplarRun {
     last_coeff: Option<Vec<f32>>,
 }
 
-impl TemplarRun {
-    pub fn new(mut cfg: RunConfig) -> Result<TemplarRun> {
+/// The artifact-backed system (what the paper deploys).
+pub type TemplarRun = TemplarRunWith<Executor>;
+
+impl TemplarRunWith<Executor> {
+    /// Load the config's compiled artifacts and assemble the system.
+    pub fn new(cfg: RunConfig) -> Result<TemplarRun> {
         let exec = Executor::load(artifact_dir(&cfg.model))
             .with_context(|| format!("loading artifacts for {:?}", cfg.model))?;
+        Self::with_backend(exec, cfg)
+    }
+}
+
+impl TemplarRunWith<SimExec> {
+    /// Assemble the system on the deterministic pure-Rust backend — same
+    /// protocol end to end, no artifacts or native XLA needed.
+    pub fn new_sim(cfg: RunConfig) -> Result<TemplarRunWith<SimExec>> {
+        let exec = SimExec::from_model_name(&cfg.model, cfg.seed);
+        Self::with_backend(exec, cfg)
+    }
+}
+
+impl<E: ExecBackend + 'static> TemplarRunWith<E> {
+    /// Assemble the system over an already-constructed backend.
+    pub fn with_backend(exec: E, mut cfg: RunConfig) -> Result<TemplarRunWith<E>> {
         let theta = exec.init_params()?;
-        let meta = &exec.meta;
+        let meta = exec.meta();
         if cfg.params.lr <= 0.0 {
             cfg.params.lr = meta.hyper.lr;
         }
 
         let mut chain = Chain::new();
-        let mut store = ObjectStore::new(cfg.provider.clone(), cfg.seed ^ 0x5702);
+        let store = ObjectStore::new(cfg.provider.clone(), cfg.seed ^ 0x5702);
         let corpus = Corpus::new(meta.vocab as u32, cfg.seed);
 
         // Validators register and stake first (uids 1000+ keep peer uids
@@ -236,7 +303,7 @@ impl TemplarRun {
         let checkpoints = CheckpointStore::new(cfg.params.checkpoint_every);
         let dense = vec![0.0; meta.padded_count];
         let clock = cfg.clock;
-        Ok(TemplarRun {
+        Ok(TemplarRunWith {
             cfg,
             exec,
             chain,
@@ -271,7 +338,7 @@ impl TemplarRun {
         self.peers.push(PeerRunner::new(
             uid,
             behavior,
-            self.exec.meta.param_count,
+            self.exec.meta().param_count,
             self.cfg.seed,
         ));
         Ok(uid)
@@ -286,44 +353,75 @@ impl TemplarRun {
         Ok(metrics)
     }
 
-    /// One synchronous communication round.
+    /// One synchronous communication round (see module docs for the staged
+    /// pipeline and its determinism contract).
     pub fn run_round(&mut self) -> Result<RoundRecord> {
         let round = self.round;
-        let meta_batch = self.exec.meta.batch;
-        let meta_seq = self.exec.meta.seq;
+        let meta_batch = self.exec.meta().batch;
+        let meta_seq = self.exec.meta().seq;
         // alpha_t from the schedule (§3.1); everything downstream — signed
         // step, SyncScore units, beta_t — uses this round's value.
         let lr_t = self.cfg.params.schedule.lr_at(round, self.cfg.params.lr);
         self.checkpoints.maybe_checkpoint(round, &self.theta);
+        let threads = self.cfg.effective_threads();
 
         // ------------------------- peers act -----------------------------
-        let mut local_losses = Vec::new();
-        let mut tokens: u64 = 0;
+        // First pass: independent behaviours, produced concurrently. PUTs
+        // are applied afterwards in peer order so the provider's
+        // latency/outage draws don't depend on worker timing.
+        let outputs = {
+            let exec = &self.exec;
+            let corpus = &self.corpus;
+            let theta = &self.theta;
+            let clock = &self.clock;
+            let params = &self.cfg.params;
+            if threads <= 1 || self.peers.len() <= 1 {
+                step_peer_chunk(exec, &mut self.peers, 0, corpus, theta, round, clock, params)?
+            } else if let Some(shared) = exec.as_shared() {
+                // Sync backend: workers call the model directly.
+                step_first_pass_shared(
+                    shared,
+                    &mut self.peers,
+                    corpus,
+                    theta,
+                    round,
+                    clock,
+                    params,
+                    threads,
+                )?
+            } else {
+                // Thread-affine backend: workers go through the funnel.
+                step_first_pass_funneled(
+                    exec,
+                    &mut self.peers,
+                    corpus,
+                    theta,
+                    round,
+                    clock,
+                    params,
+                    threads,
+                )?
+            }
+        };
         let mut submitted: BTreeMap<Uid, bool> = BTreeMap::new();
-        // First pass: independent behaviours.
-        for i in 0..self.peers.len() {
-            if self.peers[i].behavior.is_second_pass() {
-                continue;
-            }
-            let ctx = PeerCtx {
-                exec: &self.exec,
-                corpus: &self.corpus,
-                global_theta: &self.theta,
-                round,
-                clock: &self.clock,
-                params: &self.cfg.params,
-            };
-            let out = self.peers[i].step(&ctx)?;
+        for (i, out) in outputs {
             let uid = self.peers[i].uid;
-            if self.peers[i].last_local_loss.is_finite() {
-                local_losses.push(self.peers[i].last_local_loss);
-            }
-            tokens +=
-                (self.peers[i].last_microbatches * meta_batch * meta_seq) as u64;
             submitted.insert(uid, self.put_output(uid, out));
         }
+        // Diagnostics in peer order, identical to the sequential sweep.
+        let mut local_losses = Vec::new();
+        let mut tokens: u64 = 0;
+        for p in &self.peers {
+            if p.behavior.is_second_pass() {
+                continue;
+            }
+            if p.last_local_loss.is_finite() {
+                local_losses.push(p.last_local_loss);
+            }
+            tokens += (p.last_microbatches * meta_batch * meta_seq) as u64;
+        }
         // Second pass: copiers / duplicators read their source's public
-        // object and re-post it.
+        // object and re-post it (cheap; stays sequential).
         for i in 0..self.peers.len() {
             if !self.peers[i].behavior.is_second_pass() {
                 continue;
@@ -345,24 +443,89 @@ impl TemplarRun {
 
         // ---------------------- validators evaluate ----------------------
         let peer_uids = self.peer_uids();
-        let mut lead_outcome = None;
-        for v in 0..self.validators.len() {
-            let outcome = self.validators[v].process_round(
-                &self.exec,
-                &self.corpus,
-                &self.theta,
-                round,
-                &self.clock,
-                &self.store,
-                &mut self.chain,
-                &peer_uids,
-                lr_t,
-            )?;
-            if v == 0 {
-                lead_outcome = Some(outcome);
+        let read_keys = chain_read_keys(&self.chain, &peer_uids)?;
+        let outcomes: Vec<RoundOutcome> = {
+            let exec = &self.exec;
+            let corpus = &self.corpus;
+            let theta = &self.theta;
+            let clock = &self.clock;
+            let store = &self.store;
+            let validators = &mut self.validators;
+            if threads <= 1 || validators.is_empty() {
+                let mut out = Vec::with_capacity(validators.len());
+                for v in validators.iter_mut() {
+                    out.push(v.evaluate_round(
+                        exec, corpus, theta, round, clock, store, &read_keys, &peer_uids,
+                        lr_t, 1,
+                    )?);
+                }
+                out
+            } else {
+                // Validators run concurrently; each fans its fast checks
+                // out over its share of the worker budget.
+                let fanout = (threads / validators.len()).max(1);
+                let results: Vec<Result<RoundOutcome>> = if let Some(shared) = exec.as_shared()
+                {
+                    // Sync backend: validator workers call it directly.
+                    std::thread::scope(|s| {
+                        let handles: Vec<_> = validators
+                            .iter_mut()
+                            .map(|v| {
+                                let read_keys = &read_keys;
+                                let peer_uids = &peer_uids;
+                                s.spawn(move || {
+                                    v.evaluate_round(
+                                        shared, corpus, theta, round, clock, store, read_keys,
+                                        peer_uids, lr_t, fanout,
+                                    )
+                                })
+                            })
+                            .collect();
+                        handles
+                            .into_iter()
+                            .map(|h| h.join().expect("validator worker panicked"))
+                            .collect()
+                    })
+                } else {
+                    // Thread-affine backend: it stays on this thread,
+                    // serving the validator workers' ExecClient requests.
+                    let (client, host) = exec_service(exec);
+                    std::thread::scope(|s| {
+                        let handles: Vec<_> = validators
+                            .iter_mut()
+                            .map(|v| {
+                                let client = client.clone();
+                                let read_keys = &read_keys;
+                                let peer_uids = &peer_uids;
+                                s.spawn(move || {
+                                    v.evaluate_round(
+                                        &client, corpus, theta, round, clock, store, read_keys,
+                                        peer_uids, lr_t, fanout,
+                                    )
+                                })
+                            })
+                            .collect();
+                        drop(client);
+                        host.serve();
+                        handles
+                            .into_iter()
+                            .map(|h| h.join().expect("validator worker panicked"))
+                            .collect()
+                    })
+                };
+                let mut out = Vec::with_capacity(results.len());
+                for r in results {
+                    out.push(r?);
+                }
+                out
             }
+        };
+        // Commit weight vectors in validator order (determinism + the
+        // chain is single-writer).
+        for (v, o) in self.validators.iter().zip(&outcomes) {
+            self.chain.set_weights(v.uid, &o.incentives)?;
         }
-        let outcome = lead_outcome.expect("at least one validator");
+        let outcome = outcomes.into_iter().next().expect("at least one validator");
 
         // ------------------------ chain epoch ----------------------------
         let chain_incentives = self.chain.run_epoch();
@@ -473,7 +636,7 @@ impl TemplarRun {
         })
     }
 
-    fn put_output(&mut self, uid: Uid, out: PeerOutput) -> bool {
+    fn put_output(&self, uid: Uid, out: PeerOutput) -> bool {
         match out {
             PeerOutput::Submit { time, bytes } => {
                 let bucket = format!("peer-{uid}");
@@ -492,4 +655,121 @@ impl TemplarRun {
         let key = Submission::object_key(uid, round);
         self.store.get(&bucket, &rk, &key).ok()?.map(|o| o.bytes.clone())
     }
+}
+
+/// Step a contiguous chunk of peers sequentially (first pass only).
+/// `base` is the chunk's offset in the full peer list, so results come
+/// back as `(peer_index, output)` in ascending index order. Shared by the
+/// sequential path and both parallel fan-outs — per-peer RNG draw
+/// sequences are identical everywhere.
+#[allow(clippy::too_many_arguments)]
+fn step_peer_chunk<B: ExecBackend + ?Sized>(
+    exec: &B,
+    chunk: &mut [PeerRunner],
+    base: usize,
+    corpus: &Corpus,
+    theta: &[f32],
+    round: u64,
+    clock: &RoundClock,
+    params: &GauntletParams,
+) -> Result<Vec<(usize, PeerOutput)>> {
+    let mut out = Vec::with_capacity(chunk.len());
+    for (j, p) in chunk.iter_mut().enumerate() {
+        if p.behavior.is_second_pass() {
+            continue;
+        }
+        let ctx = PeerCtx { exec, corpus, global_theta: theta, round, clock, params };
+        out.push((base + j, p.step(&ctx)?));
+    }
+    Ok(out)
+}
+
+/// First-pass peer turns across a worker pool, calling a `Sync` backend
+/// directly from every worker.
+#[allow(clippy::too_many_arguments)]
+fn step_first_pass_shared(
+    exec: &(dyn ExecBackend + Sync),
+    peers: &mut [PeerRunner],
+    corpus: &Corpus,
+    theta: &[f32],
+    round: u64,
+    clock: &RoundClock,
+    params: &GauntletParams,
+    threads: usize,
+) -> Result<Vec<(usize, PeerOutput)>> {
+    let chunk_size = peers.len().div_ceil(threads).max(1);
+    let per_chunk: Vec<Result<Vec<(usize, PeerOutput)>>> = std::thread::scope(|s| {
+        let handles: Vec<_> = peers
+            .chunks_mut(chunk_size)
+            .enumerate()
+            .map(|(ci, chunk)| {
+                s.spawn(move || {
+                    step_peer_chunk(
+                        exec,
+                        chunk,
+                        ci * chunk_size,
+                        corpus,
+                        theta,
+                        round,
+                        clock,
+                        params,
+                    )
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("peer worker panicked")).collect()
+    });
+    let mut out = Vec::with_capacity(peers.len());
+    for r in per_chunk {
+        out.extend(r?);
+    }
+    Ok(out)
+}
+
+/// First-pass peer turns across a worker pool for a thread-affine
+/// backend: model execution goes through an [`exec_service`] funnel so
+/// the backend never leaves the calling thread (which serves requests
+/// until all workers finish).
+#[allow(clippy::too_many_arguments)]
+fn step_first_pass_funneled<E: ExecBackend + 'static>(
+    exec: &E,
+    peers: &mut [PeerRunner],
+    corpus: &Corpus,
+    theta: &[f32],
+    round: u64,
+    clock: &RoundClock,
+    params: &GauntletParams,
+    threads: usize,
+) -> Result<Vec<(usize, PeerOutput)>> {
+    let chunk_size = peers.len().div_ceil(threads).max(1);
+    let (client, host) = exec_service(exec);
+    let per_chunk: Vec<Result<Vec<(usize, PeerOutput)>>> = std::thread::scope(|s| {
+        let handles: Vec<_> = peers
+            .chunks_mut(chunk_size)
+            .enumerate()
+            .map(|(ci, chunk)| {
+                let client = client.clone();
+                s.spawn(move || {
+                    step_peer_chunk(
+                        &client,
+                        chunk,
+                        ci * chunk_size,
+                        corpus,
+                        theta,
+                        round,
+                        clock,
+                        params,
+                    )
+                })
+            })
+            .collect();
+        drop(client);
+        host.serve();
+        handles.into_iter().map(|h| h.join().expect("peer worker panicked")).collect()
+    });
+    let mut out = Vec::with_capacity(peers.len());
+    for r in per_chunk {
+        out.extend(r?);
+    }
+    Ok(out)
 }

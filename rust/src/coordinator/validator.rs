@@ -1,12 +1,18 @@
 //! One Gauntlet validator: fast eval over all peers, primary eval over a
 //! random subset, score maintenance, and the weight vector it commits to
 //! the chain each round (Algorithm 1, validator loop).
+//!
+//! [`Validator::evaluate_round`] is chain-free so several validators can be
+//! evaluated concurrently by `coordinator::run`: the coordinator snapshots
+//! the on-chain read keys once, hands each validator an [`ExecBackend`]
+//! handle (an `ExecClient` when running parallel), and commits the
+//! returned weight vectors to the chain afterwards, in validator order.
 
 use std::collections::BTreeMap;
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
-use super::fast_eval::{fast_evaluate, FastEvalCtx, FastEvalOutcome};
+use super::fast_eval::{fast_evaluate_all, RoundChecks};
 use super::primary_eval::{PrimaryEval, PrimaryEvaluator};
 use super::round::RoundClock;
 use super::scoring::{normalize_scores, top_g_weights, ScoreBook};
@@ -14,8 +20,8 @@ use super::GauntletParams;
 use crate::chain::{Chain, Uid};
 use crate::data::Corpus;
 use crate::demo::wire::Submission;
-use crate::runtime::Executor;
-use crate::storage::ObjectStore;
+use crate::runtime::ExecBackend;
+use crate::storage::{ObjectStore, ReadKey};
 use crate::util::Rng;
 
 /// Everything a validator decided in one round.
@@ -53,49 +59,57 @@ impl Validator {
         }
     }
 
-    /// Process one communication round end-to-end for this validator and
-    /// commit the resulting weights to the chain.
+    /// Evaluate one communication round: fast checks over all peers
+    /// (fanned out over at most `fanout` worker threads), primary
+    /// evaluation of the sampled subset, and the resulting incentive /
+    /// aggregation weights. Pure with respect to the chain — the caller
+    /// commits `RoundOutcome::incentives` via [`Chain::set_weights`].
+    ///
+    /// Every stateful step (phi penalties, EMA updates, rating matches,
+    /// the sampling RNG) runs in peer order on this thread, so the outcome
+    /// is independent of `fanout` — the determinism the parallel pipeline
+    /// relies on.
     #[allow(clippy::too_many_arguments)]
-    pub fn process_round(
+    pub fn evaluate_round<E: ExecBackend + ?Sized>(
         &mut self,
-        exec: &Executor,
+        exec: &E,
         corpus: &Corpus,
         theta: &[f32],
         round: u64,
         clock: &RoundClock,
         store: &ObjectStore,
-        chain: &mut Chain,
+        read_keys: &BTreeMap<Uid, ReadKey>,
         peer_uids: &[Uid],
         lr_t: f32,
+        fanout: usize,
     ) -> Result<RoundOutcome> {
-        let meta = &exec.meta;
+        let meta = exec.meta();
         let probe = meta.sync_probe(theta);
-        let (w_open, w_close) = clock.put_window(round);
         let mut out = RoundOutcome::default();
 
         // ---- fast evaluation over ALL peers (F_t; §3.2 — this always
         // includes the current top-G so bad actors are evicted quickly) ---
-        for &uid in peer_uids {
-            let bucket = format!("peer-{uid}");
-            let rk = chain
-                .neuron(uid)
-                .and_then(|n| n.bucket_read_key.clone())
-                .with_context(|| format!("peer {uid} has no read key on chain"))?;
-            let key = Submission::object_key(uid, round);
-            let get = store
-                .get_within_window(&bucket, &rk, &key, w_open, w_close)
-                .with_context(|| format!("reading {bucket}/{key}"))?;
-            let ctx = FastEvalCtx {
-                uid,
-                round,
-                coeff_count: meta.coeff_count,
-                padded_count: meta.padded_count,
-                probe_len: probe.len(),
-                validator_probe: &probe,
-                lr: lr_t,
-                sync_threshold: self.params.sync_threshold,
-            };
-            let outcome: FastEvalOutcome = fast_evaluate(&get, &ctx);
+        let keyed: Vec<(Uid, ReadKey)> = peer_uids
+            .iter()
+            .map(|&uid| {
+                let rk = read_keys
+                    .get(&uid)
+                    .ok_or_else(|| anyhow::anyhow!("peer {uid} has no read key on chain"))?;
+                Ok((uid, rk.clone()))
+            })
+            .collect::<Result<_>>()?;
+        let checks = RoundChecks {
+            round,
+            coeff_count: meta.coeff_count,
+            padded_count: meta.padded_count,
+            probe_len: probe.len(),
+            validator_probe: &probe,
+            lr: lr_t,
+            sync_threshold: self.params.sync_threshold,
+            window: clock.put_window(round),
+        };
+        let fast = fast_evaluate_all(store, &keyed, &checks, fanout)?;
+        for (uid, outcome) in fast {
             let passed = outcome.passed();
             self.book.ensure(uid);
             self.book.apply_fast_penalty(uid, outcome.phi(self.params.phi_penalty));
@@ -132,18 +146,56 @@ impl Validator {
         );
         out.incentives = raw.iter().map(|(u, _)| *u).zip(normed).collect();
         out.agg_weights = top_g_weights(&out.incentives, self.params.top_g);
+        Ok(out)
+    }
 
-        // ---- commit to chain --------------------------------------------
+    /// Sequential convenience kept for tests and small tools: evaluate the
+    /// round on this thread and commit the weights to the chain, like the
+    /// original single-threaded validator loop did.
+    #[allow(clippy::too_many_arguments)]
+    pub fn process_round<E: ExecBackend + ?Sized>(
+        &mut self,
+        exec: &E,
+        corpus: &Corpus,
+        theta: &[f32],
+        round: u64,
+        clock: &RoundClock,
+        store: &ObjectStore,
+        chain: &mut Chain,
+        peer_uids: &[Uid],
+        lr_t: f32,
+    ) -> Result<RoundOutcome> {
+        let read_keys = chain_read_keys(chain, peer_uids)?;
+        let out = self.evaluate_round(
+            exec, corpus, theta, round, clock, store, &read_keys, peer_uids, lr_t, 1,
+        )?;
         chain.set_weights(self.uid, &out.incentives)?;
         Ok(out)
     }
 }
 
+/// Snapshot the on-chain bucket read keys for `peer_uids` (§5: readers use
+/// the keys peers posted at registration). Done once per round by the
+/// coordinator so validator workers don't contend on the chain.
+pub fn chain_read_keys(chain: &Chain, peer_uids: &[Uid]) -> Result<BTreeMap<Uid, ReadKey>> {
+    peer_uids
+        .iter()
+        .map(|&uid| {
+            let rk = chain
+                .neuron(uid)
+                .and_then(|n| n.bucket_read_key.clone())
+                .ok_or_else(|| anyhow::anyhow!("peer {uid} has no read key on chain"))?;
+            Ok((uid, rk))
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     //! Validator round-loop integration tests (needing artifacts) live in
-    //! `rust/tests/integration.rs`; scoring/fast-eval units are tested in
-    //! their own modules.
+    //! `rust/tests/integration.rs` and the SimExec-backed pipeline tests in
+    //! `rust/tests/parallel_determinism.rs`; scoring/fast-eval units are
+    //! tested in their own modules.
 
     use super::*;
 
@@ -161,5 +213,15 @@ mod tests {
         let mut ra = a.rng.clone();
         let mut rb = b.rng.clone();
         assert_eq!(ra.next_u64(), rb.next_u64());
+    }
+
+    #[test]
+    fn chain_read_keys_requires_registration() {
+        let mut chain = Chain::new();
+        let uid = chain.register("p0").unwrap();
+        assert!(chain_read_keys(&chain, &[uid]).is_err(), "no key posted yet");
+        chain.post_read_key(uid, ReadKey("rk-test".into())).unwrap();
+        let keys = chain_read_keys(&chain, &[uid]).unwrap();
+        assert_eq!(keys[&uid], ReadKey("rk-test".into()));
     }
 }

@@ -18,7 +18,7 @@
 use anyhow::Result;
 
 use crate::data::{Corpus, Token};
-use crate::runtime::Executor;
+use crate::runtime::ExecBackend;
 use crate::util::Rng;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -119,14 +119,14 @@ pub struct SuiteResult {
 /// Evaluate a model (flat params) on a suite. Candidates are scored in
 /// batches through the fixed-shape `loss_per_seq` artifact; rows beyond the
 /// candidate count are padding.
-pub fn evaluate_suite(
-    exec: &Executor,
+pub fn evaluate_suite<E: ExecBackend>(
+    exec: &E,
     theta: &[f32],
     corpus: &Corpus,
     suite: Suite,
     n_items: usize,
 ) -> Result<SuiteResult> {
-    let meta = &exec.meta;
+    let meta = exec.meta();
     let (b, s1) = (meta.batch, meta.seq + 1);
     let items = generate_items(corpus, suite, n_items, s1);
     let mut correct = 0usize;

@@ -1,11 +1,12 @@
 //! # Gauntlet — Incentivizing Permissionless Distributed Learning of LLMs
 //!
 //! A full reproduction of the Templar *Gauntlet* incentive system (Lidin et
-//! al., 2025) as a three-layer Rust + JAX + Pallas stack:
+//! al., 2025) as a three-layer Rust + JAX + Pallas stack (the repository
+//! README's "Layer map" draws the picture):
 //!
 //! - **Layer 1/2 (build-time Python)**: a llama-style transformer and the
 //!   DeMo compressor (chunked 2-D DCT + top-k Pallas kernels), AOT-lowered
-//!   to HLO-text artifacts (`make artifacts`).
+//!   to HLO-text artifacts (`python -m compile.aot`).
 //! - **Layer 3 (this crate)**: everything the paper deploys — the Gauntlet
 //!   validator (fast + primary evaluation, OpenSkill ratings,
 //!   proof-of-computation, PEERSCORE, top-G aggregation), simulated
@@ -13,8 +14,18 @@
 //!   consensus, honest and byzantine peer behaviours, and the PJRT runtime
 //!   that executes the artifacts natively. Python is never on this path.
 //!
+//! Model execution is abstracted behind [`runtime::ExecBackend`], with the
+//! PJRT [`runtime::Executor`] for compiled artifacts and the pure-Rust
+//! [`runtime::SimExec`] for artifact-less runs (README: "Runtime
+//! backends"). The per-round evaluation pipeline is parallel by default
+//! and bit-deterministic at any thread count (README: "Scaling the round
+//! pipeline"); the thread knob is [`coordinator::run::RunConfig::threads`]
+//! / the `GAUNTLET_THREADS` environment variable, and the non-`Send` PJRT
+//! constraint is honored by the [`runtime::service`] request funnel.
+//!
 //! Start with [`coordinator::run::TemplarRun`] (the end-to-end system) or
-//! the `examples/` directory.
+//! the `rust/examples/` directory (each example documents which paper
+//! figure it reproduces — see `rust/examples/README.md`).
 
 pub mod bench;
 pub mod chain;

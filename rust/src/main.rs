@@ -17,11 +17,11 @@ use anyhow::{bail, Context, Result};
 
 use gauntlet::bench::{sparkline, Table};
 use gauntlet::coordinator::baseline::{AdamWParams, AdamWTrainer};
-use gauntlet::coordinator::run::{RunConfig, TemplarRun};
+use gauntlet::coordinator::run::{RunConfig, TemplarRun, TemplarRunWith};
 use gauntlet::data::Corpus;
 use gauntlet::eval::{evaluate_suite, Suite};
 use gauntlet::peers::Behavior;
-use gauntlet::runtime::{artifact_dir, Executor};
+use gauntlet::runtime::{artifact_dir, ExecBackend, Executor};
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -65,8 +65,11 @@ fn print_usage() {
          \x20           --topg <g>         aggregation size (default 4)\n\
          \x20           --eval-sample <s>  peers primary-evaluated per round\n\
          \x20           --seed <s>         run seed\n\
+         \x20           --threads <n>      pipeline workers (0 = auto, 1 = sequential)\n\
          \x20           --lr <f> --schedule constant|cosine:<w>:<t>[:<min>]|halve:<n>\n\
          \x20           --no-normalize     disable encoded-domain normalization (§4 ablation)\n\
+         \x20           (without compiled artifacts, `run` falls back to the\n\
+         \x20            deterministic pure-Rust SimExec backend)\n\
          \x20 baseline  AdamW DDP comparison\n\
          \x20           --model/--rounds/--workers/--seed\n\
          \x20 eval      downstream suites on the init model\n\
@@ -161,18 +164,41 @@ fn cmd_run(flags: &BTreeMap<String, String>) -> Result<()> {
     }
     cfg.seed = flag(flags, "seed", 0)?;
     cfg.eval_every = flag(flags, "eval-every", 5)?;
+    cfg.threads = flag(flags, "threads", 0)?;
     if flags.contains_key("no-normalize") {
         cfg.agg.normalize = false;
     }
 
     println!(
-        "Gauntlet run: model={model} rounds={rounds} peers={} topG={} S={} normalize={}",
+        "Gauntlet run: model={model} rounds={rounds} peers={} topG={} S={} normalize={} threads={}",
         cfg.peers.len(),
         cfg.params.top_g,
         cfg.params.eval_sample,
         cfg.agg.normalize,
+        cfg.effective_threads(),
     );
-    let mut run = TemplarRun::new(cfg)?;
+    // Prefer the artifact-backed runtime; fall back to SimExec when
+    // artifacts are missing OR the build uses the stub xla crate.
+    match TemplarRun::new(cfg.clone()) {
+        Ok(run) => {
+            let run = drive_run(run, rounds)?;
+            print_exec_stats(&run.exec);
+        }
+        Err(e) => {
+            println!(
+                "note: artifact backend unavailable ({e:#}) — running on the \
+                 pure-Rust SimExec backend (see README \"Runtime backends\")"
+            );
+            drive_run(TemplarRunWith::new_sim(cfg)?, rounds)?;
+        }
+    }
+    Ok(())
+}
+
+fn drive_run<E: ExecBackend + 'static>(
+    mut run: TemplarRunWith<E>,
+    rounds: u64,
+) -> Result<TemplarRunWith<E>> {
     let mut losses = Vec::new();
     for r in 0..rounds {
         let rec = run.run_round()?;
@@ -204,8 +230,7 @@ fn cmd_run(flags: &BTreeMap<String, String>) -> Result<()> {
         ]);
     }
     t.print();
-    print_exec_stats(&run.exec);
-    Ok(())
+    Ok(run)
 }
 
 fn cmd_baseline(flags: &BTreeMap<String, String>) -> Result<()> {

@@ -19,13 +19,18 @@ use crate::coordinator::GauntletParams;
 use crate::data::Corpus;
 use crate::demo::wire::Submission;
 use crate::demo::SparseGrad;
-use crate::runtime::Executor;
+use crate::runtime::{ExecBackend, Executor};
 use crate::storage::SimTime;
 use crate::util::Rng;
 
 /// Everything a peer sees when taking its turn in a round.
-pub struct PeerCtx<'a> {
-    pub exec: &'a Executor,
+///
+/// Generic over the execution backend so the same peer code runs against
+/// the PJRT [`Executor`] on the owning thread, an
+/// [`ExecClient`](crate::runtime::ExecClient) from a parallel worker, or
+/// the pure-Rust [`SimExec`](crate::runtime::SimExec).
+pub struct PeerCtx<'a, E: ExecBackend + ?Sized = Executor> {
+    pub exec: &'a E,
     pub corpus: &'a Corpus,
     /// The globally agreed model at the start of the round (what a
     /// synchronized peer holds after applying the previous aggregation).
@@ -77,7 +82,7 @@ impl PeerRunner {
     }
 
     /// The model this peer trains on / probes from.
-    fn theta_view<'a>(&'a self, ctx: &'a PeerCtx<'_>) -> &'a [f32] {
+    fn theta_view<'a, E: ExecBackend + ?Sized>(&'a self, ctx: &'a PeerCtx<'_, E>) -> &'a [f32] {
         self.theta_local.as_deref().unwrap_or(ctx.global_theta)
     }
 
@@ -87,7 +92,7 @@ impl PeerRunner {
     }
 
     /// First-pass step (every behaviour except Copier/Duplicator).
-    pub fn step(&mut self, ctx: &PeerCtx<'_>) -> Result<PeerOutput> {
+    pub fn step<E: ExecBackend + ?Sized>(&mut self, ctx: &PeerCtx<'_, E>) -> Result<PeerOutput> {
         assert!(!self.behavior.is_second_pass(), "second-pass peer stepped in pass 1");
         match self.behavior.clone() {
             Behavior::Honest { data_mult } => self.honest_step(ctx, data_mult, 1.0),
@@ -124,7 +129,7 @@ impl PeerRunner {
             Behavior::FormatViolator => {
                 // Real-looking header, wrong payload dimensions: claims one
                 // extra coefficient, breaking the meta.json contract.
-                let c = ctx.exec.meta.coeff_count + 1;
+                let c = ctx.exec.meta().coeff_count + 1;
                 let grad = SparseGrad {
                     vals: vec![0.1; c],
                     idx: (0..c as i32).collect(),
@@ -133,12 +138,12 @@ impl PeerRunner {
                     uid: self.uid,
                     round: ctx.round,
                     grad,
-                    probe: ctx.exec.meta.sync_probe(self.theta_view(ctx)),
+                    probe: ctx.exec.meta().sync_probe(self.theta_view(ctx)),
                 };
                 Ok(PeerOutput::Submit { time: self.upload_time(ctx, 1), bytes: sub.encode() })
             }
             Behavior::Poisoner { scale } => {
-                let meta = &ctx.exec.meta;
+                let meta = ctx.exec.meta();
                 let c = meta.coeff_count;
                 let grad = SparseGrad {
                     vals: (0..c).map(|_| self.rng.normal_f32(0.0, scale)).collect(),
@@ -158,7 +163,11 @@ impl PeerRunner {
 
     /// Second-pass step for Copier/Duplicator: given the source peer's
     /// published bytes (if any), re-post the gradient under this uid.
-    pub fn step_copy(&mut self, ctx: &PeerCtx<'_>, source_bytes: Option<&[u8]>) -> Result<PeerOutput> {
+    pub fn step_copy<E: ExecBackend + ?Sized>(
+        &mut self,
+        ctx: &PeerCtx<'_, E>,
+        source_bytes: Option<&[u8]>,
+    ) -> Result<PeerOutput> {
         let Some(bytes) = source_bytes else { return Ok(PeerOutput::Skip) };
         let Ok(src) = Submission::decode(bytes) else { return Ok(PeerOutput::Skip) };
         let sub = Submission {
@@ -167,7 +176,7 @@ impl PeerRunner {
             grad: src.grad,
             // The copier is synchronized (it follows the public aggregate),
             // so its probe is honest — only PoC can catch it.
-            probe: ctx.exec.meta.sync_probe(self.theta_view(ctx)),
+            probe: ctx.exec.meta().sync_probe(self.theta_view(ctx)),
         };
         // Copying is fast; it posts shortly after the source appears.
         let (open, close) = ctx.clock.put_window(ctx.round);
@@ -175,15 +184,20 @@ impl PeerRunner {
         Ok(PeerOutput::Submit { time: t, bytes: sub.encode() })
     }
 
-    fn upload_time(&mut self, ctx: &PeerCtx<'_>, n_mb: usize) -> SimTime {
+    fn upload_time<E: ExecBackend + ?Sized>(&mut self, ctx: &PeerCtx<'_, E>, n_mb: usize) -> SimTime {
         let compute = self.compute_ms_per_mb * n_mb as u64 + self.rng.below(500);
         ctx.clock.compliant_upload_time(ctx.round, compute)
     }
 
     /// The honest miner loop; `grad_scale` rescales the transmitted values
     /// (1.0 for honest peers, the attack factor for Rescaler).
-    fn honest_step(&mut self, ctx: &PeerCtx<'_>, data_mult: f64, grad_scale: f32) -> Result<PeerOutput> {
-        let meta = &ctx.exec.meta;
+    fn honest_step<E: ExecBackend + ?Sized>(
+        &mut self,
+        ctx: &PeerCtx<'_, E>,
+        data_mult: f64,
+        grad_scale: f32,
+    ) -> Result<PeerOutput> {
+        let meta = ctx.exec.meta();
         let (b, s1) = (meta.batch, meta.seq + 1);
         let n_mb = ((ctx.params.base_microbatches as f64 * data_mult).round() as usize).max(1);
         self.last_microbatches = n_mb;
@@ -219,8 +233,8 @@ impl PeerRunner {
     }
 
     /// Freeloader: real gradient work, wrong (self-chosen) data.
-    fn freeload_step(&mut self, ctx: &PeerCtx<'_>) -> Result<PeerOutput> {
-        let meta = &ctx.exec.meta;
+    fn freeload_step<E: ExecBackend + ?Sized>(&mut self, ctx: &PeerCtx<'_, E>) -> Result<PeerOutput> {
+        let meta = ctx.exec.meta();
         let (b, s1) = (meta.batch, meta.seq + 1);
         let theta = self.theta_view(ctx).to_vec();
         // deliberately NOT the assigned shard
@@ -246,7 +260,14 @@ impl PeerRunner {
     /// End-of-round model maintenance: synchronized peers adopt the new
     /// global model; a Desync peer in/after its pause maintains its own
     /// divergent copy by applying the aggregate to the stale base.
-    pub fn on_round_end(&mut self, round: u64, new_global: &[f32], exec: &Executor, agg_coeff: Option<&[f32]>, lr: f32) -> Result<()> {
+    pub fn on_round_end<E: ExecBackend + ?Sized>(
+        &mut self,
+        round: u64,
+        new_global: &[f32],
+        exec: &E,
+        agg_coeff: Option<&[f32]>,
+        lr: f32,
+    ) -> Result<()> {
         match self.behavior {
             Behavior::Desync { at, pause } => {
                 if round + 1 == at {

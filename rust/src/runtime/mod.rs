@@ -1,18 +1,30 @@
 //! PJRT runtime: loads the AOT HLO-text artifacts and executes them.
 //!
 //! This is the only place the coordinator touches XLA. Each model config's
-//! `artifacts/<cfg>/` directory (produced by `make artifacts`, i.e.
-//! `python -m compile.aot`) contains HLO-text entry points plus the
-//! `meta.json` ABI contract; [`Executor`] compiles each entry point once at
-//! startup and exposes typed wrappers. Python is never on this path.
+//! `artifacts/<cfg>/` directory (produced by `python -m compile.aot`)
+//! contains HLO-text entry points plus the `meta.json` ABI contract;
+//! [`Executor`] compiles each entry point once at startup and exposes typed
+//! wrappers. Python is never on this path. See the repository README
+//! ("Layer map" and "Runtime backends") for how this layer fits the stack.
+//!
+//! The model-execution surface the rest of the system consumes is the
+//! [`ExecBackend`] trait, with two implementations:
+//!
+//! - [`Executor`] — the real thing: compiled HLO via PJRT.
+//! - [`SimExec`] (in [`sim`]) — a deterministic pure-Rust stand-in with the
+//!   same ABI semantics (signed updates, top-k compression, data-aligned
+//!   LossScores), used by tests, benches, and artifact-less quickstarts.
 //!
 //! Note on threading: the `xla` crate's handles wrap raw PJRT pointers and
-//! are not `Send`; the coordinator therefore funnels all XLA execution
-//! through the thread that created the [`Executor`] (the simulation loop is
-//! synchronous-by-design, mirroring the paper's synchronous training
-//! framework — see DESIGN.md).
+//! are not `Send`; all XLA execution must stay on the thread that created
+//! the [`Executor`]. The parallel round pipeline honors this via
+//! [`service::exec_service`]: worker threads hold cloneable
+//! [`service::ExecClient`] handles and the owning thread drains their
+//! requests, so every PJRT call still executes on the owner thread.
 
 pub mod meta;
+pub mod service;
+pub mod sim;
 
 use std::cell::RefCell;
 use std::collections::BTreeMap;
@@ -22,6 +34,69 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Context, Result};
 
 pub use meta::{ModelMeta, ParamSpec};
+pub use service::{exec_service, ExecClient, ExecHost};
+pub use sim::{SimExec, SimSpec};
+
+/// The model-execution ABI every backend provides: exactly the typed entry
+/// points the AOT artifacts export (`meta.json` `artifacts` list), plus the
+/// ABI contract itself via [`ExecBackend::meta`].
+///
+/// Implementations: [`Executor`] (PJRT), [`SimExec`] (pure Rust), and
+/// [`service::ExecClient`] (a channel proxy that forwards to whichever
+/// backend owns the service — how worker threads reach a non-`Send`
+/// `Executor`).
+pub trait ExecBackend {
+    /// The `meta.json` ABI contract (shapes, DCT layout, hyperparameters).
+    fn meta(&self) -> &ModelMeta;
+    /// Deterministic initial parameter vector.
+    fn init_params(&self) -> Result<Vec<f32>>;
+    /// `loss(theta, tokens) -> loss`
+    fn loss(&self, theta: &[f32], tokens: &[i32]) -> Result<f32>;
+    /// `loss_per_seq(theta, tokens) -> f32[B]`
+    fn loss_per_seq(&self, theta: &[f32], tokens: &[i32]) -> Result<Vec<f32>>;
+    /// `grad(theta, tokens) -> (loss, grad)`
+    fn grad(&self, theta: &[f32], tokens: &[i32]) -> Result<(f32, Vec<f32>)>;
+    /// `demo_compress(e, g, decay) -> (vals, idx, e')`
+    fn demo_compress(
+        &self,
+        error: &[f32],
+        grad: &[f32],
+        decay: f32,
+    ) -> Result<(Vec<f32>, Vec<i32>, Vec<f32>)>;
+    /// `apply_update(theta, coeff, lr) -> theta'` (IDCT + sign + step)
+    fn apply_update(&self, theta: &[f32], coeff: &[f32], lr: f32) -> Result<Vec<f32>>;
+    /// `eval_peer(theta, coeff, beta, tok_assigned, tok_rand)
+    ///    -> (L_assigned_before, L_assigned_after, L_rand_before, L_rand_after)`
+    fn eval_peer(
+        &self,
+        theta: &[f32],
+        coeff: &[f32],
+        beta: f32,
+        tok_assigned: &[i32],
+        tok_rand: &[i32],
+    ) -> Result<(f32, f32, f32, f32)>;
+    /// `adamw_step(theta, m, v, tokens, lr, t) -> (loss, theta', m', v')`
+    #[allow(clippy::too_many_arguments)]
+    fn adamw_step(
+        &self,
+        theta: &[f32],
+        m: &[f32],
+        v: &[f32],
+        tokens: &[i32],
+        lr: f32,
+        t: f32,
+    ) -> Result<(f32, Vec<f32>, Vec<f32>, Vec<f32>)>;
+
+    /// A `Sync` view of this backend, if its entry points may be called
+    /// from any thread directly. Thread-affine backends (the PJRT
+    /// [`Executor`], whose handles are not `Send`) return `None` — the
+    /// parallel pipeline then routes workers' calls through the
+    /// [`service`] funnel to the owning thread. Pure-Rust backends like
+    /// [`SimExec`] return `Some(self)`, and workers call them in place.
+    fn as_shared(&self) -> Option<&(dyn ExecBackend + Sync)> {
+        None
+    }
+}
 
 /// Per-entry-point execution statistics (perf accounting, §Perf).
 #[derive(Clone, Debug, Default)]
@@ -227,10 +302,64 @@ impl Executor {
     }
 }
 
+impl ExecBackend for Executor {
+    fn meta(&self) -> &ModelMeta {
+        &self.meta
+    }
+    fn init_params(&self) -> Result<Vec<f32>> {
+        Executor::init_params(self)
+    }
+    fn loss(&self, theta: &[f32], tokens: &[i32]) -> Result<f32> {
+        Executor::loss(self, theta, tokens)
+    }
+    fn loss_per_seq(&self, theta: &[f32], tokens: &[i32]) -> Result<Vec<f32>> {
+        Executor::loss_per_seq(self, theta, tokens)
+    }
+    fn grad(&self, theta: &[f32], tokens: &[i32]) -> Result<(f32, Vec<f32>)> {
+        Executor::grad(self, theta, tokens)
+    }
+    fn demo_compress(
+        &self,
+        error: &[f32],
+        grad: &[f32],
+        decay: f32,
+    ) -> Result<(Vec<f32>, Vec<i32>, Vec<f32>)> {
+        Executor::demo_compress(self, error, grad, decay)
+    }
+    fn apply_update(&self, theta: &[f32], coeff: &[f32], lr: f32) -> Result<Vec<f32>> {
+        Executor::apply_update(self, theta, coeff, lr)
+    }
+    fn eval_peer(
+        &self,
+        theta: &[f32],
+        coeff: &[f32],
+        beta: f32,
+        tok_assigned: &[i32],
+        tok_rand: &[i32],
+    ) -> Result<(f32, f32, f32, f32)> {
+        Executor::eval_peer(self, theta, coeff, beta, tok_assigned, tok_rand)
+    }
+    fn adamw_step(
+        &self,
+        theta: &[f32],
+        m: &[f32],
+        v: &[f32],
+        tokens: &[i32],
+        lr: f32,
+        t: f32,
+    ) -> Result<(f32, Vec<f32>, Vec<f32>, Vec<f32>)> {
+        Executor::adamw_step(self, theta, m, v, tokens, lr, t)
+    }
+}
+
 /// Locate `artifacts/<cfg>` relative to the crate root (works from
-/// examples, tests, and benches).
+/// examples, tests, and benches). Override the artifacts root with the
+/// `GAUNTLET_ARTIFACT_DIR` environment variable (see README).
 pub fn artifact_dir(cfg: &str) -> PathBuf {
-    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts").join(cfg)
+    match std::env::var_os("GAUNTLET_ARTIFACT_DIR") {
+        Some(dir) => PathBuf::from(dir).join(cfg),
+        None => PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts").join(cfg),
+    }
 }
 
 /// True if a config's artifacts are present (used by tests to skip

@@ -1,0 +1,200 @@
+//! Executor service: funnels model execution from worker threads to the
+//! backend's owning thread.
+//!
+//! The PJRT handles inside [`Executor`](super::Executor) are not `Send`, so
+//! the parallel round pipeline (`coordinator::run`) cannot hand `&Executor`
+//! to its worker threads. Instead the owning thread opens a service with
+//! [`exec_service`]; workers receive cloneable [`ExecClient`] handles (an
+//! [`ExecBackend`] themselves, so all peer/validator code is backend
+//! generic), and the owner drains requests with [`ExecHost::serve`] until
+//! every client is dropped:
+//!
+//! ```text
+//! worker 1 ──┐  ExecClient::grad(..)            ┌───────────────────┐
+//! worker 2 ──┼────────── mpsc ─────────────────▶│ ExecHost::serve   │
+//! worker 3 ──┘  (inputs copied into the job)    │ &E on owner thread│
+//!      ▲                                        └─────────┬─────────┘
+//!      └───────────── per-call reply channel ─────────────┘
+//! ```
+//!
+//! Requests are closures over owned inputs, so no borrow crosses the
+//! channel; replies come back over a per-call channel. Because every
+//! backend entry point is a pure function of its inputs, the interleaving
+//! of requests from different workers cannot change any result — this is
+//! what keeps the parallel pipeline bit-identical to the sequential one.
+//!
+//! **Deadlock rule:** the thread that holds the [`ExecHost`] must call
+//! [`ExecHost::serve`] *before* joining the workers, and must never call an
+//! [`ExecClient`] method itself (it would wait on a request only it can
+//! serve).
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+
+use anyhow::{anyhow, Result};
+
+use super::{ExecBackend, ModelMeta};
+
+/// A boxed request: runs against the backend on the owner thread.
+type Job<E> = Box<dyn FnOnce(&E) + Send>;
+
+/// Worker-side handle: a cheap, cloneable [`ExecBackend`] proxy.
+///
+/// Each call copies its input slices into the request (the owner thread
+/// cannot borrow worker stacks), sends it, and blocks on the reply.
+pub struct ExecClient<E: 'static> {
+    tx: Sender<Job<E>>,
+    meta: ModelMeta,
+}
+
+// Manual impl: `E` itself need not be `Clone` (it never leaves the owner).
+impl<E: 'static> Clone for ExecClient<E> {
+    fn clone(&self) -> Self {
+        ExecClient { tx: self.tx.clone(), meta: self.meta.clone() }
+    }
+}
+
+/// Owner-side handle: holds the backend borrow and the request queue.
+pub struct ExecHost<'e, E: 'static> {
+    exec: &'e E,
+    rx: Receiver<Job<E>>,
+}
+
+/// Open an execution service over `exec`. Returns the client to clone into
+/// workers and the host the owning thread drives with [`ExecHost::serve`].
+pub fn exec_service<E: ExecBackend + 'static>(exec: &E) -> (ExecClient<E>, ExecHost<'_, E>) {
+    let (tx, rx) = channel();
+    (ExecClient { tx, meta: exec.meta().clone() }, ExecHost { exec, rx })
+}
+
+impl<E: 'static> ExecHost<'_, E> {
+    /// Serve requests until every [`ExecClient`] clone has been dropped.
+    /// Call this on the owning thread after spawning the workers (and after
+    /// dropping the original client).
+    pub fn serve(self) {
+        while let Ok(job) = self.rx.recv() {
+            job(self.exec);
+        }
+    }
+}
+
+impl<E: ExecBackend + 'static> ExecClient<E> {
+    fn call<T, F>(&self, f: F) -> Result<T>
+    where
+        T: Send + 'static,
+        F: FnOnce(&E) -> Result<T> + Send + 'static,
+    {
+        let (rtx, rrx) = channel();
+        self.tx
+            .send(Box::new(move |e: &E| {
+                let _ = rtx.send(f(e));
+            }))
+            .map_err(|_| anyhow!("exec service closed before the request was sent"))?;
+        rrx.recv().map_err(|_| anyhow!("exec service dropped the request reply"))?
+    }
+}
+
+impl<E: ExecBackend + 'static> ExecBackend for ExecClient<E> {
+    fn meta(&self) -> &ModelMeta {
+        &self.meta
+    }
+
+    fn init_params(&self) -> Result<Vec<f32>> {
+        self.call(move |e| e.init_params())
+    }
+
+    fn loss(&self, theta: &[f32], tokens: &[i32]) -> Result<f32> {
+        let (theta, tokens) = (theta.to_vec(), tokens.to_vec());
+        self.call(move |e| e.loss(&theta, &tokens))
+    }
+
+    fn loss_per_seq(&self, theta: &[f32], tokens: &[i32]) -> Result<Vec<f32>> {
+        let (theta, tokens) = (theta.to_vec(), tokens.to_vec());
+        self.call(move |e| e.loss_per_seq(&theta, &tokens))
+    }
+
+    fn grad(&self, theta: &[f32], tokens: &[i32]) -> Result<(f32, Vec<f32>)> {
+        let (theta, tokens) = (theta.to_vec(), tokens.to_vec());
+        self.call(move |e| e.grad(&theta, &tokens))
+    }
+
+    fn demo_compress(
+        &self,
+        error: &[f32],
+        grad: &[f32],
+        decay: f32,
+    ) -> Result<(Vec<f32>, Vec<i32>, Vec<f32>)> {
+        let (error, grad) = (error.to_vec(), grad.to_vec());
+        self.call(move |e| e.demo_compress(&error, &grad, decay))
+    }
+
+    fn apply_update(&self, theta: &[f32], coeff: &[f32], lr: f32) -> Result<Vec<f32>> {
+        let (theta, coeff) = (theta.to_vec(), coeff.to_vec());
+        self.call(move |e| e.apply_update(&theta, &coeff, lr))
+    }
+
+    fn eval_peer(
+        &self,
+        theta: &[f32],
+        coeff: &[f32],
+        beta: f32,
+        tok_assigned: &[i32],
+        tok_rand: &[i32],
+    ) -> Result<(f32, f32, f32, f32)> {
+        let (theta, coeff) = (theta.to_vec(), coeff.to_vec());
+        let (tok_assigned, tok_rand) = (tok_assigned.to_vec(), tok_rand.to_vec());
+        self.call(move |e| e.eval_peer(&theta, &coeff, beta, &tok_assigned, &tok_rand))
+    }
+
+    fn adamw_step(
+        &self,
+        theta: &[f32],
+        m: &[f32],
+        v: &[f32],
+        tokens: &[i32],
+        lr: f32,
+        t: f32,
+    ) -> Result<(f32, Vec<f32>, Vec<f32>, Vec<f32>)> {
+        let (theta, m, v) = (theta.to_vec(), m.to_vec(), v.to_vec());
+        let tokens = tokens.to_vec();
+        self.call(move |e| e.adamw_step(&theta, &m, &v, &tokens, lr, t))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{SimExec, SimSpec};
+    use super::*;
+
+    #[test]
+    fn workers_reach_the_backend_through_the_funnel() {
+        let sim = SimExec::new(&SimSpec::nano(), 3);
+        let theta = ExecBackend::init_params(&sim).unwrap();
+        let tokens = vec![1i32; sim.meta().batch * (sim.meta().seq + 1)];
+        let direct = ExecBackend::loss(&sim, &theta, &tokens).unwrap();
+
+        let (client, host) = exec_service(&sim);
+        let losses: Vec<f32> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..4)
+                .map(|_| {
+                    let c = client.clone();
+                    let (theta, tokens) = (&theta, &tokens);
+                    s.spawn(move || c.loss(theta, tokens).unwrap())
+                })
+                .collect();
+            drop(client);
+            host.serve();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for l in losses {
+            assert_eq!(l.to_bits(), direct.to_bits(), "funnel must be bit-transparent");
+        }
+    }
+
+    #[test]
+    fn client_meta_matches_backend_meta() {
+        let sim = SimExec::new(&SimSpec::nano(), 0);
+        let (client, _host) = exec_service(&sim);
+        assert_eq!(client.meta().param_count, sim.meta().param_count);
+        assert_eq!(client.meta().coeff_count, sim.meta().coeff_count);
+    }
+}

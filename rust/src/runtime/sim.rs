@@ -1,0 +1,534 @@
+//! `SimExec` — a deterministic, pure-Rust [`ExecBackend`].
+//!
+//! The PJRT [`Executor`](super::Executor) needs compiled HLO artifacts and
+//! native XLA. Neither is required to exercise the *incentive* mechanics,
+//! which only assume the ABI's semantics:
+//!
+//! - losses fall along the negative gradient (so LossScores are
+//!   informative),
+//! - gradients computed on a data shard drop the loss on *that* shard a
+//!   little more than on a fresh one (so proof-of-computation separates
+//!   honest peers from freeloaders/copiers, eq. 3),
+//! - `demo_compress` is error-feedback + per-chunk top-k in a coefficient
+//!   space, and `apply_update` is exactly one signed step per parameter
+//!   (so SyncScore units and checkpoint sign-replay hold).
+//!
+//! `SimExec` implements those semantics on a synthetic quadratic model:
+//! for token batch `T`, `L(theta, T) = floor + qscale * mean((theta -
+//! theta* - delta * u_T)^2)` where `theta*` is a seed-derived target and
+//! `u_T` a direction hashed from the tokens. The `u_T` shift is what makes
+//! training data *identifiable*: a step from a gradient computed on `T`
+//! aligns with `u_T` and drops the loss on `T` slightly more than on an
+//! unrelated batch — exactly the paper's LossScore-difference signal.
+//!
+//! Every method is a pure function of its inputs (no interior state), so
+//! results are bit-identical regardless of call order or thread count —
+//! the property the parallel-pipeline determinism tests pin down.
+//!
+//! The "DCT" is the identity chunking: coefficient `i` is parameter `i`
+//! (indices past `param_count` are padding). That keeps compression,
+//! scatter, and signed updates consistent with the validator's native-Rust
+//! bookkeeping without a transform library.
+
+use anyhow::{bail, Result};
+use sha2::{Digest, Sha256};
+
+use super::meta::{Hyper, ModelMeta, ParamSpec};
+use super::ExecBackend;
+use crate::util::Rng;
+
+/// Shape of a synthetic model config (everything `ModelMeta` derives from).
+#[derive(Clone, Debug)]
+pub struct SimSpec {
+    pub name: String,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub vocab: usize,
+    pub seq: usize,
+    pub batch: usize,
+    /// DCT chunk side; a chunk holds `chunk * chunk` coefficients.
+    pub chunk: usize,
+    pub n_chunks: usize,
+    /// Coefficients kept per chunk.
+    pub topk: usize,
+    pub param_count: usize,
+}
+
+impl SimSpec {
+    /// Smallest config; mirrors the artifact `nano` in spirit.
+    pub fn nano() -> SimSpec {
+        SimSpec {
+            name: "nano".into(),
+            d_model: 8,
+            n_layers: 1,
+            vocab: 64,
+            seq: 16,
+            batch: 2,
+            chunk: 8,
+            n_chunks: 4,
+            topk: 4,
+            param_count: 200,
+        }
+    }
+
+    /// Mid-size config for multi-threaded benchmarks: enough parameters
+    /// that per-peer gradient/compression work dominates thread overhead.
+    pub fn mid() -> SimSpec {
+        SimSpec {
+            name: "mid".into(),
+            d_model: 64,
+            n_layers: 4,
+            vocab: 256,
+            seq: 32,
+            batch: 2,
+            chunk: 32,
+            n_chunks: 64,
+            topk: 16,
+            param_count: 60_000,
+        }
+    }
+
+    /// Map an artifact config name onto a simulation spec of comparable
+    /// intent (unknown names get `nano`).
+    pub fn for_model_name(name: &str) -> SimSpec {
+        match name {
+            "mid" => SimSpec::mid(),
+            "tiny" | "small" | "base" => SimSpec {
+                name: name.into(),
+                d_model: 16,
+                n_layers: 2,
+                vocab: 128,
+                seq: 24,
+                batch: 2,
+                chunk: 16,
+                n_chunks: 16,
+                topk: 8,
+                param_count: 3_500,
+            },
+            _ => SimSpec { name: name.into(), ..SimSpec::nano() },
+        }
+    }
+
+    /// Materialize the ABI contract. Tensor boundaries are synthetic but
+    /// satisfy every invariant `ModelMeta::parse` enforces, so SyncScore
+    /// probes (first + last element per tensor) work unchanged.
+    pub fn build_meta(&self) -> ModelMeta {
+        assert!(self.param_count <= self.n_chunks * self.chunk * self.chunk);
+        let sizes = [
+            self.param_count / 2,
+            self.param_count / 4,
+            self.param_count / 8,
+            self.param_count - self.param_count / 2 - self.param_count / 4
+                - self.param_count / 8,
+        ];
+        let names = ["tok_embed", "blocks", "norm", "head"];
+        let mut params = Vec::new();
+        let mut offset = 0;
+        for (name, &size) in names.iter().zip(&sizes) {
+            if size == 0 {
+                continue;
+            }
+            params.push(ParamSpec {
+                name: (*name).to_string(),
+                shape: vec![size],
+                offset,
+                size,
+            });
+            offset += size;
+        }
+        ModelMeta {
+            name: self.name.clone(),
+            d_model: self.d_model,
+            n_layers: self.n_layers,
+            vocab: self.vocab,
+            seq: self.seq,
+            batch: self.batch,
+            chunk: self.chunk,
+            topk: self.topk,
+            param_count: self.param_count,
+            padded_count: self.n_chunks * self.chunk * self.chunk,
+            n_chunks: self.n_chunks,
+            coeff_count: self.n_chunks * self.topk,
+            hyper: Hyper { lr: 0.02, demo_decay: 0.999, adamw_lr: 3e-4 },
+            params,
+            artifacts: vec![],
+        }
+    }
+}
+
+/// Deterministic pure-Rust execution backend (see module docs).
+#[derive(Clone)]
+pub struct SimExec {
+    meta: ModelMeta,
+    seed: u64,
+    /// The quadratic's optimum.
+    theta_star: Vec<f32>,
+    /// Curvature scale: init loss lands near `ln(vocab)`.
+    qscale: f64,
+    /// Data-alignment shift applied to the optimum per token batch.
+    delta: f64,
+    /// Irreducible loss floor (the corpus's switch-noise analogue).
+    floor: f64,
+}
+
+impl SimExec {
+    pub fn new(spec: &SimSpec, seed: u64) -> SimExec {
+        let meta = spec.build_meta();
+        let mut rng = Rng::from_parts(&["sim-target", &spec.name, &seed.to_string()]);
+        let theta_star: Vec<f32> = (0..meta.param_count).map(|_| rng.normal_f32(0.0, 0.1)).collect();
+        SimExec { meta, seed, theta_star, qscale: 150.0, delta: 0.05, floor: 1.0 }
+    }
+
+    /// Spec-by-model-name convenience used by the artifact-less fallbacks.
+    pub fn from_model_name(name: &str, seed: u64) -> SimExec {
+        SimExec::new(&SimSpec::for_model_name(name), seed)
+    }
+
+    fn check_theta(&self, theta: &[f32]) -> Result<()> {
+        if theta.len() != self.meta.param_count {
+            bail!("theta has {} values, expected {}", theta.len(), self.meta.param_count);
+        }
+        Ok(())
+    }
+
+    fn check_tokens(&self, tokens: &[i32]) -> Result<()> {
+        let want = self.meta.batch * (self.meta.seq + 1);
+        if tokens.len() != want {
+            bail!("tokens has {} values, expected {}", tokens.len(), want);
+        }
+        Ok(())
+    }
+
+    /// Per-batch direction `u_T`: i.i.d. standard normals seeded by a hash
+    /// of the tokens (and the run seed, so different runs see different
+    /// data geometry).
+    fn token_direction(&self, tokens: &[i32]) -> Vec<f32> {
+        let mut h = Sha256::new();
+        h.update(self.seed.to_le_bytes());
+        for t in tokens {
+            h.update(t.to_le_bytes());
+        }
+        let digest = h.finalize();
+        let mut rng = Rng::new(u64::from_le_bytes(digest[..8].try_into().unwrap()));
+        (0..self.meta.param_count).map(|_| rng.normal_f32(0.0, 1.0)).collect()
+    }
+
+    /// `L(theta, T)` for one direction `u_T` (see module docs).
+    fn loss_for_direction(&self, theta: &[f32], u: &[f32]) -> f64 {
+        let n = theta.len() as f64;
+        let mut q = 0.0f64;
+        for i in 0..theta.len() {
+            let x = theta[i] as f64 - self.theta_star[i] as f64 - self.delta * u[i] as f64;
+            q += x * x;
+        }
+        self.floor + self.qscale * q / n
+    }
+
+    /// One signed evaluation step `theta - step * sign(coeff)` restricted
+    /// to real (non-padding) coefficients.
+    fn signed_step(&self, theta: &[f32], coeff: &[f32], step: f32) -> Vec<f32> {
+        let mut out = theta.to_vec();
+        for (i, t) in out.iter_mut().enumerate() {
+            let c = coeff[i];
+            if c > 0.0 {
+                *t -= step;
+            } else if c < 0.0 {
+                *t += step;
+            }
+        }
+        out
+    }
+}
+
+impl ExecBackend for SimExec {
+    fn meta(&self) -> &ModelMeta {
+        &self.meta
+    }
+
+    fn init_params(&self) -> Result<Vec<f32>> {
+        let mut rng =
+            Rng::from_parts(&["sim-init", &self.meta.name, &self.seed.to_string()]);
+        Ok((0..self.meta.param_count).map(|_| rng.normal_f32(0.0, 0.1)).collect())
+    }
+
+    fn loss(&self, theta: &[f32], tokens: &[i32]) -> Result<f32> {
+        self.check_theta(theta)?;
+        self.check_tokens(tokens)?;
+        let u = self.token_direction(tokens);
+        Ok(self.loss_for_direction(theta, &u) as f32)
+    }
+
+    fn loss_per_seq(&self, theta: &[f32], tokens: &[i32]) -> Result<Vec<f32>> {
+        self.check_theta(theta)?;
+        self.check_tokens(tokens)?;
+        let s1 = self.meta.seq + 1;
+        Ok(tokens
+            .chunks(s1)
+            .map(|row| {
+                let u = self.token_direction(row);
+                self.loss_for_direction(theta, &u) as f32
+            })
+            .collect())
+    }
+
+    fn grad(&self, theta: &[f32], tokens: &[i32]) -> Result<(f32, Vec<f32>)> {
+        self.check_theta(theta)?;
+        self.check_tokens(tokens)?;
+        let u = self.token_direction(tokens);
+        let n = theta.len() as f64;
+        let mut g = Vec::with_capacity(theta.len());
+        for i in 0..theta.len() {
+            let x = theta[i] as f64 - self.theta_star[i] as f64 - self.delta * u[i] as f64;
+            g.push((2.0 * self.qscale * x / n) as f32);
+        }
+        Ok((self.loss_for_direction(theta, &u) as f32, g))
+    }
+
+    fn demo_compress(
+        &self,
+        error: &[f32],
+        grad: &[f32],
+        decay: f32,
+    ) -> Result<(Vec<f32>, Vec<i32>, Vec<f32>)> {
+        self.check_theta(error)?;
+        self.check_theta(grad)?;
+        let m = self.meta.chunk * self.meta.chunk;
+        // Error feedback: e <- decay * e + g.
+        let e: Vec<f32> =
+            error.iter().zip(grad).map(|(ei, gi)| decay * ei + gi).collect();
+        let mut vals = Vec::with_capacity(self.meta.coeff_count);
+        let mut idx = Vec::with_capacity(self.meta.coeff_count);
+        let mut residual = e.clone();
+        for chunk_id in 0..self.meta.n_chunks {
+            let lo = chunk_id * m;
+            let hi = ((chunk_id + 1) * m).min(self.meta.param_count);
+            // Rank this chunk's (identity-transformed) coefficients by
+            // magnitude; padding positions are zeros and rank last.
+            let mut order: Vec<usize> = (lo..hi.max(lo)).collect();
+            order.sort_by(|&a, &b| {
+                e[b].abs()
+                    .partial_cmp(&e[a].abs())
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then(a.cmp(&b))
+            });
+            for k in 0..self.meta.topk {
+                match order.get(k) {
+                    Some(&i) => {
+                        vals.push(e[i]);
+                        idx.push(i as i32);
+                        residual[i] = 0.0;
+                    }
+                    None => {
+                        // Chunk entirely past param_count: emit padding
+                        // coefficients so the wire shape stays fixed.
+                        vals.push(0.0);
+                        idx.push((lo + k) as i32);
+                    }
+                }
+            }
+        }
+        Ok((vals, idx, residual))
+    }
+
+    fn apply_update(&self, theta: &[f32], coeff: &[f32], lr: f32) -> Result<Vec<f32>> {
+        self.check_theta(theta)?;
+        if coeff.len() != self.meta.padded_count {
+            bail!("coeff has {} values, expected {}", coeff.len(), self.meta.padded_count);
+        }
+        Ok(self.signed_step(theta, coeff, lr))
+    }
+
+    fn eval_peer(
+        &self,
+        theta: &[f32],
+        coeff: &[f32],
+        beta: f32,
+        tok_assigned: &[i32],
+        tok_rand: &[i32],
+    ) -> Result<(f32, f32, f32, f32)> {
+        self.check_theta(theta)?;
+        if coeff.len() != self.meta.padded_count {
+            bail!("coeff has {} values, expected {}", coeff.len(), self.meta.padded_count);
+        }
+        self.check_tokens(tok_assigned)?;
+        self.check_tokens(tok_rand)?;
+        let stepped = self.signed_step(theta, coeff, beta);
+        let ua = self.token_direction(tok_assigned);
+        let ur = self.token_direction(tok_rand);
+        Ok((
+            self.loss_for_direction(theta, &ua) as f32,
+            self.loss_for_direction(&stepped, &ua) as f32,
+            self.loss_for_direction(theta, &ur) as f32,
+            self.loss_for_direction(&stepped, &ur) as f32,
+        ))
+    }
+
+    fn as_shared(&self) -> Option<&(dyn ExecBackend + Sync)> {
+        // Every method is a pure function over plain data: safe to call
+        // from any worker directly, no owner-thread funnel required.
+        Some(self)
+    }
+
+    fn adamw_step(
+        &self,
+        theta: &[f32],
+        m: &[f32],
+        v: &[f32],
+        tokens: &[i32],
+        lr: f32,
+        t: f32,
+    ) -> Result<(f32, Vec<f32>, Vec<f32>, Vec<f32>)> {
+        self.check_theta(theta)?;
+        self.check_theta(m)?;
+        self.check_theta(v)?;
+        let (loss, g) = self.grad(theta, tokens)?;
+        // Same constants as `coordinator::baseline::AdamWParams::default`.
+        let (b1, b2, eps, wd) = (0.9f32, 0.95f32, 1e-8f32, 0.1f32);
+        let (bc1, bc2) = (1.0 - b1.powf(t), 1.0 - b2.powf(t));
+        let mut theta2 = theta.to_vec();
+        let mut m2 = m.to_vec();
+        let mut v2 = v.to_vec();
+        for i in 0..theta.len() {
+            m2[i] = b1 * m2[i] + (1.0 - b1) * g[i];
+            v2[i] = b2 * v2[i] + (1.0 - b2) * g[i] * g[i];
+            let mhat = m2[i] / bc1;
+            let vhat = v2[i] / bc2;
+            theta2[i] -= lr * (mhat / (vhat.sqrt() + eps) + wd * theta2[i]);
+        }
+        Ok((loss, theta2, m2, v2))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sim() -> SimExec {
+        SimExec::new(&SimSpec::nano(), 7)
+    }
+
+    fn tokens(sim: &SimExec, tag: i32) -> Vec<i32> {
+        let n = sim.meta.batch * (sim.meta.seq + 1);
+        (0..n as i32).map(|i| (i * 31 + tag) % sim.meta.vocab as i32).collect()
+    }
+
+    #[test]
+    fn meta_satisfies_abi_invariants() {
+        for spec in [SimSpec::nano(), SimSpec::mid(), SimSpec::for_model_name("tiny")] {
+            let m = spec.build_meta();
+            assert_eq!(m.padded_count, m.n_chunks * m.chunk * m.chunk);
+            assert_eq!(m.coeff_count, m.n_chunks * m.topk);
+            let covered: usize = m.params.iter().map(|p| p.size).sum();
+            assert_eq!(covered, m.param_count);
+            let probe = m.sync_probe_indices();
+            assert!(probe.iter().all(|&i| i < m.param_count));
+        }
+    }
+
+    #[test]
+    fn everything_is_deterministic() {
+        let a = sim();
+        let b = sim();
+        let theta = a.init_params().unwrap();
+        assert_eq!(theta, b.init_params().unwrap());
+        let toks = tokens(&a, 1);
+        assert_eq!(a.loss(&theta, &toks).unwrap(), b.loss(&theta, &toks).unwrap());
+        let (la, ga) = a.grad(&theta, &toks).unwrap();
+        let (lb, gb) = b.grad(&theta, &toks).unwrap();
+        assert_eq!((la, ga), (lb, gb));
+    }
+
+    #[test]
+    fn loss_is_near_log_vocab_and_falls_along_gradient() {
+        let e = sim();
+        let theta = e.init_params().unwrap();
+        let toks = tokens(&e, 0);
+        let (l0, g) = e.grad(&theta, &toks).unwrap();
+        let expect = (e.meta.vocab as f32).ln();
+        assert!((l0 - expect).abs() < 2.0, "init loss {l0} vs ln(V)={expect}");
+        let stepped: Vec<f32> = theta.iter().zip(&g).map(|(t, gi)| t - 0.05 * gi).collect();
+        let l1 = e.loss(&stepped, &toks).unwrap();
+        assert!(l1 < l0, "gradient step must reduce loss: {l0} -> {l1}");
+    }
+
+    #[test]
+    fn compress_emits_fixed_shape_and_strips_residual() {
+        let e = sim();
+        let theta = e.init_params().unwrap();
+        let toks = tokens(&e, 2);
+        let (_, g) = e.grad(&theta, &toks).unwrap();
+        let err = vec![0.0f32; e.meta.param_count];
+        let (vals, idx, e2) = e.demo_compress(&err, &g, 0.0).unwrap();
+        assert_eq!(vals.len(), e.meta.coeff_count);
+        assert_eq!(idx.len(), e.meta.coeff_count);
+        let m = (e.meta.chunk * e.meta.chunk) as i32;
+        for (j, &i) in idx.iter().enumerate() {
+            let chunk = j / e.meta.topk;
+            assert!(i >= chunk as i32 * m && i < (chunk as i32 + 1) * m, "idx stripe at {j}");
+        }
+        let gn: f64 = g.iter().map(|x| (*x as f64).powi(2)).sum::<f64>().sqrt();
+        let en: f64 = e2.iter().map(|x| (*x as f64).powi(2)).sum::<f64>().sqrt();
+        assert!(en < gn, "top-k must remove energy: {en} !< {gn}");
+    }
+
+    #[test]
+    fn apply_update_is_exactly_one_signed_step() {
+        let e = sim();
+        let theta = e.init_params().unwrap();
+        let mut coeff = vec![0.0f32; e.meta.padded_count];
+        coeff[0] = 1.0;
+        coeff[5] = -2.0;
+        let lr = 0.02f32;
+        let theta2 = e.apply_update(&theta, &coeff, lr).unwrap();
+        for (i, (a, b)) in theta.iter().zip(&theta2).enumerate() {
+            let d = (a - b).abs();
+            assert!(d == 0.0 || (d - lr).abs() < 1e-7, "step at {i} must be 0 or ±lr, got {d}");
+        }
+        assert!((theta[0] - theta2[0] - lr).abs() < 1e-7);
+        assert!((theta2[5] - theta[5] - lr).abs() < 1e-7);
+    }
+
+    #[test]
+    fn assigned_data_scores_higher_than_random_for_real_training() {
+        // The PoC signal (eq. 3): compress a gradient computed on T_a, step
+        // with it, and the loss drop on T_a should (on average over many
+        // shards) exceed the drop on unrelated data.
+        let e = sim();
+        let mut theta = e.init_params().unwrap();
+        // Train until the quadratic term is small, so the per-shard
+        // delta-alignment dominates coefficient selection.
+        for r in 0..150 {
+            let toks = tokens(&e, r);
+            let (_, g) = e.grad(&theta, &toks).unwrap();
+            theta = theta.iter().zip(&g).map(|(t, gi)| t - 0.02 * gi).collect();
+        }
+        let mut diff_sum = 0.0;
+        let n_trials = 20;
+        for r in 0..n_trials {
+            let ta = tokens(&e, 100 + r);
+            let tr = tokens(&e, 10_000 + r);
+            let (_, g) = e.grad(&theta, &ta).unwrap();
+            let err = vec![0.0f32; e.meta.param_count];
+            let (vals, idx, _) = e.demo_compress(&err, &g, 0.999).unwrap();
+            let mut coeff = vec![0.0f32; e.meta.padded_count];
+            for (v, i) in vals.iter().zip(&idx) {
+                coeff[*i as usize] += v;
+            }
+            let (la0, la1, lr0, lr1) = e.eval_peer(&theta, &coeff, 0.01, &ta, &tr).unwrap();
+            diff_sum += (la0 - la1) as f64 - (lr0 - lr1) as f64;
+        }
+        assert!(
+            diff_sum / n_trials as f64 > 0.0,
+            "assigned-shard LossScore must exceed random-shard on average: {diff_sum}"
+        );
+    }
+
+    #[test]
+    fn shape_errors_are_loud() {
+        let e = sim();
+        let theta = e.init_params().unwrap();
+        assert!(e.loss(&theta[1..], &tokens(&e, 0)).is_err());
+        assert!(e.loss(&theta, &[1, 2, 3]).is_err());
+        assert!(e.apply_update(&theta, &[0.0; 3], 0.1).is_err());
+    }
+}

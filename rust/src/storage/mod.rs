@@ -14,13 +14,33 @@
 //!     "reliability of the cloud provider" caveat in §5),
 //!   - put-window enforcement as a *reader-side* filter, exactly like the
 //!     validator ignores out-of-window objects in the live system.
+//!
+//! # Concurrency
+//!
+//! Like a real provider, the store is shared: every method takes `&self`,
+//! buckets are partitioned across [`SHARDS`] independent `RwLock`s (keyed
+//! by bucket-name hash), and objects are handed out as `Arc` clones. The
+//! parallel round pipeline (`coordinator::run`) fans each validator's
+//! fast-evaluation reads over a worker pool, so concurrent
+//! [`ObjectStore::get_within_window`] calls on different peers' buckets
+//! must not serialize on one map — per-bucket sharding gives readers of
+//! distinct buckets disjoint locks, and `RwLock` lets readers of the same
+//! bucket proceed together. The provider's latency/outage RNG sits behind
+//! its own mutex; the coordinator applies PUTs in deterministic peer order
+//! so draws are reproducible regardless of worker timing.
 
 use std::collections::BTreeMap;
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
 
 use crate::util::Rng;
 
 /// Simulation time in milliseconds since run start.
 pub type SimTime = u64;
+
+/// Number of independent bucket shards (power of two).
+pub const SHARDS: usize = 16;
 
 /// A stored object with its server-assigned timestamp.
 #[derive(Clone, Debug, PartialEq)]
@@ -50,7 +70,7 @@ pub enum StorageError {
 struct Bucket {
     owner: String,
     read_key: ReadKey,
-    objects: BTreeMap<String, Object>,
+    objects: BTreeMap<String, Arc<Object>>,
 }
 
 /// Latency / reliability model for the simulated provider.
@@ -76,25 +96,38 @@ impl Default for ProviderModel {
 }
 
 /// The simulated S3 provider: all buckets, one global object namespace per
-/// bucket, server-side clocks.
+/// bucket, server-side clocks. Shareable across validator worker threads
+/// (`&ObjectStore` is `Send + Sync`).
 pub struct ObjectStore {
-    buckets: BTreeMap<String, Bucket>,
+    shards: Vec<RwLock<BTreeMap<String, Bucket>>>,
     pub model: ProviderModel,
-    rng: Rng,
-    next_key_id: u64,
+    /// Latency/outage draws; locked only on the (write-side) PUT path.
+    rng: Mutex<Rng>,
+    next_key_id: AtomicU64,
 }
 
 impl ObjectStore {
     pub fn new(model: ProviderModel, seed: u64) -> Self {
-        ObjectStore { buckets: BTreeMap::new(), model, rng: Rng::new(seed), next_key_id: 0 }
+        ObjectStore {
+            shards: (0..SHARDS).map(|_| RwLock::new(BTreeMap::new())).collect(),
+            model,
+            rng: Mutex::new(Rng::new(seed)),
+            next_key_id: AtomicU64::new(0),
+        }
+    }
+
+    fn shard(&self, bucket: &str) -> &RwLock<BTreeMap<String, Bucket>> {
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        bucket.hash(&mut h);
+        &self.shards[(h.finish() as usize) & (SHARDS - 1)]
     }
 
     /// Create a bucket owned by `owner`; returns the read key the owner
     /// would post on-chain.
-    pub fn create_bucket(&mut self, name: &str, owner: &str) -> ReadKey {
-        self.next_key_id += 1;
-        let key = ReadKey(format!("rk-{}-{:08x}", name, self.next_key_id));
-        self.buckets.insert(
+    pub fn create_bucket(&self, name: &str, owner: &str) -> ReadKey {
+        let id = self.next_key_id.fetch_add(1, Ordering::Relaxed) + 1;
+        let key = ReadKey(format!("rk-{name}-{id:08x}"));
+        self.shard(name).write().unwrap().insert(
             name.to_string(),
             Bucket { owner: owner.to_string(), read_key: key.clone(), objects: BTreeMap::new() },
         );
@@ -102,14 +135,14 @@ impl ObjectStore {
     }
 
     pub fn bucket_exists(&self, name: &str) -> bool {
-        self.buckets.contains_key(name)
+        self.shard(name).read().unwrap().contains_key(name)
     }
 
     /// PUT an object. `now` is the client's send time; the stored timestamp
     /// is send time + simulated upload latency. Returns the server-side
     /// stored-at time, or an error on outage / size limit / ACL.
     pub fn put(
-        &mut self,
+        &self,
         bucket: &str,
         writer: &str,
         key: &str,
@@ -122,40 +155,51 @@ impl ObjectStore {
                 limit: self.model.max_object_bytes,
             });
         }
-        if self.model.outage_prob > 0.0 && self.rng.chance(self.model.outage_prob) {
-            return Err(StorageError::Outage);
-        }
-        let latency = (self.model.mean_upload_ms
-            + self.rng.normal() * self.model.jitter_ms)
-            .max(1.0) as u64;
-        let b = self
-            .buckets
+        // One lock hold for both draws keeps the draw sequence identical to
+        // the pre-sharding sequential store.
+        let latency = {
+            let mut rng = self.rng.lock().unwrap();
+            if self.model.outage_prob > 0.0 && rng.chance(self.model.outage_prob) {
+                return Err(StorageError::Outage);
+            }
+            (self.model.mean_upload_ms + rng.normal() * self.model.jitter_ms).max(1.0) as u64
+        };
+        let mut shard = self.shard(bucket).write().unwrap();
+        let b = shard
             .get_mut(bucket)
             .ok_or_else(|| StorageError::NoBucket(bucket.to_string()))?;
         if b.owner != writer {
             return Err(StorageError::AccessDenied(bucket.to_string()));
         }
         let stored_at = now + latency;
-        b.objects.insert(key.to_string(), Object { key: key.to_string(), bytes, stored_at });
+        b.objects.insert(
+            key.to_string(),
+            Arc::new(Object { key: key.to_string(), bytes, stored_at }),
+        );
         Ok(stored_at)
     }
 
     /// GET with a read key (as validators do, using the on-chain key).
-    pub fn get(&self, bucket: &str, rk: &ReadKey, key: &str) -> Result<Option<&Object>, StorageError> {
-        let b = self
-            .buckets
+    pub fn get(
+        &self,
+        bucket: &str,
+        rk: &ReadKey,
+        key: &str,
+    ) -> Result<Option<Arc<Object>>, StorageError> {
+        let shard = self.shard(bucket).read().unwrap();
+        let b = shard
             .get(bucket)
             .ok_or_else(|| StorageError::NoBucket(bucket.to_string()))?;
         if &b.read_key != rk {
             return Err(StorageError::AccessDenied(bucket.to_string()));
         }
-        Ok(b.objects.get(key))
+        Ok(b.objects.get(key).cloned())
     }
 
     /// List all objects in a bucket (metadata view).
     pub fn list(&self, bucket: &str, rk: &ReadKey) -> Result<Vec<(String, SimTime)>, StorageError> {
-        let b = self
-            .buckets
+        let shard = self.shard(bucket).read().unwrap();
+        let b = shard
             .get(bucket)
             .ok_or_else(|| StorageError::NoBucket(bucket.to_string()))?;
         if &b.read_key != rk {
@@ -166,10 +210,11 @@ impl ObjectStore {
 
     /// Reader-side put-window filter: fetch `key` only if its server
     /// timestamp falls inside `[window_start, window_end]` — the §3.2
-    /// "basic checks (a)" rule. Returns:
-    ///   Ok(Some(..))  in-window object
-    ///   Ok(None)      object missing (basic check (b) fails)
-    ///   Err(OutOfWindow { .. }) present but early/late
+    /// "basic checks (a)" rule. Both endpoints are inclusive: an object
+    /// stored exactly on the window open or close is in-window. Returns:
+    ///   `WindowedGet::InWindow(..)`   in-window object
+    ///   `WindowedGet::Missing`        object absent (basic check (b) fails)
+    ///   `WindowedGet::TooEarly/Late`  present but outside the window
     pub fn get_within_window(
         &self,
         bucket: &str,
@@ -177,7 +222,7 @@ impl ObjectStore {
         key: &str,
         window_start: SimTime,
         window_end: SimTime,
-    ) -> Result<WindowedGet<'_>, StorageError> {
+    ) -> Result<WindowedGet, StorageError> {
         match self.get(bucket, rk, key)? {
             None => Ok(WindowedGet::Missing),
             Some(o) if o.stored_at < window_start => Ok(WindowedGet::TooEarly(o.stored_at)),
@@ -188,8 +233,9 @@ impl ObjectStore {
 
     /// Garbage-collect objects stored before `cutoff` (peers prune old
     /// rounds so buckets stay small).
-    pub fn prune_before(&mut self, bucket: &str, writer: &str, cutoff: SimTime) -> usize {
-        let Some(b) = self.buckets.get_mut(bucket) else { return 0 };
+    pub fn prune_before(&self, bucket: &str, writer: &str, cutoff: SimTime) -> usize {
+        let mut shard = self.shard(bucket).write().unwrap();
+        let Some(b) = shard.get_mut(bucket) else { return 0 };
         if b.owner != writer {
             return 0;
         }
@@ -200,9 +246,10 @@ impl ObjectStore {
 }
 
 /// Result of a windowed GET (see [`ObjectStore::get_within_window`]).
-#[derive(Debug)]
-pub enum WindowedGet<'a> {
-    InWindow(&'a Object),
+/// Owns its object handle so results can cross worker-thread boundaries.
+#[derive(Clone, Debug)]
+pub enum WindowedGet {
+    InWindow(Arc<Object>),
     Missing,
     TooEarly(SimTime),
     TooLate(SimTime),
@@ -219,7 +266,7 @@ mod tests {
 
     #[test]
     fn put_get_roundtrip_with_read_key() {
-        let mut s = store();
+        let s = store();
         let rk = s.create_bucket("peer-0", "peer-0");
         let t = s.put("peer-0", "peer-0", "grad-17", vec![1, 2, 3], 1000).unwrap();
         assert!(t >= 1100, "latency applied");
@@ -230,7 +277,7 @@ mod tests {
 
     #[test]
     fn wrong_read_key_denied() {
-        let mut s = store();
+        let s = store();
         let _rk = s.create_bucket("peer-0", "peer-0");
         let bad = ReadKey("rk-fake".into());
         assert_eq!(s.get("peer-0", &bad, "x"), Err(StorageError::AccessDenied("peer-0".into())));
@@ -238,7 +285,7 @@ mod tests {
 
     #[test]
     fn only_owner_can_write() {
-        let mut s = store();
+        let s = store();
         s.create_bucket("peer-0", "peer-0");
         let err = s.put("peer-0", "peer-1", "k", vec![], 0).unwrap_err();
         assert_eq!(err, StorageError::AccessDenied("peer-0".into()));
@@ -255,12 +302,11 @@ mod tests {
 
     #[test]
     fn window_filter_classifies_early_late_missing() {
-        let mut s = store();
+        let s = store();
         let rk = s.create_bucket("b", "b");
         s.put("b", "b", "ontime", vec![1], 1000).unwrap(); // stored ~1100
         s.put("b", "b", "early", vec![2], 0).unwrap(); // stored ~100
         s.put("b", "b", "late", vec![3], 99_000).unwrap(); // stored ~99100
-
         let w = |k: &str| s.get_within_window("b", &rk, k, 500, 2000).unwrap();
         assert!(matches!(w("ontime"), WindowedGet::InWindow(_)));
         assert!(matches!(w("early"), WindowedGet::TooEarly(_)));
@@ -269,9 +315,32 @@ mod tests {
     }
 
     #[test]
+    fn window_boundaries_are_inclusive() {
+        // jitter = 0 lands objects at exactly now + mean_upload_ms, so the
+        // boundary semantics are testable: exactly-on-open and
+        // exactly-on-close are both in-window; one ms outside is not.
+        let s = store();
+        let rk = s.create_bucket("b", "b");
+        let on_open = s.put("b", "b", "on-open", vec![1], 400).unwrap();
+        assert_eq!(on_open, 500);
+        let on_close = s.put("b", "b", "on-close", vec![2], 1900).unwrap();
+        assert_eq!(on_close, 2000);
+        let before_open = s.put("b", "b", "before-open", vec![3], 399).unwrap();
+        assert_eq!(before_open, 499);
+        let after_close = s.put("b", "b", "after-close", vec![4], 1901).unwrap();
+        assert_eq!(after_close, 2001);
+
+        let w = |k: &str| s.get_within_window("b", &rk, k, 500, 2000).unwrap();
+        assert!(matches!(w("on-open"), WindowedGet::InWindow(_)), "open edge is inclusive");
+        assert!(matches!(w("on-close"), WindowedGet::InWindow(_)), "close edge is inclusive");
+        assert!(matches!(w("before-open"), WindowedGet::TooEarly(499)));
+        assert!(matches!(w("after-close"), WindowedGet::TooLate(2001)));
+    }
+
+    #[test]
     fn outage_injection_fails_puts() {
         let model = ProviderModel { outage_prob: 1.0, ..Default::default() };
-        let mut s = ObjectStore::new(model, 1);
+        let s = ObjectStore::new(model, 1);
         s.create_bucket("b", "b");
         assert_eq!(s.put("b", "b", "k", vec![], 0), Err(StorageError::Outage));
     }
@@ -279,7 +348,7 @@ mod tests {
     #[test]
     fn size_limit_enforced() {
         let model = ProviderModel { max_object_bytes: 4, ..Default::default() };
-        let mut s = ObjectStore::new(model, 1);
+        let s = ObjectStore::new(model, 1);
         s.create_bucket("b", "b");
         assert!(matches!(
             s.put("b", "b", "k", vec![0; 5], 0),
@@ -289,7 +358,7 @@ mod tests {
 
     #[test]
     fn overwrite_updates_timestamp() {
-        let mut s = store();
+        let s = store();
         let rk = s.create_bucket("b", "b");
         let t1 = s.put("b", "b", "k", vec![1], 0).unwrap();
         let t2 = s.put("b", "b", "k", vec![2], 5000).unwrap();
@@ -299,7 +368,7 @@ mod tests {
 
     #[test]
     fn prune_removes_old_objects_only_for_owner() {
-        let mut s = store();
+        let s = store();
         let rk = s.create_bucket("b", "b");
         s.put("b", "b", "old", vec![1], 0).unwrap();
         s.put("b", "b", "new", vec![2], 10_000).unwrap();
@@ -311,12 +380,49 @@ mod tests {
 
     #[test]
     fn list_returns_metadata() {
-        let mut s = store();
+        let s = store();
         let rk = s.create_bucket("b", "b");
         s.put("b", "b", "a", vec![1], 0).unwrap();
         s.put("b", "b", "c", vec![2], 0).unwrap();
         let ls = s.list("b", &rk).unwrap();
         assert_eq!(ls.len(), 2);
         assert!(ls.iter().any(|(k, _)| k == "a"));
+    }
+
+    #[test]
+    fn concurrent_reads_and_owner_writes_do_not_poison() {
+        // Smoke-test the sharded locking: 8 reader threads hammer windowed
+        // GETs across 32 buckets while the owner keeps writing new rounds.
+        let s = std::sync::Arc::new(store());
+        let mut keys = Vec::new();
+        for i in 0..32 {
+            let b = format!("peer-{i}");
+            keys.push(s.create_bucket(&b, &b));
+            s.put(&b, &b, "r0", vec![i as u8], 1000).unwrap();
+        }
+        std::thread::scope(|scope| {
+            for t in 0..8 {
+                let s = &s;
+                let keys = &keys;
+                scope.spawn(move || {
+                    for i in 0..32usize {
+                        let b = format!("peer-{}", (i + t) % 32);
+                        let rk = &keys[(i + t) % 32];
+                        let got = s.get_within_window(&b, rk, "r0", 0, 10_000).unwrap();
+                        assert!(matches!(got, WindowedGet::InWindow(_)));
+                    }
+                });
+            }
+            scope.spawn(|| {
+                for i in 0..32 {
+                    let b = format!("peer-{i}");
+                    s.put(&b, &b, "r1", vec![0], 2000).unwrap();
+                }
+            });
+        });
+        for i in 0..32 {
+            let b = format!("peer-{i}");
+            assert_eq!(s.list(&b, &keys[i]).unwrap().len(), 2);
+        }
     }
 }

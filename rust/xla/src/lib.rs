@@ -1,0 +1,263 @@
+//! Dependency-free stand-in for the `xla-rs` PJRT bindings.
+//!
+//! The gauntlet runtime (`gauntlet::runtime::Executor`) drives XLA through
+//! exactly the API surface reproduced here: a CPU [`PjRtClient`], HLO-text
+//! parsing into an [`XlaComputation`], compilation to a
+//! [`PjRtLoadedExecutable`], and host<->device [`Literal`] plumbing.
+//!
+//! This crate implements the *host* side for real — typed literals,
+//! reshapes, tuple unpacking — so everything that doesn't execute HLO
+//! compiles and unit-tests without native XLA. The *device* side
+//! ([`HloModuleProto::from_text_file`], [`PjRtClient::compile`],
+//! [`PjRtLoadedExecutable::execute`]) returns a descriptive [`Error`]:
+//! swap this path dependency for the real bindings to run compiled
+//! artifacts (the `gauntlet` README's "Runtime backends" section walks
+//! through it). Simulation workloads that don't need XLA use
+//! `gauntlet::runtime::SimExec` instead and never hit this boundary.
+
+use std::fmt;
+
+/// Error type mirroring the bindings' stringly-typed errors.
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "{what} requires the native XLA/PJRT backend, but this build uses \
+         the dependency-free `xla` stub crate; swap rust/xla for the real \
+         bindings to execute HLO artifacts, or use the SimExec backend"
+    )))
+}
+
+/// Element storage for a [`Literal`]: the two dtypes the artifacts use,
+/// plus tuples (artifacts are lowered with `return_tuple=True`).
+#[derive(Clone, Debug, PartialEq)]
+pub enum LiteralData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Tuple(Vec<Literal>),
+}
+
+/// Host-side typed array, the unit of transfer to and from the device.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Literal {
+    data: LiteralData,
+    dims: Vec<i64>,
+}
+
+mod sealed {
+    pub trait Sealed {}
+    impl Sealed for f32 {}
+    impl Sealed for i32 {}
+}
+
+/// Scalar types the artifacts' ABI uses (`f32` parameters/losses, `i32`
+/// tokens/indices).
+pub trait NativeType: sealed::Sealed + Copy {
+    fn wrap(v: Vec<Self>) -> LiteralData;
+    fn slice(data: &LiteralData) -> Option<&[Self]>;
+    const NAME: &'static str;
+}
+
+impl NativeType for f32 {
+    fn wrap(v: Vec<Self>) -> LiteralData {
+        LiteralData::F32(v)
+    }
+    fn slice(data: &LiteralData) -> Option<&[Self]> {
+        match data {
+            LiteralData::F32(v) => Some(v),
+            _ => None,
+        }
+    }
+    const NAME: &'static str = "f32";
+}
+
+impl NativeType for i32 {
+    fn wrap(v: Vec<Self>) -> LiteralData {
+        LiteralData::I32(v)
+    }
+    fn slice(data: &LiteralData) -> Option<&[Self]> {
+        match data {
+            LiteralData::I32(v) => Some(v),
+            _ => None,
+        }
+    }
+    const NAME: &'static str = "i32";
+}
+
+impl Literal {
+    /// Rank-1 literal from a host slice.
+    pub fn vec1<T: NativeType>(v: &[T]) -> Literal {
+        Literal { dims: vec![v.len() as i64], data: T::wrap(v.to_vec()) }
+    }
+
+    /// Rank-0 f32 literal.
+    pub fn scalar(v: f32) -> Literal {
+        Literal { dims: vec![], data: LiteralData::F32(vec![v]) }
+    }
+
+    /// Tuple literal (what `return_tuple=True` artifacts produce).
+    pub fn tuple(items: Vec<Literal>) -> Literal {
+        Literal { dims: vec![], data: LiteralData::Tuple(items) }
+    }
+
+    pub fn element_count(&self) -> usize {
+        match &self.data {
+            LiteralData::F32(v) => v.len(),
+            LiteralData::I32(v) => v.len(),
+            LiteralData::Tuple(v) => v.len(),
+        }
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    /// Reinterpret the buffer with new dimensions (element count must
+    /// match, like `Literal::reshape` in the bindings).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        if matches!(self.data, LiteralData::Tuple(_)) {
+            return Err(Error("cannot reshape a tuple literal".to_string()));
+        }
+        let want: i64 = dims.iter().product();
+        let have = self.element_count() as i64;
+        if want != have {
+            return Err(Error(format!(
+                "reshape to {dims:?} ({want} elements) from {have} elements"
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    /// Copy out as a host vector of `T`.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        match T::slice(&self.data) {
+            Some(s) => Ok(s.to_vec()),
+            None => Err(Error(format!("literal does not hold {}", T::NAME))),
+        }
+    }
+
+    /// First element (scalar reads).
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T> {
+        let s = T::slice(&self.data)
+            .ok_or_else(|| Error(format!("literal does not hold {}", T::NAME)))?;
+        s.first().copied().ok_or_else(|| Error("empty literal".to_string()))
+    }
+
+    /// Unpack a tuple literal into its members.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        match &self.data {
+            LiteralData::Tuple(items) => Ok(items.clone()),
+            _ => Err(Error("literal is not a tuple".to_string())),
+        }
+    }
+}
+
+/// Parsed HLO module (opaque; parsing needs the native toolchain).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        unavailable("parsing HLO text")
+    }
+}
+
+/// An XLA computation ready for compilation.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// PJRT client handle. Creation succeeds (it allocates nothing here) so
+/// callers fail at the first operation that actually needs the backend,
+/// with a message naming that operation.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient)
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("compiling an XLA computation")
+    }
+}
+
+/// Compiled executable handle.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    /// Execute with one argument list on one device; the bindings return
+    /// per-device, per-output buffers.
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("executing a compiled artifact")
+    }
+}
+
+/// Device buffer handle.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("device-to-host transfer")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32_and_i32() {
+        let l = Literal::vec1(&[1.0f32, -2.5]);
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, -2.5]);
+        assert_eq!(l.get_first_element::<f32>().unwrap(), 1.0);
+        assert!(l.to_vec::<i32>().is_err(), "dtype mismatch must error");
+
+        let t = Literal::vec1(&[7i32, 8, 9]);
+        assert_eq!(t.to_vec::<i32>().unwrap(), vec![7, 8, 9]);
+        assert_eq!(t.dims(), &[3]);
+    }
+
+    #[test]
+    fn reshape_checks_element_count() {
+        let l = Literal::vec1(&[0i32; 6]);
+        assert_eq!(l.reshape(&[2, 3]).unwrap().dims(), &[2, 3]);
+        assert!(l.reshape(&[4, 2]).is_err());
+    }
+
+    #[test]
+    fn tuple_unpacks() {
+        let t = Literal::tuple(vec![Literal::scalar(1.0), Literal::vec1(&[2i32])]);
+        let items = t.to_tuple().unwrap();
+        assert_eq!(items.len(), 2);
+        assert_eq!(items[0].get_first_element::<f32>().unwrap(), 1.0);
+        assert!(Literal::scalar(0.0).to_tuple().is_err());
+    }
+
+    #[test]
+    fn device_path_reports_stub() {
+        let err = HloModuleProto::from_text_file("x.hlo.txt").err().unwrap();
+        assert!(err.to_string().contains("stub"), "{err}");
+        let client = PjRtClient::cpu().unwrap();
+        assert!(client.compile(&XlaComputation).is_err());
+        assert!(PjRtLoadedExecutable.execute::<Literal>(&[]).is_err());
+        assert!(PjRtBuffer.to_literal_sync().is_err());
+    }
+}
