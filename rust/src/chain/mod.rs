@@ -1,5 +1,6 @@
 //! Simulated Bittensor substrate: block clock, permissionless registration,
-//! stake, weight commits, Yuma consensus, and token emission.
+//! a bounded neuron-slot table with churn, stake, weight commits, Yuma
+//! consensus, and token emission.
 //!
 //! Gauntlet's scores only become money once a validator posts them to the
 //! chain and the chain combines (possibly several) validators' weight
@@ -8,8 +9,35 @@
 //! This module provides exactly that substrate, plus the two pieces of
 //! chain state the paper leans on elsewhere: a global block clock used to
 //! timestamp put windows (§5) and the read-key registry for peers' buckets.
+//!
+//! # Peer lifecycle and uid recycling
+//!
+//! The paper's "completely permissionless" population is dynamic: peers
+//! join, leave, and get displaced mid-run. Like the live subnet, the uid
+//! space is a bounded slot table ([`Chain::max_uids`]; 0 = unbounded):
+//!
+//! - [`Chain::deregister`] frees a neuron's slot. Its committed weight row
+//!   and any weights other validators committed *for* it are scrubbed, so
+//!   a later occupant of the uid inherits nothing.
+//! - Registration reuses the **lowest freed uid** before allocating a new
+//!   one; when every slot is occupied, the newcomer **evicts** the
+//!   lowest-incentive, zero-stake, non-permit neuron outside its immunity
+//!   period (ties broken by ascending uid), exactly Bittensor's
+//!   replacement rule. Validator identities hold a
+//!   [`Neuron::validator_permit`] and are never replacement victims, even
+//!   while demoted to zero stake. If every occupant is immune, staked, or
+//!   permit-holding, registration fails with [`ChainError::NoSlots`].
+//! - A neuron is immune for [`Chain::immunity_blocks`] blocks after
+//!   registration, giving newcomers time to earn their first incentive
+//!   before they can be displaced.
+//!
+//! **Recycled uids are new identities.** [`Registration::recycled`] tells
+//! the coordinator the uid had a previous occupant; everything keyed by
+//! uid off-chain — OpenSkill rating, proof-of-computation EMA, phi/sync
+//! history, the storage bucket — must be reset to a fresh prior, which is
+//! exactly what `coordinator::run` does on a recycled registration.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 
 pub mod yuma;
 
@@ -34,6 +62,13 @@ pub struct Neuron {
     pub registered_at_block: u64,
     /// Cumulative emission received.
     pub balance: f64,
+    /// Incentive from the most recent Yuma epoch (the eviction/pruning
+    /// score: full slots displace the lowest-incentive non-immune neuron).
+    pub last_incentive: f64,
+    /// Validator permit: the slot belongs to a validator identity and is
+    /// never a replacement victim, even while its stake is (temporarily)
+    /// zero — a demoted validator keeps its uid until it deregisters.
+    pub validator_permit: bool,
 }
 
 #[derive(Debug, thiserror::Error, PartialEq)]
@@ -46,6 +81,20 @@ pub enum ChainError {
     BadWeights,
     #[error("uid {0} has no stake; only validators may set weights")]
     NotValidator(Uid),
+    #[error("all {0} neuron slots are occupied by immune, staked, or permit-holding neurons")]
+    NoSlots(usize),
+}
+
+/// What [`Chain::register_replacing`] did.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Registration {
+    pub uid: Uid,
+    /// The uid had a previous occupant (freed by deregistration or evicted
+    /// just now) — off-chain state keyed by this uid must be reset.
+    pub recycled: bool,
+    /// Hotkey of the neuron evicted to make room, if slot pressure forced
+    /// a replacement.
+    pub evicted_hotkey: Option<String>,
 }
 
 /// The simulated subnet.
@@ -53,11 +102,18 @@ pub struct Chain {
     pub block: u64,
     neurons: BTreeMap<Uid, Neuron>,
     next_uid: Uid,
+    /// Uids freed by deregistration, reused lowest-first.
+    free_uids: BTreeSet<Uid>,
     /// Latest committed weight vector per validator uid: target uid -> w.
     weights: BTreeMap<Uid, BTreeMap<Uid, f64>>,
     pub yuma: YumaParams,
     /// TAO emitted to contributors per epoch (paper: real-valued payouts).
     pub emission_per_epoch: f64,
+    /// Neuron-slot capacity (0 = unbounded). When full, a new registration
+    /// evicts the lowest-incentive non-immune zero-stake neuron.
+    pub max_uids: usize,
+    /// Blocks after registration during which a neuron cannot be evicted.
+    pub immunity_blocks: u64,
 }
 
 impl Chain {
@@ -66,9 +122,12 @@ impl Chain {
             block: 0,
             neurons: BTreeMap::new(),
             next_uid: 0,
+            free_uids: BTreeSet::new(),
             weights: BTreeMap::new(),
             yuma: YumaParams::default(),
             emission_per_epoch: 1.0,
+            max_uids: 0,
+            immunity_blocks: 0,
         }
     }
 
@@ -85,12 +144,38 @@ impl Chain {
     /// Permissionless registration: anyone with a fresh hotkey gets a uid.
     /// (The live chain charges a registration fee / PoW; economically that
     /// is folded into the incentive analysis, not modelled here.)
+    ///
+    /// Convenience wrapper over [`Chain::register_replacing`] for callers
+    /// that only need the uid.
     pub fn register(&mut self, hotkey: &str) -> Result<Uid, ChainError> {
+        self.register_replacing(hotkey).map(|r| r.uid)
+    }
+
+    /// Permissionless registration with full slot-table semantics (see the
+    /// module docs): freed uids are reused lowest-first, and when every
+    /// slot is occupied the lowest-incentive non-immune zero-stake neuron
+    /// is evicted to make room. The caller learns via
+    /// [`Registration::recycled`] whether off-chain per-uid state must be
+    /// reset.
+    pub fn register_replacing(&mut self, hotkey: &str) -> Result<Registration, ChainError> {
         if self.neurons.values().any(|n| n.hotkey == hotkey) {
             return Err(ChainError::DuplicateHotkey(hotkey.to_string()));
         }
-        let uid = self.next_uid;
-        self.next_uid += 1;
+        let lowest_free = self.free_uids.iter().next().copied();
+        let (uid, recycled, evicted_hotkey) = if let Some(uid) = lowest_free {
+            self.free_uids.remove(&uid);
+            (uid, true, None)
+        } else if self.max_uids == 0 || self.neurons.len() < self.max_uids {
+            let uid = self.next_uid;
+            self.next_uid += 1;
+            (uid, false, None)
+        } else {
+            let victim = self.eviction_candidate().ok_or(ChainError::NoSlots(self.max_uids))?;
+            let hk = self.neurons[&victim].hotkey.clone();
+            self.deregister(victim)?;
+            self.free_uids.remove(&victim);
+            (victim, true, Some(hk))
+        };
         self.neurons.insert(
             uid,
             Neuron {
@@ -100,14 +185,65 @@ impl Chain {
                 bucket_read_key: None,
                 registered_at_block: self.block,
                 balance: 0.0,
+                last_incentive: 0.0,
+                validator_permit: false,
             },
         );
-        Ok(uid)
+        Ok(Registration { uid, recycled, evicted_hotkey })
+    }
+
+    /// Free a neuron's slot (a peer leaving, or the replacement rule).
+    /// Scrubs the neuron's committed weight row and every weight other
+    /// validators committed *for* it, so a future occupant of the uid
+    /// inherits nothing.
+    pub fn deregister(&mut self, uid: Uid) -> Result<(), ChainError> {
+        if self.neurons.remove(&uid).is_none() {
+            return Err(ChainError::UnknownUid(uid));
+        }
+        self.weights.remove(&uid);
+        for row in self.weights.values_mut() {
+            row.remove(&uid);
+        }
+        self.free_uids.insert(uid);
+        Ok(())
+    }
+
+    /// Whether `uid` is inside its post-registration immunity period.
+    pub fn is_immune(&self, uid: Uid) -> bool {
+        self.neurons.get(&uid).is_some_and(|n| {
+            self.block < n.registered_at_block.saturating_add(self.immunity_blocks)
+        })
+    }
+
+    /// Grant or revoke a validator permit (see [`Neuron::validator_permit`]).
+    pub fn set_validator_permit(&mut self, uid: Uid, permit: bool) -> Result<(), ChainError> {
+        let n = self.neurons.get_mut(&uid).ok_or(ChainError::UnknownUid(uid))?;
+        n.validator_permit = permit;
+        Ok(())
+    }
+
+    /// The neuron a full slot table would evict: lowest `last_incentive`
+    /// among non-immune, zero-stake, non-permit neurons, ties broken by
+    /// ascending uid. Staked neurons and validator-permit holders (even
+    /// temporarily demoted ones) are never evicted.
+    pub fn eviction_candidate(&self) -> Option<Uid> {
+        self.neurons
+            .values()
+            .filter(|n| n.stake <= 0.0 && !n.validator_permit && !self.is_immune(n.uid))
+            .min_by(|a, b| a.last_incentive.total_cmp(&b.last_incentive).then(a.uid.cmp(&b.uid)))
+            .map(|n| n.uid)
     }
 
     pub fn add_stake(&mut self, uid: Uid, amount: f64) -> Result<(), ChainError> {
         let n = self.neurons.get_mut(&uid).ok_or(ChainError::UnknownUid(uid))?;
         n.stake += amount;
+        Ok(())
+    }
+
+    /// Set a neuron's stake to an absolute amount (scenario scripting).
+    pub fn set_stake(&mut self, uid: Uid, amount: f64) -> Result<(), ChainError> {
+        let n = self.neurons.get_mut(&uid).ok_or(ChainError::UnknownUid(uid))?;
+        n.stake = amount;
         Ok(())
     }
 
@@ -130,10 +266,13 @@ impl Chain {
         self.neurons.keys().copied().collect()
     }
 
-    /// Validators = staked neurons, ordered by stake descending.
+    /// Validators = staked neurons, ordered by stake descending with an
+    /// ascending-uid tiebreak. `total_cmp` keeps the order total (and
+    /// panic-free) even for NaN stakes, so the lead validator — and thus
+    /// which weight vector drives aggregation — is always deterministic.
     pub fn validators(&self) -> Vec<Uid> {
         let mut v: Vec<&Neuron> = self.neurons.values().filter(|n| n.stake > 0.0).collect();
-        v.sort_by(|a, b| b.stake.partial_cmp(&a.stake).unwrap());
+        v.sort_by(|a, b| b.stake.total_cmp(&a.stake).then(a.uid.cmp(&b.uid)));
         v.into_iter().map(|n| n.uid).collect()
     }
 
@@ -170,8 +309,21 @@ impl Chain {
     /// with incentives summing to 1 over peers with any weight (or empty
     /// if no validator has committed anything).
     pub fn run_epoch(&mut self) -> Vec<(Uid, f64)> {
-        let validators: Vec<Uid> =
-            self.weights.keys().copied().filter(|v| self.neurons[v].stake > 0.0).collect();
+        // Every epoch resets the eviction scores first — including epochs
+        // that pay nobody (no staked committer left): `last_incentive`
+        // must reflect the *current* epoch, or eviction would rank peers
+        // by a consensus that no longer exists.
+        for n in self.neurons.values_mut() {
+            n.last_incentive = 0.0;
+        }
+        // Defensive re-check: a committer may have lost its stake (or its
+        // slot) since it set weights.
+        let validators: Vec<Uid> = self
+            .weights
+            .keys()
+            .copied()
+            .filter(|v| self.neurons.get(v).is_some_and(|n| n.stake > 0.0))
+            .collect();
         if validators.is_empty() {
             return vec![];
         }
@@ -192,7 +344,9 @@ impl Chain {
             .filter(|(_, inc)| *inc > 0.0)
             .collect();
         for (uid, inc) in &out {
-            self.neurons.get_mut(uid).unwrap().balance += inc * self.emission_per_epoch;
+            let n = self.neurons.get_mut(uid).unwrap();
+            n.balance += inc * self.emission_per_epoch;
+            n.last_incentive = *inc;
         }
         out
     }
@@ -283,6 +437,192 @@ mod tests {
         c.add_stake(a, 10.0).unwrap();
         c.add_stake(b, 50.0).unwrap();
         assert_eq!(c.lead_validator(), Some(b));
+    }
+
+    #[test]
+    fn validators_tied_stakes_break_by_uid() {
+        let mut c = Chain::new();
+        let a = c.register("a").unwrap();
+        let b = c.register("b").unwrap();
+        let d = c.register("d").unwrap();
+        c.add_stake(b, 50.0).unwrap();
+        c.add_stake(a, 50.0).unwrap();
+        c.add_stake(d, 50.0).unwrap();
+        assert_eq!(c.validators(), vec![a, b, d], "ties break by ascending uid");
+        assert_eq!(c.lead_validator(), Some(a));
+    }
+
+    #[test]
+    fn validators_nan_stake_does_not_panic() {
+        let mut c = Chain::new();
+        let a = c.register("a").unwrap();
+        let b = c.register("b").unwrap();
+        c.add_stake(a, f64::NAN).unwrap();
+        c.add_stake(b, 10.0).unwrap();
+        // NaN > 0.0 is false, so the NaN-staked neuron is not a validator;
+        // the point is the sort is total and the outcome deterministic.
+        assert_eq!(c.validators(), vec![b]);
+        assert_eq!(c.lead_validator(), Some(b));
+    }
+
+    #[test]
+    fn deregister_frees_slot_and_scrubs_weights() {
+        let (mut c, v) = chain_with_validator();
+        let p0 = c.register("p0").unwrap();
+        let p1 = c.register("p1").unwrap();
+        c.set_weights(v, &[(p0, 0.5), (p1, 0.5)]).unwrap();
+        c.deregister(p0).unwrap();
+        assert!(c.neuron(p0).is_none());
+        assert!(!c.committed_weights(v).unwrap().contains_key(&p0), "weights for it scrubbed");
+        assert_eq!(c.deregister(p0).unwrap_err(), ChainError::UnknownUid(p0));
+        // freed uid is reused by the next registration, flagged recycled
+        let r = c.register_replacing("p2").unwrap();
+        assert_eq!((r.uid, r.recycled, r.evicted_hotkey), (p0, true, None));
+    }
+
+    #[test]
+    fn full_slot_table_evicts_lowest_incentive_non_immune() {
+        let mut c = Chain::new();
+        c.max_uids = 3;
+        let v = c.register("validator").unwrap();
+        c.add_stake(v, 100.0).unwrap();
+        let p0 = c.register("p0").unwrap();
+        let p1 = c.register("p1").unwrap();
+        c.set_weights(v, &[(p0, 0.2), (p1, 0.8)]).unwrap();
+        c.run_epoch();
+        assert!(c.neuron(p0).unwrap().last_incentive < c.neuron(p1).unwrap().last_incentive);
+        // Table full: the newcomer displaces p0 (lowest incentive); the
+        // staked validator is never a candidate.
+        let r = c.register_replacing("newcomer").unwrap();
+        assert_eq!(r.uid, p0);
+        assert!(r.recycled);
+        assert_eq!(r.evicted_hotkey.as_deref(), Some("p0"));
+        assert_eq!(c.neuron(p0).unwrap().hotkey, "newcomer");
+        assert_eq!(c.neuron(p0).unwrap().last_incentive, 0.0, "fresh occupant, fresh score");
+    }
+
+    #[test]
+    fn validator_permit_protects_demoted_validators_from_eviction() {
+        // A validator demoted to zero stake must keep its slot: its uid
+        // being recycled to a peer while the coordinator still runs a
+        // Validator under it would collide two identities.
+        let mut c = Chain::new();
+        c.max_uids = 2;
+        let v = c.register("validator").unwrap();
+        c.add_stake(v, 100.0).unwrap();
+        c.set_validator_permit(v, true).unwrap();
+        let p = c.register("peer").unwrap();
+        c.set_stake(v, 0.0).unwrap(); // demoted, still permit-holding
+        let r = c.register_replacing("newcomer").unwrap();
+        assert_eq!(r.uid, p, "the peer, not the demoted validator, is displaced");
+        assert_eq!(c.neuron(v).unwrap().hotkey, "validator");
+        // With every slot immune or permit-holding, registration fails
+        // cleanly instead of touching the demoted validator.
+        c.immunity_blocks = 10; // newcomer (registered this block) is immune
+        assert_eq!(c.register_replacing("late").unwrap_err(), ChainError::NoSlots(2));
+        assert_eq!(
+            c.set_validator_permit(99, true).unwrap_err(),
+            ChainError::UnknownUid(99)
+        );
+    }
+
+    #[test]
+    fn immunity_protects_newcomers_from_eviction() {
+        let mut c = Chain::new();
+        c.max_uids = 2;
+        c.immunity_blocks = 10;
+        let p0 = c.register("p0").unwrap();
+        let p1 = c.register("p1").unwrap();
+        assert!(c.is_immune(p0) && c.is_immune(p1));
+        // Everyone immune: registration must fail, not evict.
+        assert_eq!(c.register_replacing("late").unwrap_err(), ChainError::NoSlots(2));
+        c.advance_blocks(10);
+        assert!(!c.is_immune(p0));
+        // Immunity over: lowest-incentive (tie -> lowest uid) is displaced.
+        let r = c.register_replacing("late").unwrap();
+        assert_eq!(r.uid, p0);
+        assert!(c.is_immune(p0), "the new occupant starts its own immunity window");
+        assert_eq!(c.neuron(p1).unwrap().hotkey, "p1");
+    }
+
+    #[test]
+    fn epoch_with_zero_stake_network_pays_nothing() {
+        // Weights were committed, then the validator lost its stake: the
+        // epoch must degrade to "no consensus" instead of panicking — and
+        // it must still clear eviction scores, which would otherwise rank
+        // peers by a consensus that no longer exists.
+        let (mut c, v) = chain_with_validator();
+        let p = c.register("p").unwrap();
+        c.set_weights(v, &[(p, 1.0)]).unwrap();
+        c.run_epoch();
+        assert!(c.neuron(p).unwrap().last_incentive > 0.9);
+        c.set_stake(v, 0.0).unwrap();
+        assert_eq!(c.run_epoch(), vec![]);
+        assert!((c.neuron(p).unwrap().balance - 1.0).abs() < 1e-12, "paid only while staked");
+        assert_eq!(c.neuron(p).unwrap().last_incentive, 0.0, "stale eviction score cleared");
+    }
+
+    #[test]
+    fn epoch_with_deregistered_committer_ignores_its_weights() {
+        let mut c = Chain::new();
+        let v0 = c.register("v0").unwrap();
+        let v1 = c.register("v1").unwrap();
+        c.add_stake(v0, 100.0).unwrap();
+        c.add_stake(v1, 100.0).unwrap();
+        let p0 = c.register("p0").unwrap();
+        let p1 = c.register("p1").unwrap();
+        c.set_weights(v0, &[(p0, 1.0)]).unwrap();
+        c.set_weights(v1, &[(p1, 1.0)]).unwrap();
+        c.deregister(v1).unwrap();
+        let inc = c.run_epoch();
+        assert!(inc.iter().any(|(u, x)| *u == p0 && *x > 0.9), "{inc:?}");
+        assert!(!inc.iter().any(|(u, _)| *u == p1), "dead validator's view dropped: {inc:?}");
+    }
+
+    #[test]
+    fn epoch_with_weights_for_deregistered_target() {
+        // v committed weights for p0 and p1, then p1 deregistered before
+        // the epoch: p1's weights are scrubbed, p0 absorbs the emission,
+        // and a fresh occupant of p1's uid does NOT inherit the old weight.
+        let (mut c, v) = chain_with_validator();
+        let p0 = c.register("p0").unwrap();
+        let p1 = c.register("p1").unwrap();
+        c.set_weights(v, &[(p0, 0.5), (p1, 0.5)]).unwrap();
+        c.deregister(p1).unwrap();
+        let fresh = c.register("fresh").unwrap();
+        assert_eq!(fresh, p1, "uid recycled");
+        let inc = c.run_epoch();
+        assert_eq!(inc, vec![(p0, 1.0)]);
+        assert_eq!(c.neuron(fresh).unwrap().balance, 0.0);
+    }
+
+    #[test]
+    fn epoch_with_tied_validator_stakes_is_deterministic() {
+        let mut c = Chain::new();
+        let v0 = c.register("v0").unwrap();
+        let v1 = c.register("v1").unwrap();
+        c.add_stake(v0, 50.0).unwrap();
+        c.add_stake(v1, 50.0).unwrap();
+        let p0 = c.register("p0").unwrap();
+        let p1 = c.register("p1").unwrap();
+        c.set_weights(v0, &[(p0, 1.0)]).unwrap();
+        c.set_weights(v1, &[(p1, 1.0)]).unwrap();
+        let a = c.run_epoch();
+        let b = c.run_epoch();
+        assert_eq!(a, b, "tied stakes must not make the epoch flap");
+        let total: f64 = a.iter().map(|(_, x)| x).sum();
+        assert!(total.abs() < 1e-9 || (total - 1.0).abs() < 1e-9, "{a:?}");
+    }
+
+    #[test]
+    fn single_validator_epoch_is_passthrough() {
+        let (mut c, v) = chain_with_validator();
+        let p0 = c.register("p0").unwrap();
+        let p1 = c.register("p1").unwrap();
+        c.set_weights(v, &[(p0, 1.0), (p1, 3.0)]).unwrap();
+        let inc = c.run_epoch();
+        let get = |u: Uid| inc.iter().find(|(x, _)| *x == u).map(|(_, i)| *i).unwrap_or(0.0);
+        assert!((get(p0) - 0.25).abs() < 1e-9 && (get(p1) - 0.75).abs() < 1e-9, "{inc:?}");
     }
 
     #[test]

@@ -5,6 +5,13 @@
 //! benches execute. One [`TemplarRun`] owns every substrate; `run_round()`
 //! performs a staged pipeline:
 //!
+//!   0. the population resolves: scripted [`Scenario`] churn events fire
+//!      (joins, leaves, stake moves, provider outages) and the peer set is
+//!      re-read from the chain registry — `RunConfig::peers` only seeds
+//!      round 0; after that the chain's bounded slot table (eviction,
+//!      immunity, uid recycling — see the `chain` module docs) is the
+//!      source of truth, and recycled uids have their ratings, phi/sync
+//!      history, and bucket reset,
 //!   1. peers take their turns — first pass (independent behaviours)
 //!      produced **concurrently** across a worker pool, with storage PUTs
 //!      applied in peer order; second pass (copiers/duplicators, who need
@@ -37,7 +44,7 @@
 //! PEERSCOREs, weights, and parameters are bit-identical at any thread
 //! count (pinned by `tests/parallel_determinism.rs`).
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 
 use anyhow::{Context, Result};
 
@@ -45,13 +52,14 @@ use super::checkpoint::CheckpointStore;
 use super::round::RoundClock;
 use super::validator::{chain_read_keys, RoundOutcome, Validator};
 use super::GauntletParams;
-use crate::chain::{Chain, Uid};
+use crate::chain::{Chain, Uid, BLOCK_MS};
 use crate::data::Corpus;
 use crate::demo::aggregate::{aggregate_into, AggregateOpts};
 use crate::demo::wire::Submission;
 use crate::minjson::{self, Value};
 use crate::peers::{Behavior, PeerCtx, PeerOutput, PeerRunner};
 use crate::runtime::{artifact_dir, exec_service, ExecBackend, Executor, SimExec};
+use crate::scenario::{Event, Scenario};
 use crate::storage::{ObjectStore, ProviderModel};
 
 /// Configuration for a full run.
@@ -60,8 +68,23 @@ pub struct RunConfig {
     /// Artifact config name (nano / tiny / small / base).
     pub model: String,
     pub rounds: u64,
-    /// One behaviour per registered peer (uids assigned in order).
+    /// Behaviours of the peers registered at round 0 (uids assigned in
+    /// order). The population is *not* frozen to this: a [`Scenario`] (or
+    /// direct [`TemplarRunWith::register_peer`] /
+    /// [`TemplarRunWith::deregister_peer`] calls) churns it mid-run, and
+    /// the round pipeline re-resolves the peer set from the chain registry
+    /// at the top of every round.
     pub peers: Vec<Behavior>,
+    /// Scripted churn: joins, leaves, stake moves, provider outages, fired
+    /// at the top of their round (`gauntlet run --scenario ...`).
+    pub scenario: Scenario,
+    /// Chain neuron-slot capacity, *including* validators (0 = unbounded).
+    /// When the table is full a new registration evicts the
+    /// lowest-incentive non-immune peer. Must admit the initial
+    /// population (`n_validators + peers.len()`).
+    pub max_uids: usize,
+    /// Rounds of post-registration immunity from slot eviction.
+    pub immunity_rounds: u64,
     pub params: GauntletParams,
     pub clock: RoundClock,
     pub provider: ProviderModel,
@@ -84,6 +107,9 @@ impl RunConfig {
             model: model.to_string(),
             rounds,
             peers,
+            scenario: Scenario::default(),
+            max_uids: 0,
+            immunity_rounds: 2,
             // lr = 0 means "resolve from the config's meta.json default"
             // (signed-descent lr scales with model size; see configs.py).
             params: GauntletParams { lr: 0.0, ..GauntletParams::default() },
@@ -105,12 +131,21 @@ impl RunConfig {
         if self.threads > 0 {
             return self.threads;
         }
-        if let Some(n) = std::env::var("GAUNTLET_THREADS")
-            .ok()
-            .and_then(|v| v.parse::<usize>().ok())
-            .filter(|&n| n > 0)
-        {
-            return n;
+        if let Ok(v) = std::env::var("GAUNTLET_THREADS") {
+            match v.parse::<usize>() {
+                Ok(n) if n > 0 => return n,
+                _ => {
+                    // A typo'd knob silently falling back to auto-detection
+                    // is a debugging trap; say so, but only once per process.
+                    static WARN_ONCE: std::sync::Once = std::sync::Once::new();
+                    WARN_ONCE.call_once(|| {
+                        eprintln!(
+                            "warning: GAUNTLET_THREADS={v:?} is not a positive \
+                             integer; falling back to auto-detected parallelism"
+                        );
+                    });
+                }
+            }
         }
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(16)
     }
@@ -146,6 +181,9 @@ pub struct RoundRecord {
     pub peers: Vec<PeerRoundStats>,
     /// Estimated tokens processed across peers this round.
     pub tokens_processed: u64,
+    /// Population/lifecycle events applied at the top of this round
+    /// (scenario joins/leaves/evictions, stake moves, outages).
+    pub events: Vec<String>,
 }
 
 /// Full-run metrics, serializable for the bench harness / plots.
@@ -192,6 +230,10 @@ impl RunMetrics {
                     (
                         "heldout_loss",
                         r.heldout_loss.map(minjson::num).unwrap_or(Value::Null),
+                    ),
+                    (
+                        "events",
+                        Value::Arr(r.events.iter().map(|e| minjson::s(e)).collect()),
                     ),
                     ("mean_local_loss", minjson::num(r.mean_local_loss)),
                     ("n_valid", minjson::num(r.n_valid_submissions as f64)),
@@ -244,6 +286,11 @@ pub struct TemplarRunWith<E: ExecBackend + 'static> {
     dense: Vec<f32>,
     /// Last round's aggregated coefficients (for divergent peers).
     last_coeff: Option<Vec<f32>>,
+    /// Monotonic hotkey counter: uids are recycled, hotkeys never are.
+    next_hotkey: u64,
+    /// Active provider-outage window: restore `outage_prob` to `.1` at the
+    /// top of round `.0`.
+    outage_restore: Option<(u64, f64)>,
 }
 
 /// The artifact-backed system (what the paper deploys).
@@ -276,34 +323,42 @@ impl<E: ExecBackend + 'static> TemplarRunWith<E> {
             cfg.params.lr = meta.hyper.lr;
         }
 
+        if cfg.max_uids > 0 {
+            let need = cfg.n_validators.max(1) + cfg.peers.len();
+            anyhow::ensure!(
+                cfg.max_uids >= need,
+                "max_uids = {} cannot admit the initial population \
+                 ({need} neurons: {} validators + {} peers)",
+                cfg.max_uids,
+                cfg.n_validators.max(1),
+                cfg.peers.len()
+            );
+        }
         let mut chain = Chain::new();
+        chain.max_uids = cfg.max_uids;
+        let blocks_per_round = (cfg.clock.round_ms / BLOCK_MS).max(1);
+        chain.immunity_blocks = cfg.immunity_rounds * blocks_per_round;
         let store = ObjectStore::new(cfg.provider.clone(), cfg.seed ^ 0x5702);
         let corpus = Corpus::new(meta.vocab as u32, cfg.seed);
 
-        // Validators register and stake first (uids 1000+ keep peer uids
-        // dense from 0).
+        // Validators register and stake first (peers then get the next
+        // dense uids in order).
         let mut validators = Vec::new();
         for v in 0..cfg.n_validators.max(1) {
             let uid = chain.register(&format!("validator-{v}"))?;
             chain.add_stake(uid, 1_000.0 / (v as f64 + 1.0))?;
+            // Permit: even if a scenario later demotes this validator to
+            // zero stake, its slot is never an eviction victim — the
+            // Validator object and its chain uid stay in sync for life.
+            chain.set_validator_permit(uid, true)?;
             validators.push(Validator::new(uid, cfg.params.clone(), meta.padded_count, cfg.seed));
-        }
-
-        // Permissionless peer registration: each creates a bucket and posts
-        // its read key (§5).
-        let mut peers = Vec::new();
-        for (i, behavior) in cfg.peers.iter().enumerate() {
-            let uid = chain.register(&format!("peer-hotkey-{i}"))?;
-            let bucket = format!("peer-{uid}");
-            let rk = store.create_bucket(&bucket, &bucket);
-            chain.post_read_key(uid, rk)?;
-            peers.push(PeerRunner::new(uid, behavior.clone(), meta.param_count, cfg.seed));
         }
 
         let checkpoints = CheckpointStore::new(cfg.params.checkpoint_every);
         let dense = vec![0.0; meta.padded_count];
         let clock = cfg.clock;
-        Ok(TemplarRunWith {
+        let initial_peers = cfg.peers.clone();
+        let mut run = TemplarRunWith {
             cfg,
             exec,
             chain,
@@ -311,13 +366,22 @@ impl<E: ExecBackend + 'static> TemplarRunWith<E> {
             corpus,
             clock,
             validators,
-            peers,
+            peers: Vec::new(),
             theta,
             checkpoints,
             round: 0,
             dense,
             last_coeff: None,
-        })
+            next_hotkey: 0,
+            outage_restore: None,
+        };
+        // Round-0 peers go through the same registration path as mid-run
+        // joiners: the population is chain state from the very start.
+        for behavior in initial_peers {
+            run.register_peer(behavior)
+                .context("registering the initial peer population")?;
+        }
+        Ok(run)
     }
 
     pub fn peer_uids(&self) -> Vec<Uid> {
@@ -325,13 +389,35 @@ impl<E: ExecBackend + 'static> TemplarRunWith<E> {
     }
 
     /// Permissionless mid-run registration (§6: "peers joining later or
-    /// restarting"): the newcomer registers a hotkey, creates its bucket,
-    /// posts the read key, and starts contributing next round. It obtains
-    /// the current model via checkpoint + signed-update replay (the same
-    /// state the network holds, verified by `checkpoints.catchup`).
+    /// restarting"): the newcomer registers a fresh hotkey, creates its
+    /// bucket, posts the read key, and starts contributing the next time
+    /// the round pipeline resolves the peer set. It obtains the current
+    /// model via checkpoint + signed-update replay (the same state the
+    /// network holds, verified by `checkpoints.catchup`).
+    ///
+    /// Slot rules apply (see the `chain` module docs): freed uids are
+    /// reused, and on a full table the chain evicts the lowest-incentive
+    /// non-immune peer. When the assigned uid is recycled, every validator
+    /// forgets the previous occupant (fresh OpenSkill prior, cleared
+    /// phi/sync history) and the old storage bucket is torn down — the
+    /// newcomer shares nothing with the evicted identity but the number.
     pub fn register_peer(&mut self, behavior: Behavior) -> Result<Uid> {
-        let i = self.peers.len();
-        let uid = self.chain.register(&format!("peer-hotkey-{i}"))?;
+        self.register_peer_detailed(behavior).map(|r| r.uid)
+    }
+
+    /// [`Self::register_peer`], exposing the chain's [`Registration`]
+    /// (recycled flag + evicted hotkey) for lifecycle diagnostics.
+    pub fn register_peer_detailed(
+        &mut self,
+        behavior: Behavior,
+    ) -> Result<crate::chain::Registration> {
+        let hotkey = format!("peer-hotkey-{}", self.next_hotkey);
+        self.next_hotkey += 1;
+        let reg = self.chain.register_replacing(&hotkey)?;
+        let uid = reg.uid;
+        if reg.recycled {
+            self.recycle_uid(uid);
+        }
         let bucket = format!("peer-{uid}");
         let rk = self.store.create_bucket(&bucket, &bucket);
         self.chain.post_read_key(uid, rk)?;
@@ -341,7 +427,107 @@ impl<E: ExecBackend + 'static> TemplarRunWith<E> {
             self.exec.meta().param_count,
             self.cfg.seed,
         ));
-        Ok(uid)
+        Ok(reg)
+    }
+
+    /// A peer leaves the network: its slot is freed on-chain (weights for
+    /// it are scrubbed), its bucket is deleted, and its runner is torn
+    /// down. Validator score state lingers harmlessly until the uid is
+    /// recycled, at which point [`Self::recycle_uid`] clears it.
+    pub fn deregister_peer(&mut self, uid: Uid) -> Result<()> {
+        // Validators are not peers: deregistering one on-chain while its
+        // Validator object keeps evaluating would crash the commit step
+        // and hand its uid to a peer runner. Reject up front (a scenario
+        // `leave <validator-uid>` logs as rejected and the run continues).
+        if self.validators.iter().any(|v| v.uid == uid) {
+            anyhow::bail!("uid {uid} is a validator; only peers can deregister");
+        }
+        self.chain.deregister(uid)?;
+        self.store.delete_bucket(&format!("peer-{uid}"));
+        self.peers.retain(|p| p.uid != uid);
+        Ok(())
+    }
+
+    /// Reset every per-uid substrate for a recycled chain uid: validators
+    /// drop their score state (fresh rating prior on next contact), the
+    /// old bucket (and any stale objects) disappears, and any leftover
+    /// runner is torn down.
+    fn recycle_uid(&mut self, uid: Uid) {
+        for v in &mut self.validators {
+            v.forget_peer(uid);
+        }
+        self.store.delete_bucket(&format!("peer-{uid}"));
+        self.peers.retain(|p| p.uid != uid);
+    }
+
+    /// Fire the scripted events for `round` (top-of-round, coordinator
+    /// thread — see `scenario` module docs), then reconcile the runner set
+    /// against the chain registry. Returns human-readable descriptions of
+    /// everything that happened, for [`RoundRecord::events`].
+    fn apply_scenario(&mut self, round: u64) -> Result<Vec<String>> {
+        let mut log = Vec::new();
+
+        // A previously scripted outage window may end this round.
+        if let Some((until, orig)) = self.outage_restore {
+            if round >= until {
+                self.store.model.outage_prob = orig;
+                self.outage_restore = None;
+                log.push("provider recovered".to_string());
+            }
+        }
+
+        for event in self.cfg.scenario.events_at(round) {
+            match event {
+                Event::JoinPeer { behavior } => {
+                    let label = behavior.label();
+                    match self.register_peer_detailed(behavior) {
+                        Ok(reg) => {
+                            let mut line = format!("join {label} as uid {}", reg.uid);
+                            if let Some(hk) = &reg.evicted_hotkey {
+                                line.push_str(&format!(" (evicted {hk})"));
+                            } else if reg.recycled {
+                                line.push_str(" (recycled uid)");
+                            }
+                            log.push(line);
+                        }
+                        Err(e) => log.push(format!("join {label} rejected: {e:#}")),
+                    }
+                }
+                Event::LeavePeer { uid } => match self.deregister_peer(uid) {
+                    Ok(()) => log.push(format!("uid {uid} left")),
+                    Err(e) => log.push(format!("leave uid {uid} rejected: {e:#}")),
+                },
+                Event::SetStake { uid, amount } => match self.chain.set_stake(uid, amount) {
+                    Ok(()) => log.push(format!("stake of uid {uid} set to {amount}")),
+                    Err(e) => log.push(format!("stake uid {uid} rejected: {e:#}")),
+                },
+                Event::ProviderOutage { prob, rounds } => {
+                    // Overlapping windows: the new event takes over the
+                    // probability, but recovery waits for the *latest*
+                    // scheduled restore — an overlap must never truncate
+                    // an earlier scripted window.
+                    let (prev_until, orig) = self
+                        .outage_restore
+                        .unwrap_or((0, self.store.model.outage_prob));
+                    self.store.model.outage_prob = prob;
+                    let until = (round + rounds.max(1)).max(prev_until);
+                    self.outage_restore = Some((until, orig));
+                    log.push(format!("provider outage p={prob} until round {until}"));
+                }
+            }
+        }
+
+        // Resolve the peer set from the chain registry: a runner whose uid
+        // is gone (scripted leave above, or an eviction by any
+        // registration path) no longer takes turns.
+        let registered: BTreeSet<Uid> = self.chain.uids().into_iter().collect();
+        let before = self.peers.len();
+        self.peers.retain(|p| registered.contains(&p.uid));
+        if self.peers.len() != before {
+            let dropped = before - self.peers.len();
+            log.push(format!("{dropped} runner(s) dropped by registry resolution"));
+        }
+        Ok(log)
     }
 
     /// Drive the whole run.
@@ -357,6 +543,10 @@ impl<E: ExecBackend + 'static> TemplarRunWith<E> {
     /// pipeline and its determinism contract).
     pub fn run_round(&mut self) -> Result<RoundRecord> {
         let round = self.round;
+        // Population lifecycle first: fire scripted churn events and
+        // re-resolve the peer set from the chain registry, so everything
+        // below sees this round's population.
+        let events = self.apply_scenario(round)?;
         let meta_batch = self.exec.meta().batch;
         let meta_seq = self.exec.meta().seq;
         // alpha_t from the schedule (§3.1); everything downstream — signed
@@ -521,11 +711,34 @@ impl<E: ExecBackend + 'static> TemplarRunWith<E> {
             }
         };
         // Commit weight vectors in validator order (determinism + the
-        // chain is single-writer).
+        // chain is single-writer). A validator demoted mid-run (scenario
+        // `stake <uid> 0`) still evaluates locally but may no longer
+        // commit — the chain would reject it, and killing the run over a
+        // scripted demotion would make `SetStake` unusable.
         for (v, o) in self.validators.iter().zip(&outcomes) {
-            self.chain.set_weights(v.uid, &o.incentives)?;
+            let staked = self.chain.neuron(v.uid).is_some_and(|n| n.stake > 0.0);
+            if staked {
+                self.chain.set_weights(v.uid, &o.incentives)?;
+            }
         }
-        let outcome = outcomes.into_iter().next().expect("at least one validator");
+        // The lead validator — highest on-chain stake, deterministic after
+        // the total_cmp/uid ordering — provides the aggregation weights
+        // (§3.3). Resolved from the chain every round so a scripted
+        // demotion (`stake <uid> 0`) moves emission *and* aggregation to
+        // the new lead together. `chain.validators()` is sorted best-first
+        // and may contain scripted-staked peers; the lead is the best
+        // staked uid that *is* one of ours. Falls back to the first
+        // validator when none of ours holds stake.
+        let lead_idx = self
+            .chain
+            .validators()
+            .iter()
+            .find_map(|u| self.validators.iter().position(|v| v.uid == *u))
+            .unwrap_or(0);
+        let outcome = outcomes
+            .into_iter()
+            .nth(lead_idx)
+            .expect("at least one validator");
 
         // ------------------------ chain epoch ----------------------------
         let chain_incentives = self.chain.run_epoch();
@@ -595,7 +808,9 @@ impl<E: ExecBackend + 'static> TemplarRunWith<E> {
             None
         };
 
-        let book = &self.validators[0].book;
+        // Per-peer stats report the lead validator's view, matching the
+        // outcome that drove aggregation above.
+        let book = &self.validators[lead_idx].book;
         let peers_stats: Vec<PeerRoundStats> = self
             .peers
             .iter()
@@ -633,6 +848,7 @@ impl<E: ExecBackend + 'static> TemplarRunWith<E> {
             top_g,
             peers: peers_stats,
             tokens_processed: tokens,
+            events,
         })
     }
 

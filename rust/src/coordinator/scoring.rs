@@ -51,6 +51,14 @@ impl ScoreBook {
         self.states.get(&uid)
     }
 
+    /// Drop all state for `uid`. Called when a chain uid is recycled to a
+    /// new occupant: the next [`ScoreBook::ensure`] starts from the fresh
+    /// OpenSkill prior with cleared PoC EMA and phi/fast-fail history —
+    /// the newcomer inherits nothing from the evicted identity.
+    pub fn remove(&mut self, uid: Uid) -> Option<PeerState> {
+        self.states.remove(&uid)
+    }
+
     pub fn uids(&self) -> Vec<Uid> {
         self.states.keys().copied().collect()
     }

@@ -149,6 +149,13 @@ impl Validator {
         Ok(out)
     }
 
+    /// Forget everything about a peer: called when the chain recycles its
+    /// uid to a new occupant, so the newcomer starts from the fresh
+    /// OpenSkill prior with no PoC / phi / fast-fail history.
+    pub fn forget_peer(&mut self, uid: Uid) {
+        self.book.remove(uid);
+    }
+
     /// Sequential convenience kept for tests and small tools: evaluate the
     /// round on this thread and commit the weights to the chain, like the
     /// original single-threaded validator loop did.

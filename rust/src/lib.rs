@@ -23,6 +23,15 @@
 //! / the `GAUNTLET_THREADS` environment variable, and the non-`Send` PJRT
 //! constraint is honored by the [`runtime::service`] request funnel.
 //!
+//! The peer population is **chain-driven and dynamic**: the simulated
+//! subnet ([`chain`]) is a bounded neuron-slot table with deregistration,
+//! Bittensor-style lowest-incentive replacement, and an immunity period,
+//! and the coordinator resolves its peer set from the registry at the top
+//! of every round. Mid-run churn — joins, leaves, stake moves, provider
+//! outages — is scripted declaratively with a [`scenario::Scenario`]
+//! (CLI: `gauntlet run --scenario <file|inline>`; demo:
+//! `rust/examples/churn_gauntlet.rs`).
+//!
 //! Start with [`coordinator::run::TemplarRun`] (the end-to-end system) or
 //! the `rust/examples/` directory (each example documents which paper
 //! figure it reproduces — see `rust/examples/README.md`).
@@ -38,5 +47,6 @@ pub mod openskill;
 pub mod peers;
 pub mod prop;
 pub mod runtime;
+pub mod scenario;
 pub mod storage;
 pub mod util;

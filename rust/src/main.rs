@@ -66,6 +66,11 @@ fn print_usage() {
          \x20           --eval-sample <s>  peers primary-evaluated per round\n\
          \x20           --seed <s>         run seed\n\
          \x20           --threads <n>      pipeline workers (0 = auto, 1 = sequential)\n\
+         \x20           --scenario <f|s>   churn script, a file or inline, e.g.\n\
+         \x20                              \"@3 join honest; @5 leave 4; @7 outage 0.5 2\"\n\
+         \x20           --max-uids <n>     chain slot cap incl. validators (0 = unbounded;\n\
+         \x20                              full table evicts the lowest-incentive peer)\n\
+         \x20           --immunity <r>     rounds of post-registration eviction immunity\n\
          \x20           --lr <f> --schedule constant|cosine:<w>:<t>[:<min>]|halve:<n>\n\
          \x20           --no-normalize     disable encoded-domain normalization (§4 ablation)\n\
          \x20           (without compiled artifacts, `run` falls back to the\n\
@@ -110,44 +115,34 @@ where
 }
 
 /// Parse a peer spec: either a count ("6" = that many honest peers) or a
-/// comma list of behaviours:
-///   honest | honest:<mult> | freeloader | desync | desync:<at>:<pause> |
-///   late | silent | format | rescaler:<f> | poisoner | copier:<uid> |
-///   duplicator:<uid>
+/// comma list of behaviour tokens (the [`Behavior::parse_spec`] grammar,
+/// shared with scenario `join` events):
+///   honest | honest:<mult> | freeloader | desync[:<at>[:<pause>]] |
+///   late[:<prob>] | silent[:<prob>] | format | rescaler[:<f>] |
+///   poisoner[:<scale>] | copier[:<uid>] | duplicator[:<uid>]
 pub fn parse_peers(spec: &str) -> Result<Vec<Behavior>> {
     if let Ok(n) = spec.parse::<usize>() {
         return Ok(vec![Behavior::Honest { data_mult: 1.0 }; n]);
     }
-    let mut out = Vec::new();
-    for part in spec.split(',') {
-        let fields: Vec<&str> = part.trim().split(':').collect();
-        let b = match fields[0] {
-            "honest" => Behavior::Honest {
-                data_mult: fields.get(1).map(|f| f.parse()).transpose()?.unwrap_or(1.0),
-            },
-            "freeloader" => Behavior::Freeloader,
-            "desync" => Behavior::Desync {
-                at: fields.get(1).map(|f| f.parse()).transpose()?.unwrap_or(3),
-                pause: fields.get(2).map(|f| f.parse()).transpose()?.unwrap_or(3),
-            },
-            "late" => Behavior::Late { prob: 0.8 },
-            "silent" => Behavior::Silent { prob: 0.8 },
-            "format" => Behavior::FormatViolator,
-            "rescaler" => Behavior::Rescaler {
-                factor: fields.get(1).map(|f| f.parse()).transpose()?.unwrap_or(100.0),
-            },
-            "poisoner" => Behavior::Poisoner { scale: 100.0 },
-            "copier" => Behavior::Copier {
-                victim: fields.get(1).map(|f| f.parse()).transpose()?.unwrap_or(0),
-            },
-            "duplicator" => Behavior::Duplicator {
-                original: fields.get(1).map(|f| f.parse()).transpose()?.unwrap_or(0),
-            },
-            other => bail!("unknown peer behaviour {other:?}"),
-        };
-        out.push(b);
-    }
-    Ok(out)
+    spec.split(',')
+        .map(|part| Behavior::parse_spec(part).map_err(|e| anyhow::anyhow!("--peers: {e}")))
+        .collect()
+}
+
+/// Resolve `--scenario`: a value that *looks* like a script (starts with
+/// `@`, a JSON bracket, or a `#` comment) is parsed inline; anything else
+/// is a file path and must exist — so a typo'd filename reports
+/// file-not-found instead of a misleading script syntax error.
+fn parse_scenario(value: &str) -> Result<gauntlet::scenario::Scenario> {
+    let looks_inline = value.trim_start().starts_with(['@', '{', '[', '#']);
+    let text = if looks_inline {
+        value.to_string()
+    } else {
+        std::fs::read_to_string(value)
+            .with_context(|| format!("--scenario: reading script file {value:?}"))?
+    };
+    gauntlet::scenario::Scenario::parse(&text)
+        .map_err(|e| anyhow::anyhow!("--scenario {value:?}: {e}"))
 }
 
 fn cmd_run(flags: &BTreeMap<String, String>) -> Result<()> {
@@ -165,17 +160,23 @@ fn cmd_run(flags: &BTreeMap<String, String>) -> Result<()> {
     cfg.seed = flag(flags, "seed", 0)?;
     cfg.eval_every = flag(flags, "eval-every", 5)?;
     cfg.threads = flag(flags, "threads", 0)?;
+    cfg.max_uids = flag(flags, "max-uids", 0)?;
+    cfg.immunity_rounds = flag(flags, "immunity", cfg.immunity_rounds)?;
+    if let Some(spec) = flags.get("scenario") {
+        cfg.scenario = parse_scenario(spec)?;
+    }
     if flags.contains_key("no-normalize") {
         cfg.agg.normalize = false;
     }
 
     println!(
-        "Gauntlet run: model={model} rounds={rounds} peers={} topG={} S={} normalize={} threads={}",
+        "Gauntlet run: model={model} rounds={rounds} peers={} topG={} S={} normalize={} threads={} scenario-events={}",
         cfg.peers.len(),
         cfg.params.top_g,
         cfg.params.eval_sample,
         cfg.agg.normalize,
         cfg.effective_threads(),
+        cfg.scenario.len(),
     );
     // Prefer the artifact-backed runtime; fall back to SimExec when
     // artifacts are missing OR the build uses the stub xla crate.
@@ -202,6 +203,9 @@ fn drive_run<E: ExecBackend + 'static>(
     let mut losses = Vec::new();
     for r in 0..rounds {
         let rec = run.run_round()?;
+        for e in &rec.events {
+            println!("round {r:>4}  ** {e}");
+        }
         if let Some(l) = rec.heldout_loss {
             losses.push(l);
             println!(

@@ -54,6 +54,49 @@ pub enum Behavior {
 }
 
 impl Behavior {
+    /// Parse one behaviour spec token, the shared grammar of the CLI
+    /// `--peers` list and scenario `join` events:
+    ///
+    /// `honest | honest:<mult> | freeloader | desync[:<at>[:<pause>]] |
+    /// late[:<prob>] | silent[:<prob>] | format | rescaler[:<factor>] |
+    /// poisoner[:<scale>] | copier[:<uid>] | duplicator[:<uid>]`
+    ///
+    /// ```
+    /// use gauntlet::peers::Behavior;
+    /// assert_eq!(Behavior::parse_spec("honest:2"), Ok(Behavior::Honest { data_mult: 2.0 }));
+    /// assert_eq!(Behavior::parse_spec("copier:7"), Ok(Behavior::Copier { victim: 7 }));
+    /// assert!(Behavior::parse_spec("gremlin").is_err());
+    /// ```
+    pub fn parse_spec(spec: &str) -> Result<Behavior, String> {
+        let fields: Vec<&str> = spec.trim().split(':').collect();
+        fn num<T: std::str::FromStr>(fields: &[&str], i: usize, default: T) -> Result<T, String>
+        where
+            T::Err: std::fmt::Display,
+        {
+            match fields.get(i) {
+                None => Ok(default),
+                Some(f) => f.parse().map_err(|e| format!("bad field {f:?}: {e}")),
+            }
+        }
+        let b = match fields[0] {
+            "honest" => Behavior::Honest { data_mult: num(&fields, 1, 1.0)? },
+            "freeloader" => Behavior::Freeloader,
+            "desync" => Behavior::Desync {
+                at: num(&fields, 1, 3)?,
+                pause: num(&fields, 2, 3)?,
+            },
+            "late" => Behavior::Late { prob: num(&fields, 1, 0.8)? },
+            "silent" => Behavior::Silent { prob: num(&fields, 1, 0.8)? },
+            "format" => Behavior::FormatViolator,
+            "rescaler" => Behavior::Rescaler { factor: num(&fields, 1, 100.0)? },
+            "poisoner" => Behavior::Poisoner { scale: num(&fields, 1, 100.0)? },
+            "copier" => Behavior::Copier { victim: num(&fields, 1, 0)? },
+            "duplicator" => Behavior::Duplicator { original: num(&fields, 1, 0)? },
+            other => return Err(format!("unknown peer behaviour {other:?}")),
+        };
+        Ok(b)
+    }
+
     /// Behaviours that need another peer's submission first (evaluated in
     /// the second pass of the round loop).
     pub fn is_second_pass(&self) -> bool {
@@ -104,6 +147,29 @@ mod tests {
         assert_eq!(Behavior::Copier { victim: 7 }.source_uid(), Some(7));
         assert_eq!(Behavior::Duplicator { original: 3 }.source_uid(), Some(3));
         assert_eq!(Behavior::Freeloader.source_uid(), None);
+    }
+
+    #[test]
+    fn parse_spec_roundtrips_every_behaviour() {
+        for (spec, want) in [
+            ("honest", Behavior::Honest { data_mult: 1.0 }),
+            ("honest:2.5", Behavior::Honest { data_mult: 2.5 }),
+            ("freeloader", Behavior::Freeloader),
+            ("desync", Behavior::Desync { at: 3, pause: 3 }),
+            ("desync:5:2", Behavior::Desync { at: 5, pause: 2 }),
+            ("late", Behavior::Late { prob: 0.8 }),
+            ("late:0.3", Behavior::Late { prob: 0.3 }),
+            ("silent:0.9", Behavior::Silent { prob: 0.9 }),
+            ("format", Behavior::FormatViolator),
+            ("rescaler:1000", Behavior::Rescaler { factor: 1000.0 }),
+            ("poisoner", Behavior::Poisoner { scale: 100.0 }),
+            ("copier:4", Behavior::Copier { victim: 4 }),
+            ("duplicator:9", Behavior::Duplicator { original: 9 }),
+        ] {
+            assert_eq!(Behavior::parse_spec(spec), Ok(want), "{spec}");
+        }
+        assert!(Behavior::parse_spec("nope").is_err());
+        assert!(Behavior::parse_spec("honest:abc").is_err());
     }
 
     #[test]

@@ -1,0 +1,346 @@
+//! Scripted population churn: a declarative, round-indexed event schedule
+//! that makes the paper's "completely permissionless" dimension a
+//! first-class axis of every run.
+//!
+//! The fixed `RunConfig::peers` population only covers round-0
+//! registration; real subnets see peers join mid-run, walk away, get
+//! displaced when the slot table fills, and re-register under fresh
+//! hotkeys. A [`Scenario`] scripts exactly those transitions (plus stake
+//! moves and provider outages) so they are reproducible, thread-count
+//! independent, and cheap to express on the CLI
+//! (`gauntlet run --scenario <file|inline>`).
+//!
+//! # Compact form
+//!
+//! One event per line (or `;`-separated), `#` starts a comment:
+//!
+//! ```text
+//! # round 3: a newcomer joins (behaviour grammar = the --peers grammar)
+//! @3 join honest
+//! @3 join poisoner:50
+//! @5 leave 4            # uid 4 deregisters and frees its slot
+//! @6 stake 0 500        # set uid 0's stake to 500 TAO
+//! @7 outage 0.5 2       # 50% PUT loss for 2 rounds
+//! ```
+//!
+//! # JSON form
+//!
+//! The same schedule as data (auto-detected by a leading `{` or `[`):
+//!
+//! ```text
+//! {"events": [
+//!   {"round": 3, "event": "join", "peer": "honest"},
+//!   {"round": 5, "event": "leave", "uid": 4},
+//!   {"round": 6, "event": "stake", "uid": 0, "amount": 500},
+//!   {"round": 7, "event": "outage", "prob": 0.5, "rounds": 2}
+//! ]}
+//! ```
+//!
+//! Events fire at the **top** of their round, on the coordinator thread,
+//! before any peer acts — so a `@3 join` peer takes its first turn in
+//! round 3, and the schedule cannot perturb the bit-determinism contract
+//! of the parallel pipeline (`tests/parallel_determinism.rs` pins a churn
+//! scenario at 1 vs N threads).
+
+use crate::chain::Uid;
+use crate::minjson::Value;
+use crate::peers::Behavior;
+
+/// One scripted population event.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Event {
+    /// A newcomer registers (slot rules apply: freed-uid reuse, eviction
+    /// when the table is full) and starts contributing this round.
+    JoinPeer { behavior: Behavior },
+    /// The peer deregisters, freeing its uid and deleting its bucket.
+    LeavePeer { uid: Uid },
+    /// Set a neuron's stake to an absolute amount (0 demotes a validator).
+    SetStake { uid: Uid, amount: f64 },
+    /// Storage-provider degradation: PUTs fail with probability `prob`
+    /// for `rounds` rounds, then the provider recovers.
+    ProviderOutage { prob: f64, rounds: u64 },
+}
+
+/// A round-indexed event schedule. Events within a round fire in the
+/// order they were written.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Scenario {
+    events: Vec<(u64, Event)>,
+}
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+#[error("scenario parse error: {0}")]
+pub struct ScenarioError(pub String);
+
+impl Scenario {
+    pub fn new() -> Self {
+        Scenario::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    /// Schedule `event` at the top of `round`.
+    pub fn at(mut self, round: u64, event: Event) -> Self {
+        self.push(round, event);
+        self
+    }
+
+    pub fn push(&mut self, round: u64, event: Event) {
+        self.events.push((round, event));
+    }
+
+    /// Events scheduled for `round`, in authoring order.
+    pub fn events_at(&self, round: u64) -> Vec<Event> {
+        self.events.iter().filter(|(r, _)| *r == round).map(|(_, e)| e.clone()).collect()
+    }
+
+    /// The last round any event fires in (None when empty).
+    pub fn last_round(&self) -> Option<u64> {
+        self.events.iter().map(|(r, _)| *r).max()
+    }
+
+    /// Parse either form (see module docs): JSON when the first non-space
+    /// byte is `{` or `[`, compact text otherwise.
+    pub fn parse(text: &str) -> Result<Scenario, ScenarioError> {
+        let trimmed = text.trim_start();
+        if trimmed.starts_with('{') || trimmed.starts_with('[') {
+            Self::parse_json(text)
+        } else {
+            Self::parse_compact(text)
+        }
+    }
+
+    fn parse_compact(text: &str) -> Result<Scenario, ScenarioError> {
+        let mut out = Scenario::new();
+        for raw in text.split(['\n', ';']) {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let mut toks = line.split_whitespace();
+            let head = toks.next().unwrap();
+            let round: u64 = head
+                .strip_prefix('@')
+                .ok_or_else(|| ScenarioError(format!("{line:?}: expected \"@<round> ...\"")))?
+                .parse()
+                .map_err(|e| ScenarioError(format!("{head:?}: bad round: {e}")))?;
+            let verb = toks
+                .next()
+                .ok_or_else(|| ScenarioError(format!("{line:?}: missing event verb")))?;
+            let args: Vec<&str> = toks.collect();
+            let arg = |i: usize, what: &str| -> Result<&str, ScenarioError> {
+                args.get(i)
+                    .copied()
+                    .ok_or_else(|| ScenarioError(format!("{line:?}: missing {what}")))
+            };
+            let event = match verb {
+                "join" => Event::JoinPeer {
+                    behavior: Behavior::parse_spec(arg(0, "behaviour spec")?)
+                        .map_err(|e| ScenarioError(format!("{line:?}: {e}")))?,
+                },
+                "leave" => Event::LeavePeer {
+                    uid: arg(0, "uid")?
+                        .parse()
+                        .map_err(|e| ScenarioError(format!("{line:?}: bad uid: {e}")))?,
+                },
+                "stake" => Event::SetStake {
+                    uid: arg(0, "uid")?
+                        .parse()
+                        .map_err(|e| ScenarioError(format!("{line:?}: bad uid: {e}")))?,
+                    amount: arg(1, "amount")?
+                        .parse()
+                        .map_err(|e| ScenarioError(format!("{line:?}: bad amount: {e}")))?,
+                },
+                "outage" => Event::ProviderOutage {
+                    prob: arg(0, "probability")?
+                        .parse()
+                        .map_err(|e| ScenarioError(format!("{line:?}: bad prob: {e}")))?,
+                    rounds: match args.get(1) {
+                        None => 1,
+                        Some(r) => r
+                            .parse()
+                            .map_err(|e| ScenarioError(format!("{line:?}: bad rounds: {e}")))?,
+                    },
+                },
+                other => {
+                    return Err(ScenarioError(format!("{line:?}: unknown event {other:?}")))
+                }
+            };
+            // Reject unconsumed tokens: a silently-dropped argument means
+            // the run would execute a different schedule than authored.
+            let used = match &event {
+                Event::JoinPeer { .. } | Event::LeavePeer { .. } => 1,
+                Event::SetStake { .. } => 2,
+                Event::ProviderOutage { .. } => args.len().min(2),
+            };
+            if args.len() > used {
+                return Err(ScenarioError(format!(
+                    "{line:?}: unexpected trailing tokens {:?}",
+                    &args[used..]
+                )));
+            }
+            out.push(round, event);
+        }
+        Ok(out)
+    }
+
+    fn parse_json(text: &str) -> Result<Scenario, ScenarioError> {
+        fn jerr(i: usize, msg: impl std::fmt::Display) -> ScenarioError {
+            ScenarioError(format!("event {i}: {msg}"))
+        }
+        fn juid(i: usize, e: &Value) -> Result<Uid, ScenarioError> {
+            e.get("uid")
+                .as_usize()
+                .map(|u| u as Uid)
+                .ok_or_else(|| jerr(i, "missing or bad \"uid\""))
+        }
+        let v = Value::parse(text).map_err(|e| ScenarioError(e.to_string()))?;
+        // Accept both {"events": [...]} and a bare [...] array.
+        let events = match (&v, v.get("events")) {
+            (Value::Arr(a), _) => a.as_slice(),
+            (_, Value::Arr(a)) => a.as_slice(),
+            _ => return Err(ScenarioError("expected an array of events".into())),
+        };
+        let mut out = Scenario::new();
+        for (i, e) in events.iter().enumerate() {
+            let round = e
+                .get("round")
+                .as_f64()
+                .filter(|r| *r >= 0.0 && r.fract() == 0.0)
+                .ok_or_else(|| jerr(i, "missing or non-integer \"round\""))?
+                as u64;
+            let kind = e
+                .get("event")
+                .as_str()
+                .ok_or_else(|| jerr(i, "missing \"event\" kind"))?;
+            let event = match kind {
+                "join" => Event::JoinPeer {
+                    behavior: Behavior::parse_spec(
+                        e.get("peer")
+                            .as_str()
+                            .ok_or_else(|| jerr(i, "missing \"peer\" behaviour spec"))?,
+                    )
+                    .map_err(|m| jerr(i, m))?,
+                },
+                "leave" => Event::LeavePeer { uid: juid(i, e)? },
+                "stake" => Event::SetStake {
+                    uid: juid(i, e)?,
+                    amount: e
+                        .get("amount")
+                        .as_f64()
+                        .ok_or_else(|| jerr(i, "missing \"amount\""))?,
+                },
+                "outage" => Event::ProviderOutage {
+                    prob: e
+                        .get("prob")
+                        .as_f64()
+                        .ok_or_else(|| jerr(i, "missing \"prob\""))?,
+                    rounds: e.get("rounds").as_f64().map(|r| r as u64).unwrap_or(1),
+                },
+                other => return Err(jerr(i, format!("unknown event kind {other:?}"))),
+            };
+            out.push(round, event);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn compact_form_parses_every_event_kind() {
+        let s = Scenario::parse(
+            "# churn wave\n\
+             @3 join honest:2\n\
+             @3 join poisoner ; @5 leave 4\n\
+             @6 stake 0 500\n\
+             @7 outage 0.5 2\n\
+             @8 outage 0.25   # default duration 1\n",
+        )
+        .unwrap();
+        assert_eq!(s.len(), 6);
+        assert_eq!(
+            s.events_at(3),
+            vec![
+                Event::JoinPeer { behavior: Behavior::Honest { data_mult: 2.0 } },
+                Event::JoinPeer { behavior: Behavior::Poisoner { scale: 100.0 } },
+            ]
+        );
+        assert_eq!(s.events_at(5), vec![Event::LeavePeer { uid: 4 }]);
+        assert_eq!(s.events_at(6), vec![Event::SetStake { uid: 0, amount: 500.0 }]);
+        assert_eq!(s.events_at(7), vec![Event::ProviderOutage { prob: 0.5, rounds: 2 }]);
+        assert_eq!(s.events_at(8), vec![Event::ProviderOutage { prob: 0.25, rounds: 1 }]);
+        assert_eq!(s.events_at(4), vec![]);
+        assert_eq!(s.last_round(), Some(8));
+    }
+
+    #[test]
+    fn json_form_matches_compact_form() {
+        let compact = Scenario::parse("@3 join honest\n@5 leave 4\n@6 stake 0 500\n@7 outage 0.5 2")
+            .unwrap();
+        let json = Scenario::parse(
+            r#"{"events": [
+                {"round": 3, "event": "join", "peer": "honest"},
+                {"round": 5, "event": "leave", "uid": 4},
+                {"round": 6, "event": "stake", "uid": 0, "amount": 500},
+                {"round": 7, "event": "outage", "prob": 0.5, "rounds": 2}
+            ]}"#,
+        )
+        .unwrap();
+        assert_eq!(compact, json);
+        // bare-array form is accepted too
+        let bare = Scenario::parse(r#"[{"round": 3, "event": "join", "peer": "honest"}]"#).unwrap();
+        assert_eq!(bare.events_at(3).len(), 1);
+    }
+
+    #[test]
+    fn parse_errors_are_descriptive() {
+        for (bad, needle) in [
+            ("3 join honest", "@<round>"),
+            ("@x join honest", "bad round"),
+            ("@3", "missing event verb"),
+            ("@3 dance", "unknown event"),
+            ("@3 join gremlin", "unknown peer behaviour"),
+            ("@3 leave", "missing uid"),
+            ("@3 leave 4 5", "unexpected trailing tokens"),
+            ("@3 stake 4", "missing amount"),
+            ("@3 stake 4 10 20", "unexpected trailing tokens"),
+            ("@3 outage", "missing probability"),
+            ("@3 outage 0.5 2 9", "unexpected trailing tokens"),
+        ] {
+            let err = Scenario::parse(bad).unwrap_err();
+            assert!(err.0.contains(needle), "{bad:?} -> {err}");
+        }
+        assert!(Scenario::parse(r#"{"events": [{"event": "join"}]}"#).is_err());
+        assert!(Scenario::parse(r#"{"events": 7}"#).is_err());
+    }
+
+    #[test]
+    fn empty_and_comment_only_scripts_are_empty() {
+        assert!(Scenario::parse("").unwrap().is_empty());
+        assert!(Scenario::parse("\n  # nothing here\n;;\n").unwrap().is_empty());
+        assert_eq!(Scenario::default().last_round(), None);
+    }
+
+    #[test]
+    fn builder_api_orders_within_a_round() {
+        let s = Scenario::new()
+            .at(2, Event::LeavePeer { uid: 1 })
+            .at(2, Event::JoinPeer { behavior: Behavior::Freeloader });
+        assert_eq!(
+            s.events_at(2),
+            vec![
+                Event::LeavePeer { uid: 1 },
+                Event::JoinPeer { behavior: Behavior::Freeloader },
+            ]
+        );
+    }
+}

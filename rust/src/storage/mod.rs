@@ -138,6 +138,13 @@ impl ObjectStore {
         self.shard(name).read().unwrap().contains_key(name)
     }
 
+    /// Delete a bucket and every object in it (a deregistered peer's
+    /// bucket is torn down; a recycled uid gets a brand-new bucket with a
+    /// fresh read key). Returns whether the bucket existed.
+    pub fn delete_bucket(&self, name: &str) -> bool {
+        self.shard(name).write().unwrap().remove(name).is_some()
+    }
+
     /// PUT an object. `now` is the client's send time; the stored timestamp
     /// is send time + simulated upload latency. Returns the server-side
     /// stored-at time, or an error on outage / size limit / ACL.
@@ -335,6 +342,25 @@ mod tests {
         assert!(matches!(w("on-close"), WindowedGet::InWindow(_)), "close edge is inclusive");
         assert!(matches!(w("before-open"), WindowedGet::TooEarly(499)));
         assert!(matches!(w("after-close"), WindowedGet::TooLate(2001)));
+    }
+
+    #[test]
+    fn delete_bucket_tears_down_and_recreate_rotates_key() {
+        let s = store();
+        let rk_old = s.create_bucket("peer-3", "peer-3");
+        s.put("peer-3", "peer-3", "grad", vec![1], 0).unwrap();
+        assert!(s.delete_bucket("peer-3"));
+        assert!(!s.bucket_exists("peer-3"));
+        assert!(!s.delete_bucket("peer-3"), "second delete is a no-op");
+        // A recycled uid recreates the bucket: old objects are gone and the
+        // old read key no longer opens it.
+        let rk_new = s.create_bucket("peer-3", "peer-3");
+        assert_ne!(rk_old, rk_new);
+        assert_eq!(
+            s.get("peer-3", &rk_old, "grad"),
+            Err(StorageError::AccessDenied("peer-3".into()))
+        );
+        assert_eq!(s.get("peer-3", &rk_new, "grad").unwrap(), None);
     }
 
     #[test]

@@ -10,6 +10,7 @@
 
 use gauntlet::coordinator::run::{RunConfig, TemplarRunWith};
 use gauntlet::peers::Behavior;
+use gauntlet::scenario::Scenario;
 
 /// A population covering every behaviour class, including second-pass
 /// peers. With 2 validators registered first (uids 0 and 1), peers get
@@ -43,14 +44,48 @@ fn config(threads: usize) -> RunConfig {
     cfg
 }
 
-/// Run 8 rounds (with a permissionless mid-run join at round 5) and
-/// collect a structural trace plus a bit-exact numeric fingerprint.
-fn fingerprint(threads: usize) -> (Vec<String>, Vec<u64>) {
-    let mut run = TemplarRunWith::new_sim(config(threads)).expect("sim run");
+/// A bounded slot table plus a scripted churn wave covering every event
+/// kind: joins that recycle freed uids, a join that forces an eviction on
+/// the full table, a leave, a stake move, and a provider outage. The
+/// population is different almost every round, which is exactly what the
+/// determinism contract must survive.
+fn churn_config(threads: usize) -> RunConfig {
+    let mut cfg = config(threads);
+    cfg.rounds = 10;
+    cfg.seed = 29;
+    // Primary-evaluate every valid peer each round: honest incumbents hold
+    // positive incentive from round 0 on, so slot pressure always lands on
+    // a zero/negative-score misbehaver, never on the uid the script churns
+    // explicitly.
+    cfg.params.eval_sample = 16;
+    // 2 validators + 12 peers occupy 14 of 16 slots; the @4 join fills
+    // slot 16, so the @5 join must evict.
+    cfg.max_uids = 16;
+    cfg.immunity_rounds = 1;
+    cfg.scenario = Scenario::parse(
+        "@2 join honest\n\
+         @4 join freeloader\n\
+         @5 join honest:2      # table full -> evicts the cheapest slot\n\
+         @6 leave 4\n\
+         @7 join poisoner      # lands on the uid freed at round 6\n\
+         @7 stake 0 750\n\
+         @8 outage 0.5 1",
+    )
+    .expect("valid scenario");
+    cfg
+}
+
+/// Run `rounds` rounds (with a direct permissionless join at round 5 when
+/// no scenario is scripted) and collect a structural trace plus a
+/// bit-exact numeric fingerprint.
+fn fingerprint_cfg(cfg: RunConfig) -> (Vec<String>, Vec<u64>) {
+    let rounds = cfg.rounds;
+    let scripted = !cfg.scenario.is_empty();
+    let mut run = TemplarRunWith::new_sim(cfg).expect("sim run");
     let mut structural = Vec::new();
     let mut bits = Vec::new();
-    for r in 0..8u64 {
-        if r == 5 {
+    for r in 0..rounds {
+        if r == 5 && !scripted {
             run.register_peer(Behavior::Honest { data_mult: 1.0 }).expect("late join");
         }
         let rec = run.run_round().expect("round");
@@ -62,8 +97,11 @@ fn fingerprint(threads: usize) -> (Vec<String>, Vec<u64>) {
             })
             .collect();
         structural.push(format!(
-            "r{r} valid={} topg={:?} flags={flags}",
-            rec.n_valid_submissions, rec.top_g
+            "r{r} valid={} topg={:?} flags={flags} events={:?} uids={:?}",
+            rec.n_valid_submissions,
+            rec.top_g,
+            rec.events,
+            rec.peers.iter().map(|p| p.uid).collect::<Vec<_>>()
         ));
         bits.push(rec.heldout_loss.unwrap_or(-1.0).to_bits());
         bits.push(rec.mean_local_loss.to_bits());
@@ -91,6 +129,10 @@ fn fingerprint(threads: usize) -> (Vec<String>, Vec<u64>) {
     (structural, bits)
 }
 
+fn fingerprint(threads: usize) -> (Vec<String>, Vec<u64>) {
+    fingerprint_cfg(config(threads))
+}
+
 #[test]
 fn parallel_pipeline_is_bit_identical_to_sequential() {
     let (trace_seq, bits_seq) = fingerprint(1);
@@ -106,6 +148,41 @@ fn parallel_pipeline_is_bit_identical_to_sequential() {
             "numeric fingerprint diverged at {threads} threads"
         );
     }
+}
+
+#[test]
+fn churn_scenario_is_bit_identical_at_any_thread_count() {
+    // The full lifecycle — scripted joins, an eviction on the full slot
+    // table, a leave, uid recycling, a stake move, an outage window — must
+    // not perturb the determinism contract: PEERSCOREs, incentives,
+    // balances, and parameters stay bit-identical at any worker count.
+    let (trace_seq, bits_seq) = fingerprint_cfg(churn_config(1));
+    assert!(!bits_seq.is_empty());
+    // Sanity: the scenario actually fired (joins + eviction + recycling).
+    let all = trace_seq.join("\n");
+    assert!(all.contains("join honest as uid"), "{all}");
+    assert!(all.contains("evicted"), "{all}");
+    assert!(all.contains("uid 4 left"), "{all}");
+    assert!(all.contains("join poisoner as uid 4 (recycled uid)"), "{all}");
+    assert!(all.contains("outage"), "{all}");
+    for threads in [2usize, 4, 8] {
+        let (trace, bits) = fingerprint_cfg(churn_config(threads));
+        assert_eq!(
+            trace, trace_seq,
+            "churn structural trace diverged at {threads} threads"
+        );
+        assert_eq!(
+            bits, bits_seq,
+            "churn numeric fingerprint diverged at {threads} threads"
+        );
+    }
+}
+
+#[test]
+fn churn_sequential_reruns_are_bit_identical() {
+    let a = fingerprint_cfg(churn_config(1));
+    let b = fingerprint_cfg(churn_config(1));
+    assert_eq!(a, b);
 }
 
 #[test]
