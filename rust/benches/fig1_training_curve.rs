@@ -13,7 +13,8 @@
 
 use gauntlet::bench::{save_json, series_json, sparkline, Table};
 use gauntlet::coordinator::baseline::{AdamWParams, AdamWTrainer};
-use gauntlet::coordinator::run::{RunConfig, TemplarRun};
+use gauntlet::coordinator::engine::GauntletBuilder;
+use gauntlet::coordinator::run::RunConfig;
 use gauntlet::data::Corpus;
 use gauntlet::minjson;
 use gauntlet::peers::Behavior;
@@ -44,12 +45,17 @@ fn main() -> anyhow::Result<()> {
     ];
     let n_workers = 5;
 
-    let mut cfg = RunConfig::quick("nano", rounds, peers);
+    let mut cfg = RunConfig {
+        model: "nano".to_string(),
+        rounds,
+        peers,
+        ..RunConfig::default()
+    };
     cfg.eval_every = 2;
     cfg.params.top_g = 4;
     println!("fig1: gauntlet ({} peers) vs adamw ({} workers), {rounds} rounds", 6, n_workers);
 
-    let mut run = TemplarRun::new(cfg)?;
+    let mut run = GauntletBuilder::artifact().config(cfg).build()?;
     let mut g_curve = Vec::new();
     let mut tokens_gauntlet: u64 = 0;
     for _ in 0..rounds {

@@ -8,7 +8,8 @@
 //!     cargo bench --bench fig2_loss_rating [-- <rounds>]
 
 use gauntlet::bench::{save_json, sparkline, Table};
-use gauntlet::coordinator::run::{RunConfig, TemplarRun};
+use gauntlet::coordinator::engine::GauntletBuilder;
+use gauntlet::coordinator::run::RunConfig;
 use gauntlet::minjson::{self, Value};
 use gauntlet::peers::Behavior;
 use gauntlet::runtime::artifacts_available;
@@ -32,12 +33,17 @@ fn main() -> anyhow::Result<()> {
         Behavior::Desync { at: desync_at, pause: 3 },
         Behavior::Honest { data_mult: 1.0 },
     ];
-    let mut cfg = RunConfig::quick("nano", rounds, peers);
+    let mut cfg = RunConfig {
+        model: "nano".to_string(),
+        rounds,
+        peers,
+        ..RunConfig::default()
+    };
     cfg.params.eval_sample = 3;
     cfg.params.top_g = 3;
     cfg.eval_every = 0;
 
-    let mut run = TemplarRun::new(cfg)?;
+    let mut run = GauntletBuilder::artifact().config(cfg).build()?;
     let labels = ["2x-data", "desync", "baseline"];
     let mut scores: Vec<Vec<Option<f64>>> = vec![Vec::new(); 3];
     let mut ratings: Vec<Vec<f64>> = vec![Vec::new(); 3];

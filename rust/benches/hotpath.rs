@@ -16,7 +16,8 @@
 
 use gauntlet::bench::{format_speedup, human_duration, save_json, time_it, Table};
 use gauntlet::chain::yuma::{yuma_consensus, YumaParams};
-use gauntlet::coordinator::run::{RunConfig, TemplarRunWith};
+use gauntlet::coordinator::engine::GauntletBuilder;
+use gauntlet::coordinator::run::RunConfig;
 use gauntlet::data::Corpus;
 use gauntlet::demo::aggregate::{aggregate_into, AggregateOpts};
 use gauntlet::demo::wire::Submission;
@@ -141,14 +142,19 @@ fn main() -> anyhow::Result<()> {
                     _ => Behavior::Honest { data_mult: 1.0 },
                 })
                 .collect();
-            let mut cfg = RunConfig::quick("mid", ROUNDS, peers);
+            let mut cfg = RunConfig {
+                model: "mid".to_string(),
+                rounds: ROUNDS,
+                peers,
+                ..RunConfig::default()
+            };
             cfg.eval_every = 0;
             cfg.seed = 11;
             cfg.n_validators = 2;
             cfg.params.top_g = 8;
             cfg.params.eval_sample = 4;
             cfg.threads = threads;
-            TemplarRunWith::new_sim(cfg).expect("sim run")
+            GauntletBuilder::sim().config(cfg).build().expect("sim run")
         };
         let score_bits = |threads: usize| -> Vec<u64> {
             let mut run = mk_run(threads);
@@ -156,8 +162,8 @@ fn main() -> anyhow::Result<()> {
                 run.run_round().expect("round");
             }
             let uids = run.peer_uids();
-            let mut bits = Vec::with_capacity(run.validators.len() * uids.len());
-            for v in &run.validators {
+            let mut bits = Vec::with_capacity(run.validators().len() * uids.len());
+            for v in run.validators() {
                 for &u in &uids {
                     bits.push(v.book.peer_score(u).to_bits());
                 }

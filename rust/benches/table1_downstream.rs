@@ -9,7 +9,8 @@
 
 use gauntlet::bench::{save_json, Table};
 use gauntlet::coordinator::baseline::{AdamWParams, AdamWTrainer};
-use gauntlet::coordinator::run::{RunConfig, TemplarRun};
+use gauntlet::coordinator::engine::GauntletBuilder;
+use gauntlet::coordinator::run::RunConfig;
 use gauntlet::data::Corpus;
 use gauntlet::eval::{evaluate_suite, Suite};
 use gauntlet::minjson::{self, Value};
@@ -28,14 +29,19 @@ fn main() -> anyhow::Result<()> {
 
     // Train both systems on the same token budget.
     let peers = vec![Behavior::Honest { data_mult: 1.0 }; 5];
-    let mut cfg = RunConfig::quick("nano", rounds, peers);
+    let mut cfg = RunConfig {
+        model: "nano".to_string(),
+        rounds,
+        peers,
+        ..RunConfig::default()
+    };
     cfg.eval_every = 0;
     println!("table1: training templar + adamw for {rounds} rounds, then {items} items/suite");
-    let mut run = TemplarRun::new(cfg)?;
+    let mut run = GauntletBuilder::artifact().config(cfg).build()?;
     for _ in 0..rounds {
         run.run_round()?;
     }
-    let theta_templar = run.theta.clone();
+    let theta_templar = run.theta().to_vec();
 
     let exec = Executor::load(artifact_dir("nano"))?;
     let corpus = Corpus::new(exec.meta.vocab as u32, 0);

@@ -12,14 +12,22 @@
 //!     cargo run --release --example byzantine_gauntlet [rounds]
 
 use gauntlet::bench::{sparkline, Table};
-use gauntlet::coordinator::run::{RunConfig, TemplarRun, TemplarRunWith};
 use gauntlet::peers::Behavior;
-use gauntlet::runtime::ExecBackend;
 
-fn losses<E: ExecBackend + 'static>(
-    mut run: TemplarRunWith<E>,
-) -> anyhow::Result<(Vec<f64>, f64, f64)> {
-    let rounds = run.cfg.rounds;
+use gauntlet::coordinator::engine::GauntletBuilder;
+
+fn losses(normalize: bool, rounds: u64) -> anyhow::Result<(Vec<f64>, f64, f64)> {
+    // Artifact-backed when artifacts + native xla are available, else the
+    // deterministic SimExec fallback (`auto`).
+    let mut peers = vec![Behavior::Honest { data_mult: 1.0 }; 5];
+    peers.push(Behavior::Rescaler { factor: 1000.0 });
+    let mut run = GauntletBuilder::auto()
+        .model("nano")
+        .rounds(rounds)
+        .peers(peers)
+        .eval_every(2)
+        .normalize(normalize)
+        .build()?;
     let mut curve = Vec::new();
     let mut attacker_balance = 0.0;
     let mut honest_balance = 0.0;
@@ -41,37 +49,14 @@ fn losses<E: ExecBackend + 'static>(
     Ok((curve, attacker_balance, honest_balance))
 }
 
-fn run_config(cfg: RunConfig) -> anyhow::Result<(Vec<f64>, f64, f64)> {
-    // Artifact-backed when artifacts + native xla are available, else the
-    // deterministic SimExec fallback.
-    match TemplarRun::new(cfg.clone()) {
-        Ok(run) => losses(run),
-        Err(e) => {
-            println!("(artifact backend unavailable — using the pure-Rust SimExec backend: {e:#})\n");
-            losses(TemplarRunWith::new_sim(cfg)?)
-        }
-    }
-}
-
 fn main() -> anyhow::Result<()> {
     let rounds: u64 =
         std::env::args().nth(1).map(|s| s.parse()).transpose()?.unwrap_or(16);
-    let peers = || {
-        let mut v = vec![Behavior::Honest { data_mult: 1.0 }; 5];
-        v.push(Behavior::Rescaler { factor: 1000.0 });
-        v
-    };
 
     println!("byzantine_gauntlet: 5 honest + 1 rescaler(x1000), {rounds} rounds each\n");
 
-    let mut cfg_on = RunConfig::quick("nano", rounds, peers());
-    cfg_on.eval_every = 2;
-    let (on, att_on, hon_on) = run_config(cfg_on)?;
-
-    let mut cfg_off = RunConfig::quick("nano", rounds, peers());
-    cfg_off.eval_every = 2;
-    cfg_off.agg.normalize = false;
-    let (off, att_off, hon_off) = run_config(cfg_off)?;
+    let (on, att_on, hon_on) = losses(true, rounds)?;
+    let (off, att_off, hon_off) = losses(false, rounds)?;
 
     println!("loss with normalization ON : {}  (end {:.4})", sparkline(&on, 40), on.last().unwrap());
     println!("loss with normalization OFF: {}  (end {:.4})", sparkline(&off, 40), off.last().unwrap());

@@ -25,49 +25,46 @@
 //!     cargo run --release --example churn_gauntlet [rounds]
 
 use gauntlet::bench::Table;
-use gauntlet::coordinator::run::{RunConfig, TemplarRun, TemplarRunWith};
+use gauntlet::coordinator::engine::{GauntletBuilder, GauntletEngine};
 use gauntlet::peers::Behavior;
-use gauntlet::runtime::ExecBackend;
 use gauntlet::scenario::Scenario;
 
 fn main() -> anyhow::Result<()> {
     let rounds: u64 = std::env::args().nth(1).map(|s| s.parse()).transpose()?.unwrap_or(14);
 
-    let peers = vec![
-        Behavior::Honest { data_mult: 1.0 },
-        Behavior::Honest { data_mult: 1.0 },
-        Behavior::Honest { data_mult: 2.0 },
-        Behavior::Honest { data_mult: 1.0 },
-        Behavior::Poisoner { scale: 100.0 },
-    ];
-    let mut cfg = RunConfig::quick("nano", rounds, peers);
-    cfg.max_uids = 6; // 1 validator + 5 peers: the table starts full
-    cfg.immunity_rounds = 2;
-    cfg.eval_every = 2;
-    cfg.params.eval_sample = 8; // evaluate everyone: incentives move fast
-    cfg.scenario = Scenario::parse(
-        "# churn wave (see module docs)\n\
-         @3 join honest\n\
-         @6 leave 2\n\
-         @7 join poisoner\n\
-         @9 outage 0.3 1\n",
-    )?;
+    let engine = GauntletBuilder::auto()
+        .model("nano")
+        .rounds(rounds)
+        .peers(vec![
+            Behavior::Honest { data_mult: 1.0 },
+            Behavior::Honest { data_mult: 1.0 },
+            Behavior::Honest { data_mult: 2.0 },
+            Behavior::Honest { data_mult: 1.0 },
+            Behavior::Poisoner { scale: 100.0 },
+        ])
+        .max_uids(6) // 1 validator + 5 peers: the table starts full
+        .immunity_rounds(2)
+        .eval_every(2)
+        .eval_sample(8) // evaluate everyone: incentives move fast
+        .scenario(Scenario::parse(
+            "# churn wave (see module docs)\n\
+             @3 join honest\n\
+             @6 leave 2\n\
+             @7 join poisoner\n\
+             @9 outage 0.3 1\n",
+        )?)
+        .build()?;
 
     println!(
-        "churn_gauntlet: 6-slot chain, 4 honest + 1 poisoner, {rounds} rounds of scripted churn\n"
+        "churn_gauntlet: 6-slot chain, 4 honest + 1 poisoner, {rounds} rounds of \
+         scripted churn (backend={})\n",
+        engine.backend_name()
     );
-    match TemplarRun::new(cfg.clone()) {
-        Ok(run) => drive(run),
-        Err(e) => {
-            println!("(artifact backend unavailable — using the pure-Rust SimExec backend)");
-            println!("  reason: {e:#}\n");
-            drive(TemplarRunWith::new_sim(cfg)?)
-        }
-    }
+    drive(engine)
 }
 
-fn drive<E: ExecBackend + 'static>(mut run: TemplarRunWith<E>) -> anyhow::Result<()> {
-    let rounds = run.cfg.rounds;
+fn drive(mut run: GauntletEngine) -> anyhow::Result<()> {
+    let rounds = run.cfg().rounds;
     for r in 0..rounds {
         let rec = run.run_round()?;
         for e in &rec.events {
@@ -86,11 +83,11 @@ fn drive<E: ExecBackend + 'static>(mut run: TemplarRunWith<E>) -> anyhow::Result
         "final population (uids recycle; hotkeys are identities)",
         &["uid", "hotkey", "behaviour", "mu", "score", "TAO"],
     );
-    let book = &run.validators[0].book;
+    let book = &run.validators()[0].book;
     let mut honest_min = f64::INFINITY;
     let mut poisoner_max: f64 = 0.0;
-    for p in &run.peers {
-        let n = run.chain.neuron(p.uid).expect("active peer is registered");
+    for p in run.peers() {
+        let n = run.chain().neuron(p.uid).expect("active peer is registered");
         if p.behavior.label().starts_with("honest") {
             honest_min = honest_min.min(n.balance);
         } else {

@@ -1,48 +1,41 @@
-//! Quickstart: the smallest end-to-end Gauntlet run.
+//! Quickstart: the smallest end-to-end Gauntlet run, via the
+//! `GauntletBuilder` front door.
 //!
 //! Registers four honest peers and one poisoner on the simulated chain and
 //! runs ten communication rounds of incentivized DeMo training. With the
 //! `nano` artifacts built (`python -m compile.aot --configs nano`) and the
 //! native xla bindings this executes the compiled transformer (~30 s on
-//! one CPU core); otherwise it falls back to the deterministic pure-Rust
-//! `SimExec` backend, so the example always runs (<1 s).
+//! one CPU core); otherwise `GauntletBuilder::auto()` falls back to the
+//! deterministic pure-Rust `SimExec` backend, so the example always runs
+//! (<1 s).
 //!
 //!     cargo run --release --example quickstart
 
 use gauntlet::bench::Table;
-use gauntlet::coordinator::run::{RunConfig, TemplarRun, TemplarRunWith};
+use gauntlet::coordinator::engine::GauntletBuilder;
 use gauntlet::peers::Behavior;
-use gauntlet::runtime::ExecBackend;
 
 fn main() -> anyhow::Result<()> {
-    let peers = vec![
-        Behavior::Honest { data_mult: 1.0 },
-        Behavior::Honest { data_mult: 1.0 },
-        Behavior::Honest { data_mult: 2.0 }, // more data => should earn more
-        Behavior::Honest { data_mult: 1.0 },
-        Behavior::Poisoner { scale: 100.0 }, // should earn ~nothing
-    ];
-    let mut cfg = RunConfig::quick("nano", 10, peers);
-    cfg.params.top_g = 3;
-    cfg.eval_every = 2;
+    let mut engine = GauntletBuilder::auto()
+        .model("nano")
+        .rounds(10)
+        .peers(vec![
+            Behavior::Honest { data_mult: 1.0 },
+            Behavior::Honest { data_mult: 1.0 },
+            Behavior::Honest { data_mult: 2.0 }, // more data => should earn more
+            Behavior::Honest { data_mult: 1.0 },
+            Behavior::Poisoner { scale: 100.0 }, // should earn ~nothing
+        ])
+        .top_g(3)
+        .eval_every(2)
+        .build()?;
 
-    println!("quickstart: 5 peers, 10 rounds, top-G=3, model=nano");
-    // Try the artifact-backed runtime; fall back to SimExec when artifacts
-    // are missing OR the build uses the stub xla crate (see README
-    // "Runtime backends").
-    match TemplarRun::new(cfg.clone()) {
-        Ok(run) => drive(run),
-        Err(e) => {
-            println!("(artifact backend unavailable — using the pure-Rust SimExec backend)");
-            println!("  reason: {e:#}");
-            drive(TemplarRunWith::new_sim(cfg)?)
-        }
-    }
-}
-
-fn drive<E: ExecBackend + 'static>(mut run: TemplarRunWith<E>) -> anyhow::Result<()> {
+    println!(
+        "quickstart: 5 peers, 10 rounds, top-G=3, model=nano, backend={}",
+        engine.backend_name()
+    );
     for r in 0..10 {
-        let rec = run.run_round()?;
+        let rec = engine.run_round()?;
         if let Some(l) = rec.heldout_loss {
             println!(
                 "round {r:>2}: heldout loss {l:.4}, {} valid submissions, top-G {:?}",
@@ -52,14 +45,17 @@ fn drive<E: ExecBackend + 'static>(mut run: TemplarRunWith<E>) -> anyhow::Result
     }
 
     let mut t = Table::new("who earned what", &["peer", "behaviour", "mu", "score", "TAO"]);
-    let book = &run.validators[0].book;
-    for p in &run.peers {
+    let book = &engine.validators()[0].book;
+    for p in engine.peers() {
         t.row(&[
             p.uid.to_string(),
             p.behavior.label(),
             format!("{:+.2}", book.get(p.uid).map(|s| s.mu.value).unwrap_or(0.0)),
             format!("{:.2}", book.peer_score(p.uid)),
-            format!("{:.3}", run.chain.neuron(p.uid).map(|n| n.balance).unwrap_or(0.0)),
+            format!(
+                "{:.3}",
+                engine.chain().neuron(p.uid).map(|n| n.balance).unwrap_or(0.0)
+            ),
         ]);
     }
     t.print();

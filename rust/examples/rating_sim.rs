@@ -15,41 +15,37 @@
 //!     cargo run --release --example rating_sim [rounds]
 
 use gauntlet::bench::{save_json, sparkline, Table};
-use gauntlet::coordinator::run::{RunConfig, TemplarRun, TemplarRunWith};
+use gauntlet::coordinator::engine::{GauntletBuilder, GauntletEngine};
 use gauntlet::minjson::{self, Value};
 use gauntlet::peers::Behavior;
-use gauntlet::runtime::ExecBackend;
 
 fn main() -> anyhow::Result<()> {
     let rounds: u64 =
         std::env::args().nth(1).map(|s| s.parse()).transpose()?.unwrap_or(30);
     let desync_at = 5;
 
-    let peers = vec![
-        Behavior::Honest { data_mult: 2.0 },             // uid 1: more data
-        Behavior::Desync { at: desync_at, pause: 3 },    // uid 2: desynchronized
-        Behavior::Honest { data_mult: 1.0 },             // uid 3: baseline
-    ];
-    let mut cfg = RunConfig::quick("nano", rounds, peers);
-    cfg.params.eval_sample = 3; // S = K: evaluate everyone, like the paper's sim
-    cfg.params.top_g = 3;
-    cfg.eval_every = 0;
+    let run = GauntletBuilder::auto()
+        .model("nano")
+        .rounds(rounds)
+        .peers(vec![
+            Behavior::Honest { data_mult: 2.0 },          // uid 1: more data
+            Behavior::Desync { at: desync_at, pause: 3 }, // uid 2: desynchronized
+            Behavior::Honest { data_mult: 1.0 },          // uid 3: baseline
+        ])
+        .eval_sample(3) // S = K: evaluate everyone, like the paper's sim
+        .top_g(3)
+        .eval_every(0)
+        .build()?;
 
-    println!("rating_sim: 3 peers (2x-data / desync@{desync_at} / baseline), {rounds} rounds\n");
-    match TemplarRun::new(cfg.clone()) {
-        Ok(run) => drive(run, rounds),
-        Err(e) => {
-            println!("(artifact backend unavailable — using the pure-Rust SimExec backend)");
-            println!("  reason: {e:#}\n");
-            drive(TemplarRunWith::new_sim(cfg)?, rounds)
-        }
-    }
+    println!(
+        "rating_sim: 3 peers (2x-data / desync@{desync_at} / baseline), {rounds} rounds \
+         (backend={})\n",
+        run.backend_name()
+    );
+    drive(run, rounds)
 }
 
-fn drive<E: ExecBackend + 'static>(
-    mut run: TemplarRunWith<E>,
-    rounds: u64,
-) -> anyhow::Result<()> {
+fn drive(mut run: GauntletEngine, rounds: u64) -> anyhow::Result<()> {
     let mut series: Vec<(u64, Vec<(String, Option<f64>, f64, f64)>)> = Vec::new();
     for _ in 0..rounds {
         let rec = run.run_round()?;

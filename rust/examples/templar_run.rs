@@ -15,12 +15,12 @@
 
 use gauntlet::bench::{save_json, series_json, sparkline, Table};
 use gauntlet::coordinator::baseline::{AdamWParams, AdamWTrainer};
-use gauntlet::coordinator::run::{RunConfig, TemplarRun, TemplarRunWith};
+use gauntlet::coordinator::engine::{GauntletBuilder, GauntletEngine};
 use gauntlet::data::Corpus;
 use gauntlet::eval::{evaluate_suite, Suite};
 use gauntlet::minjson;
 use gauntlet::peers::Behavior;
-use gauntlet::runtime::{artifact_dir, ExecBackend, Executor, SimExec};
+use gauntlet::runtime::ExecBackend;
 
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -40,47 +40,30 @@ fn main() -> anyhow::Result<()> {
         Behavior::Poisoner { scale: 100.0 },
     ];
 
-    let mut cfg = RunConfig::quick(&model, rounds, peers);
-    cfg.params.top_g = 4;
-    cfg.params.eval_sample = 3;
-    cfg.eval_every = 5;
+    // Artifact-backed when available, SimExec fallback otherwise (`auto`).
+    let mut engine = GauntletBuilder::auto()
+        .model(&model)
+        .rounds(rounds)
+        .peers(peers)
+        .top_g(4)
+        .eval_sample(3)
+        .eval_every(5)
+        .build()?;
+    let cfg = engine.cfg();
     println!(
-        "templar_run: model={model} rounds={rounds} peers={} (top-G={}, S={}, threads={})",
-        cfg.peers.len(),
+        "templar_run: model={model} backend={} rounds={rounds} peers={} (top-G={}, S={}, threads={})",
+        engine.backend_name(),
+        engine.peers().len(),
         cfg.params.top_g,
         cfg.params.eval_sample,
         cfg.effective_threads(),
     );
 
-    // Try the artifact-backed runtime; fall back to SimExec when artifacts
-    // are missing OR the build uses the stub xla crate.
-    let attempt = TemplarRun::new(cfg.clone())
-        .and_then(|run| Ok((run, Executor::load(artifact_dir(&model))?)));
-    match attempt {
-        Ok((run, baseline_exec)) => drive(run, baseline_exec, rounds, &model),
-        Err(e) => {
-            println!("(artifact backend unavailable — using the pure-Rust SimExec backend)");
-            println!("  reason: {e:#}");
-            let run = TemplarRunWith::new_sim(cfg)?;
-            let baseline_exec = SimExec::from_model_name(&model, 0);
-            drive(run, baseline_exec, rounds, &model)
-        }
-    }
-}
-
-fn drive<E: ExecBackend + 'static>(
-    mut run: TemplarRunWith<E>,
-    exec: E,
-    rounds: u64,
-    model: &str,
-) -> anyhow::Result<()> {
-    let n_honest_equiv = 5; // AdamW baseline worker count (same order of tokens/round)
-
     // ---------------- Gauntlet permissionless run -----------------------
     let t0 = std::time::Instant::now();
     let mut gauntlet_curve: Vec<(f64, f64)> = Vec::new();
     for r in 0..rounds {
-        let rec = run.run_round()?;
+        let rec = engine.run_round()?;
         if let Some(l) = rec.heldout_loss {
             gauntlet_curve.push((r as f64, l));
             println!(
@@ -90,24 +73,13 @@ fn drive<E: ExecBackend + 'static>(
         }
     }
     let gauntlet_time = t0.elapsed();
-    let theta_gauntlet = run.theta.clone();
+    let theta_gauntlet = engine.theta().to_vec();
 
-    // ---------------- AdamW DDP baseline --------------------------------
-    let corpus = Corpus::new(exec.meta().vocab as u32, 0);
-    let mut trainer =
-        AdamWTrainer::new(exec.init_params()?, AdamWParams::default(), n_honest_equiv);
-    let mut adamw_curve: Vec<(f64, f64)> = Vec::new();
-    let t1 = std::time::Instant::now();
-    for r in 0..rounds {
-        trainer.step(&exec, &corpus, r)?;
-        if r % 5 == 0 {
-            let toks = corpus.heldout(0, exec.meta().batch, exec.meta().seq + 1);
-            let l = exec.loss(&trainer.theta, &toks)? as f64;
-            adamw_curve.push((r as f64, l));
-            println!("  [adamw]    round {r:>4}  heldout={l:.4}");
-        }
-    }
-    let adamw_time = t1.elapsed();
+    // The baseline + downstream eval reuse the engine's own backend.
+    let (adamw_curve, adamw_time, table1) = match &engine {
+        GauntletEngine::Sim(run) => baseline_and_eval(&run.exec, &theta_gauntlet, rounds)?,
+        GauntletEngine::Artifact(run) => baseline_and_eval(&run.exec, &theta_gauntlet, rounds)?,
+    };
 
     // ---------------- Fig. 1 style summary ------------------------------
     let gl: Vec<f64> = gauntlet_curve.iter().map(|(_, y)| *y).collect();
@@ -128,8 +100,8 @@ fn drive<E: ExecBackend + 'static>(
         "final standings (permissionless run)",
         &["uid", "behaviour", "mu", "rating", "score", "TAO earned"],
     );
-    let book = &run.validators[0].book;
-    for p in &run.peers {
+    let book = &engine.validators()[0].book;
+    for p in engine.peers() {
         let st = book.get(p.uid);
         t.row(&[
             p.uid.to_string(),
@@ -137,34 +109,63 @@ fn drive<E: ExecBackend + 'static>(
             st.map(|s| format!("{:+.3}", s.mu.value)).unwrap_or_default(),
             st.map(|s| format!("{:.2}", s.rating.mu)).unwrap_or_default(),
             format!("{:.3}", book.peer_score(p.uid)),
-            format!("{:.3}", run.chain.neuron(p.uid).map(|n| n.balance).unwrap_or(0.0)),
+            format!(
+                "{:.3}",
+                engine.chain().neuron(p.uid).map(|n| n.balance).unwrap_or(0.0)
+            ),
         ]);
     }
     t.print();
-
-    // ---------------- Table 1 style downstream eval ----------------------
-    let mut t1tab = Table::new(
-        "Table 1 — downstream acc_norm (synthetic suites)",
-        &["model", "synth-hellaswag", "synth-piqa", "synth-arc-e"],
-    );
-    for (name, theta) in [("TEMPLAR (gauntlet)", &theta_gauntlet), ("AdamW DDP", &trainer.theta)]
-    {
-        let mut cells = vec![name.to_string()];
-        for suite in Suite::all() {
-            let r = evaluate_suite(&exec, theta, &corpus, suite, 40)?;
-            cells.push(format!("{:.3}", r.acc_norm));
-        }
-        t1tab.row(&cells);
-    }
-    t1tab.print();
+    table1.print();
 
     println!(
         "\nwall-clock: gauntlet {:.1}s, adamw {:.1}s; checkpoints: {} full + {} signed updates ({} KiB of signs)",
         gauntlet_time.as_secs_f64(),
         adamw_time.as_secs_f64(),
-        run.checkpoints.n_checkpoints(),
-        run.checkpoints.n_updates(),
-        run.checkpoints.sign_bytes() / 1024,
+        engine.checkpoints().n_checkpoints(),
+        engine.checkpoints().n_updates(),
+        engine.checkpoints().sign_bytes() / 1024,
     );
     Ok(())
+}
+
+/// Run the AdamW-DDP baseline on `exec` and evaluate both checkpoints on
+/// the Table-1 synthetic suites. Returns the baseline loss curve, its
+/// wall-clock, and the print-ready table.
+fn baseline_and_eval<E: ExecBackend>(
+    exec: &E,
+    theta_gauntlet: &[f32],
+    rounds: u64,
+) -> anyhow::Result<(Vec<(f64, f64)>, std::time::Duration, Table)> {
+    let n_honest_equiv = 5; // AdamW baseline worker count (same order of tokens/round)
+    let corpus = Corpus::new(exec.meta().vocab as u32, 0);
+    let mut trainer =
+        AdamWTrainer::new(exec.init_params()?, AdamWParams::default(), n_honest_equiv);
+    let mut adamw_curve: Vec<(f64, f64)> = Vec::new();
+    let t1 = std::time::Instant::now();
+    for r in 0..rounds {
+        trainer.step(exec, &corpus, r)?;
+        if r % 5 == 0 {
+            let toks = corpus.heldout(0, exec.meta().batch, exec.meta().seq + 1);
+            let l = exec.loss(&trainer.theta, &toks)? as f64;
+            adamw_curve.push((r as f64, l));
+            println!("  [adamw]    round {r:>4}  heldout={l:.4}");
+        }
+    }
+    let adamw_time = t1.elapsed();
+
+    let mut t1tab = Table::new(
+        "Table 1 — downstream acc_norm (synthetic suites)",
+        &["model", "synth-hellaswag", "synth-piqa", "synth-arc-e"],
+    );
+    for (name, theta) in [("TEMPLAR (gauntlet)", theta_gauntlet), ("AdamW DDP", &trainer.theta)]
+    {
+        let mut cells = vec![name.to_string()];
+        for suite in Suite::all() {
+            let r = evaluate_suite(exec, theta, &corpus, suite, 40)?;
+            cells.push(format!("{:.3}", r.acc_norm));
+        }
+        t1tab.row(&cells);
+    }
+    Ok((adamw_curve, adamw_time, t1tab))
 }

@@ -97,6 +97,24 @@ pub struct Registration {
     pub evicted_hotkey: Option<String>,
 }
 
+/// Every field of the simulated subnet, exported as plain data so run
+/// snapshots (`coordinator::snapshot`) can serialize and rebuild the chain
+/// exactly — including committed weight rows, the freed-uid pool, and the
+/// monotone uid counter, all of which feed future epochs and registrations.
+#[derive(Clone, Debug)]
+pub struct ChainState {
+    pub block: u64,
+    pub neurons: Vec<Neuron>,
+    pub next_uid: Uid,
+    pub free_uids: Vec<Uid>,
+    /// `(validator uid, [(target uid, weight)])`, sorted by validator uid.
+    pub weights: Vec<(Uid, Vec<(Uid, f64)>)>,
+    pub yuma: YumaParams,
+    pub emission_per_epoch: f64,
+    pub max_uids: usize,
+    pub immunity_blocks: u64,
+}
+
 /// The simulated subnet.
 pub struct Chain {
     pub block: u64,
@@ -128,6 +146,46 @@ impl Chain {
             emission_per_epoch: 1.0,
             max_uids: 0,
             immunity_blocks: 0,
+        }
+    }
+
+    /// Export the full chain state for a run snapshot (see [`ChainState`]).
+    pub fn to_state(&self) -> ChainState {
+        ChainState {
+            block: self.block,
+            neurons: self.neurons.values().cloned().collect(),
+            next_uid: self.next_uid,
+            free_uids: self.free_uids.iter().copied().collect(),
+            weights: self
+                .weights
+                .iter()
+                .map(|(v, row)| (*v, row.iter().map(|(u, w)| (*u, *w)).collect()))
+                .collect(),
+            yuma: self.yuma,
+            emission_per_epoch: self.emission_per_epoch,
+            max_uids: self.max_uids,
+            immunity_blocks: self.immunity_blocks,
+        }
+    }
+
+    /// Rebuild a chain from an exported [`ChainState`] — the exact inverse
+    /// of [`Chain::to_state`], so a resumed run's registrations, epochs,
+    /// and evictions continue bit-identically.
+    pub fn from_state(state: ChainState) -> Chain {
+        Chain {
+            block: state.block,
+            neurons: state.neurons.into_iter().map(|n| (n.uid, n)).collect(),
+            next_uid: state.next_uid,
+            free_uids: state.free_uids.into_iter().collect(),
+            weights: state
+                .weights
+                .into_iter()
+                .map(|(v, row)| (v, row.into_iter().collect()))
+                .collect(),
+            yuma: state.yuma,
+            emission_per_epoch: state.emission_per_epoch,
+            max_uids: state.max_uids,
+            immunity_blocks: state.immunity_blocks,
         }
     }
 
@@ -623,6 +681,34 @@ mod tests {
         let inc = c.run_epoch();
         let get = |u: Uid| inc.iter().find(|(x, _)| *x == u).map(|(_, i)| *i).unwrap_or(0.0);
         assert!((get(p0) - 0.25).abs() < 1e-9 && (get(p1) - 0.75).abs() < 1e-9, "{inc:?}");
+    }
+
+    #[test]
+    fn state_export_rebuilds_an_identical_chain() {
+        let (mut c, v) = chain_with_validator();
+        c.max_uids = 8;
+        c.immunity_blocks = 3;
+        let p0 = c.register("p0").unwrap();
+        let p1 = c.register("p1").unwrap();
+        c.post_read_key(p0, ReadKey("rk-p0".into())).unwrap();
+        c.set_weights(v, &[(p0, 0.7), (p1, 0.3)]).unwrap();
+        c.run_epoch();
+        c.deregister(p1).unwrap(); // leaves a freed uid + scrubbed weights
+        c.advance_blocks(4);
+
+        let mut rebuilt = Chain::from_state(c.to_state());
+        assert_eq!(rebuilt.block, c.block);
+        assert_eq!(rebuilt.uids(), c.uids());
+        assert_eq!(rebuilt.neuron(p0), c.neuron(p0));
+        assert_eq!(rebuilt.committed_weights(v), c.committed_weights(v));
+        assert_eq!(rebuilt.validators(), c.validators());
+        // The freed uid is recycled identically on both chains…
+        let a = rebuilt.register_replacing("next").unwrap();
+        let b = c.register_replacing("next").unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a.uid, p1);
+        // …and the next epoch pays identically.
+        assert_eq!(rebuilt.run_epoch(), c.run_epoch());
     }
 
     #[test]

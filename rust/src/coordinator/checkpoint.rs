@@ -43,6 +43,19 @@ impl SignVector {
     pub fn len(&self) -> usize {
         self.len
     }
+
+    /// The raw `(packed bytes, logical length)` pair, for serialization.
+    pub fn to_parts(&self) -> (&[u8], usize) {
+        (&self.packed, self.len)
+    }
+
+    /// Rebuild from [`SignVector::to_parts`] output.
+    pub fn from_parts(packed: Vec<u8>, len: usize) -> Result<SignVector> {
+        if packed.len() != len.div_ceil(4) {
+            bail!("sign vector: {} packed bytes cannot hold {len} entries", packed.len());
+        }
+        Ok(SignVector { packed, len })
+    }
     pub fn is_empty(&self) -> bool {
         self.len == 0
     }
@@ -88,9 +101,14 @@ impl CheckpointStore {
         CheckpointStore { every, checkpoints: Vec::new(), updates: Vec::new() }
     }
 
+    /// Whether `round` starts with a full-parameter checkpoint.
+    pub fn is_checkpoint_round(&self, round: u64) -> bool {
+        round % self.every == 0
+    }
+
     /// Record state at the start of `round` if it's a checkpoint round.
     pub fn maybe_checkpoint(&mut self, round: u64, theta: &[f32]) {
-        if round % self.every == 0 {
+        if self.is_checkpoint_round(round) {
             self.checkpoints.push((round, theta.to_vec()));
         }
     }
@@ -121,6 +139,23 @@ impl CheckpointStore {
             }
         }
         Some(theta)
+    }
+
+    /// Export everything for a run snapshot: the stored full-parameter
+    /// checkpoints and the per-round `(round, lr, signs)` updates.
+    #[allow(clippy::type_complexity)]
+    pub fn export(&self) -> (&[(u64, Vec<f32>)], &[(u64, f32, SignVector)]) {
+        (&self.checkpoints, &self.updates)
+    }
+
+    /// Rebuild a store mid-run from exported state, so `catchup` keeps
+    /// answering for pre-snapshot rounds after a resume.
+    pub fn restore(
+        every: u64,
+        checkpoints: Vec<(u64, Vec<f32>)>,
+        updates: Vec<(u64, f32, SignVector)>,
+    ) -> Self {
+        CheckpointStore { every, checkpoints, updates }
     }
 
     pub fn n_checkpoints(&self) -> usize {

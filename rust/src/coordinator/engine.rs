@@ -1,0 +1,502 @@
+//! The library's front door: a fluent [`GauntletBuilder`] that assembles a
+//! [`GauntletEngine`] — the backend-agnostic facade over the full Templar
+//! system (chain + storage + peers + validators + DeMo aggregation).
+//!
+//! The Gauntlet mechanism is pluggable ("can be applied to any synchronous
+//! distributed training scheme", §1); this module is the stable surface
+//! new workloads grow against, replacing the old
+//! `RunConfig::quick` / `TemplarRunWith::{new,new_sim,with_backend}`
+//! constructor tangle (kept as deprecated shims during the transition):
+//!
+//! ```
+//! use gauntlet::coordinator::engine::GauntletBuilder;
+//! use gauntlet::coordinator::events::MetricsObserver;
+//! use gauntlet::peers::Behavior;
+//!
+//! let metrics = MetricsObserver::shared();
+//! let mut engine = GauntletBuilder::sim()
+//!     .model("nano")
+//!     .rounds(3)
+//!     .peers(vec![
+//!         Behavior::Honest { data_mult: 1.0 },
+//!         Behavior::Honest { data_mult: 2.0 },
+//!         Behavior::Poisoner { scale: 100.0 },
+//!     ])
+//!     .top_g(2)
+//!     .seed(7)
+//!     .observer(metrics.clone())
+//!     .build()?;
+//! let run_metrics = engine.run()?;
+//! assert_eq!(run_metrics.rounds.len(), 3);
+//! assert_eq!(metrics.n_rounds(), 3, "observers see every round");
+//! # anyhow::Ok(())
+//! ```
+//!
+//! Three backend modes: [`GauntletBuilder::sim`] (deterministic pure-Rust
+//! `SimExec`, always available), [`GauntletBuilder::artifact`] (compiled
+//! PJRT artifacts, errors if missing), and [`GauntletBuilder::auto`]
+//! (artifacts if present, else the sim fallback — what the CLI uses).
+//! [`GauntletBuilder::resume`] rebuilds an engine from a
+//! [`RunSnapshot`](super::snapshot::RunSnapshot) and continues
+//! bit-identically.
+
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use super::events::{MetricsObserver, Observer};
+use super::run::{RoundRecord, RunConfig, RunMetrics, TemplarRunWith};
+use super::snapshot::RunSnapshot;
+use super::GauntletParams;
+use crate::chain::{Chain, Registration, Uid};
+use crate::coordinator::validator::Validator;
+use crate::peers::{Behavior, PeerRunner};
+use crate::runtime::{ExecStats, Executor, SimExec};
+use crate::scenario::Scenario;
+use crate::storage::ProviderModel;
+
+/// Which execution backend [`GauntletBuilder::build`] assembles over.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum BackendKind {
+    /// Deterministic pure-Rust `SimExec` (no artifacts needed).
+    Sim,
+    /// Compiled PJRT artifacts; build fails if they are missing.
+    Artifact,
+    /// Artifacts when available, sim fallback otherwise.
+    Auto,
+}
+
+/// Fluent constructor for a [`GauntletEngine`] (see the module docs).
+///
+/// Every setter overrides one [`RunConfig`] field; [`GauntletBuilder::config`]
+/// swaps in a whole config for full control. Setters applied after
+/// [`GauntletBuilder::resume`] override the snapshot's embedded config —
+/// `rounds` is the usual one (the run target is a *total* round count, so
+/// `.resume(snap).rounds(10)` continues a paused run out to round 10).
+pub struct GauntletBuilder {
+    cfg: RunConfig,
+    backend: BackendKind,
+    observers: Vec<Arc<dyn Observer>>,
+    snapshot: Option<RunSnapshot>,
+}
+
+impl GauntletBuilder {
+    fn with_backend_kind(backend: BackendKind) -> Self {
+        GauntletBuilder {
+            cfg: RunConfig::default(),
+            backend,
+            observers: Vec::new(),
+            snapshot: None,
+        }
+    }
+
+    /// Build on the deterministic pure-Rust backend (always available).
+    pub fn sim() -> Self {
+        Self::with_backend_kind(BackendKind::Sim)
+    }
+
+    /// Build on compiled PJRT artifacts (fails if they are missing).
+    pub fn artifact() -> Self {
+        Self::with_backend_kind(BackendKind::Artifact)
+    }
+
+    /// Prefer artifacts, fall back to the sim backend (the CLI default).
+    pub fn auto() -> Self {
+        Self::with_backend_kind(BackendKind::Auto)
+    }
+
+    /// Continue a paused run from a [`RunSnapshot`]: the snapshot's
+    /// embedded config becomes the builder's config.
+    ///
+    /// Setters applied afterwards fall in two classes. Runtime-read fields
+    /// take effect on the resumed run: `rounds`, `threads`, `eval_every`,
+    /// `scenario`, `params`. Structural fields are *baked into the
+    /// snapshot state* (the chain slot table, registered runners, RNG
+    /// streams, the backend's data geometry) — changing `model`, `seed`,
+    /// `peers`, `validators`, `max_uids`, or `immunity_rounds` after
+    /// `resume` is rejected by [`GauntletBuilder::build`] rather than
+    /// silently ignored.
+    pub fn resume(mut self, snapshot: RunSnapshot) -> Self {
+        self.cfg = snapshot.cfg.clone();
+        self.snapshot = Some(snapshot);
+        self
+    }
+
+    /// Artifact config name (nano / tiny / small / base).
+    pub fn model(mut self, model: &str) -> Self {
+        self.cfg.model = model.to_string();
+        self
+    }
+
+    /// Total communication rounds ([`GauntletEngine::run`] drives until the
+    /// round counter reaches this, so it composes with `resume`).
+    pub fn rounds(mut self, rounds: u64) -> Self {
+        self.cfg.rounds = rounds;
+        self
+    }
+
+    /// The round-0 peer population (replaces any previous list).
+    pub fn peers(mut self, peers: Vec<Behavior>) -> Self {
+        self.cfg.peers = peers;
+        self
+    }
+
+    /// Append one peer to the round-0 population.
+    pub fn peer(mut self, behavior: Behavior) -> Self {
+        self.cfg.peers.push(behavior);
+        self
+    }
+
+    /// Scripted churn schedule (`scenario` module).
+    pub fn scenario(mut self, scenario: Scenario) -> Self {
+        self.cfg.scenario = scenario;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.cfg.seed = seed;
+        self
+    }
+
+    /// Worker threads (0 = auto via `GAUNTLET_THREADS`, 1 = sequential).
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.cfg.threads = threads;
+        self
+    }
+
+    /// Number of staked validators (>= 1).
+    pub fn validators(mut self, n: usize) -> Self {
+        self.cfg.n_validators = n;
+        self
+    }
+
+    /// Evaluate held-out loss every `n` rounds (0 = never).
+    pub fn eval_every(mut self, n: u64) -> Self {
+        self.cfg.eval_every = n;
+        self
+    }
+
+    /// Chain neuron-slot capacity including validators (0 = unbounded).
+    pub fn max_uids(mut self, n: usize) -> Self {
+        self.cfg.max_uids = n;
+        self
+    }
+
+    /// Rounds of post-registration eviction immunity.
+    pub fn immunity_rounds(mut self, rounds: u64) -> Self {
+        self.cfg.immunity_rounds = rounds;
+        self
+    }
+
+    /// Aggregation size G (eq. 6).
+    pub fn top_g(mut self, g: usize) -> Self {
+        self.cfg.params.top_g = g;
+        self
+    }
+
+    /// |S_t|: peers primary-evaluated per round.
+    pub fn eval_sample(mut self, s: usize) -> Self {
+        self.cfg.params.eval_sample = s;
+        self
+    }
+
+    /// Override any [`GauntletParams`] field in place.
+    pub fn params(mut self, f: impl FnOnce(&mut GauntletParams)) -> Self {
+        f(&mut self.cfg.params);
+        self
+    }
+
+    /// Storage-provider latency/reliability model.
+    pub fn provider(mut self, provider: ProviderModel) -> Self {
+        self.cfg.provider = provider;
+        self
+    }
+
+    /// Toggle encoded-domain normalization (the §4 ablation).
+    pub fn normalize(mut self, on: bool) -> Self {
+        self.cfg.agg.normalize = on;
+        self
+    }
+
+    /// Swap in a complete [`RunConfig`] (escape hatch for tests/benches
+    /// that build configs programmatically).
+    pub fn config(mut self, cfg: RunConfig) -> Self {
+        self.cfg = cfg;
+        self
+    }
+
+    /// Subscribe an observer to the engine's round-event stream (attached
+    /// before the first round, so it sees the complete stream).
+    pub fn observer(mut self, obs: Arc<dyn Observer>) -> Self {
+        self.observers.push(obs);
+        self
+    }
+
+    /// Assemble the engine. Fresh builds register the round-0 population
+    /// through the permissionless path; `resume` builds restore every
+    /// substrate from the snapshot instead.
+    pub fn build(self) -> Result<GauntletEngine> {
+        let GauntletBuilder { cfg, backend, observers, snapshot } = self;
+        let mut engine = match snapshot {
+            Some(mut snap) => {
+                // Runtime-read setters applied after `resume` win over the
+                // snapshot's embedded config; structural ones cannot
+                // (their state is already baked into the snapshot), so a
+                // changed value is an error, not a silent no-op.
+                ensure_resume_compatible(&snap.cfg, &cfg)?;
+                snap.cfg = cfg;
+                Self::build_resumed(backend, snap)?
+            }
+            None => Self::build_fresh(backend, cfg)?,
+        };
+        for obs in observers {
+            engine.add_observer(obs);
+        }
+        Ok(engine)
+    }
+
+    fn build_fresh(backend: BackendKind, cfg: RunConfig) -> Result<GauntletEngine> {
+        match backend {
+            BackendKind::Sim => {
+                Ok(GauntletEngine::Sim(TemplarRunWith::<SimExec>::new_sim_inner(cfg)?))
+            }
+            BackendKind::Artifact => {
+                Ok(GauntletEngine::Artifact(TemplarRunWith::<Executor>::new_artifact(cfg)?))
+            }
+            BackendKind::Auto => match TemplarRunWith::<Executor>::new_artifact(cfg.clone()) {
+                Ok(run) => Ok(GauntletEngine::Artifact(run)),
+                Err(e) => {
+                    // Don't swallow *why* artifacts were rejected — a
+                    // corrupted/ABI-mismatched build would otherwise run
+                    // silently (and wrongly) on the toy model.
+                    eprintln!(
+                        "note: artifact backend unavailable ({e:#}); \
+                         falling back to the pure-Rust SimExec backend"
+                    );
+                    Ok(GauntletEngine::Sim(TemplarRunWith::<SimExec>::new_sim_inner(cfg)?))
+                }
+            },
+        }
+    }
+
+    fn build_resumed(backend: BackendKind, snap: RunSnapshot) -> Result<GauntletEngine> {
+        match backend {
+            BackendKind::Sim => {
+                let exec = SimExec::from_model_name(&snap.cfg.model, snap.cfg.seed);
+                Ok(GauntletEngine::Sim(TemplarRunWith::from_snapshot(exec, snap)?))
+            }
+            BackendKind::Artifact => {
+                let exec =
+                    Executor::load(crate::runtime::artifact_dir(&snap.cfg.model))?;
+                Ok(GauntletEngine::Artifact(TemplarRunWith::from_snapshot(exec, snap)?))
+            }
+            // Auto resume follows the backend the snapshot records: a
+            // bit-identical continuation is only possible on the backend
+            // that produced the state, so a recorded backend is honored
+            // (and its absence — artifacts gone, say — is an error, not a
+            // silent switch to a different model implementation).
+            BackendKind::Auto => match snap.backend.as_str() {
+                "sim" => {
+                    let exec = SimExec::from_model_name(&snap.cfg.model, snap.cfg.seed);
+                    Ok(GauntletEngine::Sim(TemplarRunWith::from_snapshot(exec, snap)?))
+                }
+                "artifact" => {
+                    let exec = Executor::load(crate::runtime::artifact_dir(&snap.cfg.model))
+                        .context(
+                            "this snapshot was taken on the artifact backend; resuming it \
+                             on the sim backend would silently change the model — rebuild \
+                             the artifacts or pass GauntletBuilder::sim() explicitly",
+                        )?;
+                    Ok(GauntletEngine::Artifact(TemplarRunWith::from_snapshot(exec, snap)?))
+                }
+                // Snapshot predates the backend stamp (or was captured
+                // below the engine facade): keep the old try-then-fall-back
+                // behavior, but say which way it went.
+                _ => match Executor::load(crate::runtime::artifact_dir(&snap.cfg.model)) {
+                    Ok(exec) => {
+                        Ok(GauntletEngine::Artifact(TemplarRunWith::from_snapshot(exec, snap)?))
+                    }
+                    Err(e) => {
+                        eprintln!(
+                            "note: artifact backend unavailable ({e:#}); resuming on \
+                             the pure-Rust SimExec backend"
+                        );
+                        let exec = SimExec::from_model_name(&snap.cfg.model, snap.cfg.seed);
+                        Ok(GauntletEngine::Sim(TemplarRunWith::from_snapshot(exec, snap)?))
+                    }
+                },
+            },
+        }
+    }
+}
+
+/// Reject post-`resume` changes to config fields whose state is baked into
+/// the snapshot (see [`GauntletBuilder::resume`]); a silent no-op would
+/// leave `engine.cfg()` describing a different experiment than the one
+/// actually running.
+fn ensure_resume_compatible(snapshot: &RunConfig, requested: &RunConfig) -> Result<()> {
+    fn check<T: PartialEq + std::fmt::Debug>(field: &str, old: &T, new: &T) -> Result<()> {
+        anyhow::ensure!(
+            old == new,
+            "cannot change `{field}` on resume ({old:?} -> {new:?}): that state is \
+             baked into the snapshot; start a fresh run instead"
+        );
+        Ok(())
+    }
+    check("model", &snapshot.model, &requested.model)?;
+    check("seed", &snapshot.seed, &requested.seed)?;
+    check("peers", &snapshot.peers, &requested.peers)?;
+    check("n_validators", &snapshot.n_validators, &requested.n_validators)?;
+    check("max_uids", &snapshot.max_uids, &requested.max_uids)?;
+    check("immunity_rounds", &snapshot.immunity_rounds, &requested.immunity_rounds)?;
+    Ok(())
+}
+
+/// The assembled system behind one stable facade, whichever backend won:
+/// drive it with [`GauntletEngine::run_round`] / [`GauntletEngine::run`],
+/// snapshot it, churn its population, or inspect its substrates.
+pub enum GauntletEngine {
+    /// Pure-Rust deterministic backend.
+    Sim(TemplarRunWith<SimExec>),
+    /// Compiled-artifact PJRT backend.
+    Artifact(TemplarRunWith<Executor>),
+}
+
+macro_rules! delegate {
+    ($self:ident, $run:ident => $body:expr) => {
+        match $self {
+            GauntletEngine::Sim($run) => $body,
+            GauntletEngine::Artifact($run) => $body,
+        }
+    };
+}
+
+impl GauntletEngine {
+    /// One synchronous communication round.
+    pub fn run_round(&mut self) -> Result<RoundRecord> {
+        delegate!(self, run => run.run_round())
+    }
+
+    /// Drive rounds until the round counter reaches the configured total;
+    /// returns the metrics of the rounds this call drove.
+    pub fn run(&mut self) -> Result<RunMetrics> {
+        delegate!(self, run => run.run())
+    }
+
+    /// Capture a [`RunSnapshot`] at the current round boundary, stamped
+    /// with this engine's backend so `resume` can refuse a silent
+    /// backend switch.
+    pub fn snapshot(&self) -> RunSnapshot {
+        let mut snap = delegate!(self, run => run.snapshot());
+        snap.backend = self.backend_name().to_string();
+        snap
+    }
+
+    /// Subscribe an observer to the round-event stream.
+    pub fn add_observer(&mut self, obs: Arc<dyn Observer>) {
+        delegate!(self, run => run.add_observer(obs))
+    }
+
+    /// The engine's built-in metrics observer.
+    pub fn metrics_observer(&self) -> &Arc<MetricsObserver> {
+        delegate!(self, run => run.metrics_observer())
+    }
+
+    /// Permissionless mid-run registration (slot rules apply).
+    pub fn register_peer(&mut self, behavior: Behavior) -> Result<Uid> {
+        delegate!(self, run => run.register_peer(behavior))
+    }
+
+    /// Mid-run registration exposing the chain's [`Registration`].
+    pub fn register_peer_detailed(&mut self, behavior: Behavior) -> Result<Registration> {
+        delegate!(self, run => run.register_peer_detailed(behavior))
+    }
+
+    /// A peer leaves the network, freeing its slot.
+    pub fn deregister_peer(&mut self, uid: Uid) -> Result<()> {
+        delegate!(self, run => run.deregister_peer(uid))
+    }
+
+    /// The next round to execute (also how many rounds have run).
+    pub fn round(&self) -> u64 {
+        delegate!(self, run => run.round)
+    }
+
+    pub fn cfg(&self) -> &RunConfig {
+        delegate!(self, run => &run.cfg)
+    }
+
+    pub fn chain(&self) -> &Chain {
+        delegate!(self, run => &run.chain)
+    }
+
+    pub fn validators(&self) -> &[Validator] {
+        delegate!(self, run => &run.validators)
+    }
+
+    pub fn peers(&self) -> &[PeerRunner] {
+        delegate!(self, run => &run.peers)
+    }
+
+    pub fn peer_uids(&self) -> Vec<Uid> {
+        delegate!(self, run => run.peer_uids())
+    }
+
+    /// The current global model parameters.
+    pub fn theta(&self) -> &[f32] {
+        delegate!(self, run => &run.theta)
+    }
+
+    /// The checkpoint store (full checkpoints + signed-update replay log).
+    pub fn checkpoints(&self) -> &super::checkpoint::CheckpointStore {
+        delegate!(self, run => &run.checkpoints)
+    }
+
+    /// Which backend this engine runs on ("sim" / "artifact").
+    pub fn backend_name(&self) -> &'static str {
+        match self {
+            GauntletEngine::Sim(_) => "sim",
+            GauntletEngine::Artifact(_) => "artifact",
+        }
+    }
+
+    /// Per-artifact executor timings (artifact backend only).
+    pub fn exec_stats(&self) -> Option<std::collections::BTreeMap<String, ExecStats>> {
+        match self {
+            GauntletEngine::Sim(_) => None,
+            GauntletEngine::Artifact(run) => Some(run.exec.stats()),
+        }
+    }
+
+    /// A 64-bit digest of the run's observable state, mixed in a fixed
+    /// deterministic order: model parameters, every validator's
+    /// PEERSCOREs, and on-chain balances. Two runs (or a
+    /// paused-and-resumed pair) that agree here agree bit-for-bit on
+    /// everything the snapshot/resume contract pins — the CLI prints it
+    /// and CI diffs it.
+    pub fn fingerprint(&self) -> u64 {
+        // FNV-1a over the state in a deterministic order.
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        let mut mix = |x: u64| {
+            for b in x.to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x0000_0100_0000_01B3);
+            }
+        };
+        for t in self.theta() {
+            mix(t.to_bits() as u64);
+        }
+        let uids = self.peer_uids();
+        for v in self.validators() {
+            for &u in &uids {
+                mix(u as u64);
+                mix(v.book.peer_score(u).to_bits());
+            }
+        }
+        for &u in &uids {
+            let bal = self.chain().neuron(u).map(|n| n.balance).unwrap_or(0.0);
+            mix(bal.to_bits());
+        }
+        h
+    }
+}

@@ -1,0 +1,856 @@
+//! The typed round-event stream: everything the round pipeline decides,
+//! published as [`RoundEvent`]s to [`Observer`]s instead of being scraped
+//! out of return values.
+//!
+//! The Gauntlet mechanism "can be applied to any synchronous distributed
+//! training scheme" (§1); what varies per deployment is who watches —
+//! metrics collection, tracing, benches, dashboards. This module makes
+//! watching composable: the engine emits one deterministic stream of
+//! events per round (always from the coordinator thread, in a fixed
+//! order, regardless of worker-thread count), and observers subscribe via
+//! [`GauntletBuilder::observer`](super::engine::GauntletBuilder::observer).
+//!
+//! Two built-in observers cover the previously hard-wired consumers:
+//!
+//! - [`MetricsObserver`] assembles the per-round [`RoundRecord`]s and the
+//!   full-run [`RunMetrics`] — the engine itself carries one, which is how
+//!   `run_round()` still returns a record without assembling it inline.
+//! - [`JsonlTraceObserver`] writes every event as one JSON line to a trace
+//!   file; [`replay_trace`] re-reads such a file through a fresh
+//!   `MetricsObserver` and reproduces the identical `RunMetrics`
+//!   (pinned by `tests/parallel_determinism.rs`).
+//!
+//! # Event order
+//!
+//! Within one round, events always arrive in pipeline-stage order:
+//! `RoundStarted`, lifecycle events (registrations, departures, stake
+//! moves, outages), `Checkpointed`, per-peer `PeerTurn`/`PutApplied` in
+//! peer order (first pass, then second pass), per-validator `FastEval`
+//! (uid order) / `PrimaryEval` (sample order) / `RatingMatch` /
+//! `WeightsCommitted` in validator order, `YumaEpoch`, `Aggregated`,
+//! `HeldoutEval`, per-peer `PeerScoreboard`, `RoundCompleted`. The stream
+//! is bit-identical at any worker-thread count.
+//!
+//! ```
+//! use std::sync::{Arc, Mutex};
+//! use gauntlet::coordinator::engine::GauntletBuilder;
+//! use gauntlet::coordinator::events::{observer_fn, RoundEvent};
+//! use gauntlet::peers::Behavior;
+//!
+//! // Count fast-eval failures with a closure observer.
+//! let fails = Arc::new(Mutex::new(0u32));
+//! let sink = fails.clone();
+//! let mut engine = GauntletBuilder::sim()
+//!     .model("nano")
+//!     .rounds(2)
+//!     .peers(vec![Behavior::Honest { data_mult: 1.0 }, Behavior::FormatViolator])
+//!     .observer(observer_fn(move |ev| {
+//!         if let RoundEvent::FastEval { passed: false, .. } = ev {
+//!             *sink.lock().unwrap() += 1;
+//!         }
+//!     }))
+//!     .build()?;
+//! engine.run()?;
+//! assert!(*fails.lock().unwrap() > 0, "the format violator must fail");
+//! # anyhow::Ok(())
+//! ```
+
+use std::fmt;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{Context, Result};
+
+use super::run::{PeerRoundStats, RoundRecord, RunMetrics};
+use crate::chain::Uid;
+use crate::minjson::{self, fnum, read_f64, Value};
+
+/// One thing the round pipeline decided, timestamped with its round.
+///
+/// Every variant carries `round` so observers can stay stateless; the
+/// engine brackets each round with [`RoundEvent::RoundStarted`] /
+/// [`RoundEvent::RoundCompleted`]. Lifecycle events triggered *between*
+/// rounds (a direct `register_peer` call from driver code) are emitted
+/// immediately, stamped with the round that will consume them.
+#[derive(Clone, Debug, PartialEq)]
+pub enum RoundEvent {
+    /// Top of the round, before any scenario event fires.
+    RoundStarted { round: u64 },
+    /// A peer registered (round-0 population, scenario join, or a direct
+    /// `register_peer` call): slot semantics included.
+    PeerRegistered {
+        round: u64,
+        uid: Uid,
+        label: String,
+        recycled: bool,
+        evicted_hotkey: Option<String>,
+    },
+    /// A peer deregistered, freeing its slot.
+    PeerDeregistered { round: u64, uid: Uid },
+    /// A scenario stake move landed.
+    StakeSet { round: u64, uid: Uid, amount: f64 },
+    /// A scripted provider outage began (PUTs fail with `prob`).
+    OutageStarted { round: u64, prob: f64, until_round: u64 },
+    /// The provider recovered from a scripted outage.
+    OutageEnded { round: u64 },
+    /// A scripted event was rejected (e.g. `leave` on a validator uid);
+    /// the run continues.
+    ScenarioRejected { round: u64, description: String },
+    /// Runners dropped because their uids vanished from the chain registry
+    /// (evictions by registration pressure).
+    RunnersDropped { round: u64, count: usize },
+    /// The round began with a full-parameter checkpoint.
+    Checkpointed { round: u64 },
+    /// A peer took its turn: local training diagnostics.
+    PeerTurn {
+        round: u64,
+        uid: Uid,
+        label: String,
+        second_pass: bool,
+        local_loss: f64,
+        tokens: u64,
+    },
+    /// A peer's submission PUT resolved against the storage provider.
+    PutApplied { round: u64, uid: Uid, accepted: bool },
+    /// One validator's fast-evaluation verdict for one peer (§3.2), with
+    /// the phi multiplier applied to the peer's PoC EMA.
+    FastEval { round: u64, validator: Uid, uid: Uid, passed: bool, phi: f64 },
+    /// One primary evaluation (§3.1): LossScores on assigned + random data.
+    PrimaryEval {
+        round: u64,
+        validator: Uid,
+        uid: Uid,
+        score_assigned: f64,
+        score_rand: f64,
+    },
+    /// The validator ranked this round's sampled peers and updated their
+    /// OpenSkill ratings (the `OpenSkillMatch` step of Algorithm 1).
+    RatingMatch { round: u64, validator: Uid, uids: Vec<Uid> },
+    /// The validator committed (or was barred from committing) its weight
+    /// vector to the chain.
+    WeightsCommitted { round: u64, validator: Uid, committed: bool },
+    /// The chain ran a Yuma epoch; `incentives` is the consensus payout.
+    YumaEpoch { round: u64, incentives: Vec<(Uid, f64)> },
+    /// The lead validator's top-G weights drove DeMo aggregation.
+    Aggregated { round: u64, top_g: Vec<Uid>, n_valid: usize, had_update: bool },
+    /// Held-out loss was evaluated on the post-aggregation model.
+    HeldoutEval { round: u64, loss: f64 },
+    /// End-of-round scoreboard entry for one peer (lead validator's view).
+    PeerScoreboard { round: u64, stats: PeerRoundStats },
+    /// The round finished; all of its events have been published.
+    RoundCompleted { round: u64 },
+}
+
+impl RoundEvent {
+    /// The round this event belongs to.
+    pub fn round(&self) -> u64 {
+        match self {
+            RoundEvent::RoundStarted { round }
+            | RoundEvent::PeerRegistered { round, .. }
+            | RoundEvent::PeerDeregistered { round, .. }
+            | RoundEvent::StakeSet { round, .. }
+            | RoundEvent::OutageStarted { round, .. }
+            | RoundEvent::OutageEnded { round }
+            | RoundEvent::ScenarioRejected { round, .. }
+            | RoundEvent::RunnersDropped { round, .. }
+            | RoundEvent::Checkpointed { round }
+            | RoundEvent::PeerTurn { round, .. }
+            | RoundEvent::PutApplied { round, .. }
+            | RoundEvent::FastEval { round, .. }
+            | RoundEvent::PrimaryEval { round, .. }
+            | RoundEvent::RatingMatch { round, .. }
+            | RoundEvent::WeightsCommitted { round, .. }
+            | RoundEvent::YumaEpoch { round, .. }
+            | RoundEvent::Aggregated { round, .. }
+            | RoundEvent::HeldoutEval { round, .. }
+            | RoundEvent::PeerScoreboard { round, .. }
+            | RoundEvent::RoundCompleted { round } => *round,
+        }
+    }
+
+    /// Whether this is a population/lifecycle event — the subset that
+    /// [`RoundRecord::events`] records as human-readable lines.
+    pub fn is_lifecycle(&self) -> bool {
+        matches!(
+            self,
+            RoundEvent::PeerRegistered { .. }
+                | RoundEvent::PeerDeregistered { .. }
+                | RoundEvent::StakeSet { .. }
+                | RoundEvent::OutageStarted { .. }
+                | RoundEvent::OutageEnded { .. }
+                | RoundEvent::ScenarioRejected { .. }
+                | RoundEvent::RunnersDropped { .. }
+        )
+    }
+
+    /// Serialize as one JSON value (the [`JsonlTraceObserver`] line
+    /// format). Round-trips bit-exactly through [`RoundEvent::from_json`],
+    /// including NaN diagnostics (see [`minjson::fnum`]).
+    pub fn to_json(&self) -> Value {
+        let uid_pairs = |xs: &[(Uid, f64)]| {
+            Value::Arr(
+                xs.iter()
+                    .map(|(u, x)| Value::Arr(vec![minjson::num(*u as f64), fnum(*x)]))
+                    .collect(),
+            )
+        };
+        let uids = |xs: &[Uid]| {
+            Value::Arr(xs.iter().map(|u| minjson::num(*u as f64)).collect())
+        };
+        match self {
+            RoundEvent::RoundStarted { round } => minjson::obj(vec![
+                ("ev", minjson::s("round_started")),
+                ("round", minjson::num(*round as f64)),
+            ]),
+            RoundEvent::PeerRegistered { round, uid, label, recycled, evicted_hotkey } => {
+                minjson::obj(vec![
+                    ("ev", minjson::s("peer_registered")),
+                    ("round", minjson::num(*round as f64)),
+                    ("uid", minjson::num(*uid as f64)),
+                    ("label", minjson::s(label)),
+                    ("recycled", Value::Bool(*recycled)),
+                    (
+                        "evicted_hotkey",
+                        evicted_hotkey.as_deref().map(minjson::s).unwrap_or(Value::Null),
+                    ),
+                ])
+            }
+            RoundEvent::PeerDeregistered { round, uid } => minjson::obj(vec![
+                ("ev", minjson::s("peer_deregistered")),
+                ("round", minjson::num(*round as f64)),
+                ("uid", minjson::num(*uid as f64)),
+            ]),
+            RoundEvent::StakeSet { round, uid, amount } => minjson::obj(vec![
+                ("ev", minjson::s("stake_set")),
+                ("round", minjson::num(*round as f64)),
+                ("uid", minjson::num(*uid as f64)),
+                ("amount", fnum(*amount)),
+            ]),
+            RoundEvent::OutageStarted { round, prob, until_round } => minjson::obj(vec![
+                ("ev", minjson::s("outage_started")),
+                ("round", minjson::num(*round as f64)),
+                ("prob", fnum(*prob)),
+                ("until_round", minjson::num(*until_round as f64)),
+            ]),
+            RoundEvent::OutageEnded { round } => minjson::obj(vec![
+                ("ev", minjson::s("outage_ended")),
+                ("round", minjson::num(*round as f64)),
+            ]),
+            RoundEvent::ScenarioRejected { round, description } => minjson::obj(vec![
+                ("ev", minjson::s("scenario_rejected")),
+                ("round", minjson::num(*round as f64)),
+                ("description", minjson::s(description)),
+            ]),
+            RoundEvent::RunnersDropped { round, count } => minjson::obj(vec![
+                ("ev", minjson::s("runners_dropped")),
+                ("round", minjson::num(*round as f64)),
+                ("count", minjson::num(*count as f64)),
+            ]),
+            RoundEvent::Checkpointed { round } => minjson::obj(vec![
+                ("ev", minjson::s("checkpointed")),
+                ("round", minjson::num(*round as f64)),
+            ]),
+            RoundEvent::PeerTurn { round, uid, label, second_pass, local_loss, tokens } => {
+                minjson::obj(vec![
+                    ("ev", minjson::s("peer_turn")),
+                    ("round", minjson::num(*round as f64)),
+                    ("uid", minjson::num(*uid as f64)),
+                    ("label", minjson::s(label)),
+                    ("second_pass", Value::Bool(*second_pass)),
+                    ("local_loss", fnum(*local_loss)),
+                    ("tokens", minjson::num(*tokens as f64)),
+                ])
+            }
+            RoundEvent::PutApplied { round, uid, accepted } => minjson::obj(vec![
+                ("ev", minjson::s("put_applied")),
+                ("round", minjson::num(*round as f64)),
+                ("uid", minjson::num(*uid as f64)),
+                ("accepted", Value::Bool(*accepted)),
+            ]),
+            RoundEvent::FastEval { round, validator, uid, passed, phi } => minjson::obj(vec![
+                ("ev", minjson::s("fast_eval")),
+                ("round", minjson::num(*round as f64)),
+                ("validator", minjson::num(*validator as f64)),
+                ("uid", minjson::num(*uid as f64)),
+                ("passed", Value::Bool(*passed)),
+                ("phi", fnum(*phi)),
+            ]),
+            RoundEvent::PrimaryEval { round, validator, uid, score_assigned, score_rand } => {
+                minjson::obj(vec![
+                    ("ev", minjson::s("primary_eval")),
+                    ("round", minjson::num(*round as f64)),
+                    ("validator", minjson::num(*validator as f64)),
+                    ("uid", minjson::num(*uid as f64)),
+                    ("score_assigned", fnum(*score_assigned)),
+                    ("score_rand", fnum(*score_rand)),
+                ])
+            }
+            RoundEvent::RatingMatch { round, validator, uids: us } => minjson::obj(vec![
+                ("ev", minjson::s("rating_match")),
+                ("round", minjson::num(*round as f64)),
+                ("validator", minjson::num(*validator as f64)),
+                ("uids", uids(us)),
+            ]),
+            RoundEvent::WeightsCommitted { round, validator, committed } => minjson::obj(vec![
+                ("ev", minjson::s("weights_committed")),
+                ("round", minjson::num(*round as f64)),
+                ("validator", minjson::num(*validator as f64)),
+                ("committed", Value::Bool(*committed)),
+            ]),
+            RoundEvent::YumaEpoch { round, incentives } => minjson::obj(vec![
+                ("ev", minjson::s("yuma_epoch")),
+                ("round", minjson::num(*round as f64)),
+                ("incentives", uid_pairs(incentives)),
+            ]),
+            RoundEvent::Aggregated { round, top_g, n_valid, had_update } => minjson::obj(vec![
+                ("ev", minjson::s("aggregated")),
+                ("round", minjson::num(*round as f64)),
+                ("top_g", uids(top_g)),
+                ("n_valid", minjson::num(*n_valid as f64)),
+                ("had_update", Value::Bool(*had_update)),
+            ]),
+            RoundEvent::HeldoutEval { round, loss } => minjson::obj(vec![
+                ("ev", minjson::s("heldout_eval")),
+                ("round", minjson::num(*round as f64)),
+                ("loss", fnum(*loss)),
+            ]),
+            RoundEvent::PeerScoreboard { round, stats } => minjson::obj(vec![
+                ("ev", minjson::s("peer_scoreboard")),
+                ("round", minjson::num(*round as f64)),
+                ("stats", stats.to_json()),
+            ]),
+            RoundEvent::RoundCompleted { round } => minjson::obj(vec![
+                ("ev", minjson::s("round_completed")),
+                ("round", minjson::num(*round as f64)),
+            ]),
+        }
+    }
+
+    /// Parse one trace line back into an event (see [`RoundEvent::to_json`]).
+    pub fn from_json(v: &Value) -> Result<RoundEvent> {
+        use crate::minjson::field;
+        fn round(v: &Value) -> Result<u64> {
+            v.get("round")
+                .as_f64()
+                .map(|r| r as u64)
+                .context("event missing \"round\"")
+        }
+        fn uid_of(v: &Value, key: &str) -> Result<Uid> {
+            v.get(key)
+                .as_usize()
+                .map(|u| u as Uid)
+                .with_context(|| format!("event missing {key:?}"))
+        }
+        fn uids_of(v: &Value, key: &str) -> Result<Vec<Uid>> {
+            v.get(key)
+                .as_arr()
+                .with_context(|| format!("event missing {key:?}"))?
+                .iter()
+                .map(|u| u.as_usize().map(|u| u as Uid).context("bad uid"))
+                .collect()
+        }
+        fn uid_pairs_of(v: &Value, key: &str) -> Result<Vec<(Uid, f64)>> {
+            v.get(key)
+                .as_arr()
+                .with_context(|| format!("event missing {key:?}"))?
+                .iter()
+                .map(|p| {
+                    let pair = p.as_arr().context("expected [uid, value]")?;
+                    let u = pair
+                        .first()
+                        .and_then(|u| u.as_usize())
+                        .context("bad uid in pair")?;
+                    let x = pair.get(1).and_then(read_f64).context("bad value in pair")?;
+                    Ok((u as Uid, x))
+                })
+                .collect()
+        }
+
+        let kind = v.get("ev").as_str().context("event missing \"ev\" kind")?;
+        Ok(match kind {
+            "round_started" => RoundEvent::RoundStarted { round: round(v)? },
+            "peer_registered" => RoundEvent::PeerRegistered {
+                round: round(v)?,
+                uid: uid_of(v, "uid")?,
+                label: field::string(v, "label")?,
+                recycled: field::boolean(v, "recycled")?,
+                evicted_hotkey: v.get("evicted_hotkey").as_str().map(str::to_string),
+            },
+            "peer_deregistered" => RoundEvent::PeerDeregistered {
+                round: round(v)?,
+                uid: uid_of(v, "uid")?,
+            },
+            "stake_set" => RoundEvent::StakeSet {
+                round: round(v)?,
+                uid: uid_of(v, "uid")?,
+                amount: field::f64(v, "amount")?,
+            },
+            "outage_started" => RoundEvent::OutageStarted {
+                round: round(v)?,
+                prob: field::f64(v, "prob")?,
+                until_round: v.get("until_round").as_f64().context("until_round")? as u64,
+            },
+            "outage_ended" => RoundEvent::OutageEnded { round: round(v)? },
+            "scenario_rejected" => RoundEvent::ScenarioRejected {
+                round: round(v)?,
+                description: field::string(v, "description")?,
+            },
+            "runners_dropped" => RoundEvent::RunnersDropped {
+                round: round(v)?,
+                count: v.get("count").as_usize().context("count")?,
+            },
+            "checkpointed" => RoundEvent::Checkpointed { round: round(v)? },
+            "peer_turn" => RoundEvent::PeerTurn {
+                round: round(v)?,
+                uid: uid_of(v, "uid")?,
+                label: field::string(v, "label")?,
+                second_pass: field::boolean(v, "second_pass")?,
+                local_loss: field::f64(v, "local_loss")?,
+                tokens: v.get("tokens").as_f64().context("tokens")? as u64,
+            },
+            "put_applied" => RoundEvent::PutApplied {
+                round: round(v)?,
+                uid: uid_of(v, "uid")?,
+                accepted: field::boolean(v, "accepted")?,
+            },
+            "fast_eval" => RoundEvent::FastEval {
+                round: round(v)?,
+                validator: uid_of(v, "validator")?,
+                uid: uid_of(v, "uid")?,
+                passed: field::boolean(v, "passed")?,
+                phi: field::f64(v, "phi")?,
+            },
+            "primary_eval" => RoundEvent::PrimaryEval {
+                round: round(v)?,
+                validator: uid_of(v, "validator")?,
+                uid: uid_of(v, "uid")?,
+                score_assigned: field::f64(v, "score_assigned")?,
+                score_rand: field::f64(v, "score_rand")?,
+            },
+            "rating_match" => RoundEvent::RatingMatch {
+                round: round(v)?,
+                validator: uid_of(v, "validator")?,
+                uids: uids_of(v, "uids")?,
+            },
+            "weights_committed" => RoundEvent::WeightsCommitted {
+                round: round(v)?,
+                validator: uid_of(v, "validator")?,
+                committed: field::boolean(v, "committed")?,
+            },
+            "yuma_epoch" => RoundEvent::YumaEpoch {
+                round: round(v)?,
+                incentives: uid_pairs_of(v, "incentives")?,
+            },
+            "aggregated" => RoundEvent::Aggregated {
+                round: round(v)?,
+                top_g: uids_of(v, "top_g")?,
+                n_valid: v.get("n_valid").as_usize().context("n_valid")?,
+                had_update: field::boolean(v, "had_update")?,
+            },
+            "heldout_eval" => RoundEvent::HeldoutEval {
+                round: round(v)?,
+                loss: field::f64(v, "loss")?,
+            },
+            "peer_scoreboard" => RoundEvent::PeerScoreboard {
+                round: round(v)?,
+                stats: PeerRoundStats::from_json(v.get("stats"))?,
+            },
+            "round_completed" => RoundEvent::RoundCompleted { round: round(v)? },
+            other => anyhow::bail!("unknown event kind {other:?}"),
+        })
+    }
+}
+
+/// Lifecycle events render as the human-readable lines that
+/// [`RoundRecord::events`] has always carried (CLI output and the churn
+/// tests pin these exact strings). Non-lifecycle events render as a terse
+/// diagnostic form.
+impl fmt::Display for RoundEvent {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            RoundEvent::PeerRegistered { uid, label, recycled, evicted_hotkey, .. } => {
+                write!(f, "join {label} as uid {uid}")?;
+                if let Some(hk) = evicted_hotkey {
+                    write!(f, " (evicted {hk})")?;
+                } else if *recycled {
+                    write!(f, " (recycled uid)")?;
+                }
+                Ok(())
+            }
+            RoundEvent::PeerDeregistered { uid, .. } => write!(f, "uid {uid} left"),
+            RoundEvent::StakeSet { uid, amount, .. } => {
+                write!(f, "stake of uid {uid} set to {amount}")
+            }
+            RoundEvent::OutageStarted { prob, until_round, .. } => {
+                write!(f, "provider outage p={prob} until round {until_round}")
+            }
+            RoundEvent::OutageEnded { .. } => write!(f, "provider recovered"),
+            RoundEvent::ScenarioRejected { description, .. } => write!(f, "{description}"),
+            RoundEvent::RunnersDropped { count, .. } => {
+                write!(f, "{count} runner(s) dropped by registry resolution")
+            }
+            other => write!(f, "{other:?}"),
+        }
+    }
+}
+
+/// A subscriber to the round-event stream.
+///
+/// Events arrive on the coordinator thread, one at a time, in the
+/// deterministic order documented on [the module](self). `on_event` takes
+/// `&self` so observers can be shared (`Arc`) between the engine and the
+/// driver that later reads them — use interior mutability for state, as
+/// [`MetricsObserver`] does.
+pub trait Observer: Send + Sync {
+    fn on_event(&self, event: &RoundEvent);
+}
+
+struct FnObserver<F: Fn(&RoundEvent) + Send + Sync>(F);
+
+impl<F: Fn(&RoundEvent) + Send + Sync> Observer for FnObserver<F> {
+    fn on_event(&self, event: &RoundEvent) {
+        (self.0)(event)
+    }
+}
+
+/// Wrap a closure as an [`Observer`] (see the module example).
+pub fn observer_fn<F: Fn(&RoundEvent) + Send + Sync + 'static>(f: F) -> Arc<dyn Observer> {
+    Arc::new(FnObserver(f))
+}
+
+/// In-flight accumulation for the round currently being observed.
+#[derive(Default)]
+struct PartialRound {
+    round: u64,
+    events: Vec<String>,
+    local_losses: Vec<f64>,
+    tokens: u64,
+    n_valid: usize,
+    top_g: Vec<Uid>,
+    heldout: Option<f64>,
+    peers: Vec<PeerRoundStats>,
+}
+
+#[derive(Default)]
+struct MetricsState {
+    metrics: RunMetrics,
+    cur: Option<PartialRound>,
+    /// Lifecycle events emitted between rounds (direct `register_peer` /
+    /// `deregister_peer` calls) — folded into the next round's record.
+    pending_events: Vec<String>,
+}
+
+/// The built-in observer that assembles [`RoundRecord`] / [`RunMetrics`]
+/// from the event stream — the only place in the crate that does.
+#[derive(Default)]
+pub struct MetricsObserver {
+    state: Mutex<MetricsState>,
+}
+
+impl MetricsObserver {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A shareable handle: hand one clone to
+    /// [`GauntletBuilder::observer`](super::engine::GauntletBuilder::observer)
+    /// and keep the other to read the metrics afterwards.
+    pub fn shared() -> Arc<Self> {
+        Arc::new(Self::new())
+    }
+
+    /// A clone of everything recorded so far.
+    pub fn metrics(&self) -> RunMetrics {
+        self.state.lock().unwrap().metrics.clone()
+    }
+
+    /// The most recently completed round's record.
+    pub fn last_record(&self) -> Option<RoundRecord> {
+        self.state.lock().unwrap().metrics.rounds.last().cloned()
+    }
+
+    /// Number of completed rounds recorded.
+    pub fn n_rounds(&self) -> usize {
+        self.state.lock().unwrap().metrics.rounds.len()
+    }
+
+    /// Clone only the records from index `start` on (what a `run()` call
+    /// uses to report its own rounds without copying the whole history).
+    pub fn records_since(&self, start: usize) -> Vec<RoundRecord> {
+        let st = self.state.lock().unwrap();
+        st.metrics.rounds.get(start..).unwrap_or(&[]).to_vec()
+    }
+
+    /// Lifecycle event lines received outside a round bracket, waiting to
+    /// be folded into the next round's record (snapshot capture).
+    pub fn pending_events(&self) -> Vec<String> {
+        self.state.lock().unwrap().pending_events.clone()
+    }
+
+    /// Seed pending lifecycle lines (snapshot restore), so a resumed run's
+    /// next [`RoundRecord::events`] matches the uninterrupted run even
+    /// when a direct `register_peer`/`deregister_peer` immediately
+    /// preceded the snapshot.
+    pub fn push_pending(&self, lines: Vec<String>) {
+        self.state.lock().unwrap().pending_events.extend(lines);
+    }
+
+    /// Move the accumulated metrics out, leaving an empty record.
+    ///
+    /// The observer otherwise accumulates one [`RoundRecord`] (with full
+    /// per-peer stats) per round for the life of the run — for very long
+    /// runs, drain it periodically with this (the engine's own
+    /// `run_round()` only ever reads the latest record).
+    pub fn take(&self) -> RunMetrics {
+        std::mem::take(&mut self.state.lock().unwrap().metrics)
+    }
+}
+
+impl Observer for MetricsObserver {
+    fn on_event(&self, event: &RoundEvent) {
+        let mut guard = self.state.lock().unwrap();
+        // One reborrow up front so the borrow checker sees plain disjoint
+        // field accesses instead of repeated MutexGuard derefs.
+        let st: &mut MetricsState = &mut guard;
+        match event {
+            RoundEvent::RoundStarted { round } => {
+                let events = std::mem::take(&mut st.pending_events);
+                st.cur = Some(PartialRound { round: *round, events, ..Default::default() });
+            }
+            ev if ev.is_lifecycle() => {
+                let line = ev.to_string();
+                match st.cur.as_mut() {
+                    Some(cur) => cur.events.push(line),
+                    None => st.pending_events.push(line),
+                }
+            }
+            RoundEvent::PeerTurn { second_pass, local_loss, tokens, .. } => {
+                if let Some(cur) = st.cur.as_mut() {
+                    if !second_pass {
+                        if local_loss.is_finite() {
+                            cur.local_losses.push(*local_loss);
+                        }
+                        cur.tokens += tokens;
+                    }
+                }
+            }
+            RoundEvent::Aggregated { top_g, n_valid, .. } => {
+                if let Some(cur) = st.cur.as_mut() {
+                    cur.top_g = top_g.clone();
+                    cur.n_valid = *n_valid;
+                }
+            }
+            RoundEvent::HeldoutEval { loss, .. } => {
+                if let Some(cur) = st.cur.as_mut() {
+                    cur.heldout = Some(*loss);
+                }
+            }
+            RoundEvent::PeerScoreboard { stats, .. } => {
+                if let Some(cur) = st.cur.as_mut() {
+                    cur.peers.push(stats.clone());
+                }
+            }
+            RoundEvent::RoundCompleted { .. } => {
+                if let Some(cur) = st.cur.take() {
+                    st.metrics.rounds.push(RoundRecord {
+                        round: cur.round,
+                        heldout_loss: cur.heldout,
+                        mean_local_loss: crate::util::mean(&cur.local_losses),
+                        n_valid_submissions: cur.n_valid,
+                        top_g: cur.top_g,
+                        peers: cur.peers,
+                        tokens_processed: cur.tokens,
+                        events: cur.events,
+                    });
+                }
+            }
+            _ => {}
+        }
+    }
+}
+
+struct TraceSink {
+    writer: BufWriter<std::fs::File>,
+    failed: bool,
+}
+
+/// Writes every event as one JSON line (JSONL) to a trace file — a
+/// replayable record of the whole run. [`replay_trace`] feeds such a file
+/// back through a [`MetricsObserver`] and reproduces the identical
+/// [`RunMetrics`].
+///
+/// I/O errors cannot propagate through the observer interface; the first
+/// failure is reported to stderr and the trace disabled (the run itself is
+/// never interrupted by a full disk).
+pub struct JsonlTraceObserver {
+    sink: Mutex<TraceSink>,
+}
+
+impl JsonlTraceObserver {
+    /// Create (truncate) `path` and stream events into it.
+    pub fn create(path: impl AsRef<Path>) -> Result<Arc<Self>> {
+        let file = std::fs::File::create(path.as_ref())
+            .with_context(|| format!("creating trace file {:?}", path.as_ref()))?;
+        Ok(Arc::new(JsonlTraceObserver {
+            sink: Mutex::new(TraceSink { writer: BufWriter::new(file), failed: false }),
+        }))
+    }
+
+    /// Flush buffered lines to disk.
+    pub fn flush(&self) -> Result<()> {
+        self.sink.lock().unwrap().writer.flush().context("flushing trace file")
+    }
+}
+
+impl Observer for JsonlTraceObserver {
+    fn on_event(&self, event: &RoundEvent) {
+        let mut sink = self.sink.lock().unwrap();
+        if sink.failed {
+            return;
+        }
+        let line = event.to_json().write();
+        let res = writeln!(sink.writer, "{line}").and_then(|_| {
+            if matches!(event, RoundEvent::RoundCompleted { .. }) {
+                sink.writer.flush()
+            } else {
+                Ok(())
+            }
+        });
+        if let Err(e) = res {
+            sink.failed = true;
+            eprintln!("warning: trace file write failed ({e}); tracing disabled");
+        }
+    }
+}
+
+/// Parse a JSONL trace file back into its event stream.
+pub fn read_trace(path: impl AsRef<Path>) -> Result<Vec<RoundEvent>> {
+    let text = std::fs::read_to_string(path.as_ref())
+        .with_context(|| format!("reading trace file {:?}", path.as_ref()))?;
+    text.lines()
+        .enumerate()
+        .filter(|(_, l)| !l.trim().is_empty())
+        .map(|(i, l)| {
+            let v = Value::parse(l).map_err(|e| anyhow::anyhow!("trace line {}: {e}", i + 1))?;
+            RoundEvent::from_json(&v).with_context(|| format!("trace line {}", i + 1))
+        })
+        .collect()
+}
+
+/// Replay a JSONL trace through a fresh [`MetricsObserver`]: the returned
+/// metrics are identical to what the original run's metrics observer
+/// produced (the acceptance contract of the event stream).
+pub fn replay_trace(path: impl AsRef<Path>) -> Result<RunMetrics> {
+    let obs = MetricsObserver::new();
+    for ev in read_trace(path)? {
+        obs.on_event(&ev);
+    }
+    Ok(obs.take())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_events() -> Vec<RoundEvent> {
+        vec![
+            RoundEvent::RoundStarted { round: 3 },
+            RoundEvent::PeerRegistered {
+                round: 3,
+                uid: 7,
+                label: "honest".into(),
+                recycled: true,
+                evicted_hotkey: Some("peer-hotkey-2".into()),
+            },
+            RoundEvent::PeerDeregistered { round: 3, uid: 4 },
+            RoundEvent::StakeSet { round: 3, uid: 0, amount: 500.0 },
+            RoundEvent::OutageStarted { round: 3, prob: 0.5, until_round: 5 },
+            RoundEvent::OutageEnded { round: 3 },
+            RoundEvent::ScenarioRejected { round: 3, description: "leave uid 0 rejected".into() },
+            RoundEvent::RunnersDropped { round: 3, count: 2 },
+            RoundEvent::Checkpointed { round: 3 },
+            RoundEvent::PeerTurn {
+                round: 3,
+                uid: 7,
+                label: "honest".into(),
+                second_pass: false,
+                local_loss: f64::NAN,
+                tokens: 64,
+            },
+            RoundEvent::PutApplied { round: 3, uid: 7, accepted: true },
+            RoundEvent::FastEval { round: 3, validator: 0, uid: 7, passed: false, phi: 0.75 },
+            RoundEvent::PrimaryEval {
+                round: 3,
+                validator: 0,
+                uid: 7,
+                score_assigned: 0.25,
+                score_rand: -0.0,
+            },
+            RoundEvent::RatingMatch { round: 3, validator: 0, uids: vec![7, 8] },
+            RoundEvent::WeightsCommitted { round: 3, validator: 0, committed: true },
+            RoundEvent::YumaEpoch { round: 3, incentives: vec![(7, 0.75), (8, 0.25)] },
+            RoundEvent::Aggregated { round: 3, top_g: vec![7], n_valid: 2, had_update: true },
+            RoundEvent::HeldoutEval { round: 3, loss: 4.125 },
+            RoundEvent::RoundCompleted { round: 3 },
+        ]
+    }
+
+    #[test]
+    fn every_event_kind_roundtrips_through_json() {
+        for ev in sample_events() {
+            let text = ev.to_json().write();
+            let back = RoundEvent::from_json(&Value::parse(&text).unwrap()).unwrap();
+            // NaN != NaN breaks derived PartialEq; compare re-serialized.
+            assert_eq!(text, back.to_json().write(), "{ev:?}");
+            assert_eq!(ev.round(), back.round());
+        }
+    }
+
+    #[test]
+    fn lifecycle_display_matches_the_pinned_strings() {
+        let evs = sample_events();
+        assert_eq!(evs[1].to_string(), "join honest as uid 7 (evicted peer-hotkey-2)");
+        assert_eq!(evs[2].to_string(), "uid 4 left");
+        assert_eq!(evs[3].to_string(), "stake of uid 0 set to 500");
+        assert_eq!(evs[4].to_string(), "provider outage p=0.5 until round 5");
+        assert_eq!(evs[5].to_string(), "provider recovered");
+        assert_eq!(evs[7].to_string(), "2 runner(s) dropped by registry resolution");
+        let plain = RoundEvent::PeerRegistered {
+            round: 0,
+            uid: 2,
+            label: "poisoner".into(),
+            recycled: true,
+            evicted_hotkey: None,
+        };
+        assert_eq!(plain.to_string(), "join poisoner as uid 2 (recycled uid)");
+    }
+
+    #[test]
+    fn metrics_observer_assembles_a_round_record() {
+        let obs = MetricsObserver::new();
+        // A lifecycle event before the bracket lands in the next record.
+        obs.on_event(&RoundEvent::PeerDeregistered { round: 3, uid: 9 });
+        for ev in sample_events() {
+            obs.on_event(&ev);
+        }
+        let m = obs.metrics();
+        assert_eq!(m.rounds.len(), 1);
+        let r = &m.rounds[0];
+        assert_eq!(r.round, 3);
+        assert_eq!(r.events[0], "uid 9 left", "pending event folded in first");
+        assert_eq!(r.n_valid_submissions, 2);
+        assert_eq!(r.top_g, vec![7]);
+        assert_eq!(r.heldout_loss, Some(4.125));
+        assert_eq!(r.tokens_processed, 64);
+        assert_eq!(r.mean_local_loss, 0.0, "NaN local loss excluded from the mean");
+        assert_eq!(obs.last_record().unwrap().round, 3);
+        assert_eq!(obs.n_rounds(), 1);
+    }
+
+    #[test]
+    fn unknown_event_kind_is_rejected() {
+        let v = Value::parse(r#"{"ev":"warp_drive","round":1}"#).unwrap();
+        assert!(RoundEvent::from_json(&v).is_err());
+    }
+}

@@ -20,13 +20,18 @@
 
 pub mod baseline;
 pub mod checkpoint;
+pub mod engine;
+pub mod events;
 pub mod fast_eval;
 pub mod primary_eval;
 pub mod round;
 pub mod run;
 pub mod schedule;
 pub mod scoring;
+pub mod snapshot;
 pub mod validator;
+
+pub use engine::{GauntletBuilder, GauntletEngine};
 
 /// All Gauntlet hyperparameters in one place (defaults follow the paper
 /// where it states values: phi = 0.75, sync threshold = 3, c = 2, beta =

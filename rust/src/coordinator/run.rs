@@ -2,8 +2,13 @@
 //! validator(s) + DeMo aggregation, driven round by round (§2, §3.3, §6).
 //!
 //! This is what `rust/examples/templar_run.rs` and the Fig. 1 / Fig. 2
-//! benches execute. One [`TemplarRun`] owns every substrate; `run_round()`
-//! performs a staged pipeline:
+//! benches execute, normally assembled through the
+//! [`GauntletBuilder`](super::engine::GauntletBuilder) front door. One
+//! [`TemplarRun`] owns every substrate; `run_round()` performs a staged
+//! pipeline, publishing every decision to the typed round-event stream
+//! (`coordinator::events`) — metrics are assembled by the built-in
+//! [`MetricsObserver`], never inline — and the whole run can be paused
+//! and resumed bit-identically via [`RunSnapshot`]:
 //!
 //!   0. the population resolves: scripted [`Scenario`] churn events fire
 //!      (joins, leaves, stake moves, provider outages) and the peer set is
@@ -45,18 +50,21 @@
 //! count (pinned by `tests/parallel_determinism.rs`).
 
 use std::collections::{BTreeMap, BTreeSet};
+use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
 use super::checkpoint::CheckpointStore;
+use super::events::{MetricsObserver, Observer, RoundEvent};
 use super::round::RoundClock;
+use super::snapshot::RunSnapshot;
 use super::validator::{chain_read_keys, RoundOutcome, Validator};
 use super::GauntletParams;
 use crate::chain::{Chain, Uid, BLOCK_MS};
 use crate::data::Corpus;
 use crate::demo::aggregate::{aggregate_into, AggregateOpts};
 use crate::demo::wire::Submission;
-use crate::minjson::{self, Value};
+use crate::minjson::{self, fnum, read_f64, Value};
 use crate::peers::{Behavior, PeerCtx, PeerOutput, PeerRunner};
 use crate::runtime::{artifact_dir, exec_service, ExecBackend, Executor, SimExec};
 use crate::scenario::{Event, Scenario};
@@ -101,12 +109,14 @@ pub struct RunConfig {
     pub threads: usize,
 }
 
-impl RunConfig {
-    pub fn quick(model: &str, rounds: u64, peers: Vec<Behavior>) -> Self {
+impl Default for RunConfig {
+    /// The baseline configuration every entry point starts from: `nano`
+    /// model, 20 rounds, no peers, one validator, auto threads.
+    fn default() -> Self {
         RunConfig {
-            model: model.to_string(),
-            rounds,
-            peers,
+            model: "nano".to_string(),
+            rounds: 20,
+            peers: Vec::new(),
             scenario: Scenario::default(),
             max_uids: 0,
             immunity_rounds: 2,
@@ -121,6 +131,14 @@ impl RunConfig {
             agg: AggregateOpts::default(),
             threads: 0,
         }
+    }
+}
+
+impl RunConfig {
+    #[deprecated(note = "use GauntletBuilder (coordinator::engine) or \
+                         `RunConfig { .., ..Default::default() }`")]
+    pub fn quick(model: &str, rounds: u64, peers: Vec<Behavior>) -> Self {
+        RunConfig { model: model.to_string(), rounds, peers, ..RunConfig::default() }
     }
 
     /// Resolve [`RunConfig::threads`]: explicit value, else the
@@ -152,7 +170,7 @@ impl RunConfig {
 }
 
 /// Per-peer metrics for one round.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct PeerRoundStats {
     pub uid: Uid,
     pub label: String,
@@ -169,8 +187,11 @@ pub struct PeerRoundStats {
     pub balance: f64,
 }
 
-/// Everything recorded about one round.
-#[derive(Clone, Debug)]
+/// Everything recorded about one round. Assembled exclusively by
+/// [`MetricsObserver`] from the round-event stream (see
+/// `coordinator::events`); `run_round()` returns the engine's built-in
+/// observer's record rather than building one inline.
+#[derive(Clone, Debug, PartialEq)]
 pub struct RoundRecord {
     pub round: u64,
     pub heldout_loss: Option<f64>,
@@ -186,10 +207,59 @@ pub struct RoundRecord {
     pub events: Vec<String>,
 }
 
-/// Full-run metrics, serializable for the bench harness / plots.
-#[derive(Clone, Debug, Default)]
+/// Full-run metrics, serializable for the bench harness / plots
+/// (`gauntlet run --metrics-out <file>` writes [`RunMetrics::to_json`]).
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct RunMetrics {
     pub rounds: Vec<RoundRecord>,
+}
+
+impl PeerRoundStats {
+    /// Full-fidelity JSON (every field; NaN-safe via [`minjson::fnum`]).
+    pub fn to_json(&self) -> Value {
+        let opt = |x: Option<f64>| x.map(fnum).unwrap_or(Value::Null);
+        minjson::obj(vec![
+            ("uid", minjson::num(self.uid as f64)),
+            ("label", minjson::s(&self.label)),
+            ("submitted", Value::Bool(self.submitted)),
+            ("fast_pass", Value::Bool(self.fast_pass)),
+            ("peer_score", fnum(self.peer_score)),
+            ("rating_mu", fnum(self.rating_mu)),
+            ("rating_ordinal", fnum(self.rating_ordinal)),
+            ("mu", fnum(self.mu)),
+            ("incentive", fnum(self.incentive)),
+            ("in_top_g", Value::Bool(self.in_top_g)),
+            ("loss_score_rand", opt(self.loss_score_rand)),
+            ("loss_score_assigned", opt(self.loss_score_assigned)),
+            ("balance", fnum(self.balance)),
+        ])
+    }
+
+    /// Inverse of [`PeerRoundStats::to_json`].
+    pub fn from_json(v: &Value) -> Result<PeerRoundStats> {
+        use crate::minjson::field;
+        let opt = |key: &str| match v.get(key) {
+            Value::Null => Ok(None),
+            other => read_f64(other)
+                .map(Some)
+                .with_context(|| format!("peer stats bad {key:?}")),
+        };
+        Ok(PeerRoundStats {
+            uid: field::size(v, "uid")? as Uid,
+            label: field::string(v, "label")?,
+            submitted: field::boolean(v, "submitted")?,
+            fast_pass: field::boolean(v, "fast_pass")?,
+            peer_score: field::f64(v, "peer_score")?,
+            rating_mu: field::f64(v, "rating_mu")?,
+            rating_ordinal: field::f64(v, "rating_ordinal")?,
+            mu: field::f64(v, "mu")?,
+            incentive: field::f64(v, "incentive")?,
+            in_top_g: field::boolean(v, "in_top_g")?,
+            loss_score_rand: opt("loss_score_rand")?,
+            loss_score_assigned: opt("loss_score_assigned")?,
+            balance: field::f64(v, "balance")?,
+        })
+    }
 }
 
 impl RunMetrics {
@@ -220,6 +290,8 @@ impl RunMetrics {
         out
     }
 
+    /// Full-fidelity JSON: every [`RoundRecord`] field, round-trippable
+    /// through [`RunMetrics::from_json`] (`--metrics-out` writes this).
     pub fn to_json(&self) -> Value {
         let rounds: Vec<Value> = self
             .rounds
@@ -229,40 +301,77 @@ impl RunMetrics {
                     ("round", minjson::num(r.round as f64)),
                     (
                         "heldout_loss",
-                        r.heldout_loss.map(minjson::num).unwrap_or(Value::Null),
+                        r.heldout_loss.map(fnum).unwrap_or(Value::Null),
                     ),
                     (
                         "events",
                         Value::Arr(r.events.iter().map(|e| minjson::s(e)).collect()),
                     ),
-                    ("mean_local_loss", minjson::num(r.mean_local_loss)),
+                    ("mean_local_loss", fnum(r.mean_local_loss)),
                     ("n_valid", minjson::num(r.n_valid_submissions as f64)),
                     ("tokens", minjson::num(r.tokens_processed as f64)),
                     (
-                        "peers",
+                        "top_g",
                         Value::Arr(
-                            r.peers
-                                .iter()
-                                .map(|p| {
-                                    minjson::obj(vec![
-                                        ("uid", minjson::num(p.uid as f64)),
-                                        ("label", minjson::s(&p.label)),
-                                        ("score", minjson::num(p.peer_score)),
-                                        ("rating_mu", minjson::num(p.rating_mu)),
-                                        ("mu", minjson::num(p.mu)),
-                                        ("incentive", minjson::num(p.incentive)),
-                                        ("balance", minjson::num(p.balance)),
-                                        ("fast_pass", Value::Bool(p.fast_pass)),
-                                        ("top_g", Value::Bool(p.in_top_g)),
-                                    ])
-                                })
-                                .collect(),
+                            r.top_g.iter().map(|u| minjson::num(*u as f64)).collect(),
                         ),
+                    ),
+                    (
+                        "peers",
+                        Value::Arr(r.peers.iter().map(|p| p.to_json()).collect()),
                     ),
                 ])
             })
             .collect();
         minjson::obj(vec![("rounds", Value::Arr(rounds))])
+    }
+
+    /// Inverse of [`RunMetrics::to_json`] — lets downstream tooling (and
+    /// the round-trip test) reload a metrics file into typed records.
+    pub fn from_json(v: &Value) -> Result<RunMetrics> {
+        let rounds = v
+            .get("rounds")
+            .as_arr()
+            .context("metrics missing \"rounds\"")?
+            .iter()
+            .map(|r| {
+                Ok(RoundRecord {
+                    round: r.get("round").as_f64().context("round")? as u64,
+                    heldout_loss: match r.get("heldout_loss") {
+                        Value::Null => None,
+                        other => Some(read_f64(other).context("heldout_loss")?),
+                    },
+                    mean_local_loss: read_f64(r.get("mean_local_loss"))
+                        .context("mean_local_loss")?,
+                    n_valid_submissions: r.get("n_valid").as_usize().context("n_valid")?,
+                    top_g: r
+                        .get("top_g")
+                        .as_arr()
+                        .context("top_g")?
+                        .iter()
+                        .map(|u| u.as_usize().map(|u| u as Uid).context("top_g uid"))
+                        .collect::<Result<_>>()?,
+                    peers: r
+                        .get("peers")
+                        .as_arr()
+                        .context("peers")?
+                        .iter()
+                        .map(PeerRoundStats::from_json)
+                        .collect::<Result<_>>()?,
+                    tokens_processed: r.get("tokens").as_f64().context("tokens")? as u64,
+                    events: r
+                        .get("events")
+                        .as_arr()
+                        .context("events")?
+                        .iter()
+                        .map(|e| {
+                            e.as_str().map(str::to_string).context("event string")
+                        })
+                        .collect::<Result<_>>()?,
+                })
+            })
+            .collect::<Result<_>>()?;
+        Ok(RunMetrics { rounds })
     }
 }
 
@@ -291,6 +400,15 @@ pub struct TemplarRunWith<E: ExecBackend + 'static> {
     /// Active provider-outage window: restore `outage_prob` to `.1` at the
     /// top of round `.0`.
     outage_restore: Option<(u64, f64)>,
+    /// The built-in metrics observer: the only producer of
+    /// [`RoundRecord`]/[`RunMetrics`] (what `run_round()` returns).
+    metrics: Arc<MetricsObserver>,
+    /// External subscribers to the round-event stream.
+    observers: Vec<Arc<dyn Observer>>,
+    /// Suppressed during construction so the round-0 population's
+    /// registrations (which pre-date every possible subscriber) don't
+    /// leave the built-in observer ahead of later-attached ones.
+    emit_enabled: bool,
 }
 
 /// The artifact-backed system (what the paper deploys).
@@ -298,25 +416,45 @@ pub type TemplarRun = TemplarRunWith<Executor>;
 
 impl TemplarRunWith<Executor> {
     /// Load the config's compiled artifacts and assemble the system.
+    #[deprecated(note = "use GauntletBuilder::artifact() (coordinator::engine)")]
     pub fn new(cfg: RunConfig) -> Result<TemplarRun> {
+        Self::new_artifact(cfg)
+    }
+
+    /// Non-deprecated core of [`TemplarRunWith::new`], used by
+    /// `GauntletBuilder::build`.
+    pub(crate) fn new_artifact(cfg: RunConfig) -> Result<TemplarRun> {
         let exec = Executor::load(artifact_dir(&cfg.model))
             .with_context(|| format!("loading artifacts for {:?}", cfg.model))?;
-        Self::with_backend(exec, cfg)
+        Self::assemble(exec, cfg)
     }
 }
 
 impl TemplarRunWith<SimExec> {
     /// Assemble the system on the deterministic pure-Rust backend — same
     /// protocol end to end, no artifacts or native XLA needed.
+    #[deprecated(note = "use GauntletBuilder::sim() (coordinator::engine)")]
     pub fn new_sim(cfg: RunConfig) -> Result<TemplarRunWith<SimExec>> {
+        Self::new_sim_inner(cfg)
+    }
+
+    pub(crate) fn new_sim_inner(cfg: RunConfig) -> Result<TemplarRunWith<SimExec>> {
         let exec = SimExec::from_model_name(&cfg.model, cfg.seed);
-        Self::with_backend(exec, cfg)
+        Self::assemble(exec, cfg)
     }
 }
 
 impl<E: ExecBackend + 'static> TemplarRunWith<E> {
     /// Assemble the system over an already-constructed backend.
-    pub fn with_backend(exec: E, mut cfg: RunConfig) -> Result<TemplarRunWith<E>> {
+    #[deprecated(note = "use GauntletBuilder (coordinator::engine); direct \
+                         backend injection remains available via this shim")]
+    pub fn with_backend(exec: E, cfg: RunConfig) -> Result<TemplarRunWith<E>> {
+        Self::assemble(exec, cfg)
+    }
+
+    /// Core constructor: assemble every substrate over `exec` and register
+    /// the round-0 population through the permissionless path.
+    pub(crate) fn assemble(exec: E, mut cfg: RunConfig) -> Result<TemplarRunWith<E>> {
         let theta = exec.init_params()?;
         let meta = exec.meta();
         if cfg.params.lr <= 0.0 {
@@ -374,14 +512,44 @@ impl<E: ExecBackend + 'static> TemplarRunWith<E> {
             last_coeff: None,
             next_hotkey: 0,
             outage_restore: None,
+            metrics: Arc::new(MetricsObserver::new()),
+            observers: Vec::new(),
+            emit_enabled: false,
         };
         // Round-0 peers go through the same registration path as mid-run
         // joiners: the population is chain state from the very start.
+        // Emission stays disabled: these registrations pre-date every
+        // possible subscriber, so no observer should see them.
         for behavior in initial_peers {
             run.register_peer(behavior)
                 .context("registering the initial peer population")?;
         }
+        run.emit_enabled = true;
         Ok(run)
+    }
+
+    /// Subscribe an observer to this run's round-event stream. Attach
+    /// before the first `run_round()` call for a complete stream (the
+    /// JSONL-trace replay contract assumes this).
+    pub fn add_observer(&mut self, obs: Arc<dyn Observer>) {
+        self.observers.push(obs);
+    }
+
+    /// The built-in metrics observer (every record since construction).
+    pub fn metrics_observer(&self) -> &Arc<MetricsObserver> {
+        &self.metrics
+    }
+
+    /// Publish one event to the built-in metrics observer and every
+    /// subscriber, on the calling (coordinator) thread.
+    fn emit(&self, event: RoundEvent) {
+        if !self.emit_enabled {
+            return;
+        }
+        self.metrics.on_event(&event);
+        for obs in &self.observers {
+            obs.on_event(&event);
+        }
     }
 
     pub fn peer_uids(&self) -> Vec<Uid> {
@@ -421,12 +589,20 @@ impl<E: ExecBackend + 'static> TemplarRunWith<E> {
         let bucket = format!("peer-{uid}");
         let rk = self.store.create_bucket(&bucket, &bucket);
         self.chain.post_read_key(uid, rk)?;
+        let label = behavior.label();
         self.peers.push(PeerRunner::new(
             uid,
             behavior,
             self.exec.meta().param_count,
             self.cfg.seed,
         ));
+        self.emit(RoundEvent::PeerRegistered {
+            round: self.round,
+            uid,
+            label,
+            recycled: reg.recycled,
+            evicted_hotkey: reg.evicted_hotkey.clone(),
+        });
         Ok(reg)
     }
 
@@ -445,6 +621,7 @@ impl<E: ExecBackend + 'static> TemplarRunWith<E> {
         self.chain.deregister(uid)?;
         self.store.delete_bucket(&format!("peer-{uid}"));
         self.peers.retain(|p| p.uid != uid);
+        self.emit(RoundEvent::PeerDeregistered { round: self.round, uid });
         Ok(())
     }
 
@@ -462,17 +639,16 @@ impl<E: ExecBackend + 'static> TemplarRunWith<E> {
 
     /// Fire the scripted events for `round` (top-of-round, coordinator
     /// thread — see `scenario` module docs), then reconcile the runner set
-    /// against the chain registry. Returns human-readable descriptions of
-    /// everything that happened, for [`RoundRecord::events`].
-    fn apply_scenario(&mut self, round: u64) -> Result<Vec<String>> {
-        let mut log = Vec::new();
-
+    /// against the chain registry. Everything that happened is published
+    /// as typed lifecycle [`RoundEvent`]s; [`MetricsObserver`] renders
+    /// them into [`RoundRecord::events`].
+    fn apply_scenario(&mut self, round: u64) -> Result<()> {
         // A previously scripted outage window may end this round.
         if let Some((until, orig)) = self.outage_restore {
             if round >= until {
                 self.store.model.outage_prob = orig;
                 self.outage_restore = None;
-                log.push("provider recovered".to_string());
+                self.emit(RoundEvent::OutageEnded { round });
             }
         }
 
@@ -480,26 +656,31 @@ impl<E: ExecBackend + 'static> TemplarRunWith<E> {
             match event {
                 Event::JoinPeer { behavior } => {
                     let label = behavior.label();
-                    match self.register_peer_detailed(behavior) {
-                        Ok(reg) => {
-                            let mut line = format!("join {label} as uid {}", reg.uid);
-                            if let Some(hk) = &reg.evicted_hotkey {
-                                line.push_str(&format!(" (evicted {hk})"));
-                            } else if reg.recycled {
-                                line.push_str(" (recycled uid)");
-                            }
-                            log.push(line);
-                        }
-                        Err(e) => log.push(format!("join {label} rejected: {e:#}")),
+                    // Success emits `PeerRegistered` from inside
+                    // `register_peer_detailed`.
+                    if let Err(e) = self.register_peer_detailed(behavior) {
+                        self.emit(RoundEvent::ScenarioRejected {
+                            round,
+                            description: format!("join {label} rejected: {e:#}"),
+                        });
                     }
                 }
-                Event::LeavePeer { uid } => match self.deregister_peer(uid) {
-                    Ok(()) => log.push(format!("uid {uid} left")),
-                    Err(e) => log.push(format!("leave uid {uid} rejected: {e:#}")),
-                },
+                Event::LeavePeer { uid } => {
+                    // Success emits `PeerDeregistered` from inside
+                    // `deregister_peer`.
+                    if let Err(e) = self.deregister_peer(uid) {
+                        self.emit(RoundEvent::ScenarioRejected {
+                            round,
+                            description: format!("leave uid {uid} rejected: {e:#}"),
+                        });
+                    }
+                }
                 Event::SetStake { uid, amount } => match self.chain.set_stake(uid, amount) {
-                    Ok(()) => log.push(format!("stake of uid {uid} set to {amount}")),
-                    Err(e) => log.push(format!("stake uid {uid} rejected: {e:#}")),
+                    Ok(()) => self.emit(RoundEvent::StakeSet { round, uid, amount }),
+                    Err(e) => self.emit(RoundEvent::ScenarioRejected {
+                        round,
+                        description: format!("stake uid {uid} rejected: {e:#}"),
+                    }),
                 },
                 Event::ProviderOutage { prob, rounds } => {
                     // Overlapping windows: the new event takes over the
@@ -512,7 +693,7 @@ impl<E: ExecBackend + 'static> TemplarRunWith<E> {
                     self.store.model.outage_prob = prob;
                     let until = (round + rounds.max(1)).max(prev_until);
                     self.outage_restore = Some((until, orig));
-                    log.push(format!("provider outage p={prob} until round {until}"));
+                    self.emit(RoundEvent::OutageStarted { round, prob, until_round: until });
                 }
             }
         }
@@ -524,34 +705,47 @@ impl<E: ExecBackend + 'static> TemplarRunWith<E> {
         let before = self.peers.len();
         self.peers.retain(|p| registered.contains(&p.uid));
         if self.peers.len() != before {
-            let dropped = before - self.peers.len();
-            log.push(format!("{dropped} runner(s) dropped by registry resolution"));
+            let count = before - self.peers.len();
+            self.emit(RoundEvent::RunnersDropped { round, count });
         }
-        Ok(log)
+        Ok(())
     }
 
-    /// Drive the whole run.
+    /// Drive the run to completion: rounds advance until the engine's
+    /// round counter reaches [`RunConfig::rounds`], so a resumed engine
+    /// runs exactly the rounds an uninterrupted run still had left.
+    /// Returns the metrics of the rounds driven by *this* call (assembled
+    /// by the built-in [`MetricsObserver`]).
     pub fn run(&mut self) -> Result<RunMetrics> {
-        let mut metrics = RunMetrics::default();
-        for _ in 0..self.cfg.rounds {
-            metrics.rounds.push(self.run_round()?);
+        let already = self.metrics.n_rounds();
+        while self.round < self.cfg.rounds {
+            self.run_round()?;
         }
-        Ok(metrics)
+        Ok(RunMetrics { rounds: self.metrics.records_since(already) })
     }
 
     /// One synchronous communication round (see module docs for the staged
-    /// pipeline and its determinism contract).
+    /// pipeline and its determinism contract). Every decision is published
+    /// to the round-event stream; the returned [`RoundRecord`] is the
+    /// built-in [`MetricsObserver`]'s assembly of those events (a clone of
+    /// the record the observer retains — drivers that don't want the
+    /// per-round records at all can ignore the return value and drain the
+    /// observer with [`MetricsObserver::take`] as needed).
     pub fn run_round(&mut self) -> Result<RoundRecord> {
         let round = self.round;
+        self.emit(RoundEvent::RoundStarted { round });
         // Population lifecycle first: fire scripted churn events and
         // re-resolve the peer set from the chain registry, so everything
         // below sees this round's population.
-        let events = self.apply_scenario(round)?;
+        self.apply_scenario(round)?;
         let meta_batch = self.exec.meta().batch;
         let meta_seq = self.exec.meta().seq;
         // alpha_t from the schedule (§3.1); everything downstream — signed
         // step, SyncScore units, beta_t — uses this round's value.
         let lr_t = self.cfg.params.schedule.lr_at(round, self.cfg.params.lr);
+        if self.checkpoints.is_checkpoint_round(round) {
+            self.emit(RoundEvent::Checkpointed { round });
+        }
         self.checkpoints.maybe_checkpoint(round, &self.theta);
         let threads = self.cfg.effective_threads();
 
@@ -593,22 +787,21 @@ impl<E: ExecBackend + 'static> TemplarRunWith<E> {
                 )?
             }
         };
+        // PUTs, turn diagnostics, and events in peer order, identical to
+        // the sequential sweep.
         let mut submitted: BTreeMap<Uid, bool> = BTreeMap::new();
         for (i, out) in outputs {
-            let uid = self.peers[i].uid;
-            submitted.insert(uid, self.put_output(uid, out));
-        }
-        // Diagnostics in peer order, identical to the sequential sweep.
-        let mut local_losses = Vec::new();
-        let mut tokens: u64 = 0;
-        for p in &self.peers {
-            if p.behavior.is_second_pass() {
-                continue;
-            }
-            if p.last_local_loss.is_finite() {
-                local_losses.push(p.last_local_loss);
-            }
-            tokens += (p.last_microbatches * meta_batch * meta_seq) as u64;
+            let (uid, label, local_loss, tokens) = {
+                let p = &self.peers[i];
+                (
+                    p.uid,
+                    p.behavior.label(),
+                    p.last_local_loss,
+                    (p.last_microbatches * meta_batch * meta_seq) as u64,
+                )
+            };
+            let ok = self.emit_turn_and_put(round, uid, label, false, local_loss, tokens, out);
+            submitted.insert(uid, ok);
         }
         // Second pass: copiers / duplicators read their source's public
         // object and re-post it (cheap; stays sequential).
@@ -628,7 +821,10 @@ impl<E: ExecBackend + 'static> TemplarRunWith<E> {
                 params: &self.cfg.params,
             };
             let out = self.peers[i].step_copy(&ctx, src_bytes.as_deref())?;
-            submitted.insert(uid, self.put_output(uid, out));
+            let (label, local_loss) =
+                (self.peers[i].behavior.label(), self.peers[i].last_local_loss);
+            let ok = self.emit_turn_and_put(round, uid, label, true, local_loss, 0, out);
+            submitted.insert(uid, ok);
         }
 
         // ---------------------- validators evaluate ----------------------
@@ -710,16 +906,46 @@ impl<E: ExecBackend + 'static> TemplarRunWith<E> {
                 out
             }
         };
+        // Publish each validator's verdicts in validator order (the
+        // parallel fan-out above already returned them ordered).
+        for (v, o) in self.validators.iter().zip(&outcomes) {
+            for (&uid, &passed) in &o.fast_pass {
+                let phi = o.fast_phi.get(&uid).copied().unwrap_or(1.0);
+                self.emit(RoundEvent::FastEval { round, validator: v.uid, uid, passed, phi });
+            }
+            for (uid, ev) in &o.evaluated {
+                self.emit(RoundEvent::PrimaryEval {
+                    round,
+                    validator: v.uid,
+                    uid: *uid,
+                    score_assigned: ev.score_assigned,
+                    score_rand: ev.score_rand,
+                });
+            }
+            if o.evaluated.len() >= 2 {
+                self.emit(RoundEvent::RatingMatch {
+                    round,
+                    validator: v.uid,
+                    uids: o.evaluated.iter().map(|(u, _)| *u).collect(),
+                });
+            }
+        }
         // Commit weight vectors in validator order (determinism + the
         // chain is single-writer). A validator demoted mid-run (scenario
         // `stake <uid> 0`) still evaluates locally but may no longer
         // commit — the chain would reject it, and killing the run over a
         // scripted demotion would make `SetStake` unusable.
-        for (v, o) in self.validators.iter().zip(&outcomes) {
-            let staked = self.chain.neuron(v.uid).is_some_and(|n| n.stake > 0.0);
+        for i in 0..self.validators.len() {
+            let v_uid = self.validators[i].uid;
+            let staked = self.chain.neuron(v_uid).is_some_and(|n| n.stake > 0.0);
             if staked {
-                self.chain.set_weights(v.uid, &o.incentives)?;
+                self.chain.set_weights(v_uid, &outcomes[i].incentives)?;
             }
+            self.emit(RoundEvent::WeightsCommitted {
+                round,
+                validator: v_uid,
+                committed: staked,
+            });
         }
         // The lead validator — highest on-chain stake, deterministic after
         // the total_cmp/uid ordering — provides the aggregation weights
@@ -742,6 +968,7 @@ impl<E: ExecBackend + 'static> TemplarRunWith<E> {
 
         // ------------------------ chain epoch ----------------------------
         let chain_incentives = self.chain.run_epoch();
+        self.emit(RoundEvent::YumaEpoch { round, incentives: chain_incentives.clone() });
         let incentive_of = |uid: Uid| {
             chain_incentives.iter().find(|(u, _)| *u == uid).map(|(_, x)| *x).unwrap_or(0.0)
         };
@@ -788,6 +1015,12 @@ impl<E: ExecBackend + 'static> TemplarRunWith<E> {
             self.last_coeff = None;
         }
         self.theta = theta_after;
+        self.emit(RoundEvent::Aggregated {
+            round,
+            top_g: top_g.clone(),
+            n_valid: outcome.valid_submissions.len(),
+            had_update,
+        });
 
         // -------------------- peers synchronize --------------------------
         for p in &mut self.peers {
@@ -800,56 +1033,179 @@ impl<E: ExecBackend + 'static> TemplarRunWith<E> {
             )?;
         }
 
-        // ------------------------- metrics -------------------------------
-        let heldout_loss = if self.cfg.eval_every > 0 && round % self.cfg.eval_every == 0 {
+        // --------------------- end-of-round events -----------------------
+        if self.cfg.eval_every > 0 && round % self.cfg.eval_every == 0 {
             let toks = self.corpus.heldout(0, meta_batch, meta_seq + 1);
-            Some(self.exec.loss(&self.theta, &toks)? as f64)
-        } else {
-            None
-        };
+            let loss = self.exec.loss(&self.theta, &toks)? as f64;
+            self.emit(RoundEvent::HeldoutEval { round, loss });
+        }
 
-        // Per-peer stats report the lead validator's view, matching the
+        // Per-peer scoreboard: the lead validator's view, matching the
         // outcome that drove aggregation above.
         let book = &self.validators[lead_idx].book;
-        let peers_stats: Vec<PeerRoundStats> = self
-            .peers
-            .iter()
-            .map(|p| {
-                let st = book.get(p.uid);
-                let ev = outcome.evaluated.iter().find(|(u, _)| *u == p.uid).map(|(_, e)| e);
-                PeerRoundStats {
-                    uid: p.uid,
-                    label: p.behavior.label(),
-                    submitted: *submitted.get(&p.uid).unwrap_or(&false),
-                    fast_pass: *outcome.fast_pass.get(&p.uid).unwrap_or(&false),
-                    peer_score: book.peer_score(p.uid),
-                    rating_mu: st.map(|s| s.rating.mu).unwrap_or(0.0),
-                    rating_ordinal: st.map(|s| s.rating.ordinal()).unwrap_or(0.0),
-                    mu: st.map(|s| s.mu.value).unwrap_or(0.0),
-                    incentive: incentive_of(p.uid),
-                    in_top_g: top_g.contains(&p.uid),
-                    loss_score_rand: ev.map(|e| e.score_rand),
-                    loss_score_assigned: ev.map(|e| e.score_assigned),
-                    balance: self.chain.neuron(p.uid).map(|n| n.balance).unwrap_or(0.0),
-                }
-            })
-            .collect();
+        for p in &self.peers {
+            let st = book.get(p.uid);
+            let ev = outcome.evaluated.iter().find(|(u, _)| *u == p.uid).map(|(_, e)| e);
+            let stats = PeerRoundStats {
+                uid: p.uid,
+                label: p.behavior.label(),
+                submitted: *submitted.get(&p.uid).unwrap_or(&false),
+                fast_pass: *outcome.fast_pass.get(&p.uid).unwrap_or(&false),
+                peer_score: book.peer_score(p.uid),
+                rating_mu: st.map(|s| s.rating.mu).unwrap_or(0.0),
+                rating_ordinal: st.map(|s| s.rating.ordinal()).unwrap_or(0.0),
+                mu: st.map(|s| s.mu.value).unwrap_or(0.0),
+                incentive: incentive_of(p.uid),
+                in_top_g: top_g.contains(&p.uid),
+                loss_score_rand: ev.map(|e| e.score_rand),
+                loss_score_assigned: ev.map(|e| e.score_assigned),
+                balance: self.chain.neuron(p.uid).map(|n| n.balance).unwrap_or(0.0),
+            };
+            self.emit(RoundEvent::PeerScoreboard { round, stats });
+        }
 
         // Advance chain time to the start of the next round.
         let blocks_per_round = self.clock.round_ms / crate::chain::BLOCK_MS;
         self.chain.advance_blocks(blocks_per_round.max(1));
         self.round += 1;
+        self.emit(RoundEvent::RoundCompleted { round });
 
-        Ok(RoundRecord {
-            round,
-            heldout_loss,
-            mean_local_loss: crate::util::mean(&local_losses),
-            n_valid_submissions: outcome.valid_submissions.len(),
-            top_g,
-            peers: peers_stats,
-            tokens_processed: tokens,
-            events,
+        self.metrics
+            .last_record()
+            .context("the built-in metrics observer must have recorded this round")
+    }
+
+    /// Capture the full run substrate at the current round boundary (call
+    /// between `run_round()` calls). The snapshot is self-contained: it
+    /// embeds the [`RunConfig`], so `GauntletBuilder::resume` needs
+    /// nothing else, and resuming is bit-identical to not having paused
+    /// (`tests/snapshot_resume.rs`).
+    pub fn snapshot(&self) -> RunSnapshot {
+        let (checkpoints, updates) = self.checkpoints.export();
+        RunSnapshot {
+            round: self.round,
+            // Filled in by `GauntletEngine::snapshot`, which knows which
+            // backend variant it wraps.
+            backend: String::new(),
+            cfg: self.cfg.clone(),
+            theta: self.theta.clone(),
+            next_hotkey: self.next_hotkey,
+            outage_restore: self.outage_restore,
+            chain: self.chain.to_state(),
+            validators: self
+                .validators
+                .iter()
+                .map(|v| super::snapshot::ValidatorState {
+                    uid: v.uid,
+                    rng_state: v.rng_state(),
+                    book: v.book.iter().map(|(u, s)| (*u, s.clone())).collect(),
+                })
+                .collect(),
+            peers: self.peers.iter().map(|p| p.to_state()).collect(),
+            store: super::snapshot::StoreState {
+                rng_state: self.store.rng_state(),
+                next_key_id: self.store.next_key_id(),
+                outage_prob: self.store.model.outage_prob,
+                buckets: self.store.export_buckets(),
+            },
+            // Lifecycle lines from direct register/deregister calls since
+            // the last round must still land in the next round's record.
+            pending_events: self.metrics.pending_events(),
+            checkpoint_rounds: checkpoints.to_vec(),
+            checkpoint_updates: updates.to_vec(),
+        }
+    }
+
+    /// Reassemble a run mid-stream from a [`RunSnapshot`] over an
+    /// already-constructed backend (the `GauntletBuilder::resume` path).
+    pub(crate) fn from_snapshot(exec: E, snap: RunSnapshot) -> Result<TemplarRunWith<E>> {
+        let cfg = snap.cfg;
+        let meta = exec.meta();
+        anyhow::ensure!(
+            snap.theta.len() == meta.param_count,
+            "snapshot parameters ({}) do not fit model {:?} ({} parameters) — \
+             was the snapshot taken with a different --model?",
+            snap.theta.len(),
+            cfg.model,
+            meta.param_count
+        );
+        let chain = Chain::from_state(snap.chain);
+        // The store restarts from the captured control state: RNG stream,
+        // read-key mint, bucket registry, live (possibly mid-outage)
+        // failure probability. Object payloads never cross a round
+        // boundary, so none are carried.
+        let mut provider = cfg.provider.clone();
+        provider.outage_prob = snap.store.outage_prob;
+        let store = ObjectStore::new(provider, 0);
+        store.set_rng_state(snap.store.rng_state);
+        store.set_next_key_id(snap.store.next_key_id);
+        for (name, owner, key) in snap.store.buckets {
+            store.restore_bucket(&name, &owner, key);
+        }
+        let corpus = Corpus::new(meta.vocab as u32, cfg.seed);
+        let mut validators = Vec::with_capacity(snap.validators.len());
+        for vs in snap.validators {
+            let mut v = Validator::new(vs.uid, cfg.params.clone(), meta.padded_count, cfg.seed);
+            v.set_rng_state(vs.rng_state);
+            for (uid, state) in vs.book {
+                v.book.insert_state(uid, state);
+            }
+            validators.push(v);
+        }
+        let peers = snap.peers.into_iter().map(PeerRunner::from_state).collect();
+        let checkpoints = CheckpointStore::restore(
+            cfg.params.checkpoint_every,
+            snap.checkpoint_rounds,
+            snap.checkpoint_updates,
+        );
+        let dense = vec![0.0; meta.padded_count];
+        let clock = cfg.clock;
+        let metrics = Arc::new(MetricsObserver::new());
+        metrics.push_pending(snap.pending_events);
+        Ok(TemplarRunWith {
+            cfg,
+            exec,
+            chain,
+            store,
+            corpus,
+            clock,
+            validators,
+            peers,
+            theta: snap.theta,
+            checkpoints,
+            round: snap.round,
+            dense,
+            last_coeff: None,
+            next_hotkey: snap.next_hotkey,
+            outage_restore: snap.outage_restore,
+            metrics,
+            observers: Vec::new(),
+            emit_enabled: true,
         })
+    }
+
+    /// Publish one peer's `PeerTurn` (+ `PutApplied`, if it submitted) and
+    /// apply the PUT — shared by the first- and second-pass loops so their
+    /// event payloads cannot drift apart. Returns whether the submission
+    /// landed.
+    #[allow(clippy::too_many_arguments)]
+    fn emit_turn_and_put(
+        &self,
+        round: u64,
+        uid: Uid,
+        label: String,
+        second_pass: bool,
+        local_loss: f64,
+        tokens: u64,
+        out: PeerOutput,
+    ) -> bool {
+        self.emit(RoundEvent::PeerTurn { round, uid, label, second_pass, local_loss, tokens });
+        let attempted = matches!(out, PeerOutput::Submit { .. });
+        let ok = self.put_output(uid, out);
+        if attempted {
+            self.emit(RoundEvent::PutApplied { round, uid, accepted: ok });
+        }
+        ok
     }
 
     fn put_output(&self, uid: Uid, out: PeerOutput) -> bool {
@@ -988,4 +1344,88 @@ fn step_first_pass_funneled<E: ExecBackend + 'static>(
         out.extend(r?);
     }
     Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_metrics() -> RunMetrics {
+        let peer = |uid: Uid, in_top_g: bool| PeerRoundStats {
+            uid,
+            label: format!("honest-{uid}"),
+            submitted: true,
+            fast_pass: uid % 2 == 0,
+            peer_score: 0.25 * uid as f64,
+            rating_mu: 25.0 + uid as f64,
+            rating_ordinal: 1.5 - uid as f64,
+            mu: -0.0, // negative zero must survive the round trip
+            incentive: 1.0 / 3.0,
+            in_top_g,
+            loss_score_rand: if uid == 1 { Some(0.125) } else { None },
+            loss_score_assigned: None,
+            balance: 7.75,
+        };
+        RunMetrics {
+            rounds: vec![
+                RoundRecord {
+                    round: 0,
+                    heldout_loss: Some(4.15625),
+                    mean_local_loss: 3.0625,
+                    n_valid_submissions: 2,
+                    top_g: vec![1, 2],
+                    peers: vec![peer(1, true), peer(2, true)],
+                    tokens_processed: 128,
+                    events: vec!["join honest as uid 2".to_string()],
+                },
+                RoundRecord {
+                    round: 1,
+                    heldout_loss: None,
+                    mean_local_loss: 0.0,
+                    n_valid_submissions: 0,
+                    top_g: vec![],
+                    peers: vec![peer(1, false)],
+                    tokens_processed: 0,
+                    events: vec![],
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn run_metrics_roundtrip_through_minjson() {
+        let m = sample_metrics();
+        let text = m.to_json().write();
+        let parsed = Value::parse(&text).expect("metrics JSON parses");
+        let back = RunMetrics::from_json(&parsed).expect("typed reload");
+        assert_eq!(m, back, "typed round trip");
+        // Bit-exactness of the awkward values survives a second pass too.
+        assert_eq!(text, back.to_json().write(), "serialization is idempotent");
+        assert_eq!(back.rounds[0].peers[0].mu.to_bits(), (-0.0f64).to_bits());
+    }
+
+    #[test]
+    fn run_metrics_from_json_rejects_malformed_input() {
+        for bad in [
+            r#"{}"#,
+            r#"{"rounds":[{"round":0}]}"#,
+            r#"{"rounds":[{"round":0,"heldout_loss":null,"mean_local_loss":"bogus","n_valid":0,"tokens":0,"top_g":[],"peers":[],"events":[]}]}"#,
+        ] {
+            let v = Value::parse(bad).unwrap();
+            assert!(RunMetrics::from_json(&v).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn default_config_seeds_no_peers_and_quick_shim_matches() {
+        let d = RunConfig::default();
+        assert!(d.peers.is_empty());
+        assert_eq!(d.rounds, 20);
+        #[allow(deprecated)]
+        let q = RunConfig::quick("tiny", 7, vec![Behavior::Freeloader]);
+        assert_eq!(q.model, "tiny");
+        assert_eq!(q.rounds, 7);
+        assert_eq!(q.peers, vec![Behavior::Freeloader]);
+        assert_eq!(q.n_validators, d.n_validators);
+    }
 }

@@ -63,6 +63,17 @@ impl ScoreBook {
         self.states.keys().copied().collect()
     }
 
+    /// Iterate every `(uid, state)` pair in uid order (snapshot export).
+    pub fn iter(&self) -> impl Iterator<Item = (&Uid, &PeerState)> {
+        self.states.iter()
+    }
+
+    /// Install a peer's state wholesale (snapshot restore — bypasses the
+    /// fresh-prior path of [`ScoreBook::ensure`]).
+    pub fn insert_state(&mut self, uid: Uid, state: PeerState) {
+        self.states.insert(uid, state);
+    }
+
     /// Apply the fast-evaluation outcome: phi < 1 on failure (§3.2).
     pub fn apply_fast_penalty(&mut self, uid: Uid, phi: f64) {
         let s = self.ensure(uid);
@@ -116,26 +127,47 @@ impl ScoreBook {
 /// Incentive normalization (eq. 5):
 /// `x_p = (s_p - min s)^c / sum_k (s_k - min s)^c`.
 /// Returns zeros when all scores are equal (no signal yet).
+///
+/// Degenerate inputs are handled deterministically rather than propagated:
+/// a non-finite score (NaN, ±inf — e.g. a poisoned rating that slipped
+/// through) contributes zero incentive and is excluded from the min-shift,
+/// so one corrupt entry cannot NaN-poison every peer's weight.
 pub fn normalize_scores(scores: &[f64], power: f64) -> Vec<f64> {
     if scores.is_empty() {
         return vec![];
     }
-    let min = scores.iter().cloned().fold(f64::INFINITY, f64::min);
-    let shifted: Vec<f64> = scores.iter().map(|s| (s - min).max(0.0).powf(power)).collect();
+    let min = scores
+        .iter()
+        .copied()
+        .filter(|s| s.is_finite())
+        .fold(f64::INFINITY, f64::min);
+    if !min.is_finite() {
+        // No finite score at all: no signal.
+        return vec![0.0; scores.len()];
+    }
+    let shifted: Vec<f64> = scores
+        .iter()
+        .map(|s| if s.is_finite() { (s - min).max(0.0).powf(power) } else { 0.0 })
+        .collect();
     let total: f64 = shifted.iter().sum();
-    if total <= 0.0 {
+    if total <= 0.0 || !total.is_finite() {
         return vec![0.0; scores.len()];
     }
     shifted.into_iter().map(|x| x / total).collect()
 }
 
 /// Top-G selection + aggregation weights (eq. 6): 1/G for the top G peers
-/// by normalized incentive, 0 otherwise. Ties are broken by uid for
-/// determinism. Peers with zero incentive are never selected.
+/// by normalized incentive, 0 otherwise. Ties are broken by ascending uid
+/// for determinism (`total_cmp` keeps the sort total even if a non-finite
+/// incentive slips in). Peers with zero, negative, or non-finite incentive
+/// are never selected; `g = 0` selects nobody.
 pub fn top_g_weights(incentives: &[(Uid, f64)], g: usize) -> Vec<(Uid, f64)> {
-    let mut ranked: Vec<(Uid, f64)> =
-        incentives.iter().copied().filter(|(_, x)| *x > 0.0).collect();
-    ranked.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+    let mut ranked: Vec<(Uid, f64)> = incentives
+        .iter()
+        .copied()
+        .filter(|(_, x)| x.is_finite() && *x > 0.0)
+        .collect();
+    ranked.sort_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
     ranked.truncate(g);
     if ranked.is_empty() {
         return vec![];
@@ -210,6 +242,35 @@ mod tests {
         assert_eq!(normalize_scores(&[], 2.0), Vec::<f64>::new());
         assert_eq!(normalize_scores(&[5.0, 5.0], 2.0), vec![0.0, 0.0]);
         assert_eq!(normalize_scores(&[1.0], 2.0), vec![0.0]);
+        // All-zero scores: no signal, all-zero incentives.
+        assert_eq!(normalize_scores(&[0.0, 0.0, 0.0], 2.0), vec![0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn normalize_non_finite_inputs_are_quarantined() {
+        // A NaN score earns nothing and cannot poison the others.
+        let x = normalize_scores(&[3.0, f64::NAN, 1.0], 2.0);
+        assert!(x.iter().all(|v| v.is_finite()), "{x:?}");
+        assert_eq!(x[1], 0.0, "NaN peer gets zero incentive");
+        assert_eq!(x, normalize_scores(&[3.0, f64::NEG_INFINITY, 1.0], 2.0));
+        // ±inf likewise: +inf must not absorb the whole distribution via
+        // inf/inf = NaN.
+        let y = normalize_scores(&[f64::INFINITY, 2.0, 1.0], 2.0);
+        assert!(y.iter().all(|v| v.is_finite()), "{y:?}");
+        assert_eq!(y[0], 0.0);
+        assert!((y[1] - 1.0).abs() < 1e-12, "finite winner takes all: {y:?}");
+        // Nothing finite at all: zeros, not NaNs.
+        assert_eq!(
+            normalize_scores(&[f64::NAN, f64::INFINITY], 2.0),
+            vec![0.0, 0.0]
+        );
+        // The min-shift ignores -inf, so finite scores keep their relative
+        // shares.
+        let clean = normalize_scores(&[2.0, 1.0, 0.0], 2.0);
+        let with_nan = normalize_scores(&[2.0, 1.0, 0.0, f64::NAN], 2.0);
+        for (a, b) in clean.iter().zip(&with_nan) {
+            assert!((a - b).abs() < 1e-12);
+        }
     }
 
     #[test]
@@ -238,6 +299,31 @@ mod tests {
         let inc = vec![(5, 0.4), (2, 0.4), (9, 0.2)];
         let w = top_g_weights(&inc, 2);
         assert_eq!(w.iter().map(|(u, _)| *u).collect::<Vec<_>>(), vec![2, 5]);
+        // Fully tied field, g smaller than the tie: selection is the g
+        // lowest uids, pinned (input order must not matter).
+        let tied = vec![(7, 0.25), (1, 0.25), (4, 0.25), (3, 0.25)];
+        let w = top_g_weights(&tied, 2);
+        assert_eq!(w, vec![(1, 0.5), (3, 0.5)]);
+        let mut reversed = tied.clone();
+        reversed.reverse();
+        assert_eq!(top_g_weights(&reversed, 2), w, "order-independent tie-break");
+    }
+
+    #[test]
+    fn top_g_degenerate_sizes_and_non_finite_incentives() {
+        let inc = vec![(0, 0.5), (1, 0.3), (2, 0.2)];
+        // g larger than the candidate set: everyone in, uniform weights.
+        let w = top_g_weights(&inc, 100);
+        assert_eq!(w.len(), 3);
+        assert!(w.iter().all(|(_, x)| (*x - 1.0 / 3.0).abs() < 1e-12));
+        // g = 0 selects nobody (and must not divide by zero).
+        assert_eq!(top_g_weights(&inc, 0), vec![]);
+        assert_eq!(top_g_weights(&[], 4), vec![]);
+        // NaN / inf incentives are never selected and never panic the sort.
+        let dirty = vec![(0, f64::NAN), (1, 0.4), (2, f64::INFINITY), (3, 0.1)];
+        let w = top_g_weights(&dirty, 4);
+        assert_eq!(w.iter().map(|(u, _)| *u).collect::<Vec<_>>(), vec![1, 3]);
+        assert_eq!(top_g_weights(&[(0, f64::NAN)], 2), vec![]);
     }
 
     #[test]

@@ -1,0 +1,785 @@
+//! Durable run snapshots: pause a Gauntlet run at any round boundary,
+//! serialize the *entire* run substrate to JSON, and resume later (in a
+//! different process, at a different worker-thread count) **bit-identically**
+//! to the uninterrupted run.
+//!
+//! A [`RunSnapshot`] captures everything the next round's computation can
+//! observe:
+//!
+//! - the chain slot table: neurons, stakes, balances, committed weight
+//!   rows, freed uids, the monotone uid counter, the block clock;
+//! - every validator's [`ScoreBook`](super::scoring::ScoreBook) — OpenSkill
+//!   ratings, proof-of-computation EMAs, phi/fast-fail history — plus its
+//!   sampling-RNG stream;
+//! - every peer runner's DeMo error-feedback buffer, divergent local model
+//!   (if any), and behaviour-RNG stream;
+//! - the model parameters, the round counter (which doubles as the
+//!   scenario cursor: scripted events fire by round index), the active
+//!   provider-outage window, and the storage provider's RNG stream,
+//!   read-key mint, and bucket registry;
+//! - the checkpoint store (full checkpoints + packed signed updates), so
+//!   catchup keeps answering for pre-snapshot rounds;
+//! - the full [`RunConfig`], making a snapshot self-contained: resume
+//!   needs nothing but the file.
+//!
+//! Floating-point state is encoded bit-faithfully: `f32` vectors as raw
+//! bit patterns, `f64`s through [`minjson::fnum`] (shortest-roundtrip
+//! `Display` plus sentinels for NaN/±inf/-0.0), and RNG states as decimal
+//! strings (u64 does not fit in a JSON double). See
+//! `tests/snapshot_resume.rs` for the bit-identity pin.
+//!
+//! ```
+//! use gauntlet::coordinator::engine::GauntletBuilder;
+//! use gauntlet::coordinator::snapshot::RunSnapshot;
+//! use gauntlet::peers::Behavior;
+//!
+//! let peers = vec![Behavior::Honest { data_mult: 1.0 }; 3];
+//! let mut engine = GauntletBuilder::sim().model("nano").rounds(4).peers(peers).build()?;
+//! engine.run_round()?;
+//!
+//! // Serialize at the round boundary, reload, and continue elsewhere.
+//! let json = engine.snapshot().to_json().write();
+//! let snap = RunSnapshot::parse(&json)?;
+//! let mut resumed = GauntletBuilder::sim().resume(snap).build()?;
+//! assert_eq!(resumed.round(), 1);
+//! resumed.run()?; // rounds 1..4, bit-identical to never having paused
+//! assert_eq!(resumed.round(), 4);
+//! # anyhow::Ok(())
+//! ```
+
+use anyhow::{bail, Context, Result};
+
+use super::checkpoint::SignVector;
+use super::run::RunConfig;
+use super::schedule::LrSchedule;
+use super::scoring::PeerState;
+use super::GauntletParams;
+use crate::chain::{ChainState, Neuron, Uid};
+use crate::chain::yuma::YumaParams;
+use crate::minjson::{self, field, fnum, read_f64, Value};
+use crate::openskill::Rating;
+use crate::peers::{Behavior, PeerRunnerState};
+use crate::scenario::Scenario;
+use crate::storage::{ProviderModel, ReadKey};
+use crate::util::Ema;
+
+/// Format marker written into every snapshot.
+pub const SNAPSHOT_VERSION: &str = "gauntlet-snapshot-v1";
+
+/// One validator's serializable state.
+#[derive(Clone, Debug)]
+pub struct ValidatorState {
+    pub uid: Uid,
+    pub rng_state: u64,
+    /// `(uid, score-book entry)` in uid order.
+    pub book: Vec<(Uid, PeerState)>,
+}
+
+/// The storage provider's serializable state (objects are per-round and
+/// never read across a round boundary, so only the control state travels).
+#[derive(Clone, Debug)]
+pub struct StoreState {
+    pub rng_state: u64,
+    pub next_key_id: u64,
+    /// The *live* outage probability (a scripted outage may be active).
+    pub outage_prob: f64,
+    /// `(bucket name, owner, read key)`, sorted by name.
+    pub buckets: Vec<(String, String, ReadKey)>,
+}
+
+/// A full run snapshot at a round boundary (see the module docs).
+#[derive(Clone, Debug)]
+pub struct RunSnapshot {
+    pub round: u64,
+    /// Which backend produced this snapshot ("sim" / "artifact"), recorded
+    /// by `GauntletEngine::snapshot` — the auto backend refuses to resume
+    /// an artifact-backed run on the sim backend (and vice versa), since a
+    /// silent switch would continue real-transformer parameters on the toy
+    /// model while still printing plausible fingerprints. Empty when the
+    /// snapshot was captured below the engine facade.
+    pub backend: String,
+    pub cfg: RunConfig,
+    pub theta: Vec<f32>,
+    pub next_hotkey: u64,
+    /// Active provider-outage window: `(restore round, original prob)`.
+    pub outage_restore: Option<(u64, f64)>,
+    pub chain: ChainState,
+    pub validators: Vec<ValidatorState>,
+    pub peers: Vec<PeerRunnerState>,
+    pub store: StoreState,
+    /// Lifecycle event lines emitted between rounds (a direct
+    /// `register_peer` just before the snapshot) that the next round's
+    /// [`RoundRecord`](super::run::RoundRecord) must still report.
+    pub pending_events: Vec<String>,
+    /// `(round, full parameter vector)` checkpoints.
+    pub checkpoint_rounds: Vec<(u64, Vec<f32>)>,
+    /// `(round, lr, packed signs)` per recorded update.
+    pub checkpoint_updates: Vec<(u64, f32, SignVector)>,
+}
+
+// --------------------------- helpers ------------------------------------
+
+fn u64s(x: u64) -> Value {
+    Value::Str(x.to_string())
+}
+
+fn read_u64(v: &Value) -> Result<u64> {
+    match v {
+        Value::Str(s) => s.parse().with_context(|| format!("bad u64 {s:?}")),
+        Value::Num(n) if *n >= 0.0 && n.fract() == 0.0 && *n < 9e15 => Ok(*n as u64),
+        other => bail!("expected u64, got {other:?}"),
+    }
+}
+
+/// f32 slice -> raw bit patterns (exact u32 integers survive JSON doubles).
+fn arr_f32_bits(xs: &[f32]) -> Value {
+    Value::Arr(xs.iter().map(|x| Value::Num(x.to_bits() as f64)).collect())
+}
+
+fn read_f32_bits(v: &Value) -> Result<Vec<f32>> {
+    v.as_arr()
+        .context("expected an f32-bits array")?
+        .iter()
+        .map(|x| {
+            let n = x.as_f64().context("bad f32 bits")?;
+            if n < 0.0 || n.fract() != 0.0 || n > u32::MAX as f64 {
+                bail!("f32 bit pattern out of range: {n}");
+            }
+            Ok(f32::from_bits(n as u32))
+        })
+        .collect()
+}
+
+fn arr_bytes(xs: &[u8]) -> Value {
+    Value::Arr(xs.iter().map(|b| Value::Num(*b as f64)).collect())
+}
+
+fn read_bytes(v: &Value) -> Result<Vec<u8>> {
+    v.as_arr()
+        .context("expected a byte array")?
+        .iter()
+        .map(|x| {
+            x.as_usize()
+                .filter(|n| *n <= 255)
+                .map(|n| n as u8)
+                .context("bad byte")
+        })
+        .collect()
+}
+
+// ------------------------- config codec ----------------------------------
+
+impl LrSchedule {
+    /// Canonical spec string — the inverse of [`LrSchedule::parse`].
+    pub fn spec(&self) -> String {
+        match self {
+            LrSchedule::Constant => "constant".to_string(),
+            LrSchedule::WarmupCosine { warmup, total, min_frac } => {
+                format!("cosine:{warmup}:{total}:{min_frac}")
+            }
+            LrSchedule::StepHalving { every } => format!("halve:{every}"),
+        }
+    }
+}
+
+fn cfg_to_json(cfg: &RunConfig) -> Value {
+    let p = &cfg.params;
+    minjson::obj(vec![
+        ("model", minjson::s(&cfg.model)),
+        ("rounds", minjson::num(cfg.rounds as f64)),
+        (
+            "peers",
+            Value::Arr(cfg.peers.iter().map(|b| minjson::s(&b.spec())).collect()),
+        ),
+        ("scenario", cfg.scenario.to_json()),
+        ("max_uids", minjson::num(cfg.max_uids as f64)),
+        ("immunity_rounds", minjson::num(cfg.immunity_rounds as f64)),
+        ("seed", u64s(cfg.seed)),
+        ("eval_every", minjson::num(cfg.eval_every as f64)),
+        ("n_validators", minjson::num(cfg.n_validators as f64)),
+        ("threads", minjson::num(cfg.threads as f64)),
+        (
+            "params",
+            minjson::obj(vec![
+                ("gamma", fnum(p.gamma)),
+                ("phi_penalty", fnum(p.phi_penalty)),
+                ("sync_threshold", fnum(p.sync_threshold)),
+                ("beta_frac", fnum(p.beta_frac as f64)),
+                ("norm_power", fnum(p.norm_power)),
+                ("top_g", minjson::num(p.top_g as f64)),
+                ("eval_sample", minjson::num(p.eval_sample as f64)),
+                ("lr", fnum(p.lr as f64)),
+                ("schedule", minjson::s(&p.schedule.spec())),
+                ("demo_decay", fnum(p.demo_decay as f64)),
+                ("base_microbatches", minjson::num(p.base_microbatches as f64)),
+                ("checkpoint_every", minjson::num(p.checkpoint_every as f64)),
+            ]),
+        ),
+        (
+            "clock",
+            minjson::obj(vec![
+                ("round_ms", minjson::num(cfg.clock.round_ms as f64)),
+                ("put_window_ms", minjson::num(cfg.clock.put_window_ms as f64)),
+            ]),
+        ),
+        (
+            "provider",
+            minjson::obj(vec![
+                ("mean_upload_ms", fnum(cfg.provider.mean_upload_ms)),
+                ("jitter_ms", fnum(cfg.provider.jitter_ms)),
+                ("outage_prob", fnum(cfg.provider.outage_prob)),
+                ("max_object_bytes", minjson::num(cfg.provider.max_object_bytes as f64)),
+            ]),
+        ),
+        (
+            "agg",
+            minjson::obj(vec![
+                ("normalize", Value::Bool(cfg.agg.normalize)),
+                ("min_norm", fnum(cfg.agg.min_norm)),
+            ]),
+        ),
+    ])
+}
+
+fn cfg_from_json(v: &Value) -> Result<RunConfig> {
+    let peers = v
+        .get("peers")
+        .as_arr()
+        .context("cfg missing \"peers\"")?
+        .iter()
+        .map(|b| {
+            let spec = b.as_str().context("peer spec must be a string")?;
+            Behavior::parse_spec(spec).map_err(|e| anyhow::anyhow!("peer spec {spec:?}: {e}"))
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let p = v.get("params");
+    let params = GauntletParams {
+        gamma: field::f64(p, "gamma")?,
+        phi_penalty: field::f64(p, "phi_penalty")?,
+        sync_threshold: field::f64(p, "sync_threshold")?,
+        beta_frac: field::f32(p, "beta_frac")?,
+        norm_power: field::f64(p, "norm_power")?,
+        top_g: p.get("top_g").as_usize().context("top_g")?,
+        eval_sample: p.get("eval_sample").as_usize().context("eval_sample")?,
+        lr: field::f32(p, "lr")?,
+        schedule: LrSchedule::parse(&field::string(p, "schedule")?)
+            .map_err(|e| anyhow::anyhow!("schedule: {e}"))?,
+        demo_decay: field::f32(p, "demo_decay")?,
+        base_microbatches: p
+            .get("base_microbatches")
+            .as_usize()
+            .context("base_microbatches")?,
+        checkpoint_every: field::unsigned(p, "checkpoint_every")?,
+    };
+    let clock = crate::coordinator::round::RoundClock {
+        round_ms: field::unsigned(v.get("clock"), "round_ms")?,
+        put_window_ms: field::unsigned(v.get("clock"), "put_window_ms")?,
+    };
+    let pr = v.get("provider");
+    let provider = ProviderModel {
+        mean_upload_ms: field::f64(pr, "mean_upload_ms")?,
+        jitter_ms: field::f64(pr, "jitter_ms")?,
+        outage_prob: field::f64(pr, "outage_prob")?,
+        max_object_bytes: pr.get("max_object_bytes").as_usize().context("max_object_bytes")?,
+    };
+    let agg = crate::demo::aggregate::AggregateOpts {
+        normalize: v.get("agg").get("normalize").as_bool().context("agg.normalize")?,
+        min_norm: field::f64(v.get("agg"), "min_norm")?,
+    };
+    Ok(RunConfig {
+        model: field::string(v, "model")?,
+        rounds: field::unsigned(v, "rounds")?,
+        peers,
+        scenario: Scenario::parse(&v.get("scenario").write())
+            .map_err(|e| anyhow::anyhow!("scenario: {e}"))?,
+        max_uids: v.get("max_uids").as_usize().context("max_uids")?,
+        immunity_rounds: field::unsigned(v, "immunity_rounds")?,
+        params,
+        clock,
+        provider,
+        seed: read_u64(v.get("seed")).context("seed")?,
+        eval_every: field::unsigned(v, "eval_every")?,
+        n_validators: v.get("n_validators").as_usize().context("n_validators")?,
+        agg,
+        threads: v.get("threads").as_usize().context("threads")?,
+    })
+}
+
+// ------------------------- chain codec -----------------------------------
+
+fn chain_to_json(c: &ChainState) -> Value {
+    minjson::obj(vec![
+        ("block", minjson::num(c.block as f64)),
+        (
+            "neurons",
+            Value::Arr(
+                c.neurons
+                    .iter()
+                    .map(|n| {
+                        minjson::obj(vec![
+                            ("uid", minjson::num(n.uid as f64)),
+                            ("hotkey", minjson::s(&n.hotkey)),
+                            ("stake", fnum(n.stake)),
+                            (
+                                "read_key",
+                                n.bucket_read_key
+                                    .as_ref()
+                                    .map(|k| minjson::s(&k.0))
+                                    .unwrap_or(Value::Null),
+                            ),
+                            ("registered_at_block", minjson::num(n.registered_at_block as f64)),
+                            ("balance", fnum(n.balance)),
+                            ("last_incentive", fnum(n.last_incentive)),
+                            ("validator_permit", Value::Bool(n.validator_permit)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("next_uid", minjson::num(c.next_uid as f64)),
+        (
+            "free_uids",
+            Value::Arr(c.free_uids.iter().map(|u| minjson::num(*u as f64)).collect()),
+        ),
+        (
+            "weights",
+            Value::Arr(
+                c.weights
+                    .iter()
+                    .map(|(v, row)| {
+                        Value::Arr(vec![
+                            minjson::num(*v as f64),
+                            Value::Arr(
+                                row.iter()
+                                    .map(|(u, w)| {
+                                        Value::Arr(vec![minjson::num(*u as f64), fnum(*w)])
+                                    })
+                                    .collect(),
+                            ),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("yuma_kappa", fnum(c.yuma.kappa)),
+        ("emission_per_epoch", fnum(c.emission_per_epoch)),
+        ("max_uids", minjson::num(c.max_uids as f64)),
+        ("immunity_blocks", minjson::num(c.immunity_blocks as f64)),
+    ])
+}
+
+fn chain_from_json(v: &Value) -> Result<ChainState> {
+    let neurons = v
+        .get("neurons")
+        .as_arr()
+        .context("chain missing \"neurons\"")?
+        .iter()
+        .map(|n| {
+            Ok(Neuron {
+                uid: n.get("uid").as_usize().context("neuron uid")? as Uid,
+                hotkey: field::string(n, "hotkey")?,
+                stake: field::f64(n, "stake")?,
+                bucket_read_key: n.get("read_key").as_str().map(|k| ReadKey(k.to_string())),
+                registered_at_block: field::unsigned(n, "registered_at_block")?,
+                balance: field::f64(n, "balance")?,
+                last_incentive: field::f64(n, "last_incentive")?,
+                validator_permit: n
+                    .get("validator_permit")
+                    .as_bool()
+                    .context("validator_permit")?,
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let free_uids = v
+        .get("free_uids")
+        .as_arr()
+        .context("free_uids")?
+        .iter()
+        .map(|u| u.as_usize().map(|u| u as Uid).context("free uid"))
+        .collect::<Result<Vec<_>>>()?;
+    let weights = v
+        .get("weights")
+        .as_arr()
+        .context("weights")?
+        .iter()
+        .map(|entry| {
+            let pair = entry.as_arr().context("weights entry")?;
+            let vu = pair
+                .first()
+                .and_then(|x| x.as_usize())
+                .context("weights validator uid")? as Uid;
+            let row = pair
+                .get(1)
+                .and_then(|x| x.as_arr())
+                .context("weights row")?
+                .iter()
+                .map(|w| {
+                    let p = w.as_arr().context("weight pair")?;
+                    let u = p.first().and_then(|x| x.as_usize()).context("weight uid")?;
+                    let x = p.get(1).and_then(read_f64).context("weight value")?;
+                    Ok((u as Uid, x))
+                })
+                .collect::<Result<Vec<_>>>()?;
+            Ok((vu, row))
+        })
+        .collect::<Result<Vec<_>>>()?;
+    Ok(ChainState {
+        block: field::unsigned(v, "block")?,
+        neurons,
+        next_uid: v.get("next_uid").as_usize().context("next_uid")? as Uid,
+        free_uids,
+        weights,
+        yuma: YumaParams { kappa: field::f64(v, "yuma_kappa")? },
+        emission_per_epoch: field::f64(v, "emission_per_epoch")?,
+        max_uids: v.get("max_uids").as_usize().context("max_uids")?,
+        immunity_blocks: field::unsigned(v, "immunity_blocks")?,
+    })
+}
+
+// ----------------------- snapshot codec ----------------------------------
+
+impl RunSnapshot {
+    /// Serialize the snapshot to a JSON value (write with `.write()`).
+    pub fn to_json(&self) -> Value {
+        let validators = self
+            .validators
+            .iter()
+            .map(|vs| {
+                minjson::obj(vec![
+                    ("uid", minjson::num(vs.uid as f64)),
+                    ("rng_state", u64s(vs.rng_state)),
+                    (
+                        "book",
+                        Value::Arr(
+                            vs.book
+                                .iter()
+                                .map(|(u, s)| {
+                                    Value::Arr(vec![
+                                        minjson::num(*u as f64),
+                                        minjson::obj(vec![
+                                            ("rating_mu", fnum(s.rating.mu)),
+                                            ("rating_sigma", fnum(s.rating.sigma)),
+                                            ("mu_gamma", fnum(s.mu.gamma)),
+                                            ("mu_value", fnum(s.mu.value)),
+                                            (
+                                                "last_loss_score_rand",
+                                                fnum(s.last_loss_score_rand),
+                                            ),
+                                            (
+                                                "last_loss_score_assigned",
+                                                fnum(s.last_loss_score_assigned),
+                                            ),
+                                            ("evals", minjson::num(s.evals as f64)),
+                                            ("fast_fails", minjson::num(s.fast_fails as f64)),
+                                        ]),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ),
+                ])
+            })
+            .collect();
+        let peers = self
+            .peers
+            .iter()
+            .map(|p| {
+                minjson::obj(vec![
+                    ("uid", minjson::num(p.uid as f64)),
+                    ("behavior", minjson::s(&p.behavior.spec())),
+                    ("error", arr_f32_bits(&p.error)),
+                    (
+                        "theta_local",
+                        p.theta_local
+                            .as_ref()
+                            .map(|t| arr_f32_bits(t))
+                            .unwrap_or(Value::Null),
+                    ),
+                    ("rng_state", u64s(p.rng_state)),
+                    ("compute_ms_per_mb", minjson::num(p.compute_ms_per_mb as f64)),
+                    ("last_microbatches", minjson::num(p.last_microbatches as f64)),
+                    ("last_local_loss", fnum(p.last_local_loss)),
+                ])
+            })
+            .collect();
+        let buckets = self
+            .store
+            .buckets
+            .iter()
+            .map(|(name, owner, key)| {
+                Value::Arr(vec![minjson::s(name), minjson::s(owner), minjson::s(&key.0)])
+            })
+            .collect();
+        let checkpoints = self
+            .checkpoint_rounds
+            .iter()
+            .map(|(r, theta)| {
+                Value::Arr(vec![minjson::num(*r as f64), arr_f32_bits(theta)])
+            })
+            .collect();
+        let updates = self
+            .checkpoint_updates
+            .iter()
+            .map(|(r, lr, sv)| {
+                let (packed, len) = sv.to_parts();
+                Value::Arr(vec![
+                    minjson::num(*r as f64),
+                    Value::Num(lr.to_bits() as f64),
+                    minjson::num(len as f64),
+                    arr_bytes(packed),
+                ])
+            })
+            .collect();
+        minjson::obj(vec![
+            ("version", minjson::s(SNAPSHOT_VERSION)),
+            ("round", minjson::num(self.round as f64)),
+            ("backend", minjson::s(&self.backend)),
+            ("cfg", cfg_to_json(&self.cfg)),
+            ("theta", arr_f32_bits(&self.theta)),
+            ("next_hotkey", u64s(self.next_hotkey)),
+            (
+                "outage_restore",
+                self.outage_restore
+                    .map(|(until, orig)| {
+                        Value::Arr(vec![minjson::num(until as f64), fnum(orig)])
+                    })
+                    .unwrap_or(Value::Null),
+            ),
+            ("chain", chain_to_json(&self.chain)),
+            ("validators", Value::Arr(validators)),
+            ("peers", Value::Arr(peers)),
+            (
+                "store",
+                minjson::obj(vec![
+                    ("rng_state", u64s(self.store.rng_state)),
+                    ("next_key_id", u64s(self.store.next_key_id)),
+                    ("outage_prob", fnum(self.store.outage_prob)),
+                    ("buckets", Value::Arr(buckets)),
+                ]),
+            ),
+            (
+                "pending_events",
+                Value::Arr(self.pending_events.iter().map(|e| minjson::s(e)).collect()),
+            ),
+            ("checkpoints", Value::Arr(checkpoints)),
+            ("updates", Value::Arr(updates)),
+        ])
+    }
+
+    /// Parse a snapshot from JSON text (the inverse of
+    /// `snapshot.to_json().write()`).
+    pub fn parse(text: &str) -> Result<RunSnapshot> {
+        let v = Value::parse(text).map_err(|e| anyhow::anyhow!("snapshot JSON: {e}"))?;
+        Self::from_json(&v)
+    }
+
+    /// Reconstruct a snapshot from its JSON value.
+    pub fn from_json(v: &Value) -> Result<RunSnapshot> {
+        let version = field::string(v, "version")?;
+        if version != SNAPSHOT_VERSION {
+            bail!("unsupported snapshot version {version:?} (expected {SNAPSHOT_VERSION:?})");
+        }
+        let validators = v
+            .get("validators")
+            .as_arr()
+            .context("validators")?
+            .iter()
+            .map(|vs| {
+                let book = vs
+                    .get("book")
+                    .as_arr()
+                    .context("book")?
+                    .iter()
+                    .map(|entry| {
+                        let pair = entry.as_arr().context("book entry")?;
+                        let uid = pair
+                            .first()
+                            .and_then(|x| x.as_usize())
+                            .context("book uid")? as Uid;
+                        let s = pair.get(1).context("book state")?;
+                        Ok((
+                            uid,
+                            PeerState {
+                                rating: Rating {
+                                    mu: field::f64(s, "rating_mu")?,
+                                    sigma: field::f64(s, "rating_sigma")?,
+                                },
+                                mu: Ema {
+                                    gamma: field::f64(s, "mu_gamma")?,
+                                    value: field::f64(s, "mu_value")?,
+                                },
+                                last_loss_score_rand: field::f64(s, "last_loss_score_rand")?,
+                                last_loss_score_assigned: field::f64(
+                                    s,
+                                    "last_loss_score_assigned",
+                                )?,
+                                evals: field::unsigned(s, "evals")?,
+                                fast_fails: field::unsigned(s, "fast_fails")?,
+                            },
+                        ))
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                Ok(ValidatorState {
+                    uid: vs.get("uid").as_usize().context("validator uid")? as Uid,
+                    rng_state: read_u64(vs.get("rng_state")).context("validator rng")?,
+                    book,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let peers = v
+            .get("peers")
+            .as_arr()
+            .context("peers")?
+            .iter()
+            .map(|p| {
+                let spec = field::string(p, "behavior")?;
+                Ok(PeerRunnerState {
+                    uid: p.get("uid").as_usize().context("peer uid")? as Uid,
+                    behavior: Behavior::parse_spec(&spec)
+                        .map_err(|e| anyhow::anyhow!("behavior {spec:?}: {e}"))?,
+                    error: read_f32_bits(p.get("error")).context("peer error buffer")?,
+                    theta_local: match p.get("theta_local") {
+                        Value::Null => None,
+                        other => Some(read_f32_bits(other).context("peer theta_local")?),
+                    },
+                    rng_state: read_u64(p.get("rng_state")).context("peer rng")?,
+                    compute_ms_per_mb: field::unsigned(p, "compute_ms_per_mb")?,
+                    last_microbatches: p
+                        .get("last_microbatches")
+                        .as_usize()
+                        .context("last_microbatches")?,
+                    last_local_loss: field::f64(p, "last_local_loss")?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let st = v.get("store");
+        let buckets = st
+            .get("buckets")
+            .as_arr()
+            .context("buckets")?
+            .iter()
+            .map(|b| {
+                let t = b.as_arr().context("bucket triple")?;
+                let get = |i: usize| {
+                    t.get(i)
+                        .and_then(|x| x.as_str())
+                        .map(str::to_string)
+                        .context("bucket field")
+                };
+                Ok((get(0)?, get(1)?, ReadKey(get(2)?)))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let checkpoint_rounds = v
+            .get("checkpoints")
+            .as_arr()
+            .context("checkpoints")?
+            .iter()
+            .map(|c| {
+                let pair = c.as_arr().context("checkpoint pair")?;
+                let r = pair
+                    .first()
+                    .and_then(|x| x.as_f64())
+                    .context("checkpoint round")? as u64;
+                let theta = read_f32_bits(pair.get(1).context("checkpoint theta")?)?;
+                Ok((r, theta))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let checkpoint_updates = v
+            .get("updates")
+            .as_arr()
+            .context("updates")?
+            .iter()
+            .map(|u| {
+                let parts = u.as_arr().context("update parts")?;
+                let r = parts
+                    .first()
+                    .and_then(|x| x.as_f64())
+                    .context("update round")? as u64;
+                let lr_bits = parts
+                    .get(1)
+                    .and_then(|x| x.as_f64())
+                    .context("update lr bits")?;
+                let len = parts.get(2).and_then(|x| x.as_usize()).context("update len")?;
+                let packed = read_bytes(parts.get(3).context("update signs")?)?;
+                Ok((r, f32::from_bits(lr_bits as u32), SignVector::from_parts(packed, len)?))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(RunSnapshot {
+            round: field::unsigned(v, "round")?,
+            backend: v.get("backend").as_str().unwrap_or("").to_string(),
+            cfg: cfg_from_json(v.get("cfg")).context("snapshot cfg")?,
+            theta: read_f32_bits(v.get("theta")).context("snapshot theta")?,
+            next_hotkey: read_u64(v.get("next_hotkey")).context("next_hotkey")?,
+            outage_restore: match v.get("outage_restore") {
+                Value::Null => None,
+                other => {
+                    let pair = other.as_arr().context("outage_restore")?;
+                    let until = pair
+                        .first()
+                        .and_then(|x| x.as_f64())
+                        .context("outage_restore round")? as u64;
+                    let orig = pair.get(1).and_then(read_f64).context("outage_restore prob")?;
+                    Some((until, orig))
+                }
+            },
+            chain: chain_from_json(v.get("chain")).context("snapshot chain")?,
+            validators,
+            peers,
+            store: StoreState {
+                rng_state: read_u64(st.get("rng_state")).context("store rng")?,
+                next_key_id: read_u64(st.get("next_key_id")).context("next_key_id")?,
+                outage_prob: field::f64(st, "outage_prob")?,
+                buckets,
+            },
+            pending_events: v
+                .get("pending_events")
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .map(|e| e.as_str().map(str::to_string).context("pending event line"))
+                .collect::<Result<_>>()?,
+            checkpoint_rounds,
+            checkpoint_updates,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedule_spec_roundtrips() {
+        for s in [
+            LrSchedule::Constant,
+            LrSchedule::WarmupCosine { warmup: 5, total: 50, min_frac: 0.25 },
+            LrSchedule::StepHalving { every: 7 },
+        ] {
+            assert_eq!(LrSchedule::parse(&s.spec()).unwrap(), s, "{}", s.spec());
+        }
+    }
+
+    #[test]
+    fn u64_codec_handles_full_range() {
+        for x in [0u64, 1, u64::MAX, 0xDEAD_BEEF_CAFE_F00D] {
+            assert_eq!(read_u64(&u64s(x)).unwrap(), x);
+        }
+        assert!(read_u64(&Value::Str("not a number".into())).is_err());
+    }
+
+    #[test]
+    fn f32_bits_codec_is_exact() {
+        let xs = vec![0.0f32, -0.0, 1.5, f32::NAN, f32::INFINITY, f32::MIN_POSITIVE];
+        let back = read_f32_bits(&arr_f32_bits(&xs)).unwrap();
+        for (a, b) in xs.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn version_mismatch_is_rejected() {
+        let v = Value::parse(r#"{"version":"gauntlet-snapshot-v99"}"#).unwrap();
+        let err = RunSnapshot::from_json(&v).unwrap_err();
+        assert!(err.to_string().contains("unsupported snapshot version"), "{err}");
+    }
+}

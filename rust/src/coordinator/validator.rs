@@ -29,6 +29,10 @@ use crate::util::Rng;
 pub struct RoundOutcome {
     /// Fast-evaluation pass/fail per peer.
     pub fast_pass: BTreeMap<Uid, bool>,
+    /// The phi multiplier applied to each peer's PoC EMA this round
+    /// (1.0 = compliant, `phi_penalty` on any fast-check violation) —
+    /// surfaced so the round-event stream can report verdict + phi.
+    pub fast_phi: BTreeMap<Uid, f64>,
     /// Primary evaluations performed this round (the sampled S_t).
     pub evaluated: Vec<(Uid, PrimaryEval)>,
     /// Normalized incentives x^norm (eq. 5) over all known peers.
@@ -111,9 +115,11 @@ impl Validator {
         let fast = fast_evaluate_all(store, &keyed, &checks, fanout)?;
         for (uid, outcome) in fast {
             let passed = outcome.passed();
+            let phi = outcome.phi(self.params.phi_penalty);
             self.book.ensure(uid);
-            self.book.apply_fast_penalty(uid, outcome.phi(self.params.phi_penalty));
+            self.book.apply_fast_penalty(uid, phi);
             out.fast_pass.insert(uid, passed);
+            out.fast_phi.insert(uid, phi);
             if passed {
                 if let Some(sub) = outcome.submission {
                     out.valid_submissions.insert(uid, sub);
@@ -154,6 +160,17 @@ impl Validator {
     /// OpenSkill prior with no PoC / phi / fast-fail history.
     pub fn forget_peer(&mut self, uid: Uid) {
         self.book.remove(uid);
+    }
+
+    /// The sampling RNG's raw state (run snapshots: `choose_k` draws must
+    /// continue mid-stream on resume).
+    pub fn rng_state(&self) -> u64 {
+        self.rng.state()
+    }
+
+    /// Restore the sampling RNG mid-stream (snapshot resume).
+    pub fn set_rng_state(&mut self, state: u64) {
+        self.rng = Rng::from_state(state);
     }
 
     /// Sequential convenience kept for tests and small tools: evaluate the

@@ -32,8 +32,17 @@
 //! (CLI: `gauntlet run --scenario <file|inline>`; demo:
 //! `rust/examples/churn_gauntlet.rs`).
 //!
-//! Start with [`coordinator::run::TemplarRun`] (the end-to-end system) or
-//! the `rust/examples/` directory (each example documents which paper
+//! The public surface is builder-first: assemble a
+//! [`coordinator::engine::GauntletEngine`] with
+//! [`coordinator::engine::GauntletBuilder`], subscribe
+//! [`coordinator::events::Observer`]s to the typed round-event stream
+//! (metrics and JSONL tracing are built-in observers, not inlined
+//! plumbing), and pause/resume any run bit-identically through
+//! [`coordinator::snapshot::RunSnapshot`] (CLI: `gauntlet run
+//! --snapshot-out/--resume`; demo: `rust/examples/snapshot_resume.rs`).
+//!
+//! Start with [`coordinator::engine::GauntletBuilder`] or the
+//! `rust/examples/` directory (each example documents which paper
 //! figure it reproduces — see `rust/examples/README.md`).
 
 pub mod bench;

@@ -17,11 +17,13 @@ use anyhow::{bail, Context, Result};
 
 use gauntlet::bench::{sparkline, Table};
 use gauntlet::coordinator::baseline::{AdamWParams, AdamWTrainer};
-use gauntlet::coordinator::run::{RunConfig, TemplarRun, TemplarRunWith};
+use gauntlet::coordinator::engine::{GauntletBuilder, GauntletEngine};
+use gauntlet::coordinator::events::JsonlTraceObserver;
+use gauntlet::coordinator::snapshot::RunSnapshot;
 use gauntlet::data::Corpus;
 use gauntlet::eval::{evaluate_suite, Suite};
 use gauntlet::peers::Behavior;
-use gauntlet::runtime::{artifact_dir, ExecBackend, Executor};
+use gauntlet::runtime::{artifact_dir, Executor};
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -73,6 +75,12 @@ fn print_usage() {
          \x20           --immunity <r>     rounds of post-registration eviction immunity\n\
          \x20           --lr <f> --schedule constant|cosine:<w>:<t>[:<min>]|halve:<n>\n\
          \x20           --no-normalize     disable encoded-domain normalization (§4 ablation)\n\
+         \x20           --metrics-out <f>  write the RunMetrics JSON to a file (on\n\
+         \x20                              --resume: the post-resume rounds only)\n\
+         \x20           --trace-out <f>    stream the typed round-event JSONL trace to a file\n\
+         \x20           --snapshot-out <f> write a resumable run snapshot at the end\n\
+         \x20           --resume <f>       continue a snapshotted run (--rounds = new total;\n\
+         \x20                              omit to finish the originally configured rounds)\n\
          \x20           (without compiled artifacts, `run` falls back to the\n\
          \x20            deterministic pure-Rust SimExec backend)\n\
          \x20 baseline  AdamW DDP comparison\n\
@@ -146,63 +154,147 @@ fn parse_scenario(value: &str) -> Result<gauntlet::scenario::Scenario> {
 }
 
 fn cmd_run(flags: &BTreeMap<String, String>) -> Result<()> {
-    let model: String = flag(flags, "model", "nano".to_string())?;
-    let rounds: u64 = flag(flags, "rounds", 20)?;
-    let peers = parse_peers(&flag(flags, "peers", "6".to_string())?)?;
-    let mut cfg = RunConfig::quick(&model, rounds, peers);
-    cfg.params.top_g = flag(flags, "topg", cfg.params.top_g)?;
-    cfg.params.eval_sample = flag(flags, "eval-sample", cfg.params.eval_sample)?;
-    cfg.params.lr = flag(flags, "lr", cfg.params.lr)?;
-    if let Some(spec) = flags.get("schedule") {
-        cfg.params.schedule = gauntlet::coordinator::schedule::LrSchedule::parse(spec)
-            .map_err(|e| anyhow::anyhow!("--schedule: {e}"))?;
-    }
-    cfg.seed = flag(flags, "seed", 0)?;
-    cfg.eval_every = flag(flags, "eval-every", 5)?;
-    cfg.threads = flag(flags, "threads", 0)?;
-    cfg.max_uids = flag(flags, "max-uids", 0)?;
-    cfg.immunity_rounds = flag(flags, "immunity", cfg.immunity_rounds)?;
-    if let Some(spec) = flags.get("scenario") {
-        cfg.scenario = parse_scenario(spec)?;
-    }
-    if flags.contains_key("no-normalize") {
-        cfg.agg.normalize = false;
-    }
+    // --resume rebuilds the whole run from a snapshot (which embeds its
+    // config); otherwise the flags assemble a fresh config. Either way the
+    // result is a GauntletEngine behind the auto backend (artifacts when
+    // available, SimExec fallback otherwise).
+    let mut builder = if let Some(path) = flags.get("resume") {
+        // Only continuation-shaped flags apply on resume; everything that
+        // shapes the run (population, scenario, seed, hyperparameters)
+        // lives in the snapshot. Reject anything else loudly — silently
+        // ignoring `--scenario` or `--seed` would run a different
+        // experiment than the user asked for.
+        const RESUME_FLAGS: &[&str] =
+            &["resume", "rounds", "threads", "metrics-out", "trace-out", "snapshot-out"];
+        for name in flags.keys() {
+            if !RESUME_FLAGS.contains(&name.as_str()) {
+                bail!(
+                    "--{name} cannot be combined with --resume: the snapshot already \
+                     fixes the run's configuration (allowed here: {})",
+                    RESUME_FLAGS.iter().map(|f| format!("--{f}")).collect::<Vec<_>>().join(" ")
+                );
+            }
+        }
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("--resume: reading snapshot {path:?}"))?;
+        let snap = RunSnapshot::parse(&text)
+            .with_context(|| format!("--resume: parsing snapshot {path:?}"))?;
+        // `--rounds` is the run's *total*; a total at or below the
+        // snapshot's round would "resume" zero rounds and still print a
+        // plausible fingerprint — refuse instead of succeeding vacuously.
+        let total = match flags.get("rounds") {
+            Some(r) => r.parse().map_err(|e| anyhow::anyhow!("--rounds {r:?}: {e}"))?,
+            None => snap.cfg.rounds,
+        };
+        if total <= snap.round {
+            bail!(
+                "--resume: snapshot is already at round {} and the run target is \
+                 --rounds {total} (a total, not an increment); pass --rounds {} or more \
+                 to continue",
+                snap.round,
+                snap.round + 1
+            );
+        }
+        println!("resuming from {path:?} at round {} (target {total})", snap.round);
+        let mut b = GauntletBuilder::auto().resume(snap).rounds(total);
+        if let Some(t) = flags.get("threads") {
+            b = b.threads(t.parse().map_err(|e| anyhow::anyhow!("--threads {t:?}: {e}"))?);
+        }
+        b
+    } else {
+        let model: String = flag(flags, "model", "nano".to_string())?;
+        let rounds: u64 = flag(flags, "rounds", 20)?;
+        let peers = parse_peers(&flag(flags, "peers", "6".to_string())?)?;
+        let mut cfg = gauntlet::coordinator::run::RunConfig {
+            model,
+            rounds,
+            peers,
+            ..Default::default()
+        };
+        cfg.params.top_g = flag(flags, "topg", cfg.params.top_g)?;
+        cfg.params.eval_sample = flag(flags, "eval-sample", cfg.params.eval_sample)?;
+        cfg.params.lr = flag(flags, "lr", cfg.params.lr)?;
+        if let Some(spec) = flags.get("schedule") {
+            cfg.params.schedule = gauntlet::coordinator::schedule::LrSchedule::parse(spec)
+                .map_err(|e| anyhow::anyhow!("--schedule: {e}"))?;
+        }
+        cfg.seed = flag(flags, "seed", 0)?;
+        cfg.eval_every = flag(flags, "eval-every", 5)?;
+        cfg.threads = flag(flags, "threads", 0)?;
+        cfg.max_uids = flag(flags, "max-uids", 0)?;
+        cfg.immunity_rounds = flag(flags, "immunity", cfg.immunity_rounds)?;
+        if let Some(spec) = flags.get("scenario") {
+            cfg.scenario = parse_scenario(spec)?;
+        }
+        if flags.contains_key("no-normalize") {
+            cfg.agg.normalize = false;
+        }
+        GauntletBuilder::auto().config(cfg)
+    };
 
+    // Observers compose instead of being inlined: a JSONL trace file is
+    // just one more subscriber to the round-event stream.
+    let trace = match flags.get("trace-out") {
+        Some(path) => {
+            let obs = JsonlTraceObserver::create(path)?;
+            builder = builder.observer(obs.clone());
+            Some(obs)
+        }
+        None => None,
+    };
+
+    let mut engine = builder.build()?;
+    let cfg = engine.cfg();
     println!(
-        "Gauntlet run: model={model} rounds={rounds} peers={} topG={} S={} normalize={} threads={} scenario-events={}",
-        cfg.peers.len(),
+        "Gauntlet run: model={} backend={} rounds={} peers={} topG={} S={} normalize={} threads={} scenario-events={}",
+        cfg.model,
+        engine.backend_name(),
+        cfg.rounds,
+        engine.peers().len(),
         cfg.params.top_g,
         cfg.params.eval_sample,
         cfg.agg.normalize,
         cfg.effective_threads(),
         cfg.scenario.len(),
     );
-    // Prefer the artifact-backed runtime; fall back to SimExec when
-    // artifacts are missing OR the build uses the stub xla crate.
-    match TemplarRun::new(cfg.clone()) {
-        Ok(run) => {
-            let run = drive_run(run, rounds)?;
-            print_exec_stats(&run.exec);
-        }
-        Err(e) => {
-            println!(
-                "note: artifact backend unavailable ({e:#}) — running on the \
-                 pure-Rust SimExec backend (see README \"Runtime backends\")"
-            );
-            drive_run(TemplarRunWith::new_sim(cfg)?, rounds)?;
-        }
+
+    drive(&mut engine)?;
+
+    if let Some(stats) = engine.exec_stats() {
+        print_exec_stats(&stats);
     }
+    if let Some(obs) = &trace {
+        obs.flush()?;
+    }
+    if let Some(path) = flags.get("metrics-out") {
+        let metrics = engine.metrics_observer().metrics();
+        let covered = match (metrics.rounds.first(), metrics.rounds.last()) {
+            (Some(a), Some(b)) => format!("rounds {}..={}", a.round, b.round),
+            _ => "no rounds".to_string(),
+        };
+        std::fs::write(path, metrics.to_json().write())
+            .with_context(|| format!("--metrics-out: writing {path:?}"))?;
+        // On a resumed run this covers only the post-resume rounds — the
+        // metrics observer starts fresh with the resumed engine.
+        println!("metrics written to {path} ({covered})");
+    }
+    if let Some(path) = flags.get("snapshot-out") {
+        let json = engine.snapshot().to_json().write();
+        std::fs::write(path, json)
+            .with_context(|| format!("--snapshot-out: writing {path:?}"))?;
+        println!("snapshot written to {path} (resume with --resume {path})");
+    }
+    // The CI resume-smoke job diffs this line between a straight run and a
+    // snapshot-then-resume run — they must match bit-for-bit.
+    println!("run fingerprint: {:016x}", engine.fingerprint());
     Ok(())
 }
 
-fn drive_run<E: ExecBackend + 'static>(
-    mut run: TemplarRunWith<E>,
-    rounds: u64,
-) -> Result<TemplarRunWith<E>> {
+fn drive(engine: &mut GauntletEngine) -> Result<()> {
     let mut losses = Vec::new();
-    for r in 0..rounds {
-        let rec = run.run_round()?;
+    while engine.round() < engine.cfg().rounds {
+        let r = engine.round();
+        let rec = engine.run_round()?;
         for e in &rec.events {
             println!("round {r:>4}  ** {e}");
         }
@@ -221,8 +313,8 @@ fn drive_run<E: ExecBackend + 'static>(
         "final peer standings",
         &["uid", "behaviour", "mu", "rating", "score", "balance"],
     );
-    let book = &run.validators[0].book;
-    for p in &run.peers {
+    let book = &engine.validators()[0].book;
+    for p in engine.peers() {
         let st = book.get(p.uid);
         t.row(&[
             p.uid.to_string(),
@@ -230,11 +322,14 @@ fn drive_run<E: ExecBackend + 'static>(
             st.map(|s| format!("{:+.3}", s.mu.value)).unwrap_or_default(),
             st.map(|s| format!("{:.2}", s.rating.mu)).unwrap_or_default(),
             format!("{:.3}", book.peer_score(p.uid)),
-            format!("{:.3}", run.chain.neuron(p.uid).map(|n| n.balance).unwrap_or(0.0)),
+            format!(
+                "{:.3}",
+                engine.chain().neuron(p.uid).map(|n| n.balance).unwrap_or(0.0)
+            ),
         ]);
     }
     t.print();
-    Ok(run)
+    Ok(())
 }
 
 fn cmd_baseline(flags: &BTreeMap<String, String>) -> Result<()> {
@@ -257,7 +352,7 @@ fn cmd_baseline(flags: &BTreeMap<String, String>) -> Result<()> {
         }
     }
     println!("\ntrain curve: {}", sparkline(&losses, 60));
-    print_exec_stats(&exec);
+    print_exec_stats(&exec.stats());
     Ok(())
 }
 
@@ -308,8 +403,7 @@ fn cmd_info(flags: &BTreeMap<String, String>) -> Result<()> {
     Ok(())
 }
 
-fn print_exec_stats(exec: &Executor) {
-    let stats = exec.stats();
+fn print_exec_stats(stats: &BTreeMap<String, gauntlet::runtime::ExecStats>) {
     if stats.is_empty() {
         return;
     }
@@ -317,7 +411,7 @@ fn print_exec_stats(exec: &Executor) {
     for (name, s) in stats {
         let mean = if s.calls > 0 { s.total.as_secs_f64() / s.calls as f64 } else { 0.0 };
         t.row(&[
-            name,
+            name.clone(),
             s.calls.to_string(),
             format!("{:.2}s", s.total.as_secs_f64()),
             gauntlet::bench::human_duration(mean),

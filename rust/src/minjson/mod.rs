@@ -141,6 +141,86 @@ pub fn s(x: &str) -> Value {
     Value::Str(x.to_string())
 }
 
+/// Bit-faithful f64 serialization for run snapshots and event traces.
+///
+/// JSON has no NaN/±inf, and the plain writer normalizes `-0.0` to `0`;
+/// all four would silently change bits across a write/parse round trip —
+/// fatal for the bit-identical snapshot/resume contract. This encodes them
+/// as sentinel strings; every other finite value goes through [`Value::Num`],
+/// whose shortest-roundtrip `Display` parses back to the identical bits.
+pub fn fnum(x: f64) -> Value {
+    if x.is_nan() {
+        Value::Str("nan".to_string())
+    } else if x == f64::INFINITY {
+        Value::Str("inf".to_string())
+    } else if x == f64::NEG_INFINITY {
+        Value::Str("-inf".to_string())
+    } else if x == 0.0 && x.is_sign_negative() {
+        Value::Str("-0".to_string())
+    } else {
+        Value::Num(x)
+    }
+}
+
+/// Inverse of [`fnum`]: reads a number or one of its sentinel strings.
+pub fn read_f64(v: &Value) -> Option<f64> {
+    match v {
+        Value::Num(n) => Some(*n),
+        Value::Str(s) => match s.as_str() {
+            "nan" => Some(f64::NAN),
+            "inf" => Some(f64::INFINITY),
+            "-inf" => Some(f64::NEG_INFINITY),
+            "-0" => Some(-0.0),
+            _ => None,
+        },
+        _ => None,
+    }
+}
+
+/// Typed object-field readers with contextual errors — the shared
+/// accessors behind the snapshot, event, and metrics codecs (one place to
+/// fix range checks or error wording, not three).
+pub mod field {
+    use anyhow::{Context, Result};
+
+    use super::{read_f64, Value};
+
+    fn missing(key: &str) -> String {
+        format!("missing or bad field {key:?}")
+    }
+
+    /// An `f64` written via [`super::fnum`] (NaN/±inf/-0.0 sentinels ok).
+    pub fn f64(v: &Value, key: &str) -> Result<f64> {
+        read_f64(v.get(key)).with_context(|| missing(key))
+    }
+
+    /// An `f32` stored exactly as its `f64` widening.
+    pub fn f32(v: &Value, key: &str) -> Result<f32> {
+        Ok(f64(v, key)? as f32)
+    }
+
+    pub fn boolean(v: &Value, key: &str) -> Result<bool> {
+        v.get(key).as_bool().with_context(|| missing(key))
+    }
+
+    pub fn string(v: &Value, key: &str) -> Result<String> {
+        v.get(key).as_str().map(str::to_string).with_context(|| missing(key))
+    }
+
+    pub fn size(v: &Value, key: &str) -> Result<usize> {
+        v.get(key).as_usize().with_context(|| missing(key))
+    }
+
+    /// A non-negative integer-valued number as `u64`.
+    pub fn unsigned(v: &Value, key: &str) -> Result<u64> {
+        v.get(key)
+            .as_f64()
+            .filter(|n| *n >= 0.0 && n.fract() == 0.0)
+            .map(|n| n as u64)
+            .with_context(|| missing(key))
+    }
+}
+
 fn write_escaped(s: &str, out: &mut String) {
     out.push('"');
     for ch in s.chars() {
@@ -443,6 +523,29 @@ mod tests {
             assert_eq!(v.get("name").as_str(), Some("nano"));
             assert!(v.get("param_count").as_usize().unwrap() > 0);
         }
+    }
+
+    #[test]
+    fn fnum_preserves_every_f64_bit_pattern() {
+        let specials = [
+            f64::NAN,
+            f64::INFINITY,
+            f64::NEG_INFINITY,
+            -0.0,
+            0.0,
+            1.0,
+            -17.25,
+            1e300,
+            5e-324, // smallest subnormal
+            std::f64::consts::PI,
+        ];
+        for x in specials {
+            let text = fnum(x).write();
+            let back = read_f64(&Value::parse(&text).unwrap()).unwrap();
+            assert_eq!(x.to_bits(), back.to_bits(), "{x} via {text}");
+        }
+        assert_eq!(read_f64(&Value::Bool(true)), None);
+        assert_eq!(read_f64(&Value::Str("bogus".into())), None);
     }
 
     #[test]

@@ -19,7 +19,7 @@
 
 pub mod runner;
 
-pub use runner::{PeerCtx, PeerOutput, PeerRunner};
+pub use runner::{PeerCtx, PeerOutput, PeerRunner, PeerRunnerState};
 
 use crate::chain::Uid;
 
@@ -97,6 +97,30 @@ impl Behavior {
         Ok(b)
     }
 
+    /// Canonical spec string: the inverse of [`Behavior::parse_spec`], used
+    /// to serialize behaviours into run snapshots and scenario JSON.
+    ///
+    /// ```
+    /// use gauntlet::peers::Behavior;
+    /// let b = Behavior::Desync { at: 5, pause: 2 };
+    /// assert_eq!(Behavior::parse_spec(&b.spec()), Ok(b));
+    /// ```
+    pub fn spec(&self) -> String {
+        match self {
+            Behavior::Honest { data_mult } if *data_mult == 1.0 => "honest".into(),
+            Behavior::Honest { data_mult } => format!("honest:{data_mult}"),
+            Behavior::Freeloader => "freeloader".into(),
+            Behavior::Desync { at, pause } => format!("desync:{at}:{pause}"),
+            Behavior::Late { prob } => format!("late:{prob}"),
+            Behavior::Silent { prob } => format!("silent:{prob}"),
+            Behavior::FormatViolator => "format".into(),
+            Behavior::Rescaler { factor } => format!("rescaler:{factor}"),
+            Behavior::Poisoner { scale } => format!("poisoner:{scale}"),
+            Behavior::Copier { victim } => format!("copier:{victim}"),
+            Behavior::Duplicator { original } => format!("duplicator:{original}"),
+        }
+    }
+
     /// Behaviours that need another peer's submission first (evaluated in
     /// the second pass of the round loop).
     pub fn is_second_pass(&self) -> bool {
@@ -170,6 +194,26 @@ mod tests {
         }
         assert!(Behavior::parse_spec("nope").is_err());
         assert!(Behavior::parse_spec("honest:abc").is_err());
+    }
+
+    #[test]
+    fn spec_roundtrips_through_parse() {
+        let all = [
+            Behavior::Honest { data_mult: 1.0 },
+            Behavior::Honest { data_mult: 2.5 },
+            Behavior::Freeloader,
+            Behavior::Desync { at: 5, pause: 2 },
+            Behavior::Late { prob: 0.3 },
+            Behavior::Silent { prob: 0.9 },
+            Behavior::FormatViolator,
+            Behavior::Rescaler { factor: 1000.0 },
+            Behavior::Poisoner { scale: 100.0 },
+            Behavior::Copier { victim: 4 },
+            Behavior::Duplicator { original: 9 },
+        ];
+        for b in all {
+            assert_eq!(Behavior::parse_spec(&b.spec()), Ok(b.clone()), "{}", b.spec());
+        }
     }
 
     #[test]

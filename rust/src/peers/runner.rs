@@ -65,6 +65,22 @@ pub struct PeerRunner {
     pub last_local_loss: f64,
 }
 
+/// Every persistent field of a [`PeerRunner`], exported as plain data for
+/// run snapshots: the DeMo error-feedback buffer and the behaviour RNG are
+/// mid-run state that the next round's draws depend on, so resume must
+/// restore them bit-exactly rather than re-derive them from the seed.
+#[derive(Clone, Debug)]
+pub struct PeerRunnerState {
+    pub uid: u32,
+    pub behavior: Behavior,
+    pub error: Vec<f32>,
+    pub theta_local: Option<Vec<f32>>,
+    pub rng_state: u64,
+    pub compute_ms_per_mb: u64,
+    pub last_microbatches: usize,
+    pub last_local_loss: f64,
+}
+
 impl PeerRunner {
     pub fn new(uid: u32, behavior: Behavior, param_count: usize, seed: u64) -> Self {
         let mut rng = Rng::from_parts(&["peer", &uid.to_string(), &seed.to_string()]);
@@ -78,6 +94,35 @@ impl PeerRunner {
             compute_ms_per_mb,
             last_microbatches: 0,
             last_local_loss: f64::NAN,
+        }
+    }
+
+    /// Export this runner's persistent state (see [`PeerRunnerState`]).
+    pub fn to_state(&self) -> PeerRunnerState {
+        PeerRunnerState {
+            uid: self.uid,
+            behavior: self.behavior.clone(),
+            error: self.error.clone(),
+            theta_local: self.theta_local.clone(),
+            rng_state: self.rng.state(),
+            compute_ms_per_mb: self.compute_ms_per_mb,
+            last_microbatches: self.last_microbatches,
+            last_local_loss: self.last_local_loss,
+        }
+    }
+
+    /// Rebuild a runner mid-run — the exact inverse of
+    /// [`PeerRunner::to_state`].
+    pub fn from_state(state: PeerRunnerState) -> PeerRunner {
+        PeerRunner {
+            uid: state.uid,
+            behavior: state.behavior,
+            error: state.error,
+            theta_local: state.theta_local,
+            rng: Rng::from_state(state.rng_state),
+            compute_ms_per_mb: state.compute_ms_per_mb,
+            last_microbatches: state.last_microbatches,
+            last_local_loss: state.last_local_loss,
         }
     }
 

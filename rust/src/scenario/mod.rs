@@ -43,7 +43,7 @@
 //! scenario at 1 vs N threads).
 
 use crate::chain::Uid;
-use crate::minjson::Value;
+use crate::minjson::{self, Value};
 use crate::peers::Behavior;
 
 /// One scripted population event.
@@ -103,6 +103,42 @@ impl Scenario {
     /// The last round any event fires in (None when empty).
     pub fn last_round(&self) -> Option<u64> {
         self.events.iter().map(|(r, _)| *r).max()
+    }
+
+    /// Serialize the schedule as the documented JSON form, such that
+    /// `Scenario::parse(&s.to_json().write())` reconstructs it exactly —
+    /// run snapshots embed scenarios this way.
+    pub fn to_json(&self) -> Value {
+        let events: Vec<Value> = self
+            .events
+            .iter()
+            .map(|(round, e)| {
+                let mut fields: Vec<(&str, Value)> =
+                    vec![("round", minjson::num(*round as f64))];
+                match e {
+                    Event::JoinPeer { behavior } => {
+                        fields.push(("event", minjson::s("join")));
+                        fields.push(("peer", minjson::s(&behavior.spec())));
+                    }
+                    Event::LeavePeer { uid } => {
+                        fields.push(("event", minjson::s("leave")));
+                        fields.push(("uid", minjson::num(*uid as f64)));
+                    }
+                    Event::SetStake { uid, amount } => {
+                        fields.push(("event", minjson::s("stake")));
+                        fields.push(("uid", minjson::num(*uid as f64)));
+                        fields.push(("amount", minjson::num(*amount)));
+                    }
+                    Event::ProviderOutage { prob, rounds } => {
+                        fields.push(("event", minjson::s("outage")));
+                        fields.push(("prob", minjson::num(*prob)));
+                        fields.push(("rounds", minjson::num(*rounds as f64)));
+                    }
+                }
+                minjson::obj(fields)
+            })
+            .collect();
+        minjson::obj(vec![("events", Value::Arr(events))])
     }
 
     /// Parse either form (see module docs): JSON when the first non-space
@@ -299,6 +335,18 @@ mod tests {
         // bare-array form is accepted too
         let bare = Scenario::parse(r#"[{"round": 3, "event": "join", "peer": "honest"}]"#).unwrap();
         assert_eq!(bare.events_at(3).len(), 1);
+    }
+
+    #[test]
+    fn to_json_roundtrips_through_parse() {
+        let s = Scenario::parse(
+            "@3 join honest:2\n@3 join desync:4:2\n@5 leave 4\n\
+             @6 stake 0 512.5\n@7 outage 0.5 2",
+        )
+        .unwrap();
+        let back = Scenario::parse(&s.to_json().write()).unwrap();
+        assert_eq!(s, back);
+        assert_eq!(Scenario::parse(&Scenario::default().to_json().write()).unwrap().len(), 0);
     }
 
     #[test]

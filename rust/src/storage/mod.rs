@@ -238,6 +238,57 @@ impl ObjectStore {
         }
     }
 
+    // ------------------- snapshot/resume support ------------------------
+    //
+    // The round pipeline only ever reads objects written in the *current*
+    // round (fast-eval windowed GETs, copier second-pass reads), so a
+    // round-boundary snapshot needs no object payloads — but it must
+    // preserve the provider's RNG stream (latency/outage draws are taken
+    // in deterministic PUT order), the read-key counter (future keys must
+    // match), and every bucket's name/owner/read-key (the keys are already
+    // published on-chain and must keep opening the recreated buckets).
+
+    /// The provider RNG's raw state (see [`crate::util::Rng::state`]).
+    pub fn rng_state(&self) -> u64 {
+        self.rng.lock().unwrap().state()
+    }
+
+    /// Restore the provider RNG mid-stream.
+    pub fn set_rng_state(&self, state: u64) {
+        *self.rng.lock().unwrap() = Rng::from_state(state);
+    }
+
+    /// The read-key counter (next `create_bucket` uses this + 1).
+    pub fn next_key_id(&self) -> u64 {
+        self.next_key_id.load(Ordering::Relaxed)
+    }
+
+    pub fn set_next_key_id(&self, id: u64) {
+        self.next_key_id.store(id, Ordering::Relaxed);
+    }
+
+    /// Every bucket's `(name, owner, read key)`, sorted by name.
+    pub fn export_buckets(&self) -> Vec<(String, String, ReadKey)> {
+        let mut out = Vec::new();
+        for shard in &self.shards {
+            for (name, b) in shard.read().unwrap().iter() {
+                out.push((name.clone(), b.owner.clone(), b.read_key.clone()));
+            }
+        }
+        out.sort();
+        out
+    }
+
+    /// Recreate a bucket with a *given* read key (snapshot restore path;
+    /// normal registration uses [`ObjectStore::create_bucket`], which mints
+    /// a fresh key). The bucket starts empty.
+    pub fn restore_bucket(&self, name: &str, owner: &str, key: ReadKey) {
+        self.shard(name).write().unwrap().insert(
+            name.to_string(),
+            Bucket { owner: owner.to_string(), read_key: key, objects: BTreeMap::new() },
+        );
+    }
+
     /// Garbage-collect objects stored before `cutoff` (peers prune old
     /// rounds so buckets stay small).
     pub fn prune_before(&self, bucket: &str, writer: &str, cutoff: SimTime) -> usize {
@@ -413,6 +464,30 @@ mod tests {
         let ls = s.list("b", &rk).unwrap();
         assert_eq!(ls.len(), 2);
         assert!(ls.iter().any(|(k, _)| k == "a"));
+    }
+
+    #[test]
+    fn snapshot_accessors_rebuild_an_equivalent_store() {
+        let s = store();
+        let rk0 = s.create_bucket("peer-0", "peer-0");
+        let rk1 = s.create_bucket("peer-1", "peer-1");
+        s.put("peer-0", "peer-0", "g", vec![1], 100).unwrap(); // advances the rng
+
+        let rebuilt = ObjectStore::new(s.model.clone(), 0);
+        rebuilt.set_rng_state(s.rng_state());
+        rebuilt.set_next_key_id(s.next_key_id());
+        for (name, owner, key) in s.export_buckets() {
+            rebuilt.restore_bucket(&name, &owner, key);
+        }
+        // Old keys still open the recreated buckets…
+        assert_eq!(rebuilt.get("peer-0", &rk0, "g").unwrap(), None, "objects not carried");
+        assert!(rebuilt.get("peer-1", &rk1, "x").unwrap().is_none());
+        // …the key mint continues where it left off…
+        assert_eq!(rebuilt.create_bucket("peer-2", "peer-2"), s.create_bucket("peer-2", "peer-2"));
+        // …and the latency stream continues bit-identically.
+        let ta = s.put("peer-0", "peer-0", "h", vec![2], 500).unwrap();
+        let tb = rebuilt.put("peer-0", "peer-0", "h", vec![2], 500).unwrap();
+        assert_eq!(ta, tb);
     }
 
     #[test]

@@ -8,6 +8,11 @@
 //! subtracts the minimum PEERSCORE, so the worst peer of any round earns
 //! exactly zero. The violator pins that floor (its PoC mu never leaves 0),
 //! which makes "every honest peer earns" assertable for newcomers too.
+//!
+//! Deliberately drives the run through the legacy `RunConfig::quick` /
+//! `TemplarRunWith::new_sim` shims: during the GauntletBuilder transition
+//! these must keep working verbatim, and this file is their coverage.
+#![allow(deprecated)]
 
 use gauntlet::chain::ChainError;
 use gauntlet::coordinator::run::{RunConfig, TemplarRunWith};

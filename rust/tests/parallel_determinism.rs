@@ -1,14 +1,19 @@
 //! The parallel round pipeline must be a pure optimization: for a fixed
 //! seed, every observable output — PEERSCOREs, ratings, incentives,
-//! balances, fast-eval verdicts, the model parameters themselves — must be
-//! **bit-identical** to the sequential path at any worker-thread count.
+//! balances, fast-eval verdicts, the model parameters themselves, and the
+//! typed round-event stream — must be **bit-identical** to the sequential
+//! path at any worker-thread count.
 //!
 //! Runs on the pure-Rust SimExec backend, so this exercises the full
 //! pipeline (concurrent peer turns through the exec-service funnel,
 //! fan-out fast evaluation, concurrent validators, ordered storage PUTs
 //! and chain commits) without compiled artifacts.
 
-use gauntlet::coordinator::run::{RunConfig, TemplarRunWith};
+use std::sync::{Arc, Mutex};
+
+use gauntlet::coordinator::engine::{GauntletBuilder, GauntletEngine};
+use gauntlet::coordinator::events::{observer_fn, replay_trace, JsonlTraceObserver};
+use gauntlet::coordinator::run::RunConfig;
 use gauntlet::peers::Behavior;
 use gauntlet::scenario::Scenario;
 
@@ -34,7 +39,12 @@ fn population() -> Vec<Behavior> {
 }
 
 fn config(threads: usize) -> RunConfig {
-    let mut cfg = RunConfig::quick("nano", 8, population());
+    let mut cfg = RunConfig {
+        model: "nano".to_string(),
+        rounds: 8,
+        peers: population(),
+        ..RunConfig::default()
+    };
     cfg.seed = 13;
     cfg.eval_every = 2;
     cfg.n_validators = 2;
@@ -75,13 +85,17 @@ fn churn_config(threads: usize) -> RunConfig {
     cfg
 }
 
+fn engine_for(cfg: RunConfig) -> GauntletEngine {
+    GauntletBuilder::sim().config(cfg).build().expect("sim engine")
+}
+
 /// Run `rounds` rounds (with a direct permissionless join at round 5 when
 /// no scenario is scripted) and collect a structural trace plus a
 /// bit-exact numeric fingerprint.
 fn fingerprint_cfg(cfg: RunConfig) -> (Vec<String>, Vec<u64>) {
     let rounds = cfg.rounds;
     let scripted = !cfg.scenario.is_empty();
-    let mut run = TemplarRunWith::new_sim(cfg).expect("sim run");
+    let mut run = engine_for(cfg);
     let mut structural = Vec::new();
     let mut bits = Vec::new();
     for r in 0..rounds {
@@ -117,11 +131,11 @@ fn fingerprint_cfg(cfg: RunConfig) -> (Vec<String>, Vec<u64>) {
         }
     }
     // Final model parameters and every validator's full score table.
-    for t in &run.theta {
+    for t in run.theta() {
         bits.push(t.to_bits() as u64);
     }
     let uids = run.peer_uids();
-    for v in &run.validators {
+    for v in run.validators() {
         for &u in &uids {
             bits.push(v.book.peer_score(u).to_bits());
         }
@@ -200,4 +214,74 @@ fn explicit_thread_count_is_respected() {
     assert_eq!(cfg.effective_threads(), 7);
     let auto = config(0);
     assert!(auto.effective_threads() >= 1);
+}
+
+/// Capture the full typed event stream of a run as one string per event.
+fn event_stream(cfg: RunConfig) -> Vec<String> {
+    let events: Arc<Mutex<Vec<String>>> = Arc::new(Mutex::new(Vec::new()));
+    let sink = events.clone();
+    let mut run = GauntletBuilder::sim()
+        .config(cfg)
+        .observer(observer_fn(move |ev| {
+            sink.lock().unwrap().push(format!("{ev:?}"));
+        }))
+        .build()
+        .expect("sim engine");
+    run.run().expect("run");
+    let captured = events.lock().unwrap().clone();
+    captured
+}
+
+#[test]
+fn event_stream_is_deterministic_across_thread_counts() {
+    // Observers must see the exact same events, in the exact same order,
+    // whether the pipeline ran sequentially or fanned out over workers —
+    // including under churn, where the population changes mid-run.
+    let seq = event_stream(churn_config(1));
+    assert!(!seq.is_empty());
+    // The stream brackets every round.
+    assert!(seq[0].starts_with("RoundStarted"), "{}", seq[0]);
+    assert!(seq.last().unwrap().starts_with("RoundCompleted"), "{:?}", seq.last());
+    for threads in [2usize, 8] {
+        let par = event_stream(churn_config(threads));
+        assert_eq!(
+            par.len(),
+            seq.len(),
+            "event count diverged at {threads} threads"
+        );
+        for (i, (a, b)) in seq.iter().zip(&par).enumerate() {
+            assert_eq!(a, b, "event {i} diverged at {threads} threads");
+        }
+    }
+}
+
+#[test]
+fn jsonl_trace_replays_to_identical_metrics() {
+    // The acceptance contract of the event stream: a JSONL trace of a full
+    // run, replayed through a fresh MetricsObserver, reproduces the exact
+    // RunMetrics the live run assembled.
+    let path = std::env::temp_dir().join(format!(
+        "gauntlet-trace-{}-{}.jsonl",
+        std::process::id(),
+        std::thread::current().name().unwrap_or("t").len()
+    ));
+    let trace = JsonlTraceObserver::create(&path).expect("trace file");
+    let mut run = GauntletBuilder::sim()
+        .config(churn_config(2))
+        .observer(trace.clone())
+        .build()
+        .expect("sim engine");
+    let live = run.run().expect("run");
+    trace.flush().expect("flush");
+
+    let replayed = replay_trace(&path).expect("replay");
+    assert_eq!(live.rounds.len(), replayed.rounds.len());
+    assert_eq!(
+        live.to_json().write(),
+        replayed.to_json().write(),
+        "replayed metrics diverged from the live run"
+    );
+    // Typed equality too (no NaNs flow into these records).
+    assert_eq!(live, replayed);
+    std::fs::remove_file(&path).ok();
 }

@@ -1,0 +1,288 @@
+//! Snapshot/resume must be invisible: pausing a run at round k,
+//! serializing the snapshot through JSON, and resuming (even at a
+//! different worker-thread count) produces **bit-identical** PEERSCOREs,
+//! ratings, incentives, balances, and model parameters to the
+//! uninterrupted run — including under a churn scenario whose events
+//! straddle the snapshot boundary.
+//!
+//! Runs on the pure-Rust SimExec backend (no artifacts needed).
+
+use gauntlet::coordinator::engine::{GauntletBuilder, GauntletEngine};
+use gauntlet::coordinator::run::{RoundRecord, RunConfig};
+use gauntlet::coordinator::snapshot::RunSnapshot;
+use gauntlet::peers::Behavior;
+use gauntlet::scenario::Scenario;
+
+/// A mixed population exercising peer-side persistent state: error-feedback
+/// buffers, a divergent Desync model, behaviour RNG streams, and a
+/// second-pass copier.
+fn population() -> Vec<Behavior> {
+    vec![
+        Behavior::Honest { data_mult: 1.0 },  // uid 1
+        Behavior::Honest { data_mult: 2.0 },  // uid 2
+        Behavior::Desync { at: 2, pause: 2 }, // uid 3
+        Behavior::Late { prob: 0.5 },         // uid 4
+        Behavior::Poisoner { scale: 100.0 },  // uid 5
+        Behavior::Copier { victim: 1 },       // uid 6
+    ]
+}
+
+fn base_cfg(threads: usize) -> RunConfig {
+    let mut cfg = RunConfig {
+        model: "nano".to_string(),
+        rounds: 6,
+        peers: population(),
+        ..RunConfig::default()
+    };
+    cfg.seed = 41;
+    cfg.eval_every = 2;
+    cfg.params.top_g = 3;
+    cfg.params.eval_sample = 4;
+    cfg.threads = threads;
+    cfg
+}
+
+/// Churn on both sides of the snapshot boundary (taken at round 3): a
+/// pre-snapshot join and an outage window still open at the boundary,
+/// plus post-snapshot joins/leaves/stake moves that must fire from the
+/// restored scenario cursor.
+fn churn_cfg(threads: usize) -> RunConfig {
+    let mut cfg = base_cfg(threads);
+    cfg.rounds = 7;
+    cfg.max_uids = 10;
+    cfg.immunity_rounds = 1;
+    cfg.scenario = Scenario::parse(
+        "@1 join honest\n\
+         @2 outage 0.6 3      # still open when the snapshot is taken at 3\n\
+         @4 leave 2\n\
+         @5 join freeloader   # lands on the uid freed at round 4\n\
+         @5 stake 0 900",
+    )
+    .expect("valid scenario");
+    cfg
+}
+
+/// Everything the acceptance contract pins, as exact bit patterns.
+fn state_bits(run: &GauntletEngine) -> Vec<u64> {
+    let mut bits = Vec::new();
+    for t in run.theta() {
+        bits.push(t.to_bits() as u64);
+    }
+    let uids = run.peer_uids();
+    for v in run.validators() {
+        for &u in &uids {
+            bits.push(u as u64);
+            bits.push(v.book.peer_score(u).to_bits());
+        }
+    }
+    for &u in &uids {
+        bits.push(run.chain().neuron(u).map(|n| n.balance).unwrap_or(0.0).to_bits());
+        bits.push(
+            run.chain().neuron(u).map(|n| n.last_incentive).unwrap_or(0.0).to_bits(),
+        );
+    }
+    bits.push(run.fingerprint());
+    bits
+}
+
+/// Drive an uninterrupted run, returning per-round records + final state.
+fn straight_run(cfg: RunConfig) -> (Vec<RoundRecord>, Vec<u64>) {
+    let mut run = GauntletBuilder::sim().config(cfg).build().expect("engine");
+    let metrics = run.run().expect("run");
+    let bits = state_bits(&run);
+    (metrics.rounds, bits)
+}
+
+/// Drive k rounds, snapshot, push the snapshot through its JSON text form,
+/// resume (possibly at another thread count), and finish. Returns the
+/// post-resume records + final state.
+fn interrupted_run(
+    cfg: RunConfig,
+    pause_at: u64,
+    resume_threads: usize,
+) -> (Vec<RoundRecord>, Vec<u64>) {
+    let total = cfg.rounds;
+    let mut first = GauntletBuilder::sim().config(cfg).build().expect("engine");
+    for _ in 0..pause_at {
+        first.run_round().expect("pre-pause round");
+    }
+    let json = first.snapshot().to_json().write();
+    drop(first); // the original engine is gone; only the JSON survives
+
+    let snap = RunSnapshot::parse(&json).expect("snapshot parses");
+    assert_eq!(snap.round, pause_at);
+    let mut resumed = GauntletBuilder::sim()
+        .resume(snap)
+        .rounds(total)
+        .threads(resume_threads)
+        .build()
+        .expect("resumed engine");
+    assert_eq!(resumed.round(), pause_at, "resume continues at the boundary");
+    let metrics = resumed.run().expect("post-resume rounds");
+    let bits = state_bits(&resumed);
+    (metrics.rounds, bits)
+}
+
+#[test]
+fn resume_is_bit_identical_to_uninterrupted() {
+    let (straight, bits_straight) = straight_run(base_cfg(1));
+    let (resumed, bits_resumed) = interrupted_run(base_cfg(1), 3, 1);
+    // The resumed engine's records cover rounds 3.. — they must equal the
+    // uninterrupted run's tail exactly (scores, ratings, incentives,
+    // balances, events, everything).
+    assert_eq!(resumed.len(), straight.len() - 3);
+    for (a, b) in straight[3..].iter().zip(&resumed) {
+        assert_eq!(a, b, "round {} diverged after resume", a.round);
+    }
+    assert_eq!(bits_straight, bits_resumed, "final state diverged after resume");
+}
+
+#[test]
+fn resume_is_bit_identical_across_thread_counts() {
+    // Pause a sequential run, resume it on 4 workers: still bit-identical
+    // (the pipeline's determinism contract composes with resume).
+    let (straight, bits_straight) = straight_run(base_cfg(4));
+    for resume_threads in [1usize, 4] {
+        let (resumed, bits) = interrupted_run(base_cfg(1), 2, resume_threads);
+        for (a, b) in straight[2..].iter().zip(&resumed) {
+            assert_eq!(
+                a, b,
+                "round {} diverged (resume at {resume_threads} threads)",
+                a.round
+            );
+        }
+        assert_eq!(bits_straight, bits, "state diverged at {resume_threads} threads");
+    }
+}
+
+#[test]
+fn resume_under_churn_scenario_is_bit_identical() {
+    // The snapshot boundary sits inside an open outage window, after one
+    // scripted join, and before a leave + uid-recycling join + stake move:
+    // the restored scenario cursor, outage restore state, chain slot
+    // table, and provider RNG must all continue exactly.
+    let (straight, bits_straight) = straight_run(churn_cfg(1));
+    let all_events: Vec<String> =
+        straight.iter().flat_map(|r| r.events.clone()).collect();
+    let joined = all_events.join("\n");
+    assert!(joined.contains("uid 2 left"), "{joined}");
+    assert!(joined.contains("provider recovered"), "{joined}");
+    assert!(joined.contains("(recycled uid)"), "{joined}");
+
+    for (pause_at, resume_threads) in [(3u64, 1usize), (3, 4), (5, 2)] {
+        let (resumed, bits) = interrupted_run(churn_cfg(1), pause_at, resume_threads);
+        for (a, b) in straight[pause_at as usize..].iter().zip(&resumed) {
+            assert_eq!(
+                a, b,
+                "churn round {} diverged (pause {pause_at}, {resume_threads} threads)",
+                a.round
+            );
+        }
+        assert_eq!(
+            bits_straight, bits,
+            "churn state diverged (pause {pause_at}, {resume_threads} threads)"
+        );
+    }
+}
+
+#[test]
+fn resume_preserves_direct_midrun_registrations() {
+    // A peer registered through the API (not a scenario) immediately
+    // before the pause must survive the snapshot: its runner state,
+    // bucket read key, and validator score history all travel — and so
+    // does its pending "join ..." lifecycle line, which the *next*
+    // round's record must still report after the resume.
+    let run_with_join = |pause: bool| -> (Vec<RoundRecord>, Vec<u64>) {
+        let mut run = GauntletBuilder::sim().config(base_cfg(1)).build().expect("engine");
+        run.run_round().expect("round 0");
+        run.run_round().expect("round 1");
+        // Between rounds, right before the (optional) snapshot.
+        run.register_peer(Behavior::Honest { data_mult: 1.0 }).expect("join");
+        let mut run = if pause {
+            let json = run.snapshot().to_json().write();
+            let snap = RunSnapshot::parse(&json).expect("parse");
+            GauntletBuilder::sim().resume(snap).build().expect("resumed")
+        } else {
+            run
+        };
+        let rest = run.run().expect("rest");
+        (rest.rounds, state_bits(&run))
+    };
+    let (recs_straight, bits_straight) = run_with_join(false);
+    let (recs_resumed, bits_resumed) = run_with_join(true);
+    assert!(
+        recs_straight[0].events.iter().any(|e| e.starts_with("join honest as uid")),
+        "{:?}",
+        recs_straight[0].events
+    );
+    assert_eq!(recs_straight, recs_resumed, "post-pause records must match exactly");
+    assert_eq!(bits_straight, bits_resumed);
+}
+
+#[test]
+fn snapshot_json_is_stable_through_a_roundtrip() {
+    let mut run = GauntletBuilder::sim().config(churn_cfg(1)).build().expect("engine");
+    for _ in 0..3 {
+        run.run_round().expect("round");
+    }
+    let snap = run.snapshot();
+    let text = snap.to_json().write();
+    let reparsed = RunSnapshot::parse(&text).expect("parse");
+    assert_eq!(text, reparsed.to_json().write(), "snapshot JSON must be idempotent");
+    // The embedded config survives: same model, rounds, peer specs — and
+    // the snapshot remembers which backend produced it.
+    assert_eq!(reparsed.backend, "sim");
+    assert_eq!(reparsed.cfg.model, "nano");
+    assert_eq!(reparsed.cfg.rounds, 7);
+    assert_eq!(reparsed.cfg.peers.len(), 6);
+    assert_eq!(reparsed.cfg.scenario.len(), 5);
+
+    // The auto backend honors the recorded backend on resume (a sim
+    // snapshot resumes on sim without even probing for artifacts).
+    let resumed = GauntletBuilder::auto().resume(reparsed).build().expect("auto resume");
+    assert_eq!(resumed.backend_name(), "sim");
+    assert_eq!(resumed.round(), 3);
+}
+
+#[test]
+fn resume_rejects_structural_config_changes_and_corrupt_theta() {
+    let mut run = GauntletBuilder::sim().config(base_cfg(1)).build().expect("engine");
+    run.run_round().expect("round");
+    let snap = run.snapshot();
+
+    // Builder setters for snapshot-baked fields are rejected, not ignored.
+    let err = GauntletBuilder::sim()
+        .resume(snap.clone())
+        .model("mid")
+        .build()
+        .unwrap_err();
+    assert!(
+        err.to_string().contains("cannot change `model` on resume"),
+        "wrong error: {err:#}"
+    );
+    let err = GauntletBuilder::sim().resume(snap.clone()).seed(999).build().unwrap_err();
+    assert!(err.to_string().contains("cannot change `seed`"), "wrong error: {err:#}");
+    let err = GauntletBuilder::sim().resume(snap.clone()).validators(3).build().unwrap_err();
+    assert!(
+        err.to_string().contains("cannot change `n_validators`"),
+        "wrong error: {err:#}"
+    );
+
+    // A hand-tampered snapshot whose parameters cannot belong to its model
+    // is rejected by the parameter-count check.
+    let mut bad = snap;
+    bad.theta.truncate(10);
+    let err = GauntletBuilder::sim().resume(bad).build().unwrap_err();
+    assert!(err.to_string().contains("do not fit model"), "wrong error: {err:#}");
+
+    // Runtime-read knobs remain adjustable.
+    let mut ok = GauntletBuilder::sim()
+        .resume(run.snapshot())
+        .rounds(3)
+        .threads(2)
+        .eval_every(1)
+        .build()
+        .expect("runtime knobs are resumable");
+    assert_eq!(ok.round(), 1);
+    ok.run().expect("continue");
+}
