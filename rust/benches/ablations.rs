@@ -1,4 +1,5 @@
-//! Ablation benches for the design choices the paper calls out in prose:
+//! Thin wrapper over [`gauntlet::bench::figures::ablations`]: the design
+//! choices the paper calls out in prose —
 //!
 //!   beta      §3.1 — beta = c*alpha with c < 1 reduces LossScore noise and
 //!             negative-score rate (run with `-- beta`)
@@ -11,242 +12,10 @@
 //!
 //! No argument runs all four.
 
-use gauntlet::bench::{save_json, Table};
-use gauntlet::coordinator::fast_eval::sync_score;
-use gauntlet::coordinator::scoring::normalize_scores;
-use gauntlet::data::Corpus;
-use gauntlet::demo::aggregate::{aggregate, AggregateOpts};
-use gauntlet::demo::SparseGrad;
-use gauntlet::minjson::{self, Value};
-use gauntlet::runtime::{artifact_dir, artifacts_available, Executor};
-use gauntlet::util::{mean, sign, std_dev, Rng};
-
 fn main() -> anyhow::Result<()> {
     // cargo bench passes its own flags (e.g. --bench) to the binary;
     // only bare words select sub-studies.
     let which: Vec<String> =
         std::env::args().skip(1).filter(|a| !a.starts_with('-')).collect();
-    let all = which.is_empty();
-    let has = |n: &str| all || which.iter().any(|w| w == n);
-
-    if has("incentive") {
-        ablate_incentive();
-    }
-    if has("byzantine") {
-        ablate_byzantine();
-    }
-    if !artifacts_available("nano") {
-        println!("\n[beta/sync ablations need artifacts; run `make artifacts`]");
-        return Ok(());
-    }
-    let exec = Executor::load(artifact_dir("nano"))?;
-    if has("sync") {
-        ablate_sync(&exec)?;
-    }
-    if has("beta") {
-        ablate_beta(&exec)?;
-    }
-    Ok(())
-}
-
-/// §3.3: one user with 10 GPUs as ONE strong peer vs TEN weak peers.
-fn ablate_incentive() {
-    // A network of peers with a spread of PEERSCOREs (weakest at 0 so the
-    // eq. 5 min-shift keeps everyone's relative position). The user in
-    // question either consolidates its 10 GPUs into ONE strong peer
-    // (score 10) or splits them into TEN weak peers (score 1 each).
-    let field = [6.0, 5.0, 4.0, 3.0, 0.0];
-    let one_strong: Vec<f64> = std::iter::once(10.0).chain(field).collect();
-    let ten_weak: Vec<f64> = vec![1.0; 10].into_iter().chain(field).collect();
-    let mut t = Table::new(
-        "§3.3 incentive concentration: one 10-GPU peer vs ten 1-GPU peers",
-        &["norm power c", "share (1 strong peer)", "share (10 weak peers total)", "strong/weak"],
-    );
-    let mut json = Vec::new();
-    for c in [1.0, 2.0, 3.0] {
-        let s = normalize_scores(&one_strong, c)[0];
-        let w: f64 = normalize_scores(&ten_weak, c)[..10].iter().sum();
-        t.row(&[
-            format!("{c}"),
-            format!("{:.3}", s),
-            format!("{:.3}", w),
-            format!("{:.2}x", s / w.max(1e-9)),
-        ]);
-        json.push(minjson::obj(vec![
-            ("c", minjson::num(c)),
-            ("strong", minjson::num(s)),
-            ("weak", minjson::num(w)),
-        ]));
-    }
-    t.print();
-    println!("(c=2, the paper's choice, rewards consolidating GPUs into one strong peer)");
-    save_json("ablation_incentive", &Value::Arr(json));
-}
-
-/// §4: rescaling attack in the encoded domain, with/without normalization.
-fn ablate_byzantine() {
-    let mut rng = Rng::new(7);
-    let p_pad = 4096;
-    let c = 256;
-    let mk = |rng: &mut Rng, scale: f32| SparseGrad {
-        vals: (0..c).map(|_| rng.normal_f32(0.0, scale)).collect(),
-        idx: (0..c).map(|_| rng.below(p_pad as u64) as i32).collect(),
-    };
-    let honest: Vec<SparseGrad> = (0..4).map(|_| mk(&mut rng, 1.0)).collect();
-    let attacker = mk(&mut rng, 1000.0);
-
-    let cos = |a: &[f32], b: &[f32]| {
-        let dot: f64 = a.iter().zip(b).map(|(x, y)| *x as f64 * *y as f64).sum();
-        let na: f64 = a.iter().map(|x| (*x as f64).powi(2)).sum::<f64>().sqrt();
-        let nb: f64 = b.iter().map(|x| (*x as f64).powi(2)).sum::<f64>().sqrt();
-        dot / (na * nb).max(1e-12)
-    };
-
-    let mut t = Table::new(
-        "§4 rescaling attack (x1000): aggregate fidelity vs honest-only",
-        &["normalization", "cosine(honest-only, with-attacker)", "attacker share of L2"],
-    );
-    let mut json = Vec::new();
-    for normalize in [true, false] {
-        let opts = AggregateOpts { normalize, ..Default::default() };
-        let w = 1.0 / 5.0;
-        let honest_refs: Vec<(&SparseGrad, f64)> = honest.iter().map(|g| (g, w)).collect();
-        let clean = aggregate(&honest_refs, p_pad, &opts);
-        let mut with_att = honest_refs.clone();
-        with_att.push((&attacker, w));
-        let dirty = aggregate(&with_att, p_pad, &opts);
-        let att_only = aggregate(&[(&attacker, w)], p_pad, &opts);
-        let att_norm: f64 = att_only.iter().map(|x| (*x as f64).powi(2)).sum::<f64>().sqrt();
-        let dirty_norm: f64 = dirty.iter().map(|x| (*x as f64).powi(2)).sum::<f64>().sqrt();
-        let fidelity = cos(&clean, &dirty);
-        t.row(&[
-            if normalize { "ON (paper)" } else { "OFF" }.to_string(),
-            format!("{:.4}", fidelity),
-            format!("{:.3}", att_norm / dirty_norm.max(1e-12)),
-        ]);
-        json.push(minjson::obj(vec![
-            ("normalize", Value::Bool(normalize)),
-            ("fidelity", minjson::num(fidelity)),
-        ]));
-    }
-    t.print();
-    println!("(normalization keeps the aggregate pointing where honest peers point)");
-    save_json("ablation_byzantine", &Value::Arr(json));
-}
-
-/// §3.2: SyncScore vs actual lag in signed steps.
-fn ablate_sync(exec: &Executor) -> anyhow::Result<()> {
-    let meta = &exec.meta;
-    let mut theta = exec.init_params()?;
-    let stale = theta.clone();
-    let mut rng = Rng::new(3);
-    // DeMo updates are momentum-correlated across adjacent rounds (error
-    // feedback, decay 0.999), so a stale peer's divergence grows close to
-    // linearly in lag — model that with a persistent base direction plus
-    // fresh per-round noise.
-    let mut base = vec![0.0f32; meta.padded_count];
-    for _ in 0..meta.coeff_count {
-        let i = rng.below(meta.padded_count as u64) as usize;
-        base[i] += rng.normal_f32(0.0, 1.0);
-    }
-    let mut t = Table::new(
-        "§3.2 SyncScore vs true lag (threshold = 3)",
-        &["lag (rounds)", "SyncScore", "passes filter"],
-    );
-    let mut json = Vec::new();
-    for lag in 0..=6u32 {
-        let probe_peer = meta.sync_probe(&stale);
-        let probe_val = meta.sync_probe(&theta);
-        let s = sync_score(&probe_val, &probe_peer, 0.02);
-        t.row(&[lag.to_string(), format!("{s:.3}"), (s <= 3.0).to_string()]);
-        json.push(minjson::obj(vec![
-            ("lag", minjson::num(lag as f64)),
-            ("sync_score", minjson::num(s)),
-        ]));
-        // validator takes one more signed, momentum-correlated update step
-        let coeff: Vec<f32> =
-            base.iter().map(|b| b + 0.3 * rng.normal_f32(0.0, 1.0) * (*b != 0.0) as u8 as f32).collect();
-        theta = exec.apply_update(&theta, &coeff, 0.02)?;
-    }
-    t.print();
-    println!("(score grows ~linearly with lag under momentum-correlated updates; the threshold-3 filter rejects ~>=4-step-stale peers)");
-    save_json("ablation_sync", &Value::Arr(json));
-    Ok(())
-}
-
-/// §3.1: beta = c*alpha sweep — negative-LossScore rate and rank stability.
-fn ablate_beta(exec: &Executor) -> anyhow::Result<()> {
-    let meta = &exec.meta;
-    let corpus = Corpus::new(meta.vocab as u32, 0);
-    let theta = exec.init_params()?;
-    let (b, s1) = (meta.batch, meta.seq + 1);
-    let lr = 0.02f32;
-
-    // Four honest peers' pseudo-gradients with different data amounts
-    // (1..4 microbatches) — ground-truth quality ranking is 4 > 3 > 2 > 1.
-    let mut grads = Vec::new();
-    for (uid, n_mb) in [(1u32, 1usize), (2, 2), (3, 3), (4, 4)] {
-        let mut acc = vec![0.0f32; meta.param_count];
-        for mb in 0..n_mb {
-            let toks = corpus.assigned_shard(uid, 0, mb as u32, b, s1);
-            let (_, g) = exec.grad(&theta, &toks)?;
-            for (a, gi) in acc.iter_mut().zip(&g) {
-                *a += gi / n_mb as f32;
-            }
-        }
-        let e = vec![0.0f32; meta.param_count];
-        let (vals, idx, _) = exec.demo_compress(&e, &acc, 0.999)?;
-        let mut dense = vec![0.0f32; meta.padded_count];
-        let g = SparseGrad { vals, idx };
-        let n = g.l2_norm();
-        g.scatter_into(&mut dense, (1.0 / n) as f32);
-        grads.push(dense);
-    }
-
-    let mut t = Table::new(
-        "§3.1 beta sweep (beta = c * alpha): LossScore quality over 6 data draws",
-        &["c", "mean score", "score std", "neg rate", "rank stability"],
-    );
-    let mut json = Vec::new();
-    for c in [0.25f32, 0.5, 1.0, 2.0] {
-        let beta = c * lr;
-        let mut all_scores: Vec<f64> = Vec::new();
-        let mut orderings: Vec<Vec<usize>> = Vec::new();
-        for draw in 0..6u32 {
-            let tok = corpus.random_eval(1000 + draw as u64, draw, b, s1);
-            let mut scores = Vec::new();
-            for dense in &grads {
-                let (_, _, l0, l1) = exec.eval_peer(&theta, dense, beta, &tok, &tok)?;
-                scores.push(l0 as f64 - l1 as f64);
-            }
-            all_scores.extend(&scores);
-            let mut order: Vec<usize> = (0..scores.len()).collect();
-            order.sort_by(|&i, &j| scores[j].partial_cmp(&scores[i]).unwrap());
-            orderings.push(order);
-        }
-        // rank stability: mean pairwise agreement of the top choice
-        let top_counts = orderings.iter().filter(|o| o[0] == orderings[0][0]).count();
-        let stability = top_counts as f64 / orderings.len() as f64;
-        let neg_rate =
-            all_scores.iter().filter(|s| **s < 0.0).count() as f64 / all_scores.len() as f64;
-        t.row(&[
-            format!("{c}"),
-            format!("{:+.4}", mean(&all_scores)),
-            format!("{:.4}", std_dev(&all_scores)),
-            format!("{:.2}", neg_rate),
-            format!("{:.2}", stability),
-        ]);
-        json.push(minjson::obj(vec![
-            ("c", minjson::num(c as f64)),
-            ("mean", minjson::num(mean(&all_scores))),
-            ("std", minjson::num(std_dev(&all_scores))),
-            ("neg_rate", minjson::num(neg_rate)),
-            ("stability", minjson::num(stability)),
-        ]));
-        let _ = sign(0.0); // keep util::sign linked into the bench build
-    }
-    t.print();
-    println!("(paper: smaller c => fewer negative scores, more consistent rankings)");
-    save_json("ablation_beta", &Value::Arr(json));
-    Ok(())
+    gauntlet::bench::figures::ablations(&which)
 }

@@ -1,113 +1,16 @@
-//! Fig. 1 bench: Templar permissionless loss curve vs AdamW DDP baseline.
-//!
-//! Regenerates the paper's headline figure at `nano` scale: a Gauntlet run
-//! with heterogeneous permissionless peers against a centralized AdamW
-//! baseline with the same worker count and per-worker batch size. Prints
-//! the two series and writes them to bench_results/fig1.json.
-//!
-//! Paper-shape expectations: the Gauntlet run converges (and early on can
-//! beat the per-round baseline, since incentives push peers to process
-//! more data), while remaining fully permissionless.
+//! Thin wrapper over [`gauntlet::bench::figures::fig1`]: Templar
+//! permissionless loss curve vs AdamW DDP baseline (the paper's headline
+//! figure at `nano` scale). Prints the two series and writes
+//! `bench_results/fig1.json`.
 //!
 //!     cargo bench --bench fig1_training_curve [-- <rounds>]
 
-use gauntlet::bench::{save_json, series_json, sparkline, Table};
-use gauntlet::coordinator::baseline::{AdamWParams, AdamWTrainer};
-use gauntlet::coordinator::engine::GauntletBuilder;
-use gauntlet::coordinator::run::RunConfig;
-use gauntlet::data::Corpus;
-use gauntlet::minjson;
-use gauntlet::peers::Behavior;
-use gauntlet::runtime::{artifact_dir, artifacts_available, Executor};
-
 fn main() -> anyhow::Result<()> {
-    if !artifacts_available("nano") {
-        println!("fig1: artifacts missing; run `make artifacts` first");
-        return Ok(());
-    }
     let rounds: u64 = std::env::args()
         .skip(1)
         .find(|a| a.chars().all(|c| c.is_ascii_digit()))
         .map(|s| s.parse())
         .transpose()?
         .unwrap_or(40);
-
-    // Incentivized population: data multipliers above 1 are what the
-    // incentive buys the network (paper §6: "participants were successfully
-    // incentivized to process more data").
-    let peers = vec![
-        Behavior::Honest { data_mult: 2.0 },
-        Behavior::Honest { data_mult: 1.5 },
-        Behavior::Honest { data_mult: 1.0 },
-        Behavior::Honest { data_mult: 1.0 },
-        Behavior::Honest { data_mult: 1.0 },
-        Behavior::Freeloader,
-    ];
-    let n_workers = 5;
-
-    let mut cfg = RunConfig {
-        model: "nano".to_string(),
-        rounds,
-        peers,
-        ..RunConfig::default()
-    };
-    cfg.eval_every = 2;
-    cfg.params.top_g = 4;
-    println!("fig1: gauntlet ({} peers) vs adamw ({} workers), {rounds} rounds", 6, n_workers);
-
-    let mut run = GauntletBuilder::artifact().config(cfg).build()?;
-    let mut g_curve = Vec::new();
-    let mut tokens_gauntlet: u64 = 0;
-    for _ in 0..rounds {
-        let rec = run.run_round()?;
-        tokens_gauntlet += rec.tokens_processed;
-        if let Some(l) = rec.heldout_loss {
-            g_curve.push((rec.round as f64, l));
-        }
-    }
-
-    let exec = Executor::load(artifact_dir("nano"))?;
-    let corpus = Corpus::new(exec.meta.vocab as u32, 0);
-    let mut trainer = AdamWTrainer::new(exec.init_params()?, AdamWParams::default(), n_workers);
-    let mut a_curve = Vec::new();
-    let mut tokens_adamw: u64 = 0;
-    for r in 0..rounds {
-        trainer.step(&exec, &corpus, r)?;
-        tokens_adamw += (n_workers * exec.meta.batch * exec.meta.seq) as u64;
-        if r % 2 == 0 {
-            let toks = corpus.heldout(0, exec.meta.batch, exec.meta.seq + 1);
-            a_curve.push((r as f64, exec.loss(&trainer.theta, &toks)? as f64));
-        }
-    }
-
-    let gl: Vec<f64> = g_curve.iter().map(|(_, y)| *y).collect();
-    let al: Vec<f64> = a_curve.iter().map(|(_, y)| *y).collect();
-    let mut t = Table::new("Fig. 1 — heldout loss by round", &["round", "templar (gauntlet)", "adamw ddp"]);
-    for (i, (r, gy)) in g_curve.iter().enumerate() {
-        let ay = a_curve.get(i).map(|(_, y)| format!("{y:.4}")).unwrap_or_default();
-        t.row(&[format!("{r}"), format!("{gy:.4}"), ay]);
-    }
-    t.print();
-    println!("  templar {}", sparkline(&gl, 50));
-    println!("  adamw   {}", sparkline(&al, 50));
-    println!(
-        "  tokens: templar={tokens_gauntlet} adamw={tokens_adamw} (incentivized peers processed {:.2}x)",
-        tokens_gauntlet as f64 / tokens_adamw as f64
-    );
-    println!(
-        "  final: templar={:.4} adamw={:.4}",
-        gl.last().unwrap(),
-        al.last().unwrap()
-    );
-
-    save_json(
-        "fig1",
-        &minjson::obj(vec![
-            ("gauntlet", series_json(&g_curve)),
-            ("adamw", series_json(&a_curve)),
-            ("tokens_gauntlet", minjson::num(tokens_gauntlet as f64)),
-            ("tokens_adamw", minjson::num(tokens_adamw as f64)),
-        ]),
-    );
-    Ok(())
+    gauntlet::bench::figures::fig1(rounds)
 }

@@ -1,122 +1,16 @@
-//! Fig. 2 bench: LossScore / LossRating evolution for three peer types —
-//! 2x-data, desynchronized (3-round pause), and baseline — each evaluated
-//! every round (S = K, the paper's controlled simulation).
-//!
-//! Paper-shape expectations: per-round LossScore is noisy; LossRating
-//! separates the 2x-data peer upward and the desynchronized peer downward.
+//! Thin wrapper over [`gauntlet::bench::figures::fig2`]: LossScore /
+//! LossRating evolution for three peer types — 2x-data, desynchronized
+//! (3-round pause), and baseline — each evaluated every round (S = K, the
+//! paper's controlled simulation).
 //!
 //!     cargo bench --bench fig2_loss_rating [-- <rounds>]
 
-use gauntlet::bench::{save_json, sparkline, Table};
-use gauntlet::coordinator::engine::GauntletBuilder;
-use gauntlet::coordinator::run::RunConfig;
-use gauntlet::minjson::{self, Value};
-use gauntlet::peers::Behavior;
-use gauntlet::runtime::artifacts_available;
-use gauntlet::util::{mean, std_dev};
-
 fn main() -> anyhow::Result<()> {
-    if !artifacts_available("nano") {
-        println!("fig2: artifacts missing; run `make artifacts` first");
-        return Ok(());
-    }
     let rounds: u64 = std::env::args()
         .skip(1)
         .find(|a| a.chars().all(|c| c.is_ascii_digit()))
         .map(|s| s.parse())
         .transpose()?
         .unwrap_or(30);
-    let desync_at = 5;
-
-    let peers = vec![
-        Behavior::Honest { data_mult: 2.0 },
-        Behavior::Desync { at: desync_at, pause: 3 },
-        Behavior::Honest { data_mult: 1.0 },
-    ];
-    let mut cfg = RunConfig {
-        model: "nano".to_string(),
-        rounds,
-        peers,
-        ..RunConfig::default()
-    };
-    cfg.params.eval_sample = 3;
-    cfg.params.top_g = 3;
-    cfg.eval_every = 0;
-
-    let mut run = GauntletBuilder::artifact().config(cfg).build()?;
-    let labels = ["2x-data", "desync", "baseline"];
-    let mut scores: Vec<Vec<Option<f64>>> = vec![Vec::new(); 3];
-    let mut ratings: Vec<Vec<f64>> = vec![Vec::new(); 3];
-    for _ in 0..rounds {
-        let rec = run.run_round()?;
-        for (i, p) in rec.peers.iter().enumerate() {
-            scores[i].push(p.loss_score_rand);
-            ratings[i].push(p.rating_mu);
-        }
-    }
-
-    let mut t = Table::new(
-        "Fig. 2 — per-round LossScore (rand) / LossRating",
-        &["peer", "score mean", "score std", "rating start", "rating end", "rating sparkline"],
-    );
-    for i in 0..3 {
-        let s: Vec<f64> = scores[i].iter().flatten().copied().collect();
-        t.row(&[
-            labels[i].to_string(),
-            format!("{:+.4}", mean(&s)),
-            format!("{:.4}", std_dev(&s)),
-            format!("{:.2}", ratings[i].first().unwrap()),
-            format!("{:.2}", ratings[i].last().unwrap()),
-            sparkline(&ratings[i], 30),
-        ]);
-    }
-    t.print();
-
-    // Shape assertions (reported, not fatal — this is a bench).
-    let end = |i: usize| *ratings[i].last().unwrap();
-    println!("\nshape check (paper Fig. 2):");
-    println!(
-        "  2x-data rating > baseline rating: {} ({:.2} vs {:.2})",
-        end(0) > end(2),
-        end(0),
-        end(2)
-    );
-    println!(
-        "  desync rating < baseline rating:  {} ({:.2} vs {:.2})",
-        end(1) < end(2),
-        end(1),
-        end(2)
-    );
-    let noisy = {
-        let s: Vec<f64> = scores[2].iter().flatten().copied().collect();
-        std_dev(&s) > 0.1 * mean(&s).abs()
-    };
-    println!("  LossScore noisy round-to-round:   {noisy}");
-
-    save_json(
-        "fig2",
-        &minjson::obj(vec![(
-            "peers",
-            Value::Arr(
-                (0..3)
-                    .map(|i| {
-                        minjson::obj(vec![
-                            ("label", minjson::s(labels[i])),
-                            (
-                                "scores",
-                                Value::Arr(
-                                    scores[i]
-                                        .iter()
-                                        .map(|o| o.map(minjson::num).unwrap_or(Value::Null))
-                                        .collect(),
-                                ),
-                            ),
-                            ("ratings", minjson::arr_f64(&ratings[i])),
-                        ])
-                    })
-                    .collect(),
-            ),
-        )]),
-    );
-    Ok(())
+    gauntlet::bench::figures::fig2(rounds)
 }

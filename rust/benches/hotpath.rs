@@ -1,276 +1,21 @@
-//! Hot-path microbenchmarks (§Perf): every operation on the validator's
-//! and peers' per-round critical path, timed in isolation.
+//! Thin wrapper over the PerfLab `hotpath` suite (`bench::suite`): every
+//! operation on the validator's and peers' per-round critical path, timed
+//! in isolation, plus the full-round thread sweep. Results are saved as
+//! `bench_results/BENCH_hotpath.json` in the same schema `gauntlet bench`
+//! emits, so they diff against `baseline/BENCH_hotpath.json`.
 //!
-//!   - sparse DeMo aggregation (scatter-add) at several G and C
-//!   - wire encode/decode (+ SHA-256 integrity)
-//!   - OpenSkill match update
-//!   - Yuma consensus epoch at deployed scale (64 validators x 256 peers)
-//!   - corpus shard generation
-//!   - full-round evaluation pipeline: a 32-peer, 2-validator round on the
-//!     SimExec backend swept over worker-thread counts, asserting the
-//!     parallel pipeline's PEERSCOREs are bit-identical to the sequential
-//!     baseline
-//!   - XLA artifact round-trips (grad / demo_compress / eval_peer / apply)
-//!
-//!     cargo bench --bench hotpath
+//!     cargo bench --bench hotpath [-- quick]
 
-use gauntlet::bench::{format_speedup, human_duration, save_json, time_it, Table};
-use gauntlet::chain::yuma::{yuma_consensus, YumaParams};
-use gauntlet::coordinator::engine::GauntletBuilder;
-use gauntlet::coordinator::run::RunConfig;
-use gauntlet::data::Corpus;
-use gauntlet::demo::aggregate::{aggregate_into, AggregateOpts};
-use gauntlet::demo::wire::Submission;
-use gauntlet::demo::SparseGrad;
-use gauntlet::minjson::{self, Value};
-use gauntlet::openskill::{PlackettLuce, Rating};
-use gauntlet::peers::Behavior;
-use gauntlet::runtime::{artifact_dir, artifacts_available, Executor};
-use gauntlet::util::Rng;
-
-fn mk_grad(rng: &mut Rng, c: usize, p_pad: usize) -> SparseGrad {
-    SparseGrad {
-        vals: (0..c).map(|_| rng.normal_f32(0.0, 1.0)).collect(),
-        idx: (0..c).map(|_| rng.below(p_pad as u64) as i32).collect(),
-    }
-}
+use gauntlet::bench::suite::{self, BenchCtx};
 
 fn main() -> anyhow::Result<()> {
-    let mut results: Vec<(String, f64)> = Vec::new();
-    let mut t = Table::new("hot-path microbenchmarks", &["operation", "mean", "throughput"]);
-    let mut rng = Rng::new(1);
-
-    // ---- sparse aggregation ------------------------------------------
-    for (g, c, p_pad) in [(4usize, 1312usize, 167_936usize), (15, 1312, 167_936), (15, 57_952, 7_372_800)] {
-        let grads: Vec<SparseGrad> = (0..g).map(|_| mk_grad(&mut rng, c, p_pad)).collect();
-        let refs: Vec<(&SparseGrad, f64)> = grads.iter().map(|gr| (gr, 1.0 / g as f64)).collect();
-        let mut dense = vec![0.0f32; p_pad];
-        let opts = AggregateOpts::default();
-        let timing = time_it(3, 20, || {
-            dense.iter_mut().for_each(|x| *x = 0.0);
-            aggregate_into(&refs, &mut dense, &opts);
-        });
-        let vals_per_s = (g * c) as f64 / timing.mean_s;
-        t.row(&[
-            format!("aggregate G={g} C={c} P'={p_pad}"),
-            human_duration(timing.mean_s),
-            format!("{:.1} Mcoeff/s", vals_per_s / 1e6),
-        ]);
-        results.push((format!("aggregate_g{g}_c{c}"), timing.mean_s));
-    }
-
-    // ---- wire encode/decode ------------------------------------------
-    for c in [1312usize, 57_952] {
-        let sub = Submission {
-            uid: 3,
-            round: 17,
-            grad: mk_grad(&mut rng, c, 10_000_000),
-            probe: vec![0.5; 150],
-        };
-        let enc = time_it(3, 30, || {
-            let _ = sub.encode();
-        });
-        let bytes = sub.encode();
-        let dec = time_it(3, 30, || {
-            let _ = Submission::decode(&bytes).unwrap();
-        });
-        t.row(&[
-            format!("wire encode C={c}"),
-            human_duration(enc.mean_s),
-            format!("{:.0} MB/s", bytes.len() as f64 / enc.mean_s / 1e6),
-        ]);
-        t.row(&[
-            format!("wire decode C={c}"),
-            human_duration(dec.mean_s),
-            format!("{:.0} MB/s", bytes.len() as f64 / dec.mean_s / 1e6),
-        ]);
-        results.push((format!("wire_encode_c{c}"), enc.mean_s));
-        results.push((format!("wire_decode_c{c}"), dec.mean_s));
-    }
-
-    // ---- openskill ----------------------------------------------------
-    let model = PlackettLuce::default();
-    let ratings: Vec<Rating> = (0..16).map(|_| model.initial()).collect();
-    let scores: Vec<f64> = (0..16).map(|_| rng.next_f64()).collect();
-    let os = time_it(5, 200, || {
-        let _ = model.rate_by_scores(&ratings, &scores);
-    });
-    t.row(&["openskill match n=16".into(), human_duration(os.mean_s), String::new()]);
-    results.push(("openskill_16".into(), os.mean_s));
-
-    // ---- yuma ----------------------------------------------------------
-    let n_val = 64;
-    let n_peer = 256;
-    let w: Vec<Vec<f64>> =
-        (0..n_val).map(|_| (0..n_peer).map(|_| rng.next_f64()).collect()).collect();
-    let stake: Vec<f64> = (0..n_val).map(|_| rng.range_f64(1.0, 100.0)).collect();
-    let yu = time_it(2, 10, || {
-        let _ = yuma_consensus(&w, &stake, &YumaParams::default());
-    });
-    t.row(&[
-        format!("yuma epoch {n_val}x{n_peer}"),
-        human_duration(yu.mean_s),
-        String::new(),
-    ]);
-    results.push(("yuma_64x256".into(), yu.mean_s));
-
-    // ---- corpus ---------------------------------------------------------
-    let corpus = Corpus::new(4096, 0);
-    let cg = time_it(3, 50, || {
-        let _ = corpus.assigned_shard(3, 17, 0, 4, 129);
-    });
-    t.row(&[
-        "corpus shard 4x129".into(),
-        human_duration(cg.mean_s),
-        format!("{:.1} Mtok/s", 4.0 * 129.0 / cg.mean_s / 1e6),
-    ]);
-    results.push(("corpus_shard".into(), cg.mean_s));
-
-    // ---- parallel round-evaluation pipeline -----------------------------
-    // The tentpole path: one full communication round (32 peers taking
-    // turns, 2 validators fast-evaluating everyone + primary-evaluating a
-    // sample, chain epoch, aggregation) on the SimExec "mid" model, swept
-    // over worker-thread counts. PEERSCOREs must be bit-identical at every
-    // thread count; the speedup column is the parallelization win.
-    {
-        const ROUNDS: u64 = 3;
-        let mk_run = |threads: usize| {
-            let peers: Vec<Behavior> = (0..32)
-                .map(|i| match i % 8 {
-                    6 => Behavior::Freeloader,
-                    7 => Behavior::Poisoner { scale: 100.0 },
-                    _ => Behavior::Honest { data_mult: 1.0 },
-                })
-                .collect();
-            let mut cfg = RunConfig {
-                model: "mid".to_string(),
-                rounds: ROUNDS,
-                peers,
-                ..RunConfig::default()
-            };
-            cfg.eval_every = 0;
-            cfg.seed = 11;
-            cfg.n_validators = 2;
-            cfg.params.top_g = 8;
-            cfg.params.eval_sample = 4;
-            cfg.threads = threads;
-            GauntletBuilder::sim().config(cfg).build().expect("sim run")
-        };
-        let score_bits = |threads: usize| -> Vec<u64> {
-            let mut run = mk_run(threads);
-            for _ in 0..ROUNDS {
-                run.run_round().expect("round");
-            }
-            let uids = run.peer_uids();
-            let mut bits = Vec::with_capacity(run.validators().len() * uids.len());
-            for v in run.validators() {
-                for &u in &uids {
-                    bits.push(v.book.peer_score(u).to_bits());
-                }
-            }
-            bits
-        };
-        let reference = score_bits(1);
-        for threads in [2usize, 4, 8] {
-            assert_eq!(
-                score_bits(threads),
-                reference,
-                "PEERSCOREs must be identical at {threads} threads"
-            );
-        }
-        let mut base_mean = 0.0;
-        for threads in [1usize, 2, 4, 8] {
-            // Pre-build one run per timing iteration so construction cost
-            // (init params, peer registration) stays out of the timed
-            // region — the sweep measures the round pipeline itself.
-            let mut prebuilt: Vec<_> = (0..4).map(|_| mk_run(threads)).collect();
-            let timing = time_it(1, 3, || {
-                let mut run = prebuilt.pop().expect("prebuilt run");
-                for _ in 0..ROUNDS {
-                    run.run_round().expect("round");
-                }
-            });
-            if threads == 1 {
-                base_mean = timing.mean_s;
-            }
-            t.row(&[
-                format!("round pipeline 32p/2v (threads={threads})"),
-                human_duration(timing.mean_s),
-                format_speedup(base_mean, timing.mean_s),
-            ]);
-            results.push((format!("round_pipeline_t{threads}"), timing.mean_s));
-        }
-    }
-
-    // ---- XLA artifacts --------------------------------------------------
-    for cfg in ["nano", "tiny"] {
-        if !artifacts_available(cfg) {
-            continue;
-        }
-        // Artifacts exist but may not be executable (stub xla crate);
-        // skip rather than fail the whole bench.
-        let exec = match Executor::load(artifact_dir(cfg)) {
-            Ok(e) => e,
-            Err(e) => {
-                println!("[skipping xla {cfg} benches: {e:#}]");
-                continue;
-            }
-        };
-        let meta = exec.meta.clone();
-        let theta = exec.init_params()?;
-        let toks = corpus_for(&meta).assigned_shard(1, 0, 0, meta.batch, meta.seq + 1);
-        let iters = if cfg == "nano" { 10 } else { 5 };
-
-        let tl = time_it(2, iters, || {
-            let _ = exec.loss(&theta, &toks).unwrap();
-        });
-        let tg = time_it(2, iters, || {
-            let _ = exec.grad(&theta, &toks).unwrap();
-        });
-        let e = vec![0.0f32; meta.param_count];
-        let (_, g) = exec.grad(&theta, &toks)?;
-        let tc = time_it(2, iters, || {
-            let _ = exec.demo_compress(&e, &g, 0.999).unwrap();
-        });
-        let coeff = vec![0.01f32; meta.padded_count];
-        let ta = time_it(2, iters, || {
-            let _ = exec.apply_update(&theta, &coeff, 0.02).unwrap();
-        });
-        let te = time_it(2, iters, || {
-            let _ = exec.eval_peer(&theta, &coeff, 0.01, &toks, &toks).unwrap();
-        });
-        for (name, timing) in
-            [("loss", &tl), ("grad", &tg), ("demo_compress", &tc), ("apply_update", &ta), ("eval_peer", &te)]
-        {
-            let toks_per_s = (meta.batch * meta.seq) as f64 / timing.mean_s;
-            t.row(&[
-                format!("xla {cfg}/{name}"),
-                human_duration(timing.mean_s),
-                if name == "loss" || name == "grad" {
-                    format!("{:.1} ktok/s", toks_per_s / 1e3)
-                } else {
-                    String::new()
-                },
-            ]);
-            results.push((format!("xla_{cfg}_{name}"), timing.mean_s));
-        }
-    }
-
-    t.print();
-    save_json(
-        "hotpath",
-        &Value::Arr(
-            results
-                .iter()
-                .map(|(k, v)| {
-                    minjson::obj(vec![("op", minjson::s(k)), ("mean_s", minjson::num(*v))])
-                })
-                .collect(),
-        ),
-    );
-    Ok(())
-}
-
-fn corpus_for(meta: &gauntlet::runtime::ModelMeta) -> Corpus {
-    Corpus::new(meta.vocab as u32, 0)
+    // cargo bench passes its own flags (e.g. --bench) to the binary; only
+    // bare words select modes.
+    let quick = std::env::args().skip(1).any(|a| a == "quick");
+    let spec = suite::find_suite("hotpath").expect("hotpath suite is registered");
+    let result = suite::run_suite(&spec, &BenchCtx { quick })?;
+    suite::save_default(&result)?;
+    // Compiled-artifact round-trips are machine/artifact dependent, so they
+    // print for humans instead of entering the baseline-diffed schema.
+    suite::xla_extras()
 }

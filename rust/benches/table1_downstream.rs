@@ -1,86 +1,13 @@
-//! Table 1 bench: downstream zero-shot evaluation of the permissionless
-//! checkpoint vs the AdamW-DDP checkpoint vs the untrained model.
-//!
-//! Reproduces the paper's protocol (acc_norm = argmin length-normalized
-//! loss over candidates) on the synthetic suites. Paper-shape expectation:
-//! TEMPLAR ~= AdamW, both >> untrained/chance.
+//! Thin wrapper over [`gauntlet::bench::figures::table1`]: downstream
+//! zero-shot evaluation of the permissionless checkpoint vs the AdamW-DDP
+//! checkpoint vs the untrained model.
 //!
 //!     cargo bench --bench table1_downstream [-- <rounds> <items>]
 
-use gauntlet::bench::{save_json, Table};
-use gauntlet::coordinator::baseline::{AdamWParams, AdamWTrainer};
-use gauntlet::coordinator::engine::GauntletBuilder;
-use gauntlet::coordinator::run::RunConfig;
-use gauntlet::data::Corpus;
-use gauntlet::eval::{evaluate_suite, Suite};
-use gauntlet::minjson::{self, Value};
-use gauntlet::peers::Behavior;
-use gauntlet::runtime::{artifact_dir, artifacts_available, Executor};
-
 fn main() -> anyhow::Result<()> {
-    if !artifacts_available("nano") {
-        println!("table1: artifacts missing; run `make artifacts` first");
-        return Ok(());
-    }
     let mut tail =
         std::env::args().skip(1).filter(|a| a.chars().all(|c| c.is_ascii_digit()));
     let rounds: u64 = tail.next().map(|s| s.parse()).transpose()?.unwrap_or(30);
     let items: usize = tail.next().map(|s| s.parse()).transpose()?.unwrap_or(60);
-
-    // Train both systems on the same token budget.
-    let peers = vec![Behavior::Honest { data_mult: 1.0 }; 5];
-    let mut cfg = RunConfig {
-        model: "nano".to_string(),
-        rounds,
-        peers,
-        ..RunConfig::default()
-    };
-    cfg.eval_every = 0;
-    println!("table1: training templar + adamw for {rounds} rounds, then {items} items/suite");
-    let mut run = GauntletBuilder::artifact().config(cfg).build()?;
-    for _ in 0..rounds {
-        run.run_round()?;
-    }
-    let theta_templar = run.theta().to_vec();
-
-    let exec = Executor::load(artifact_dir("nano"))?;
-    let corpus = Corpus::new(exec.meta.vocab as u32, 0);
-    let mut trainer = AdamWTrainer::new(exec.init_params()?, AdamWParams::default(), 5);
-    for r in 0..rounds {
-        trainer.step(&exec, &corpus, r)?;
-    }
-
-    let theta_init = exec.init_params()?;
-    let rows: Vec<(&str, &Vec<f32>)> = vec![
-        ("TEMPLAR (gauntlet)", &theta_templar),
-        ("AdamW DDP", &trainer.theta),
-        ("untrained", &theta_init),
-    ];
-
-    let mut t = Table::new(
-        "Table 1 — zero-shot acc_norm (synthetic analogues)",
-        &["model", "synth-hellaswag", "synth-piqa", "synth-arc-e"],
-    );
-    let mut json_rows = Vec::new();
-    for (name, theta) in &rows {
-        let mut cells = vec![name.to_string()];
-        let mut obj = vec![("model", minjson::s(name))];
-        for suite in Suite::all() {
-            let r = evaluate_suite(&exec, theta, &corpus, suite, items)?;
-            cells.push(format!("{:.3}", r.acc_norm));
-            obj.push((suite.name(), minjson::num(r.acc_norm)));
-        }
-        t.row(&cells);
-        json_rows.push(minjson::obj(obj));
-    }
-    t.row(&[
-        "chance".into(),
-        "0.250".into(),
-        "0.500".into(),
-        "0.250".into(),
-    ]);
-    t.print();
-    println!("\n(paper Table 1 shape: trained models comparable, both above chance)");
-    save_json("table1", &Value::Arr(json_rows));
-    Ok(())
+    gauntlet::bench::figures::table1(rounds, items)
 }

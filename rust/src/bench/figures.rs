@@ -1,0 +1,518 @@
+//! The paper-figure reproductions the `rust/benches/` binaries wrap.
+//!
+//! Each `[[bench]]` target used to carry its whole reproduction inline;
+//! they are now thin argument-parsing wrappers over these library
+//! functions, so the table/series/persistence logic lives in one place
+//! (and can be driven programmatically — e.g. from future `gauntlet`
+//! subcommands) instead of five binaries:
+//!
+//! - [`fig1`] — Templar permissionless loss curve vs AdamW DDP baseline.
+//! - [`fig2`] — LossScore / LossRating evolution for three peer types.
+//! - [`table1`] — downstream zero-shot eval of both checkpoints.
+//! - [`ablations`] — the §3.1/§3.2/§3.3/§4 design-choice studies.
+//!
+//! All four need compiled artifacts (they reproduce the paper's numbers on
+//! the real model) and print a note instead of failing when artifacts are
+//! missing. The microbenchmark suite lives in [`super::suite`].
+
+use anyhow::Result;
+
+use super::{save_json, series_json, sparkline, Table};
+use crate::coordinator::baseline::{AdamWParams, AdamWTrainer};
+use crate::coordinator::engine::GauntletBuilder;
+use crate::coordinator::fast_eval::sync_score;
+use crate::coordinator::run::RunConfig;
+use crate::coordinator::scoring::normalize_scores;
+use crate::data::Corpus;
+use crate::demo::aggregate::{aggregate, AggregateOpts};
+use crate::demo::SparseGrad;
+use crate::eval::{evaluate_suite, Suite};
+use crate::minjson::{self, Value};
+use crate::peers::Behavior;
+use crate::runtime::{artifact_dir, artifacts_available, Executor};
+use crate::util::{mean, std_dev, Rng};
+
+/// Fig. 1: Gauntlet permissionless run vs centralized AdamW DDP at `nano`
+/// scale — heldout-loss curves, token counts, and `bench_results/fig1.json`.
+pub fn fig1(rounds: u64) -> Result<()> {
+    if !artifacts_available("nano") {
+        println!("fig1: artifacts missing; run `make artifacts` first");
+        return Ok(());
+    }
+    // Incentivized population: data multipliers above 1 are what the
+    // incentive buys the network (paper §6: "participants were successfully
+    // incentivized to process more data").
+    let peers = vec![
+        Behavior::Honest { data_mult: 2.0 },
+        Behavior::Honest { data_mult: 1.5 },
+        Behavior::Honest { data_mult: 1.0 },
+        Behavior::Honest { data_mult: 1.0 },
+        Behavior::Honest { data_mult: 1.0 },
+        Behavior::Freeloader,
+    ];
+    let n_workers = 5;
+
+    let mut cfg = RunConfig {
+        model: "nano".to_string(),
+        rounds,
+        peers,
+        ..RunConfig::default()
+    };
+    cfg.eval_every = 2;
+    cfg.params.top_g = 4;
+    println!("fig1: gauntlet ({} peers) vs adamw ({} workers), {rounds} rounds", 6, n_workers);
+
+    let mut run = GauntletBuilder::artifact().config(cfg).build()?;
+    let mut g_curve = Vec::new();
+    let mut tokens_gauntlet: u64 = 0;
+    for _ in 0..rounds {
+        let rec = run.run_round()?;
+        tokens_gauntlet += rec.tokens_processed;
+        if let Some(l) = rec.heldout_loss {
+            g_curve.push((rec.round as f64, l));
+        }
+    }
+
+    let exec = Executor::load(artifact_dir("nano"))?;
+    let corpus = Corpus::new(exec.meta.vocab as u32, 0);
+    let mut trainer = AdamWTrainer::new(exec.init_params()?, AdamWParams::default(), n_workers);
+    let mut a_curve = Vec::new();
+    let mut tokens_adamw: u64 = 0;
+    for r in 0..rounds {
+        trainer.step(&exec, &corpus, r)?;
+        tokens_adamw += (n_workers * exec.meta.batch * exec.meta.seq) as u64;
+        if r % 2 == 0 {
+            let toks = corpus.heldout(0, exec.meta.batch, exec.meta.seq + 1);
+            a_curve.push((r as f64, exec.loss(&trainer.theta, &toks)? as f64));
+        }
+    }
+
+    let gl: Vec<f64> = g_curve.iter().map(|(_, y)| *y).collect();
+    let al: Vec<f64> = a_curve.iter().map(|(_, y)| *y).collect();
+    let mut t =
+        Table::new("Fig. 1 — heldout loss by round", &["round", "templar (gauntlet)", "adamw ddp"]);
+    for (i, (r, gy)) in g_curve.iter().enumerate() {
+        let ay = a_curve.get(i).map(|(_, y)| format!("{y:.4}")).unwrap_or_default();
+        t.row(&[format!("{r}"), format!("{gy:.4}"), ay]);
+    }
+    t.print();
+    println!("  templar {}", sparkline(&gl, 50));
+    println!("  adamw   {}", sparkline(&al, 50));
+    println!(
+        "  tokens: templar={tokens_gauntlet} adamw={tokens_adamw} (incentivized peers processed {:.2}x)",
+        tokens_gauntlet as f64 / tokens_adamw as f64
+    );
+    println!(
+        "  final: templar={:.4} adamw={:.4}",
+        gl.last().unwrap(),
+        al.last().unwrap()
+    );
+
+    save_json(
+        "fig1",
+        &minjson::obj(vec![
+            ("gauntlet", series_json(&g_curve)),
+            ("adamw", series_json(&a_curve)),
+            ("tokens_gauntlet", minjson::num(tokens_gauntlet as f64)),
+            ("tokens_adamw", minjson::num(tokens_adamw as f64)),
+        ]),
+    );
+    Ok(())
+}
+
+/// Fig. 2: LossScore / LossRating evolution for three peer types — 2x-data,
+/// desynchronized (3-round pause), and baseline — each evaluated every
+/// round (S = K, the paper's controlled simulation).
+pub fn fig2(rounds: u64) -> Result<()> {
+    if !artifacts_available("nano") {
+        println!("fig2: artifacts missing; run `make artifacts` first");
+        return Ok(());
+    }
+    let desync_at = 5;
+
+    let peers = vec![
+        Behavior::Honest { data_mult: 2.0 },
+        Behavior::Desync { at: desync_at, pause: 3 },
+        Behavior::Honest { data_mult: 1.0 },
+    ];
+    let mut cfg = RunConfig {
+        model: "nano".to_string(),
+        rounds,
+        peers,
+        ..RunConfig::default()
+    };
+    cfg.params.eval_sample = 3;
+    cfg.params.top_g = 3;
+    cfg.eval_every = 0;
+
+    let mut run = GauntletBuilder::artifact().config(cfg).build()?;
+    let labels = ["2x-data", "desync", "baseline"];
+    let mut scores: Vec<Vec<Option<f64>>> = vec![Vec::new(); 3];
+    let mut ratings: Vec<Vec<f64>> = vec![Vec::new(); 3];
+    for _ in 0..rounds {
+        let rec = run.run_round()?;
+        for (i, p) in rec.peers.iter().enumerate() {
+            scores[i].push(p.loss_score_rand);
+            ratings[i].push(p.rating_mu);
+        }
+    }
+
+    let mut t = Table::new(
+        "Fig. 2 — per-round LossScore (rand) / LossRating",
+        &["peer", "score mean", "score std", "rating start", "rating end", "rating sparkline"],
+    );
+    for i in 0..3 {
+        let s: Vec<f64> = scores[i].iter().flatten().copied().collect();
+        t.row(&[
+            labels[i].to_string(),
+            format!("{:+.4}", mean(&s)),
+            format!("{:.4}", std_dev(&s)),
+            format!("{:.2}", ratings[i].first().unwrap()),
+            format!("{:.2}", ratings[i].last().unwrap()),
+            sparkline(&ratings[i], 30),
+        ]);
+    }
+    t.print();
+
+    // Shape assertions (reported, not fatal — this is a bench).
+    let end = |i: usize| *ratings[i].last().unwrap();
+    println!("\nshape check (paper Fig. 2):");
+    println!(
+        "  2x-data rating > baseline rating: {} ({:.2} vs {:.2})",
+        end(0) > end(2),
+        end(0),
+        end(2)
+    );
+    println!(
+        "  desync rating < baseline rating:  {} ({:.2} vs {:.2})",
+        end(1) < end(2),
+        end(1),
+        end(2)
+    );
+    let noisy = {
+        let s: Vec<f64> = scores[2].iter().flatten().copied().collect();
+        std_dev(&s) > 0.1 * mean(&s).abs()
+    };
+    println!("  LossScore noisy round-to-round:   {noisy}");
+
+    save_json(
+        "fig2",
+        &minjson::obj(vec![(
+            "peers",
+            Value::Arr(
+                (0..3)
+                    .map(|i| {
+                        minjson::obj(vec![
+                            ("label", minjson::s(labels[i])),
+                            (
+                                "scores",
+                                Value::Arr(
+                                    scores[i]
+                                        .iter()
+                                        .map(|o| o.map(minjson::num).unwrap_or(Value::Null))
+                                        .collect(),
+                                ),
+                            ),
+                            ("ratings", minjson::arr_f64(&ratings[i])),
+                        ])
+                    })
+                    .collect(),
+            ),
+        )]),
+    );
+    Ok(())
+}
+
+/// Table 1: downstream zero-shot evaluation of the permissionless
+/// checkpoint vs the AdamW-DDP checkpoint vs the untrained model.
+pub fn table1(rounds: u64, items: usize) -> Result<()> {
+    if !artifacts_available("nano") {
+        println!("table1: artifacts missing; run `make artifacts` first");
+        return Ok(());
+    }
+    // Train both systems on the same token budget.
+    let peers = vec![Behavior::Honest { data_mult: 1.0 }; 5];
+    let mut cfg = RunConfig {
+        model: "nano".to_string(),
+        rounds,
+        peers,
+        ..RunConfig::default()
+    };
+    cfg.eval_every = 0;
+    println!("table1: training templar + adamw for {rounds} rounds, then {items} items/suite");
+    let mut run = GauntletBuilder::artifact().config(cfg).build()?;
+    for _ in 0..rounds {
+        run.run_round()?;
+    }
+    let theta_templar = run.theta().to_vec();
+
+    let exec = Executor::load(artifact_dir("nano"))?;
+    let corpus = Corpus::new(exec.meta.vocab as u32, 0);
+    let mut trainer = AdamWTrainer::new(exec.init_params()?, AdamWParams::default(), 5);
+    for r in 0..rounds {
+        trainer.step(&exec, &corpus, r)?;
+    }
+
+    let theta_init = exec.init_params()?;
+    let rows: Vec<(&str, &Vec<f32>)> = vec![
+        ("TEMPLAR (gauntlet)", &theta_templar),
+        ("AdamW DDP", &trainer.theta),
+        ("untrained", &theta_init),
+    ];
+
+    let mut t = Table::new(
+        "Table 1 — zero-shot acc_norm (synthetic analogues)",
+        &["model", "synth-hellaswag", "synth-piqa", "synth-arc-e"],
+    );
+    let mut json_rows = Vec::new();
+    for (name, theta) in &rows {
+        let mut cells = vec![name.to_string()];
+        let mut obj = vec![("model", minjson::s(name))];
+        for suite in Suite::all() {
+            let r = evaluate_suite(&exec, theta, &corpus, suite, items)?;
+            cells.push(format!("{:.3}", r.acc_norm));
+            obj.push((suite.name(), minjson::num(r.acc_norm)));
+        }
+        t.row(&cells);
+        json_rows.push(minjson::obj(obj));
+    }
+    t.row(&[
+        "chance".into(),
+        "0.250".into(),
+        "0.500".into(),
+        "0.250".into(),
+    ]);
+    t.print();
+    println!("\n(paper Table 1 shape: trained models comparable, both above chance)");
+    save_json("table1", &Value::Arr(json_rows));
+    Ok(())
+}
+
+/// The §3.1/§3.2/§3.3/§4 ablation studies. `which` selects sub-studies by
+/// name (`beta`, `incentive`, `sync`, `byzantine`); empty runs all four.
+pub fn ablations(which: &[String]) -> Result<()> {
+    let all = which.is_empty();
+    let has = |n: &str| all || which.iter().any(|w| w == n);
+
+    if has("incentive") {
+        ablate_incentive();
+    }
+    if has("byzantine") {
+        ablate_byzantine();
+    }
+    if !artifacts_available("nano") {
+        println!("\n[beta/sync ablations need artifacts; run `make artifacts`]");
+        return Ok(());
+    }
+    let exec = Executor::load(artifact_dir("nano"))?;
+    if has("sync") {
+        ablate_sync(&exec)?;
+    }
+    if has("beta") {
+        ablate_beta(&exec)?;
+    }
+    Ok(())
+}
+
+/// §3.3: one user with 10 GPUs as ONE strong peer vs TEN weak peers.
+fn ablate_incentive() {
+    // A network of peers with a spread of PEERSCOREs (weakest at 0 so the
+    // eq. 5 min-shift keeps everyone's relative position). The user in
+    // question either consolidates its 10 GPUs into ONE strong peer
+    // (score 10) or splits them into TEN weak peers (score 1 each).
+    let field = [6.0, 5.0, 4.0, 3.0, 0.0];
+    let one_strong: Vec<f64> = std::iter::once(10.0).chain(field).collect();
+    let ten_weak: Vec<f64> = vec![1.0; 10].into_iter().chain(field).collect();
+    let mut t = Table::new(
+        "§3.3 incentive concentration: one 10-GPU peer vs ten 1-GPU peers",
+        &["norm power c", "share (1 strong peer)", "share (10 weak peers total)", "strong/weak"],
+    );
+    let mut json = Vec::new();
+    for c in [1.0, 2.0, 3.0] {
+        let s = normalize_scores(&one_strong, c)[0];
+        let w: f64 = normalize_scores(&ten_weak, c)[..10].iter().sum();
+        t.row(&[
+            format!("{c}"),
+            format!("{:.3}", s),
+            format!("{:.3}", w),
+            format!("{:.2}x", s / w.max(1e-9)),
+        ]);
+        json.push(minjson::obj(vec![
+            ("c", minjson::num(c)),
+            ("strong", minjson::num(s)),
+            ("weak", minjson::num(w)),
+        ]));
+    }
+    t.print();
+    println!("(c=2, the paper's choice, rewards consolidating GPUs into one strong peer)");
+    save_json("ablation_incentive", &Value::Arr(json));
+}
+
+/// §4: rescaling attack in the encoded domain, with/without normalization.
+fn ablate_byzantine() {
+    let mut rng = Rng::new(7);
+    let p_pad = 4096;
+    let c = 256;
+    let mk = |rng: &mut Rng, scale: f32| SparseGrad {
+        vals: (0..c).map(|_| rng.normal_f32(0.0, scale)).collect(),
+        idx: (0..c).map(|_| rng.below(p_pad as u64) as i32).collect(),
+    };
+    let honest: Vec<SparseGrad> = (0..4).map(|_| mk(&mut rng, 1.0)).collect();
+    let attacker = mk(&mut rng, 1000.0);
+
+    let cos = |a: &[f32], b: &[f32]| {
+        let dot: f64 = a.iter().zip(b).map(|(x, y)| *x as f64 * *y as f64).sum();
+        let na: f64 = a.iter().map(|x| (*x as f64).powi(2)).sum::<f64>().sqrt();
+        let nb: f64 = b.iter().map(|x| (*x as f64).powi(2)).sum::<f64>().sqrt();
+        dot / (na * nb).max(1e-12)
+    };
+
+    let mut t = Table::new(
+        "§4 rescaling attack (x1000): aggregate fidelity vs honest-only",
+        &["normalization", "cosine(honest-only, with-attacker)", "attacker share of L2"],
+    );
+    let mut json = Vec::new();
+    for normalize in [true, false] {
+        let opts = AggregateOpts { normalize, ..Default::default() };
+        let w = 1.0 / 5.0;
+        let honest_refs: Vec<(&SparseGrad, f64)> = honest.iter().map(|g| (g, w)).collect();
+        let clean = aggregate(&honest_refs, p_pad, &opts);
+        let mut with_att = honest_refs.clone();
+        with_att.push((&attacker, w));
+        let dirty = aggregate(&with_att, p_pad, &opts);
+        let att_only = aggregate(&[(&attacker, w)], p_pad, &opts);
+        let att_norm: f64 = att_only.iter().map(|x| (*x as f64).powi(2)).sum::<f64>().sqrt();
+        let dirty_norm: f64 = dirty.iter().map(|x| (*x as f64).powi(2)).sum::<f64>().sqrt();
+        let fidelity = cos(&clean, &dirty);
+        t.row(&[
+            if normalize { "ON (paper)" } else { "OFF" }.to_string(),
+            format!("{:.4}", fidelity),
+            format!("{:.3}", att_norm / dirty_norm.max(1e-12)),
+        ]);
+        json.push(minjson::obj(vec![
+            ("normalize", Value::Bool(normalize)),
+            ("fidelity", minjson::num(fidelity)),
+        ]));
+    }
+    t.print();
+    println!("(normalization keeps the aggregate pointing where honest peers point)");
+    save_json("ablation_byzantine", &Value::Arr(json));
+}
+
+/// §3.2: SyncScore vs actual lag in signed steps.
+fn ablate_sync(exec: &Executor) -> Result<()> {
+    let meta = &exec.meta;
+    let mut theta = exec.init_params()?;
+    let stale = theta.clone();
+    let mut rng = Rng::new(3);
+    // DeMo updates are momentum-correlated across adjacent rounds (error
+    // feedback, decay 0.999), so a stale peer's divergence grows close to
+    // linearly in lag — model that with a persistent base direction plus
+    // fresh per-round noise.
+    let mut base = vec![0.0f32; meta.padded_count];
+    for _ in 0..meta.coeff_count {
+        let i = rng.below(meta.padded_count as u64) as usize;
+        base[i] += rng.normal_f32(0.0, 1.0);
+    }
+    let mut t = Table::new(
+        "§3.2 SyncScore vs true lag (threshold = 3)",
+        &["lag (rounds)", "SyncScore", "passes filter"],
+    );
+    let mut json = Vec::new();
+    for lag in 0..=6u32 {
+        let probe_peer = meta.sync_probe(&stale);
+        let probe_val = meta.sync_probe(&theta);
+        let s = sync_score(&probe_val, &probe_peer, 0.02);
+        t.row(&[lag.to_string(), format!("{s:.3}"), (s <= 3.0).to_string()]);
+        json.push(minjson::obj(vec![
+            ("lag", minjson::num(lag as f64)),
+            ("sync_score", minjson::num(s)),
+        ]));
+        // validator takes one more signed, momentum-correlated update step
+        let coeff: Vec<f32> = base
+            .iter()
+            .map(|b| b + 0.3 * rng.normal_f32(0.0, 1.0) * (*b != 0.0) as u8 as f32)
+            .collect();
+        theta = exec.apply_update(&theta, &coeff, 0.02)?;
+    }
+    t.print();
+    println!("(score grows ~linearly with lag under momentum-correlated updates; the threshold-3 filter rejects ~>=4-step-stale peers)");
+    save_json("ablation_sync", &Value::Arr(json));
+    Ok(())
+}
+
+/// §3.1: beta = c*alpha sweep — negative-LossScore rate and rank stability.
+fn ablate_beta(exec: &Executor) -> Result<()> {
+    let meta = &exec.meta;
+    let corpus = Corpus::new(meta.vocab as u32, 0);
+    let theta = exec.init_params()?;
+    let (b, s1) = (meta.batch, meta.seq + 1);
+    let lr = 0.02f32;
+
+    // Four honest peers' pseudo-gradients with different data amounts
+    // (1..4 microbatches) — ground-truth quality ranking is 4 > 3 > 2 > 1.
+    let mut grads = Vec::new();
+    for (uid, n_mb) in [(1u32, 1usize), (2, 2), (3, 3), (4, 4)] {
+        let mut acc = vec![0.0f32; meta.param_count];
+        for mb in 0..n_mb {
+            let toks = corpus.assigned_shard(uid, 0, mb as u32, b, s1);
+            let (_, g) = exec.grad(&theta, &toks)?;
+            for (a, gi) in acc.iter_mut().zip(&g) {
+                *a += gi / n_mb as f32;
+            }
+        }
+        let e = vec![0.0f32; meta.param_count];
+        let (vals, idx, _) = exec.demo_compress(&e, &acc, 0.999)?;
+        let mut dense = vec![0.0f32; meta.padded_count];
+        let g = SparseGrad { vals, idx };
+        let n = g.l2_norm();
+        g.scatter_into(&mut dense, (1.0 / n) as f32);
+        grads.push(dense);
+    }
+
+    let mut t = Table::new(
+        "§3.1 beta sweep (beta = c * alpha): LossScore quality over 6 data draws",
+        &["c", "mean score", "score std", "neg rate", "rank stability"],
+    );
+    let mut json = Vec::new();
+    for c in [0.25f32, 0.5, 1.0, 2.0] {
+        let beta = c * lr;
+        let mut all_scores: Vec<f64> = Vec::new();
+        let mut orderings: Vec<Vec<usize>> = Vec::new();
+        for draw in 0..6u32 {
+            let tok = corpus.random_eval(1000 + draw as u64, draw, b, s1);
+            let mut scores = Vec::new();
+            for dense in &grads {
+                let (_, _, l0, l1) = exec.eval_peer(&theta, dense, beta, &tok, &tok)?;
+                scores.push(l0 as f64 - l1 as f64);
+            }
+            all_scores.extend(&scores);
+            let mut order: Vec<usize> = (0..scores.len()).collect();
+            order.sort_by(|&i, &j| scores[j].partial_cmp(&scores[i]).unwrap());
+            orderings.push(order);
+        }
+        // rank stability: mean pairwise agreement of the top choice
+        let top_counts = orderings.iter().filter(|o| o[0] == orderings[0][0]).count();
+        let stability = top_counts as f64 / orderings.len() as f64;
+        let neg_rate =
+            all_scores.iter().filter(|s| **s < 0.0).count() as f64 / all_scores.len() as f64;
+        t.row(&[
+            format!("{c}"),
+            format!("{:+.4}", mean(&all_scores)),
+            format!("{:.4}", std_dev(&all_scores)),
+            format!("{:.2}", neg_rate),
+            format!("{:.2}", stability),
+        ]);
+        json.push(minjson::obj(vec![
+            ("c", minjson::num(c as f64)),
+            ("mean", minjson::num(mean(&all_scores))),
+            ("std", minjson::num(std_dev(&all_scores))),
+            ("neg_rate", minjson::num(neg_rate)),
+            ("stability", minjson::num(stability)),
+        ]));
+    }
+    t.print();
+    println!("(paper: smaller c => fewer negative scores, more consistent rankings)");
+    save_json("ablation_beta", &Value::Arr(json));
+    Ok(())
+}

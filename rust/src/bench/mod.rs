@@ -1,6 +1,14 @@
 //! Bench harness utilities (criterion is unavailable in this vendored
 //! environment; the `[[bench]]` targets use `harness = false` and this
 //! module for timing, table rendering, and result persistence).
+//!
+//! The structured PerfLab harness — the named-benchmark registry, the
+//! `BENCH_<suite>.json` schema, and the baseline-diff regression gate
+//! behind `gauntlet bench` — lives in [`suite`]; the paper-figure
+//! reproductions the `rust/benches/` binaries wrap live in [`figures`].
+
+pub mod figures;
+pub mod suite;
 
 use std::fmt::Write as _;
 use std::time::{Duration, Instant};
@@ -46,13 +54,28 @@ pub fn time_it<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Timing {
         f();
         samples.push(t0.elapsed().as_secs_f64());
     }
+    summarize(&samples)
+}
+
+/// Collapse raw per-iteration samples into a [`Timing`]. Degenerate inputs
+/// are handled deterministically instead of propagated (the same policy
+/// `coordinator::scoring::normalize_scores` applies to scores): an empty
+/// sample set yields all-zero statistics rather than the ±inf the naive
+/// min/max folds produce at `iters == 0`, and non-finite samples are
+/// quarantined — excluded from every statistic — so one NaN cannot poison
+/// a whole suite result.
+pub fn summarize(samples: &[f64]) -> Timing {
+    let clean: Vec<f64> = samples.iter().copied().filter(|s| s.is_finite()).collect();
+    if clean.is_empty() {
+        return Timing { iters: 0, mean_s: 0.0, std_s: 0.0, p50_s: 0.0, min_s: 0.0, max_s: 0.0 };
+    }
     Timing {
-        iters,
-        mean_s: mean(&samples),
-        std_s: std_dev(&samples),
-        p50_s: percentile(&samples, 50.0),
-        min_s: samples.iter().cloned().fold(f64::INFINITY, f64::min),
-        max_s: samples.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+        iters: clean.len(),
+        mean_s: mean(&clean),
+        std_s: std_dev(&clean),
+        p50_s: percentile(&clean, 50.0),
+        min_s: clean.iter().cloned().fold(f64::INFINITY, f64::min),
+        max_s: clean.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
     }
 }
 
@@ -178,6 +201,28 @@ mod tests {
         assert_eq!(t.iters, 5);
         assert!(t.mean_s >= 0.002, "mean {}", t.mean_s);
         assert!(t.min_s <= t.p50_s && t.p50_s <= t.max_s);
+    }
+
+    #[test]
+    fn summarize_guards_empty_samples() {
+        // iters == 0 used to fold min/max over ±inf; all stats must be
+        // finite zeros instead.
+        let t = time_it(0, 0, || {});
+        assert_eq!(t.iters, 0);
+        assert_eq!((t.mean_s, t.p50_s, t.min_s, t.max_s), (0.0, 0.0, 0.0, 0.0));
+        assert!(t.std_s == 0.0);
+    }
+
+    #[test]
+    fn summarize_quarantines_non_finite_samples() {
+        let t = summarize(&[1.0, f64::NAN, 3.0, f64::INFINITY, f64::NEG_INFINITY]);
+        assert_eq!(t.iters, 2, "only the finite samples count");
+        assert!((t.mean_s - 2.0).abs() < 1e-12);
+        assert_eq!(t.min_s, 1.0);
+        assert_eq!(t.max_s, 3.0);
+        let all_bad = summarize(&[f64::NAN, f64::INFINITY]);
+        assert_eq!(all_bad.iters, 0);
+        assert_eq!(all_bad.min_s, 0.0);
     }
 
     #[test]

@@ -1,0 +1,826 @@
+//! PerfLab: the unified benchmark suite behind `gauntlet bench`.
+//!
+//! The paper's deployment bottleneck is validator-side evaluation
+//! throughput — every validator scores every peer's pseudo-gradient every
+//! round — so this module turns the repository's scattered bench binaries
+//! into one harness with three properties the ad-hoc tables lacked:
+//!
+//! 1. **A registry of named benchmarks** ([`registry`]): sparse DeMo
+//!    aggregation, wire encode/decode, OpenSkill updates, a Yuma epoch at
+//!    deployed scale (64 validators x 256 peers), the fast-eval fan-out,
+//!    and the full round pipeline swept over worker-thread counts. Names
+//!    are stable identifiers — they are what baseline diffs key on.
+//! 2. **A machine-readable schema** ([`SuiteResult`]): `BENCH_<suite>.json`
+//!    carries a run fingerprint (git commit, thread budget, OS) plus
+//!    per-bench mean/p50/min/std and workload throughput, and round-trips
+//!    losslessly through `minjson` ([`SuiteResult::from_json`]).
+//! 3. **A baseline-diff mode** ([`compare`]): ratios of current vs
+//!    baseline mean per bench, with anything slower than `fail_over`
+//!    reported as a regression — the CI `perf-smoke` job exits non-zero
+//!    on it (`gauntlet bench --suite hotpath --compare
+//!    baseline/BENCH_hotpath.json --fail-over 1.5`).
+//!
+//! `--quick` shrinks iteration counts (and the round-pipeline workload)
+//! for PR-gate latency but still runs **every** registered bench, so quick
+//! results carry the same bench names as full results. Quick and full
+//! timings are *not* comparable, which is why [`SuiteResult`] records the
+//! mode and the CLI refuses to `--compare` across modes.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use super::{human_duration, time_it, Table, Timing};
+use crate::chain::yuma::{yuma_consensus, YumaParams};
+use crate::chain::Uid;
+use crate::coordinator::engine::GauntletBuilder;
+use crate::coordinator::fast_eval::{fast_evaluate_all, RoundChecks};
+use crate::coordinator::run::RunConfig;
+use crate::data::Corpus;
+use crate::demo::aggregate::{aggregate_into, AggregateOpts};
+use crate::demo::wire::Submission;
+use crate::demo::SparseGrad;
+use crate::minjson::{self, field, fnum, read_f64, Value};
+use crate::openskill::{PlackettLuce, Rating};
+use crate::peers::Behavior;
+use crate::storage::{ObjectStore, ProviderModel, ReadKey};
+use crate::util::Rng;
+
+/// Version stamp of the `BENCH_<suite>.json` schema; bumped on any
+/// incompatible change so stale baselines fail loudly instead of diffing
+/// garbage.
+pub const SCHEMA_VERSION: u64 = 1;
+
+// ---------------------------------------------------------------------
+// registry
+// ---------------------------------------------------------------------
+
+/// Knobs shared by every benchmark in a suite run.
+pub struct BenchCtx {
+    /// Shrink iteration counts for PR-gate latency (`--quick`). Every
+    /// registered bench still runs at least once.
+    pub quick: bool,
+}
+
+impl BenchCtx {
+    /// Scale a full-mode iteration count down in quick mode (>= 2, so
+    /// mean/p50 stay meaningful).
+    pub fn iters(&self, full: usize) -> usize {
+        if self.quick {
+            (full / 10).max(2)
+        } else {
+            full
+        }
+    }
+
+    /// Warmup calls before timing starts.
+    pub fn warmup(&self, full: usize) -> usize {
+        if self.quick {
+            1
+        } else {
+            full
+        }
+    }
+}
+
+/// What one benchmark measured.
+pub struct BenchOutcome {
+    pub timing: Timing,
+    /// Workload-specific rate, e.g. `(812.4, "Mcoeff/s")`.
+    pub throughput: Option<(f64, &'static str)>,
+}
+
+/// One registered benchmark. `run` returns `Ok(None)` when the bench has
+/// nothing to measure in this environment (e.g. compiled artifacts are
+/// missing) — it is reported as skipped, not failed.
+pub struct Benchmark {
+    pub name: &'static str,
+    #[allow(clippy::type_complexity)]
+    pub run: Box<dyn Fn(&BenchCtx) -> Result<Option<BenchOutcome>>>,
+}
+
+/// A named set of benchmarks (`gauntlet bench --suite <name>`).
+pub struct SuiteSpec {
+    pub name: &'static str,
+    pub description: &'static str,
+    pub benches: Vec<Benchmark>,
+}
+
+fn bench(
+    name: &'static str,
+    run: impl Fn(&BenchCtx) -> Result<Option<BenchOutcome>> + 'static,
+) -> Benchmark {
+    Benchmark { name, run: Box::new(run) }
+}
+
+/// Every registered suite. Bench *names* are the stable contract baseline
+/// diffs key on; adding a bench requires a baseline refresh before the CI
+/// gate covers it (see `baseline/README.md`).
+pub fn registry() -> Vec<SuiteSpec> {
+    vec![
+        SuiteSpec {
+            name: "hotpath",
+            description: "per-round critical path: aggregation, wire codec, \
+                          ratings, Yuma, fast-eval fan-out, full-round thread sweep",
+            benches: vec![
+                bench("aggregate_g4_c1312", |c| bench_aggregate(c, 4, 1312, 167_936)),
+                bench("aggregate_g15_c1312", |c| bench_aggregate(c, 15, 1312, 167_936)),
+                bench("aggregate_g15_c57952", |c| bench_aggregate(c, 15, 57_952, 7_372_800)),
+                bench("wire_encode_c1312", |c| bench_wire(c, 1312, true)),
+                bench("wire_decode_c1312", |c| bench_wire(c, 1312, false)),
+                bench("wire_encode_c57952", |c| bench_wire(c, 57_952, true)),
+                bench("wire_decode_c57952", |c| bench_wire(c, 57_952, false)),
+                bench("openskill_match_16", bench_openskill),
+                bench("yuma_epoch_64x256", bench_yuma),
+                bench("corpus_shard", bench_corpus),
+                bench("fasteval_32p_seq", |c| bench_fasteval(c, 1)),
+                bench("fasteval_32p_fan4", |c| bench_fasteval(c, 4)),
+                bench("round_pipeline_t1", |c| bench_round_pipeline(c, 1)),
+                bench("round_pipeline_t2", |c| bench_round_pipeline(c, 2)),
+                bench("round_pipeline_t4", |c| bench_round_pipeline(c, 4)),
+                bench("round_pipeline_t8", |c| bench_round_pipeline(c, 8)),
+            ],
+        },
+    ]
+}
+
+/// Look a suite up by name.
+pub fn find_suite(name: &str) -> Option<SuiteSpec> {
+    registry().into_iter().find(|s| s.name == name)
+}
+
+// ---------------------------------------------------------------------
+// runner
+// ---------------------------------------------------------------------
+
+/// Run every benchmark in `spec`, print the human table, and return the
+/// machine-readable result.
+pub fn run_suite(spec: &SuiteSpec, ctx: &BenchCtx) -> Result<SuiteResult> {
+    let title = if ctx.quick {
+        format!("{} suite (quick)", spec.name)
+    } else {
+        format!("{} suite", spec.name)
+    };
+    let mut table = Table::new(&title, &["bench", "mean", "p50", "min", "throughput"]);
+    let mut benches = Vec::new();
+    for b in &spec.benches {
+        let outcome = (b.run)(ctx).with_context(|| format!("bench {:?}", b.name))?;
+        let Some(out) = outcome else {
+            println!("[skipped {}: nothing to measure in this environment]", b.name);
+            continue;
+        };
+        table.row(&[
+            b.name.to_string(),
+            human_duration(out.timing.mean_s),
+            human_duration(out.timing.p50_s),
+            human_duration(out.timing.min_s),
+            out.throughput
+                .map(|(v, unit)| format!("{v:.1} {unit}"))
+                .unwrap_or_default(),
+        ]);
+        benches.push(BenchRecord {
+            name: b.name.to_string(),
+            iters: out.timing.iters,
+            mean_s: out.timing.mean_s,
+            p50_s: out.timing.p50_s,
+            min_s: out.timing.min_s,
+            std_s: out.timing.std_s,
+            throughput: out.throughput.map(|(v, _)| v),
+            throughput_unit: out.throughput.map(|(_, u)| u.to_string()),
+        });
+    }
+    table.print();
+    Ok(SuiteResult {
+        schema_version: SCHEMA_VERSION,
+        suite: spec.name.to_string(),
+        quick: ctx.quick,
+        fingerprint: RunFingerprint {
+            git_commit: git_commit(),
+            threads: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+            os: std::env::consts::OS.to_string(),
+        },
+        benches,
+    })
+}
+
+/// Write a result to the conventional location
+/// (`rust/bench_results/BENCH_<suite>.json`) for the bench binaries; the
+/// CLI writes wherever `--out` points instead.
+pub fn save_default(result: &SuiteResult) -> Result<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("bench_results");
+    std::fs::create_dir_all(&dir).with_context(|| format!("creating {}", dir.display()))?;
+    let path = dir.join(format!("BENCH_{}.json", result.suite));
+    std::fs::write(&path, result.to_json().write())
+        .with_context(|| format!("writing {}", path.display()))?;
+    println!("[saved {}]", path.display());
+    Ok(path)
+}
+
+/// Best-effort current git commit for the result fingerprint, read straight
+/// from `.git` (no subprocess): resolves `HEAD` through loose and packed
+/// refs; "unknown" outside a checkout.
+pub fn git_commit() -> String {
+    let manifest = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    let mut roots = Vec::new();
+    if let Some(parent) = manifest.parent() {
+        roots.push(parent.to_path_buf());
+    }
+    roots.push(manifest);
+    for root in roots {
+        let git = root.join(".git");
+        let Ok(head) = std::fs::read_to_string(git.join("HEAD")) else { continue };
+        let head = head.trim();
+        let Some(r) = head.strip_prefix("ref: ") else {
+            if !head.is_empty() {
+                return head.to_string(); // detached HEAD: the sha itself
+            }
+            continue;
+        };
+        if let Ok(sha) = std::fs::read_to_string(git.join(r)) {
+            let sha = sha.trim();
+            if !sha.is_empty() {
+                return sha.to_string();
+            }
+        }
+        if let Ok(packed) = std::fs::read_to_string(git.join("packed-refs")) {
+            for line in packed.lines() {
+                if let Some(sha) = line.strip_suffix(r) {
+                    return sha.trim().to_string();
+                }
+            }
+        }
+    }
+    "unknown".to_string()
+}
+
+// ---------------------------------------------------------------------
+// schema
+// ---------------------------------------------------------------------
+
+/// One bench's summary inside a [`SuiteResult`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct BenchRecord {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub min_s: f64,
+    pub std_s: f64,
+    /// Workload-specific rate, if the bench reports one.
+    pub throughput: Option<f64>,
+    pub throughput_unit: Option<String>,
+}
+
+/// Where and how a suite result was produced.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RunFingerprint {
+    pub git_commit: String,
+    /// Available parallelism on the measuring machine.
+    pub threads: usize,
+    pub os: String,
+}
+
+/// The `BENCH_<suite>.json` payload (schema v[`SCHEMA_VERSION`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SuiteResult {
+    pub schema_version: u64,
+    pub suite: String,
+    pub quick: bool,
+    pub fingerprint: RunFingerprint,
+    pub benches: Vec<BenchRecord>,
+}
+
+impl BenchRecord {
+    pub fn to_json(&self) -> Value {
+        minjson::obj(vec![
+            ("name", minjson::s(&self.name)),
+            ("iters", minjson::num(self.iters as f64)),
+            ("mean_s", fnum(self.mean_s)),
+            ("p50_s", fnum(self.p50_s)),
+            ("min_s", fnum(self.min_s)),
+            ("std_s", fnum(self.std_s)),
+            ("throughput", self.throughput.map(fnum).unwrap_or(Value::Null)),
+            (
+                "throughput_unit",
+                self.throughput_unit.as_deref().map(minjson::s).unwrap_or(Value::Null),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<BenchRecord> {
+        let throughput = match v.get("throughput") {
+            Value::Null => None,
+            other => Some(read_f64(other).context("bench record bad \"throughput\"")?),
+        };
+        let throughput_unit = match v.get("throughput_unit") {
+            Value::Null => None,
+            other => Some(
+                other
+                    .as_str()
+                    .map(str::to_string)
+                    .context("bench record bad \"throughput_unit\"")?,
+            ),
+        };
+        Ok(BenchRecord {
+            name: field::string(v, "name")?,
+            iters: field::size(v, "iters")?,
+            mean_s: field::f64(v, "mean_s")?,
+            p50_s: field::f64(v, "p50_s")?,
+            min_s: field::f64(v, "min_s")?,
+            std_s: field::f64(v, "std_s")?,
+            throughput,
+            throughput_unit,
+        })
+    }
+}
+
+impl SuiteResult {
+    pub fn to_json(&self) -> Value {
+        minjson::obj(vec![
+            ("schema_version", minjson::num(self.schema_version as f64)),
+            ("suite", minjson::s(&self.suite)),
+            ("quick", Value::Bool(self.quick)),
+            (
+                "fingerprint",
+                minjson::obj(vec![
+                    ("git_commit", minjson::s(&self.fingerprint.git_commit)),
+                    ("threads", minjson::num(self.fingerprint.threads as f64)),
+                    ("os", minjson::s(&self.fingerprint.os)),
+                ]),
+            ),
+            (
+                "benches",
+                Value::Arr(self.benches.iter().map(|b| b.to_json()).collect()),
+            ),
+        ])
+    }
+
+    /// Inverse of [`SuiteResult::to_json`]; rejects unknown schema
+    /// versions rather than diffing incompatible data.
+    pub fn from_json(v: &Value) -> Result<SuiteResult> {
+        let version = field::unsigned(v, "schema_version")?;
+        if version != SCHEMA_VERSION {
+            bail!("bench schema version {version} is not supported (expected {SCHEMA_VERSION})");
+        }
+        let fp = v.get("fingerprint");
+        Ok(SuiteResult {
+            schema_version: version,
+            suite: field::string(v, "suite")?,
+            quick: field::boolean(v, "quick")?,
+            fingerprint: RunFingerprint {
+                git_commit: field::string(fp, "git_commit")?,
+                threads: field::size(fp, "threads")?,
+                os: field::string(fp, "os")?,
+            },
+            benches: v
+                .get("benches")
+                .as_arr()
+                .context("bench result missing \"benches\"")?
+                .iter()
+                .map(BenchRecord::from_json)
+                .collect::<Result<_>>()?,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------
+// baseline diff
+// ---------------------------------------------------------------------
+
+/// One bench's current-vs-baseline ratio.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BenchDelta {
+    pub name: String,
+    pub baseline_mean_s: f64,
+    pub current_mean_s: f64,
+    /// `current / baseline` mean time — above 1 is slower.
+    pub ratio: f64,
+}
+
+/// The result of diffing a suite run against a baseline file.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Comparison {
+    /// Every bench present in both results, in current-result order.
+    pub deltas: Vec<BenchDelta>,
+    /// Deltas whose ratio exceeded the fail-over threshold.
+    pub regressions: Vec<BenchDelta>,
+    /// Benches measured now but absent from the baseline (baseline needs a
+    /// refresh before the gate covers them).
+    pub only_in_current: Vec<String>,
+    /// Baseline entries no longer registered.
+    pub only_in_baseline: Vec<String>,
+}
+
+/// Diff `current` against `baseline` by bench name. A bench regresses when
+/// `current.mean_s / baseline.mean_s > fail_over`; non-finite or
+/// non-positive baselines yield no verdict (reported in `deltas` with a
+/// NaN ratio, never as a regression), mirroring how `scoring.rs`
+/// quarantines non-finite inputs instead of letting them poison the rest.
+pub fn compare(current: &SuiteResult, baseline: &SuiteResult, fail_over: f64) -> Comparison {
+    let mut out = Comparison::default();
+    let base: BTreeMap<&str, &BenchRecord> =
+        baseline.benches.iter().map(|b| (b.name.as_str(), b)).collect();
+    for b in &current.benches {
+        let Some(bl) = base.get(b.name.as_str()) else {
+            out.only_in_current.push(b.name.clone());
+            continue;
+        };
+        let ratio = if bl.mean_s.is_finite() && bl.mean_s > 0.0 && b.mean_s.is_finite() {
+            b.mean_s / bl.mean_s
+        } else {
+            f64::NAN
+        };
+        let delta = BenchDelta {
+            name: b.name.clone(),
+            baseline_mean_s: bl.mean_s,
+            current_mean_s: b.mean_s,
+            ratio,
+        };
+        if ratio.is_finite() && ratio > fail_over {
+            out.regressions.push(delta.clone());
+        }
+        out.deltas.push(delta);
+    }
+    for b in &baseline.benches {
+        if !current.benches.iter().any(|c| c.name == b.name) {
+            out.only_in_baseline.push(b.name.clone());
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// the benchmarks
+// ---------------------------------------------------------------------
+
+fn mk_grad(rng: &mut Rng, c: usize, p_pad: usize) -> SparseGrad {
+    SparseGrad {
+        vals: (0..c).map(|_| rng.normal_f32(0.0, 1.0)).collect(),
+        idx: (0..c).map(|_| rng.below(p_pad as u64) as i32).collect(),
+    }
+}
+
+/// Sparse DeMo aggregation (scatter-add) at aggregation size `g`,
+/// coefficient count `c`, dense space `p_pad`.
+fn bench_aggregate(ctx: &BenchCtx, g: usize, c: usize, p_pad: usize) -> Result<Option<BenchOutcome>> {
+    let mut rng = Rng::new(1);
+    let grads: Vec<SparseGrad> = (0..g).map(|_| mk_grad(&mut rng, c, p_pad)).collect();
+    let refs: Vec<(&SparseGrad, f64)> = grads.iter().map(|gr| (gr, 1.0 / g as f64)).collect();
+    let mut dense = vec![0.0f32; p_pad];
+    let opts = AggregateOpts::default();
+    let timing = time_it(ctx.warmup(3), ctx.iters(20), || {
+        dense.iter_mut().for_each(|x| *x = 0.0);
+        aggregate_into(&refs, &mut dense, &opts);
+    });
+    let mcoeff_per_s = (g * c) as f64 / timing.mean_s.max(1e-12) / 1e6;
+    Ok(Some(BenchOutcome { timing, throughput: Some((mcoeff_per_s, "Mcoeff/s")) }))
+}
+
+/// Wire encode or decode (+ SHA-256 integrity) at coefficient count `c`.
+fn bench_wire(ctx: &BenchCtx, c: usize, encode: bool) -> Result<Option<BenchOutcome>> {
+    let mut rng = Rng::new(2);
+    let sub = Submission {
+        uid: 3,
+        round: 17,
+        grad: mk_grad(&mut rng, c, 10_000_000),
+        probe: vec![0.5; 150],
+    };
+    let bytes = sub.encode();
+    let timing = if encode {
+        time_it(ctx.warmup(3), ctx.iters(30), || {
+            let _ = sub.encode();
+        })
+    } else {
+        time_it(ctx.warmup(3), ctx.iters(30), || {
+            let _ = Submission::decode(&bytes).expect("valid bytes");
+        })
+    };
+    let mb_per_s = bytes.len() as f64 / timing.mean_s.max(1e-12) / 1e6;
+    Ok(Some(BenchOutcome { timing, throughput: Some((mb_per_s, "MB/s")) }))
+}
+
+/// One OpenSkill Plackett–Luce match update over 16 peers.
+fn bench_openskill(ctx: &BenchCtx) -> Result<Option<BenchOutcome>> {
+    let model = PlackettLuce::default();
+    let ratings: Vec<Rating> = (0..16).map(|_| model.initial()).collect();
+    let mut rng = Rng::new(3);
+    let scores: Vec<f64> = (0..16).map(|_| rng.next_f64()).collect();
+    let timing = time_it(ctx.warmup(5), ctx.iters(200), || {
+        let _ = model.rate_by_scores(&ratings, &scores);
+    });
+    Ok(Some(BenchOutcome { timing, throughput: None }))
+}
+
+/// A Yuma consensus epoch at deployed scale: 64 validators x 256 peers.
+fn bench_yuma(ctx: &BenchCtx) -> Result<Option<BenchOutcome>> {
+    let (n_val, n_peer) = (64usize, 256usize);
+    let mut rng = Rng::new(4);
+    let w: Vec<Vec<f64>> =
+        (0..n_val).map(|_| (0..n_peer).map(|_| rng.next_f64()).collect()).collect();
+    let stake: Vec<f64> = (0..n_val).map(|_| rng.range_f64(1.0, 100.0)).collect();
+    let timing = time_it(ctx.warmup(2), ctx.iters(10), || {
+        let _ = yuma_consensus(&w, &stake, &YumaParams::default());
+    });
+    Ok(Some(BenchOutcome { timing, throughput: None }))
+}
+
+/// Deterministic assigned-shard generation (the data a peer must train on).
+fn bench_corpus(ctx: &BenchCtx) -> Result<Option<BenchOutcome>> {
+    let corpus = Corpus::new(4096, 0);
+    let timing = time_it(ctx.warmup(3), ctx.iters(50), || {
+        let _ = corpus.assigned_shard(3, 17, 0, 4, 129);
+    });
+    let mtok_per_s = 4.0 * 129.0 / timing.mean_s.max(1e-12) / 1e6;
+    Ok(Some(BenchOutcome { timing, throughput: Some((mtok_per_s, "Mtok/s")) }))
+}
+
+/// One validator's fast-evaluation sweep over 32 submitted peers (windowed
+/// GET + decode + structural checks + SyncScore), at the given fan-out.
+fn bench_fasteval(ctx: &BenchCtx, fanout: usize) -> Result<Option<BenchOutcome>> {
+    const N: usize = 32;
+    const COEFF: usize = 1312;
+    const PADDED: usize = 167_936;
+    let round = 4u64;
+    let model = ProviderModel { mean_upload_ms: 100.0, jitter_ms: 0.0, ..Default::default() };
+    let store = ObjectStore::new(model, 9);
+    let probe = vec![0.25f32, -0.75];
+    let mut rng = Rng::new(5);
+    let mut peers: Vec<(Uid, ReadKey)> = Vec::with_capacity(N);
+    for uid in 0..N as u32 {
+        let bucket = format!("peer-{uid}");
+        let rk = store.create_bucket(&bucket, &bucket);
+        let sub = Submission {
+            uid,
+            round,
+            grad: mk_grad(&mut rng, COEFF, PADDED),
+            probe: probe.clone(),
+        };
+        store
+            .put(&bucket, &bucket, &Submission::object_key(uid, round), sub.encode(), 400)
+            .expect("seeding the bench store");
+        peers.push((uid, rk));
+    }
+    let checks = RoundChecks {
+        round,
+        coeff_count: COEFF,
+        padded_count: PADDED,
+        probe_len: probe.len(),
+        validator_probe: &probe,
+        lr: 0.02,
+        sync_threshold: 3.0,
+        window: (200, 2_000),
+    };
+    let timing = time_it(ctx.warmup(2), ctx.iters(30), || {
+        let _ = fast_evaluate_all(&store, &peers, &checks, fanout).expect("fast eval");
+    });
+    let peers_per_s = N as f64 / timing.mean_s.max(1e-12);
+    Ok(Some(BenchOutcome { timing, throughput: Some((peers_per_s, "peers/s")) }))
+}
+
+/// The tentpole path: full communication rounds (peer turns, per-validator
+/// fast-eval fan-out + primary evaluation, chain epoch, aggregation) on the
+/// SimExec backend at a fixed worker-thread count. Determinism across
+/// thread counts is pinned by `tests/parallel_determinism.rs`; this only
+/// measures.
+fn bench_round_pipeline(ctx: &BenchCtx, threads: usize) -> Result<Option<BenchOutcome>> {
+    let (model, n_peers, rounds, reps) =
+        if ctx.quick { ("nano", 8usize, 2u64, 2usize) } else { ("mid", 32, 3, 3) };
+    let mk_run = || {
+        let peers: Vec<Behavior> = (0..n_peers)
+            .map(|i| match i % 8 {
+                6 => Behavior::Freeloader,
+                7 => Behavior::Poisoner { scale: 100.0 },
+                _ => Behavior::Honest { data_mult: 1.0 },
+            })
+            .collect();
+        let mut cfg = RunConfig {
+            model: model.to_string(),
+            rounds,
+            peers,
+            ..RunConfig::default()
+        };
+        cfg.eval_every = 0;
+        cfg.seed = 11;
+        cfg.n_validators = 2;
+        cfg.params.top_g = 8;
+        cfg.params.eval_sample = 4;
+        cfg.threads = threads;
+        GauntletBuilder::sim().config(cfg).build().expect("sim run")
+    };
+    // Pre-build one run per timing iteration (plus warmup) so construction
+    // cost stays out of the timed region.
+    let mut prebuilt: Vec<_> = (0..reps + 1).map(|_| mk_run()).collect();
+    let timing = time_it(1, reps, || {
+        let mut run = prebuilt.pop().expect("prebuilt run");
+        for _ in 0..rounds {
+            run.run_round().expect("round");
+        }
+    });
+    let rounds_per_s = rounds as f64 / timing.mean_s.max(1e-12);
+    Ok(Some(BenchOutcome { timing, throughput: Some((rounds_per_s, "rounds/s")) }))
+}
+
+// ---------------------------------------------------------------------
+// XLA extras (not part of the registry: artifact- and machine-dependent,
+// so they are printed for humans rather than diffed against baselines)
+// ---------------------------------------------------------------------
+
+/// Time the compiled-artifact round-trips (loss / grad / demo_compress /
+/// apply_update / eval_peer) for every available config. No-op when no
+/// artifacts are built — the `hotpath` bench binary calls this after the
+/// registered suite.
+pub fn xla_extras() -> Result<()> {
+    use crate::runtime::{artifact_dir, artifacts_available, Executor};
+    let mut table = Table::new("XLA artifact round-trips", &["operation", "mean", "throughput"]);
+    let mut any = false;
+    for cfg in ["nano", "tiny"] {
+        if !artifacts_available(cfg) {
+            continue;
+        }
+        // Artifacts exist but may not be executable (stub xla crate);
+        // skip rather than fail the whole bench.
+        let exec = match Executor::load(artifact_dir(cfg)) {
+            Ok(e) => e,
+            Err(e) => {
+                println!("[skipping xla {cfg} benches: {e:#}]");
+                continue;
+            }
+        };
+        any = true;
+        let meta = exec.meta.clone();
+        let theta = exec.init_params()?;
+        let corpus = Corpus::new(meta.vocab as u32, 0);
+        let toks = corpus.assigned_shard(1, 0, 0, meta.batch, meta.seq + 1);
+        let iters = if cfg == "nano" { 10 } else { 5 };
+
+        let tl = time_it(2, iters, || {
+            let _ = exec.loss(&theta, &toks).unwrap();
+        });
+        let tg = time_it(2, iters, || {
+            let _ = exec.grad(&theta, &toks).unwrap();
+        });
+        let e = vec![0.0f32; meta.param_count];
+        let (_, g) = exec.grad(&theta, &toks)?;
+        let tc = time_it(2, iters, || {
+            let _ = exec.demo_compress(&e, &g, 0.999).unwrap();
+        });
+        let coeff = vec![0.01f32; meta.padded_count];
+        let ta = time_it(2, iters, || {
+            let _ = exec.apply_update(&theta, &coeff, 0.02).unwrap();
+        });
+        let te = time_it(2, iters, || {
+            let _ = exec.eval_peer(&theta, &coeff, 0.01, &toks, &toks).unwrap();
+        });
+        for (name, timing) in [
+            ("loss", &tl),
+            ("grad", &tg),
+            ("demo_compress", &tc),
+            ("apply_update", &ta),
+            ("eval_peer", &te),
+        ] {
+            let toks_per_s = (meta.batch * meta.seq) as f64 / timing.mean_s.max(1e-12);
+            table.row(&[
+                format!("xla {cfg}/{name}"),
+                human_duration(timing.mean_s),
+                if name == "loss" || name == "grad" {
+                    format!("{:.1} ktok/s", toks_per_s / 1e3)
+                } else {
+                    String::new()
+                },
+            ]);
+        }
+    }
+    if any {
+        table.print();
+    } else {
+        println!("[no compiled artifacts found; xla round-trip benches skipped]");
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(name: &str, mean: f64) -> BenchRecord {
+        BenchRecord {
+            name: name.to_string(),
+            iters: 5,
+            mean_s: mean,
+            p50_s: mean,
+            min_s: mean * 0.9,
+            std_s: mean * 0.05,
+            throughput: Some(1.0 / mean),
+            throughput_unit: Some("ops/s".to_string()),
+        }
+    }
+
+    fn result(benches: Vec<BenchRecord>) -> SuiteResult {
+        SuiteResult {
+            schema_version: SCHEMA_VERSION,
+            suite: "hotpath".to_string(),
+            quick: true,
+            fingerprint: RunFingerprint {
+                git_commit: "deadbeef".to_string(),
+                threads: 8,
+                os: "linux".to_string(),
+            },
+            benches,
+        }
+    }
+
+    #[test]
+    fn identical_baseline_has_no_regressions() {
+        let r = result(vec![rec("a", 1e-3), rec("b", 2e-3)]);
+        let cmp = compare(&r, &r, 1.25);
+        assert_eq!(cmp.deltas.len(), 2);
+        assert!(cmp.regressions.is_empty(), "{:?}", cmp.regressions);
+        assert!((cmp.deltas[0].ratio - 1.0).abs() < 1e-12);
+        assert!(cmp.only_in_current.is_empty() && cmp.only_in_baseline.is_empty());
+    }
+
+    #[test]
+    fn synthetic_2x_slowdown_is_flagged() {
+        let base = result(vec![rec("a", 1e-3), rec("b", 2e-3)]);
+        let mut cur = base.clone();
+        cur.benches[0].mean_s = 2e-3; // a regressed 2x
+        let cmp = compare(&cur, &base, 1.5);
+        assert_eq!(cmp.regressions.len(), 1, "{:?}", cmp.regressions);
+        assert_eq!(cmp.regressions[0].name, "a");
+        assert!((cmp.regressions[0].ratio - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn improvements_and_noise_pass_the_gate() {
+        let base = result(vec![rec("a", 1e-3), rec("b", 2e-3)]);
+        let mut cur = base.clone();
+        cur.benches[0].mean_s = 0.5e-3; // 2x faster
+        cur.benches[1].mean_s = 2.2e-3; // 1.1x slower: below 1.25
+        let cmp = compare(&cur, &base, 1.25);
+        assert!(cmp.regressions.is_empty(), "{:?}", cmp.regressions);
+    }
+
+    #[test]
+    fn name_mismatches_are_reported_not_fatal() {
+        let base = result(vec![rec("a", 1e-3), rec("gone", 1e-3)]);
+        let cur = result(vec![rec("a", 1e-3), rec("new", 1e-3)]);
+        let cmp = compare(&cur, &base, 1.25);
+        assert_eq!(cmp.only_in_current, vec!["new".to_string()]);
+        assert_eq!(cmp.only_in_baseline, vec!["gone".to_string()]);
+        assert_eq!(cmp.deltas.len(), 1);
+    }
+
+    #[test]
+    fn degenerate_baselines_never_regress() {
+        let base = result(vec![rec("zero", 0.0), rec("nan", f64::NAN)]);
+        let cur = result(vec![rec("zero", 1.0), rec("nan", 1.0)]);
+        let cmp = compare(&cur, &base, 1.25);
+        assert!(cmp.regressions.is_empty());
+        assert!(cmp.deltas.iter().all(|d| d.ratio.is_nan()));
+    }
+
+    #[test]
+    fn schema_roundtrips_through_minjson() {
+        let mut r = result(vec![rec("a", 1e-3)]);
+        // Awkward values must survive: no throughput, -0.0 std.
+        r.benches.push(BenchRecord {
+            name: "bare".to_string(),
+            iters: 1,
+            mean_s: 0.25,
+            p50_s: 0.25,
+            min_s: 0.25,
+            std_s: -0.0,
+            throughput: None,
+            throughput_unit: None,
+        });
+        let text = r.to_json().write();
+        let parsed = Value::parse(&text).expect("schema JSON parses");
+        let back = SuiteResult::from_json(&parsed).expect("typed reload");
+        assert_eq!(r, back);
+        assert_eq!(text, back.to_json().write(), "serialization is idempotent");
+    }
+
+    #[test]
+    fn from_json_rejects_bad_versions_and_shapes() {
+        let mut r = result(vec![]);
+        r.schema_version = SCHEMA_VERSION + 1;
+        let v = Value::parse(&r.to_json().write()).unwrap();
+        assert!(SuiteResult::from_json(&v).is_err(), "future schema rejected");
+        let v = Value::parse(r#"{"schema_version":1,"suite":"x"}"#).unwrap();
+        assert!(SuiteResult::from_json(&v).is_err(), "missing fields rejected");
+    }
+
+    #[test]
+    fn registry_names_are_unique_and_hotpath_exists() {
+        for s in registry() {
+            let mut names: Vec<&str> = s.benches.iter().map(|b| b.name).collect();
+            let n = names.len();
+            names.sort_unstable();
+            names.dedup();
+            assert_eq!(names.len(), n, "duplicate bench name in suite {}", s.name);
+        }
+        assert!(find_suite("hotpath").is_some());
+        assert!(find_suite("nope").is_none());
+    }
+}

@@ -197,11 +197,20 @@ fn fast_evaluate_chunk(
     checks: &RoundChecks<'_>,
 ) -> anyhow::Result<Vec<(Uid, FastEvalOutcome)>> {
     use anyhow::Context as _;
+    use std::fmt::Write as _;
     let (open, close) = checks.window;
     let mut out = Vec::with_capacity(peers.len());
+    // One bucket-name and one object-key buffer per worker, reused across
+    // the whole sweep (fast eval runs per peer per validator per round —
+    // the widest stage of the pipeline, so per-peer string allocations
+    // multiply fastest here).
+    let mut bucket = String::new();
+    let mut key = String::new();
     for (uid, rk) in peers {
-        let bucket = format!("peer-{uid}");
-        let key = Submission::object_key(*uid, checks.round);
+        bucket.clear();
+        let _ = write!(bucket, "peer-{uid}");
+        key.clear();
+        Submission::write_object_key(&mut key, *uid, checks.round);
         let get = store
             .get_within_window(&bucket, rk, &key, open, close)
             .with_context(|| format!("reading {bucket}/{key}"))?;

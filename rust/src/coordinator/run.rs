@@ -393,8 +393,14 @@ pub struct TemplarRunWith<E: ExecBackend + 'static> {
     pub round: u64,
     /// Scratch dense coefficient buffer (perf: reused across rounds).
     dense: Vec<f32>,
-    /// Last round's aggregated coefficients (for divergent peers).
-    last_coeff: Option<Vec<f32>>,
+    /// Last round's aggregated coefficients (for divergent peers). After
+    /// an updating round this buffer and `dense` are *swapped*, not
+    /// cloned — the round hot path never reallocates the coefficient
+    /// space. Meaningful only while `last_coeff_valid`.
+    last_coeff: Vec<f32>,
+    /// Whether `last_coeff` holds the previous round's aggregate (false
+    /// after a no-update round or a snapshot resume).
+    last_coeff_valid: bool,
     /// Monotonic hotkey counter: uids are recycled, hotkeys never are.
     next_hotkey: u64,
     /// Active provider-outage window: restore `outage_prob` to `.1` at the
@@ -494,6 +500,7 @@ impl<E: ExecBackend + 'static> TemplarRunWith<E> {
 
         let checkpoints = CheckpointStore::new(cfg.params.checkpoint_every);
         let dense = vec![0.0; meta.padded_count];
+        let last_coeff = vec![0.0; meta.padded_count];
         let clock = cfg.clock;
         let initial_peers = cfg.peers.clone();
         let mut run = TemplarRunWith {
@@ -509,7 +516,8 @@ impl<E: ExecBackend + 'static> TemplarRunWith<E> {
             checkpoints,
             round: 0,
             dense,
-            last_coeff: None,
+            last_coeff,
+            last_coeff_valid: false,
             next_hotkey: 0,
             outage_restore: None,
             metrics: Arc::new(MetricsObserver::new()),
@@ -995,42 +1003,39 @@ impl<E: ExecBackend + 'static> TemplarRunWith<E> {
         };
         let top_g: Vec<Uid> = weights.iter().map(|(u, _)| *u).collect();
 
-        let theta_before = std::mem::take(&mut self.theta);
-        let (theta_after, had_update) = if weights.is_empty() {
-            (theta_before.clone(), false)
-        } else {
+        // Allocation-free aggregation step (perf): when nothing aggregates,
+        // theta stays in place untouched (this used to clone the whole
+        // parameter vector just to reassign it); when something does, the
+        // aggregate is scattered into the reusable `dense` scratch, and
+        // `dense`/`last_coeff` are swapped instead of cloned. `top_g` is
+        // moved into the event rather than copied — the scoreboard below
+        // reads membership from `weights`.
+        let had_update = !weights.is_empty();
+        if had_update {
             self.dense.iter_mut().for_each(|x| *x = 0.0);
             let contributions: Vec<(&crate::demo::SparseGrad, f64)> = weights
                 .iter()
                 .map(|(u, w)| (&outcome.valid_submissions[u].grad, *w))
                 .collect();
             aggregate_into(&contributions, &mut self.dense, &self.cfg.agg);
-            let new_theta = self.exec.apply_update(&theta_before, &self.dense, lr_t)?;
-            (new_theta, true)
-        };
-        if had_update {
-            self.checkpoints.record_update(round, &theta_before, &theta_after, lr_t)?;
-            self.last_coeff = Some(self.dense.clone());
-        } else {
-            self.last_coeff = None;
+            let theta_after = self.exec.apply_update(&self.theta, &self.dense, lr_t)?;
+            self.checkpoints.record_update(round, &self.theta, &theta_after, lr_t)?;
+            self.theta = theta_after;
+            std::mem::swap(&mut self.dense, &mut self.last_coeff);
         }
-        self.theta = theta_after;
+        self.last_coeff_valid = had_update;
         self.emit(RoundEvent::Aggregated {
             round,
-            top_g: top_g.clone(),
+            top_g,
             n_valid: outcome.valid_submissions.len(),
             had_update,
         });
 
         // -------------------- peers synchronize --------------------------
+        let agg_coeff: Option<&[f32]> =
+            if self.last_coeff_valid { Some(&self.last_coeff) } else { None };
         for p in &mut self.peers {
-            p.on_round_end(
-                round,
-                &self.theta,
-                &self.exec,
-                self.last_coeff.as_deref(),
-                lr_t,
-            )?;
+            p.on_round_end(round, &self.theta, &self.exec, agg_coeff, lr_t)?;
         }
 
         // --------------------- end-of-round events -----------------------
@@ -1056,7 +1061,7 @@ impl<E: ExecBackend + 'static> TemplarRunWith<E> {
                 rating_ordinal: st.map(|s| s.rating.ordinal()).unwrap_or(0.0),
                 mu: st.map(|s| s.mu.value).unwrap_or(0.0),
                 incentive: incentive_of(p.uid),
-                in_top_g: top_g.contains(&p.uid),
+                in_top_g: weights.iter().any(|(u, _)| *u == p.uid),
                 loss_score_rand: ev.map(|e| e.score_rand),
                 loss_score_assigned: ev.map(|e| e.score_assigned),
                 balance: self.chain.neuron(p.uid).map(|n| n.balance).unwrap_or(0.0),
@@ -1159,6 +1164,7 @@ impl<E: ExecBackend + 'static> TemplarRunWith<E> {
             snap.checkpoint_updates,
         );
         let dense = vec![0.0; meta.padded_count];
+        let last_coeff = vec![0.0; meta.padded_count];
         let clock = cfg.clock;
         let metrics = Arc::new(MetricsObserver::new());
         metrics.push_pending(snap.pending_events);
@@ -1175,7 +1181,8 @@ impl<E: ExecBackend + 'static> TemplarRunWith<E> {
             checkpoints,
             round: snap.round,
             dense,
-            last_coeff: None,
+            last_coeff,
+            last_coeff_valid: false,
             next_hotkey: snap.next_hotkey,
             outage_restore: snap.outage_restore,
             metrics,

@@ -50,6 +50,10 @@ pub struct Validator {
     pub params: GauntletParams,
     evaluator: PrimaryEvaluator,
     rng: Rng,
+    /// Reusable SyncScore probe scratch: the fast-eval probe is
+    /// re-gathered from theta every round, and reusing this buffer keeps
+    /// the per-round validator loop allocation-free.
+    probe: Vec<f32>,
 }
 
 impl Validator {
@@ -60,6 +64,7 @@ impl Validator {
             rng: Rng::from_parts(&["validator", &uid.to_string(), &seed.to_string()]),
             evaluator: PrimaryEvaluator::new(padded_count),
             params,
+            probe: Vec::new(),
         }
     }
 
@@ -88,7 +93,7 @@ impl Validator {
         fanout: usize,
     ) -> Result<RoundOutcome> {
         let meta = exec.meta();
-        let probe = meta.sync_probe(theta);
+        meta.sync_probe_into(theta, &mut self.probe);
         let mut out = RoundOutcome::default();
 
         // ---- fast evaluation over ALL peers (F_t; §3.2 — this always
@@ -106,8 +111,8 @@ impl Validator {
             round,
             coeff_count: meta.coeff_count,
             padded_count: meta.padded_count,
-            probe_len: probe.len(),
-            validator_probe: &probe,
+            probe_len: self.probe.len(),
+            validator_probe: &self.probe,
             lr: lr_t,
             sync_threshold: self.params.sync_threshold,
             window: clock.put_window(round),

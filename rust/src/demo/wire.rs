@@ -102,28 +102,42 @@ impl Submission {
         if digest.as_slice() != &bytes[body_end..] {
             return Err(WireError::BadDigest);
         }
+        // Bulk, exactly-sized decode: `chunks_exact` over pre-sliced
+        // regions collects through an exact-size iterator, so each buffer
+        // is allocated once at its final capacity and the per-element
+        // bounds checks of the old byte-offset loop disappear — this runs
+        // once per peer per validator per round on the fast-eval path.
         let mut off = HEADER;
-        let mut vals = Vec::with_capacity(c);
-        for _ in 0..c {
-            vals.push(f32::from_le_bytes(bytes[off..off + 4].try_into().unwrap()));
-            off += 4;
-        }
-        let mut idx = Vec::with_capacity(c);
-        for _ in 0..c {
-            idx.push(i32::from_le_bytes(bytes[off..off + 4].try_into().unwrap()));
-            off += 4;
-        }
-        let mut probe = Vec::with_capacity(p);
-        for _ in 0..p {
-            probe.push(f32::from_le_bytes(bytes[off..off + 4].try_into().unwrap()));
-            off += 4;
-        }
+        let vals: Vec<f32> = bytes[off..off + 4 * c]
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+            .collect();
+        off += 4 * c;
+        let idx: Vec<i32> = bytes[off..off + 4 * c]
+            .chunks_exact(4)
+            .map(|b| i32::from_le_bytes(b.try_into().unwrap()))
+            .collect();
+        off += 4 * c;
+        let probe: Vec<f32> = bytes[off..off + 4 * p]
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+            .collect();
         Ok(Submission { uid, round, grad: SparseGrad { vals, idx }, probe })
     }
 
     /// The object key a submission is stored under in its peer's bucket.
     pub fn object_key(uid: u32, round: u64) -> String {
-        format!("grad/round-{round:08}/uid-{uid}")
+        let mut out = String::with_capacity(32);
+        Self::write_object_key(&mut out, uid, round);
+        out
+    }
+
+    /// Append the object key to a reusable buffer — the allocation-free
+    /// form of [`Submission::object_key`] for the validator's fast-eval
+    /// sweep, which derives one key per peer per round.
+    pub fn write_object_key(out: &mut String, uid: u32, round: u64) {
+        use std::fmt::Write as _;
+        let _ = write!(out, "grad/round-{round:08}/uid-{uid}");
     }
 }
 

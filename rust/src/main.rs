@@ -2,6 +2,7 @@
 //!
 //! Subcommands:
 //!   run       permissionless Gauntlet training run (the paper's system)
+//!   bench     PerfLab benchmark suites with a baseline regression gate
 //!   baseline  centralized AdamW DDP comparison run
 //!   eval      downstream zero-shot suites on the initial model
 //!   info      print a config's artifact/ABI summary
@@ -9,13 +10,15 @@
 //! Examples:
 //!   gauntlet run --model nano --rounds 20 --peers 6 --topg 3
 //!   gauntlet run --model tiny --rounds 100 --peers "honest,honest:2,desync,poisoner"
+//!   gauntlet bench --suite hotpath --out BENCH_hotpath.json \
+//!       --compare baseline/BENCH_hotpath.json --fail-over 1.25
 //!   gauntlet baseline --model nano --rounds 20 --workers 4
 
 use std::collections::BTreeMap;
 
 use anyhow::{bail, Context, Result};
 
-use gauntlet::bench::{sparkline, Table};
+use gauntlet::bench::{human_duration, sparkline, suite, Table};
 use gauntlet::coordinator::baseline::{AdamWParams, AdamWTrainer};
 use gauntlet::coordinator::engine::{GauntletBuilder, GauntletEngine};
 use gauntlet::coordinator::events::JsonlTraceObserver;
@@ -41,6 +44,7 @@ fn dispatch(args: &[String]) -> Result<()> {
     let flags = parse_flags(&args[1..])?;
     match cmd.as_str() {
         "run" => cmd_run(&flags),
+        "bench" => cmd_bench(&flags),
         "baseline" => cmd_baseline(&flags),
         "eval" => cmd_eval(&flags),
         "info" => cmd_info(&flags),
@@ -83,6 +87,14 @@ fn print_usage() {
          \x20                              omit to finish the originally configured rounds)\n\
          \x20           (without compiled artifacts, `run` falls back to the\n\
          \x20            deterministic pure-Rust SimExec backend)\n\
+         \x20 bench     PerfLab benchmark suites (see README \"Performance\")\n\
+         \x20           --suite <name>     suite to run (default hotpath)\n\
+         \x20           --quick            shrink iteration counts (PR gate)\n\
+         \x20           --out <f>          write BENCH_<suite>.json schema to a file\n\
+         \x20           --compare <f>      diff against a baseline BENCH_*.json;\n\
+         \x20                              exits non-zero on regression\n\
+         \x20           --fail-over <r>    regression threshold ratio (default 1.25)\n\
+         \x20           --list             list registered suites and benches\n\
          \x20 baseline  AdamW DDP comparison\n\
          \x20           --model/--rounds/--workers/--seed\n\
          \x20 eval      downstream suites on the init model\n\
@@ -100,7 +112,8 @@ fn parse_flags(args: &[String]) -> Result<BTreeMap<String, String>> {
             bail!("expected --flag, got {a:?}");
         };
         // boolean flags
-        if name == "no-normalize" {
+        const BOOL_FLAGS: &[&str] = &["no-normalize", "quick", "list"];
+        if BOOL_FLAGS.contains(&name) {
             out.insert(name.to_string(), "true".to_string());
             i += 1;
             continue;
@@ -329,6 +342,104 @@ fn drive(engine: &mut GauntletEngine) -> Result<()> {
         ]);
     }
     t.print();
+    Ok(())
+}
+
+/// `gauntlet bench`: run a PerfLab suite, optionally persist the
+/// machine-readable result (`--out`) and gate against a baseline file
+/// (`--compare` + `--fail-over`) — the CI regression gate exits non-zero
+/// through the error path when any bench regressed beyond the threshold.
+fn cmd_bench(flags: &BTreeMap<String, String>) -> Result<()> {
+    if flags.contains_key("list") {
+        for s in suite::registry() {
+            println!("{} — {}", s.name, s.description);
+            for b in &s.benches {
+                println!("  {}", b.name);
+            }
+        }
+        return Ok(());
+    }
+    let name: String = flag(flags, "suite", "hotpath".to_string())?;
+    let spec = suite::find_suite(&name)
+        .ok_or_else(|| anyhow::anyhow!("unknown suite {name:?}; try `gauntlet bench --list`"))?;
+    let ctx = suite::BenchCtx { quick: flags.contains_key("quick") };
+    let result = suite::run_suite(&spec, &ctx)?;
+    println!(
+        "suite {} (schema v{}): {} benches, commit {}, {} threads available",
+        result.suite,
+        result.schema_version,
+        result.benches.len(),
+        result.fingerprint.git_commit,
+        result.fingerprint.threads,
+    );
+    if let Some(path) = flags.get("out") {
+        std::fs::write(path, result.to_json().write())
+            .with_context(|| format!("--out: writing {path:?}"))?;
+        println!("results written to {path}");
+    }
+    if let Some(path) = flags.get("compare") {
+        let fail_over: f64 = flag(flags, "fail-over", 1.25)?;
+        anyhow::ensure!(
+            fail_over.is_finite() && fail_over > 0.0,
+            "--fail-over must be a positive ratio, got {fail_over}"
+        );
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("--compare: reading baseline {path:?}"))?;
+        let parsed = gauntlet::minjson::Value::parse(&text)
+            .map_err(|e| anyhow::anyhow!("--compare: baseline {path:?}: {e}"))?;
+        let baseline = gauntlet::bench::suite::SuiteResult::from_json(&parsed)
+            .with_context(|| format!("--compare: baseline {path:?}"))?;
+        // Quick mode shrinks iteration counts AND the round-pipeline
+        // workload, so quick and full results are not comparable — refuse
+        // rather than reporting spurious (non-)regressions.
+        anyhow::ensure!(
+            result.quick == baseline.quick,
+            "--compare: this run is {} but baseline {path:?} was recorded {}; \
+             regenerate the baseline in the same mode (see baseline/README.md)",
+            if result.quick { "--quick" } else { "full" },
+            if baseline.quick { "with --quick" } else { "in full mode" },
+        );
+        let cmp = suite::compare(&result, &baseline, fail_over);
+        // One verdict source: rows are marked by membership in the
+        // regression list compare() produced, never by re-deriving the
+        // threshold rule here.
+        let regressed: std::collections::BTreeSet<&str> =
+            cmp.regressions.iter().map(|d| d.name.as_str()).collect();
+        let mut t = Table::new(
+            &format!("vs {path} (fail-over {fail_over:.2}x)"),
+            &["bench", "baseline", "current", "ratio"],
+        );
+        for d in &cmp.deltas {
+            let marker =
+                if regressed.contains(d.name.as_str()) { "  ** REGRESSION" } else { "" };
+            t.row(&[
+                d.name.clone(),
+                human_duration(d.baseline_mean_s),
+                human_duration(d.current_mean_s),
+                format!("{:.2}x{marker}", d.ratio),
+            ]);
+        }
+        t.print();
+        for n in &cmp.only_in_current {
+            println!("note: {n} has no baseline entry yet (refresh baseline/ to gate it)");
+        }
+        for n in &cmp.only_in_baseline {
+            println!("note: baseline entry {n} is no longer registered");
+        }
+        if !cmp.regressions.is_empty() {
+            let names: Vec<String> = cmp
+                .regressions
+                .iter()
+                .map(|d| format!("{} ({:.2}x)", d.name, d.ratio))
+                .collect();
+            bail!(
+                "{} bench(es) regressed beyond {fail_over}x vs {path}: {}",
+                cmp.regressions.len(),
+                names.join(", ")
+            );
+        }
+        println!("no regressions vs {path} (fail-over {fail_over:.2}x)");
+    }
     Ok(())
 }
 

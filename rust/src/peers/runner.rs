@@ -63,6 +63,10 @@ pub struct PeerRunner {
     /// Diagnostics: microbatches processed in the last round.
     pub last_microbatches: usize,
     pub last_local_loss: f64,
+    /// Gradient-accumulation scratch, reused across rounds (perf). Pure
+    /// scratch: zero-filled before every use, so it is *not* part of
+    /// [`PeerRunnerState`] and restarts empty after a snapshot resume.
+    grad_accum: Vec<f32>,
 }
 
 /// Every persistent field of a [`PeerRunner`], exported as plain data for
@@ -94,6 +98,7 @@ impl PeerRunner {
             compute_ms_per_mb,
             last_microbatches: 0,
             last_local_loss: f64::NAN,
+            grad_accum: Vec::new(),
         }
     }
 
@@ -123,6 +128,7 @@ impl PeerRunner {
             compute_ms_per_mb: state.compute_ms_per_mb,
             last_microbatches: state.last_microbatches,
             last_local_loss: state.last_local_loss,
+            grad_accum: Vec::new(),
         }
     }
 
@@ -236,9 +242,28 @@ impl PeerRunner {
 
     /// The honest miner loop; `grad_scale` rescales the transmitted values
     /// (1.0 for honest peers, the attack factor for Rescaler).
+    ///
+    /// The local model view is *taken* out of `self` for the duration of
+    /// the step instead of copied — training against a divergent
+    /// `theta_local` previously cloned the full parameter vector every
+    /// round. Synchronized peers already borrow the global model directly.
     fn honest_step<E: ExecBackend + ?Sized>(
         &mut self,
         ctx: &PeerCtx<'_, E>,
+        data_mult: f64,
+        grad_scale: f32,
+    ) -> Result<PeerOutput> {
+        let local = self.theta_local.take();
+        let result =
+            self.honest_core(ctx, local.as_deref().unwrap_or(ctx.global_theta), data_mult, grad_scale);
+        self.theta_local = local;
+        result
+    }
+
+    fn honest_core<E: ExecBackend + ?Sized>(
+        &mut self,
+        ctx: &PeerCtx<'_, E>,
+        theta: &[f32],
         data_mult: f64,
         grad_scale: f32,
     ) -> Result<PeerOutput> {
@@ -247,21 +272,23 @@ impl PeerRunner {
         let n_mb = ((ctx.params.base_microbatches as f64 * data_mult).round() as usize).max(1);
         self.last_microbatches = n_mb;
 
-        let theta = self.theta_view(ctx).to_vec();
-        let mut acc = vec![0.0f32; meta.param_count];
+        // Zero-fill the reusable accumulator instead of allocating one per
+        // round.
+        self.grad_accum.clear();
+        self.grad_accum.resize(meta.param_count, 0.0);
         let mut loss_sum = 0.0f64;
         for mb in 0..n_mb {
             let toks = ctx.corpus.assigned_shard(self.uid, ctx.round, mb as u32, b, s1);
-            let (loss, g) = ctx.exec.grad(&theta, &toks)?;
+            let (loss, g) = ctx.exec.grad(theta, &toks)?;
             loss_sum += loss as f64;
-            for (a, gi) in acc.iter_mut().zip(&g) {
+            for (a, gi) in self.grad_accum.iter_mut().zip(&g) {
                 *a += gi / n_mb as f32;
             }
         }
         self.last_local_loss = loss_sum / n_mb as f64;
 
         let (mut vals, idx, e2) =
-            ctx.exec.demo_compress(&self.error, &acc, ctx.params.demo_decay)?;
+            ctx.exec.demo_compress(&self.error, &self.grad_accum, ctx.params.demo_decay)?;
         self.error = e2;
         if grad_scale != 1.0 {
             for v in &mut vals {
@@ -272,23 +299,34 @@ impl PeerRunner {
             uid: self.uid,
             round: ctx.round,
             grad: SparseGrad { vals, idx },
-            probe: meta.sync_probe(&theta),
+            probe: meta.sync_probe(theta),
         };
         Ok(PeerOutput::Submit { time: self.upload_time(ctx, n_mb), bytes: sub.encode() })
     }
 
-    /// Freeloader: real gradient work, wrong (self-chosen) data.
+    /// Freeloader: real gradient work, wrong (self-chosen) data. Same
+    /// take-don't-copy model view as [`PeerRunner::honest_step`].
     fn freeload_step<E: ExecBackend + ?Sized>(&mut self, ctx: &PeerCtx<'_, E>) -> Result<PeerOutput> {
+        let local = self.theta_local.take();
+        let result = self.freeload_core(ctx, local.as_deref().unwrap_or(ctx.global_theta));
+        self.theta_local = local;
+        result
+    }
+
+    fn freeload_core<E: ExecBackend + ?Sized>(
+        &mut self,
+        ctx: &PeerCtx<'_, E>,
+        theta: &[f32],
+    ) -> Result<PeerOutput> {
         let meta = ctx.exec.meta();
         let (b, s1) = (meta.batch, meta.seq + 1);
-        let theta = self.theta_view(ctx).to_vec();
         // deliberately NOT the assigned shard
         let toks = ctx.corpus.batch(
             &["freeload", &self.uid.to_string(), &ctx.round.to_string()],
             b,
             s1,
         );
-        let (loss, g) = ctx.exec.grad(&theta, &toks)?;
+        let (loss, g) = ctx.exec.grad(theta, &toks)?;
         self.last_local_loss = loss as f64;
         self.last_microbatches = 1;
         let (vals, idx, e2) = ctx.exec.demo_compress(&self.error, &g, ctx.params.demo_decay)?;
@@ -297,7 +335,7 @@ impl PeerRunner {
             uid: self.uid,
             round: ctx.round,
             grad: SparseGrad { vals, idx },
-            probe: meta.sync_probe(&theta),
+            probe: meta.sync_probe(theta),
         };
         Ok(PeerOutput::Submit { time: self.upload_time(ctx, 1), bytes: sub.encode() })
     }

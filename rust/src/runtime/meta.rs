@@ -119,21 +119,36 @@ impl ModelMeta {
         Ok(meta)
     }
 
-    /// Flat indices sampled for the SyncScore probe: the first and last
-    /// element of every tensor (2 values per tensor, §3.2). Deterministic,
-    /// so peer and validator agree without communication.
+    /// The single source of truth for the SyncScore probe layout: the
+    /// first and last element of every tensor (2 values per tensor,
+    /// §3.2). Deterministic, so peer and validator agree without
+    /// communication — every probe accessor below consumes this iterator,
+    /// so the contract cannot fork.
+    fn probe_index_iter(&self) -> impl Iterator<Item = usize> + '_ {
+        self.params.iter().flat_map(|p| [p.offset, p.offset + p.size - 1])
+    }
+
+    /// Flat indices sampled for the SyncScore probe.
     pub fn sync_probe_indices(&self) -> Vec<usize> {
-        let mut out = Vec::with_capacity(self.params.len() * 2);
-        for p in &self.params {
-            out.push(p.offset);
-            out.push(p.offset + p.size - 1);
-        }
-        out
+        self.probe_index_iter().collect()
     }
 
     /// Gather a probe vector from a flat parameter vector.
     pub fn sync_probe(&self, theta: &[f32]) -> Vec<f32> {
-        self.sync_probe_indices().iter().map(|&i| theta[i]).collect()
+        let mut out = Vec::new();
+        self.sync_probe_into(theta, &mut out);
+        out
+    }
+
+    /// Gather a probe into a reusable buffer (cleared first) — the
+    /// allocation-free form of [`ModelMeta::sync_probe`] for the
+    /// validator's per-round fast-eval hot path, which re-gathers the
+    /// probe every round and previously reallocated both the index list
+    /// and the probe vector each time.
+    pub fn sync_probe_into(&self, theta: &[f32], out: &mut Vec<f32>) {
+        out.clear();
+        out.reserve(self.params.len() * 2);
+        out.extend(self.probe_index_iter().map(|i| theta[i]));
     }
 }
 
@@ -172,6 +187,10 @@ mod tests {
         assert_eq!(m.sync_probe_indices(), vec![0, 15, 16, 19]);
         let theta: Vec<f32> = (0..20).map(|i| i as f32).collect();
         assert_eq!(m.sync_probe(&theta), vec![0.0, 15.0, 16.0, 19.0]);
+        // The buffer-reusing form clears stale contents and agrees.
+        let mut buf = vec![9.0f32; 7];
+        m.sync_probe_into(&theta, &mut buf);
+        assert_eq!(buf, vec![0.0, 15.0, 16.0, 19.0]);
     }
 
     #[test]

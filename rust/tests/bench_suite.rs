@@ -1,0 +1,80 @@
+//! Acceptance tests for the PerfLab harness (`bench::suite`):
+//!
+//! - `--quick` runs every registered bench at least once, with sane
+//!   statistics (the CI `perf-smoke` job relies on quick results carrying
+//!   the same bench names as full results, so baselines stay comparable),
+//! - the `BENCH_<suite>.json` schema round-trips through `minjson`,
+//! - `--compare` passes an identical baseline and flags a doctored
+//!   slowdown (the regression-gate semantics, end to end on real data).
+
+use gauntlet::bench::suite::{self, BenchCtx, SuiteResult};
+use gauntlet::minjson::Value;
+
+/// Run the quick hotpath suite once and reuse the result across checks —
+/// it is the expensive part of this test file.
+fn quick_hotpath() -> (Vec<String>, SuiteResult) {
+    let spec = suite::find_suite("hotpath").expect("hotpath suite is registered");
+    let registered: Vec<String> = spec.benches.iter().map(|b| b.name.to_string()).collect();
+    let result = suite::run_suite(&spec, &BenchCtx { quick: true }).expect("suite run");
+    (registered, result)
+}
+
+#[test]
+fn quick_runs_every_registered_bench_with_sane_stats_and_roundtrips() {
+    let (registered, result) = quick_hotpath();
+
+    // Every registered bench ran exactly once, in registration order
+    // (nothing in the hotpath suite is environment-gated).
+    let ran: Vec<String> = result.benches.iter().map(|b| b.name.clone()).collect();
+    assert_eq!(ran, registered, "--quick must run every registered bench");
+    assert!(result.quick);
+    assert_eq!(result.suite, "hotpath");
+    assert!(result.fingerprint.threads >= 1);
+    assert!(!result.fingerprint.git_commit.is_empty());
+
+    for b in &result.benches {
+        assert!(b.iters >= 1, "{}: no samples", b.name);
+        assert!(b.mean_s.is_finite() && b.mean_s >= 0.0, "{}: mean {}", b.name, b.mean_s);
+        assert!(b.min_s <= b.mean_s + 1e-12, "{}: min {} > mean {}", b.name, b.min_s, b.mean_s);
+        assert!(b.min_s <= b.p50_s + 1e-12, "{}: min {} > p50 {}", b.name, b.min_s, b.p50_s);
+        if let Some(t) = b.throughput {
+            assert!(t.is_finite() && t > 0.0, "{}: throughput {t}", b.name);
+            assert!(b.throughput_unit.is_some(), "{}: rate without a unit", b.name);
+        }
+    }
+
+    // Schema: serialize -> parse -> typed reload -> identical, and the
+    // second serialization is byte-identical (idempotent).
+    let text = result.to_json().write();
+    let parsed = Value::parse(&text).expect("BENCH json parses");
+    let back = SuiteResult::from_json(&parsed).expect("typed reload");
+    assert_eq!(result, back, "typed schema round trip");
+    assert_eq!(text, back.to_json().write(), "serialization is idempotent");
+
+    // Regression-gate semantics on the real result: identical baseline
+    // passes, a doctored 2x-slower current run fails at 1.5x.
+    let same = suite::compare(&result, &result, 1.25);
+    assert!(same.regressions.is_empty(), "self-compare regressed: {:?}", same.regressions);
+    assert_eq!(same.deltas.len(), result.benches.len());
+
+    let mut slowed = result.clone();
+    for b in &mut slowed.benches {
+        b.mean_s *= 2.0;
+    }
+    let cmp = suite::compare(&slowed, &result, 1.5);
+    // Benches whose quick-mode mean is exactly 0 (sub-resolution timings)
+    // yield no verdict; everything measurable must be flagged.
+    let measurable =
+        result.benches.iter().filter(|b| b.mean_s.is_finite() && b.mean_s > 0.0).count();
+    assert!(measurable > 0, "quick suite produced no measurable benches");
+    assert_eq!(
+        cmp.regressions.len(),
+        measurable,
+        "every measurable bench must flag a 2x slowdown: {:?}",
+        cmp.regressions
+    );
+
+    // The mirrored direction — current 2x *faster* than baseline — passes.
+    let cmp = suite::compare(&result, &slowed, 1.5);
+    assert!(cmp.regressions.is_empty(), "improvements flagged: {:?}", cmp.regressions);
+}
