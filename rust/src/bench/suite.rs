@@ -44,6 +44,7 @@ use crate::demo::SparseGrad;
 use crate::minjson::{self, field, fnum, read_f64, Value};
 use crate::openskill::{PlackettLuce, Rating};
 use crate::peers::Behavior;
+use crate::runtime::WorkerPool;
 use crate::storage::{ObjectStore, ProviderModel, ReadKey};
 use crate::util::Rng;
 
@@ -122,7 +123,8 @@ pub fn registry() -> Vec<SuiteSpec> {
         SuiteSpec {
             name: "hotpath",
             description: "per-round critical path: aggregation, wire codec, \
-                          ratings, Yuma, fast-eval fan-out, full-round thread sweep",
+                          ratings, Yuma, pool dispatch, fast-eval fan-out, \
+                          full-round thread sweep",
             benches: vec![
                 bench("aggregate_g4_c1312", |c| bench_aggregate(c, 4, 1312, 167_936)),
                 bench("aggregate_g15_c1312", |c| bench_aggregate(c, 15, 1312, 167_936)),
@@ -134,6 +136,7 @@ pub fn registry() -> Vec<SuiteSpec> {
                 bench("openskill_match_16", bench_openskill),
                 bench("yuma_epoch_64x256", bench_yuma),
                 bench("corpus_shard", bench_corpus),
+                bench("pool_dispatch_j16_t4", bench_pool_dispatch),
                 bench("fasteval_32p_seq", |c| bench_fasteval(c, 1)),
                 bench("fasteval_32p_fan4", |c| bench_fasteval(c, 4)),
                 bench("round_pipeline_t1", |c| bench_round_pipeline(c, 1)),
@@ -535,8 +538,35 @@ fn bench_corpus(ctx: &BenchCtx) -> Result<Option<BenchOutcome>> {
     Ok(Some(BenchOutcome { timing, throughput: Some((mtok_per_s, "Mtok/s")) }))
 }
 
+/// Raw dispatch overhead of the persistent worker pool: scatter 16 tiny
+/// deterministic jobs over 4 workers and wait for the scope. This is the
+/// structural cost `runtime::pool` replaced per-stage `thread::scope`
+/// spawn/join with — the bench pins it so the pool's queue/latch path
+/// never regresses back toward thread-creation cost.
+fn bench_pool_dispatch(ctx: &BenchCtx) -> Result<Option<BenchOutcome>> {
+    const JOBS: usize = 16;
+    let pool = WorkerPool::new(4);
+    let mut items: Vec<u64> = (0..JOBS as u64).collect();
+    let timing = time_it(ctx.warmup(10), ctx.iters(500), || {
+        // Width == len: one job per item, the smallest unit the round
+        // pipeline dispatches, with just enough arithmetic that the job
+        // body is not optimized to nothing.
+        let sums = pool.scatter(&mut items, JOBS, |base, chunk| {
+            chunk
+                .iter_mut()
+                .for_each(|x| *x = x.wrapping_mul(0x9E37_79B9).rotate_left(7));
+            base as u64 + chunk.iter().copied().fold(0u64, u64::wrapping_add)
+        });
+        std::hint::black_box(sums);
+    });
+    let jobs_per_s = JOBS as f64 / timing.mean_s.max(1e-12);
+    Ok(Some(BenchOutcome { timing, throughput: Some((jobs_per_s, "jobs/s")) }))
+}
+
 /// One validator's fast-evaluation sweep over 32 submitted peers (windowed
-/// GET + decode + structural checks + SyncScore), at the given fan-out.
+/// GET + decode + structural checks + SyncScore), at the given fan-out
+/// (chunks dispatched on a persistent pool, as in the live round
+/// pipeline).
 fn bench_fasteval(ctx: &BenchCtx, fanout: usize) -> Result<Option<BenchOutcome>> {
     const N: usize = 32;
     const COEFF: usize = 1312;
@@ -571,8 +601,9 @@ fn bench_fasteval(ctx: &BenchCtx, fanout: usize) -> Result<Option<BenchOutcome>>
         sync_threshold: 3.0,
         window: (200, 2_000),
     };
+    let pool = WorkerPool::new(fanout);
     let timing = time_it(ctx.warmup(2), ctx.iters(30), || {
-        let _ = fast_evaluate_all(&store, &peers, &checks, fanout).expect("fast eval");
+        let _ = fast_evaluate_all(&store, &peers, &checks, &pool, fanout).expect("fast eval");
     });
     let peers_per_s = N as f64 / timing.mean_s.max(1e-12);
     Ok(Some(BenchOutcome { timing, throughput: Some((peers_per_s, "peers/s")) }))

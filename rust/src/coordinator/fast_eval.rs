@@ -17,6 +17,7 @@
 use crate::chain::Uid;
 use crate::demo::wire::{Submission, WireError};
 use crate::demo::SparseGrad;
+use crate::runtime::WorkerPool;
 use crate::storage::{ObjectStore, ReadKey, SimTime, WindowedGet};
 
 /// Why fast evaluation failed (diagnostics + tests).
@@ -220,30 +221,24 @@ fn fast_evaluate_chunk(
 }
 
 /// Fast-evaluate every peer, fanning the independent per-peer checks out
-/// over at most `fanout` worker threads (1 = sequential). The result order
-/// is the input peer order regardless of `fanout`, so downstream score
-/// bookkeeping is deterministic.
+/// over at most `fanout` workers of the run's persistent [`WorkerPool`]
+/// (1 = sequential, on the calling thread). The result order is the input
+/// peer order regardless of `fanout` or pool width, so downstream score
+/// bookkeeping is deterministic. Safe to call from a pool worker (the
+/// per-validator eval loop does): waiters help drain the shared queue, so
+/// nested fan-out cannot deadlock.
 pub fn fast_evaluate_all(
     store: &ObjectStore,
     peers: &[(Uid, ReadKey)],
     checks: &RoundChecks<'_>,
+    pool: &WorkerPool,
     fanout: usize,
 ) -> anyhow::Result<Vec<(Uid, FastEvalOutcome)>> {
     if fanout <= 1 || peers.len() <= 1 {
         return fast_evaluate_chunk(store, peers, checks);
     }
-    let chunk = peers.len().div_ceil(fanout);
     let per_chunk: Vec<anyhow::Result<Vec<(Uid, FastEvalOutcome)>>> =
-        std::thread::scope(|s| {
-            let handles: Vec<_> = peers
-                .chunks(chunk)
-                .map(|ch| s.spawn(move || fast_evaluate_chunk(store, ch, checks)))
-                .collect();
-            handles
-                .into_iter()
-                .map(|h| h.join().expect("fast-eval worker panicked"))
-                .collect()
-        });
+        pool.scatter_ref(peers, fanout, |_base, ch| fast_evaluate_chunk(store, ch, checks));
     let mut out = Vec::with_capacity(peers.len());
     for r in per_chunk {
         out.extend(r?);
@@ -447,9 +442,10 @@ mod tests {
             sync_threshold: 3.0,
             window: (200, 2_000),
         };
-        let seq = fast_evaluate_all(&store, &peers, &checks, 1).unwrap();
+        let pool = WorkerPool::new(4);
+        let seq = fast_evaluate_all(&store, &peers, &checks, &pool, 1).unwrap();
         for fanout in [2, 4, 8, 32] {
-            let par = fast_evaluate_all(&store, &peers, &checks, fanout).unwrap();
+            let par = fast_evaluate_all(&store, &peers, &checks, &pool, fanout).unwrap();
             assert_eq!(par.len(), seq.len());
             for ((ua, a), (ub, b)) in seq.iter().zip(&par) {
                 assert_eq!(ua, ub, "peer order must be preserved at fanout {fanout}");

@@ -36,7 +36,10 @@
 //!
 //! The worker count comes from [`RunConfig::threads`] (0 = auto: the
 //! `GAUNTLET_THREADS` environment variable, else the machine's available
-//! parallelism; 1 = fully sequential). Model execution is generic over
+//! parallelism; 1 = fully sequential), resolved **once** at construction
+//! into a persistent [`WorkerPool`](crate::runtime::WorkerPool) — every
+//! parallel stage of every round dispatches onto the same long-lived
+//! workers instead of spawning scoped threads. Model execution is generic over
 //! [`ExecBackend`]. `Sync` backends (the pure-Rust `SimExec`) advertise
 //! themselves via `ExecBackend::as_shared` and are called by every worker
 //! directly; the PJRT [`Executor`] is not `Send`, so its workers instead
@@ -66,7 +69,8 @@ use crate::demo::aggregate::{aggregate_into, AggregateOpts};
 use crate::demo::wire::Submission;
 use crate::minjson::{self, fnum, read_f64, Value};
 use crate::peers::{Behavior, PeerCtx, PeerOutput, PeerRunner};
-use crate::runtime::{artifact_dir, exec_service, ExecBackend, Executor, SimExec};
+use crate::runtime::pool::Job;
+use crate::runtime::{artifact_dir, exec_service, ExecBackend, Executor, SimExec, WorkerPool};
 use crate::scenario::{Event, Scenario};
 use crate::storage::{ObjectStore, ProviderModel};
 
@@ -145,6 +149,11 @@ impl RunConfig {
     /// `GAUNTLET_THREADS` environment variable, else available parallelism
     /// (capped at 16 — the round pipeline's widest useful fan-out at
     /// simulated scale).
+    ///
+    /// The run resolves this **once**, when it is assembled: the result
+    /// sizes the persistent `runtime::pool::WorkerPool` the round
+    /// pipeline dispatches onto, so the env lookup and CPU probe never
+    /// happen per round.
     pub fn effective_threads(&self) -> usize {
         if self.threads > 0 {
             return self.threads;
@@ -391,8 +400,19 @@ pub struct TemplarRunWith<E: ExecBackend + 'static> {
     pub theta: Vec<f32>,
     pub checkpoints: CheckpointStore,
     pub round: u64,
+    /// The persistent worker pool every parallel stage dispatches onto:
+    /// created once per run from the resolved thread count (so
+    /// `GAUNTLET_THREADS` / CPU probing happen exactly once, not per
+    /// round) and reused for peer turns, fast-eval fan-out, and the
+    /// per-validator eval loop. See `runtime::pool` for the determinism
+    /// contract.
+    pool: WorkerPool,
     /// Scratch dense coefficient buffer (perf: reused across rounds).
     dense: Vec<f32>,
+    /// Scratch for the post-aggregation parameters: `apply_update_into`
+    /// writes here and the buffer is swapped with `theta`, so an
+    /// updating round allocates nothing theta-sized.
+    theta_next: Vec<f32>,
     /// Last round's aggregated coefficients (for divergent peers). After
     /// an updating round this buffer and `dense` are *swapped*, not
     /// cloned — the round hot path never reallocates the coefficient
@@ -503,6 +523,9 @@ impl<E: ExecBackend + 'static> TemplarRunWith<E> {
         let last_coeff = vec![0.0; meta.padded_count];
         let clock = cfg.clock;
         let initial_peers = cfg.peers.clone();
+        // Resolve the thread knob exactly once: the pool (and the warn-once
+        // on an unparsable GAUNTLET_THREADS) happen here, never per round.
+        let pool = WorkerPool::new(cfg.effective_threads());
         let mut run = TemplarRunWith {
             cfg,
             exec,
@@ -515,7 +538,9 @@ impl<E: ExecBackend + 'static> TemplarRunWith<E> {
             theta,
             checkpoints,
             round: 0,
+            pool,
             dense,
+            theta_next: Vec::new(),
             last_coeff,
             last_coeff_valid: false,
             next_hotkey: 0,
@@ -755,18 +780,22 @@ impl<E: ExecBackend + 'static> TemplarRunWith<E> {
             self.emit(RoundEvent::Checkpointed { round });
         }
         self.checkpoints.maybe_checkpoint(round, &self.theta);
-        let threads = self.cfg.effective_threads();
+        // Resolved once at construction; reading it off the pool is a
+        // field load, not an env-var lookup + CPU probe per round.
+        let threads = self.pool.threads();
 
         // ------------------------- peers act -----------------------------
-        // First pass: independent behaviours, produced concurrently. PUTs
-        // are applied afterwards in peer order so the provider's
-        // latency/outage draws don't depend on worker timing.
+        // First pass: independent behaviours, produced concurrently on the
+        // persistent pool. PUTs are applied afterwards in peer order so
+        // the provider's latency/outage draws don't depend on worker
+        // timing.
         let outputs = {
             let exec = &self.exec;
             let corpus = &self.corpus;
             let theta = &self.theta;
             let clock = &self.clock;
             let params = &self.cfg.params;
+            let pool = &self.pool;
             if threads <= 1 || self.peers.len() <= 1 {
                 step_peer_chunk(exec, &mut self.peers, 0, corpus, theta, round, clock, params)?
             } else if let Some(shared) = exec.as_shared() {
@@ -779,7 +808,7 @@ impl<E: ExecBackend + 'static> TemplarRunWith<E> {
                     round,
                     clock,
                     params,
-                    threads,
+                    pool,
                 )?
             } else {
                 // Thread-affine backend: workers go through the funnel.
@@ -791,7 +820,7 @@ impl<E: ExecBackend + 'static> TemplarRunWith<E> {
                     round,
                     clock,
                     params,
-                    threads,
+                    pool,
                 )?
             }
         };
@@ -844,68 +873,62 @@ impl<E: ExecBackend + 'static> TemplarRunWith<E> {
             let theta = &self.theta;
             let clock = &self.clock;
             let store = &self.store;
+            let pool = &self.pool;
             let validators = &mut self.validators;
             if threads <= 1 || validators.is_empty() {
                 let mut out = Vec::with_capacity(validators.len());
                 for v in validators.iter_mut() {
                     out.push(v.evaluate_round(
                         exec, corpus, theta, round, clock, store, &read_keys, &peer_uids,
-                        lr_t, 1,
+                        lr_t, pool, 1,
                     )?);
                 }
                 out
             } else {
-                // Validators run concurrently; each fans its fast checks
-                // out over its share of the worker budget.
+                // Validators run concurrently on the pool; each fans its
+                // fast checks out over its share of the worker budget
+                // (nested dispatch on the same pool — waiters help, see
+                // `runtime::pool`).
                 let fanout = (threads / validators.len()).max(1);
                 let results: Vec<Result<RoundOutcome>> = if let Some(shared) = exec.as_shared()
                 {
                     // Sync backend: validator workers call it directly.
-                    std::thread::scope(|s| {
-                        let handles: Vec<_> = validators
-                            .iter_mut()
-                            .map(|v| {
-                                let read_keys = &read_keys;
-                                let peer_uids = &peer_uids;
-                                s.spawn(move || {
-                                    v.evaluate_round(
-                                        shared, corpus, theta, round, clock, store, read_keys,
-                                        peer_uids, lr_t, fanout,
-                                    )
-                                })
-                            })
-                            .collect();
-                        handles
-                            .into_iter()
-                            .map(|h| h.join().expect("validator worker panicked"))
-                            .collect()
+                    let read_keys = &read_keys;
+                    let peer_uids = &peer_uids;
+                    pool.map_indexed(validators, |_, v| {
+                        v.evaluate_round(
+                            shared, corpus, theta, round, clock, store, read_keys, peer_uids,
+                            lr_t, pool, fanout,
+                        )
                     })
                 } else {
                     // Thread-affine backend: it stays on this thread,
-                    // serving the validator workers' ExecClient requests.
+                    // serving the validator workers' ExecClient requests
+                    // while the pool runs the evaluations.
                     let (client, host) = exec_service(exec);
-                    std::thread::scope(|s| {
-                        let handles: Vec<_> = validators
-                            .iter_mut()
-                            .map(|v| {
-                                let client = client.clone();
-                                let read_keys = &read_keys;
-                                let peer_uids = &peer_uids;
-                                s.spawn(move || {
-                                    v.evaluate_round(
-                                        &client, corpus, theta, round, clock, store, read_keys,
-                                        peer_uids, lr_t, fanout,
-                                    )
-                                })
-                            })
-                            .collect();
+                    let mut slots: Vec<Option<Result<RoundOutcome>>> =
+                        Vec::with_capacity(validators.len());
+                    slots.resize_with(validators.len(), || None);
+                    let jobs: Vec<Job<'_>> = validators
+                        .iter_mut()
+                        .zip(slots.iter_mut())
+                        .map(|(v, slot)| {
+                            let client = client.clone();
+                            let read_keys = &read_keys;
+                            let peer_uids = &peer_uids;
+                            Box::new(move || {
+                                *slot = Some(v.evaluate_round(
+                                    &client, corpus, theta, round, clock, store, read_keys,
+                                    peer_uids, lr_t, pool, fanout,
+                                ));
+                            }) as Job<'_>
+                        })
+                        .collect();
+                    pool.run_with(jobs, move || {
                         drop(client);
                         host.serve();
-                        handles
-                            .into_iter()
-                            .map(|h| h.join().expect("validator worker panicked"))
-                            .collect()
-                    })
+                    });
+                    slots.into_iter().map(|s| s.expect("pool job completed")).collect()
                 };
                 let mut out = Vec::with_capacity(results.len());
                 for r in results {
@@ -1018,9 +1041,12 @@ impl<E: ExecBackend + 'static> TemplarRunWith<E> {
                 .map(|(u, w)| (&outcome.valid_submissions[u].grad, *w))
                 .collect();
             aggregate_into(&contributions, &mut self.dense, &self.cfg.agg);
-            let theta_after = self.exec.apply_update(&self.theta, &self.dense, lr_t)?;
-            self.checkpoints.record_update(round, &self.theta, &theta_after, lr_t)?;
-            self.theta = theta_after;
+            // In-place kernel + buffer swap: the new parameters land in
+            // the reusable `theta_next` scratch and become `theta` by
+            // exchange, so the update step allocates nothing.
+            self.exec.apply_update_into(&self.theta, &self.dense, lr_t, &mut self.theta_next)?;
+            self.checkpoints.record_update(round, &self.theta, &self.theta_next, lr_t)?;
+            std::mem::swap(&mut self.theta, &mut self.theta_next);
             std::mem::swap(&mut self.dense, &mut self.last_coeff);
         }
         self.last_coeff_valid = had_update;
@@ -1168,6 +1194,7 @@ impl<E: ExecBackend + 'static> TemplarRunWith<E> {
         let clock = cfg.clock;
         let metrics = Arc::new(MetricsObserver::new());
         metrics.push_pending(snap.pending_events);
+        let pool = WorkerPool::new(cfg.effective_threads());
         Ok(TemplarRunWith {
             cfg,
             exec,
@@ -1180,7 +1207,9 @@ impl<E: ExecBackend + 'static> TemplarRunWith<E> {
             theta: snap.theta,
             checkpoints,
             round: snap.round,
+            pool,
             dense,
+            theta_next: Vec::new(),
             last_coeff,
             last_coeff_valid: false,
             next_hotkey: snap.next_hotkey,
@@ -1236,6 +1265,10 @@ impl<E: ExecBackend + 'static> TemplarRunWith<E> {
     }
 }
 
+/// What one first-pass pool job produces: the chunk's `(peer_index,
+/// output)` pairs in ascending index order, or the first error.
+type PeerChunkOut = Result<Vec<(usize, PeerOutput)>>;
+
 /// Step a contiguous chunk of peers sequentially (first pass only).
 /// `base` is the chunk's offset in the full peer list, so results come
 /// back as `(peer_index, output)` in ascending index order. Shared by the
@@ -1251,7 +1284,7 @@ fn step_peer_chunk<B: ExecBackend + ?Sized>(
     round: u64,
     clock: &RoundClock,
     params: &GauntletParams,
-) -> Result<Vec<(usize, PeerOutput)>> {
+) -> PeerChunkOut {
     let mut out = Vec::with_capacity(chunk.len());
     for (j, p) in chunk.iter_mut().enumerate() {
         if p.behavior.is_second_pass() {
@@ -1263,8 +1296,9 @@ fn step_peer_chunk<B: ExecBackend + ?Sized>(
     Ok(out)
 }
 
-/// First-pass peer turns across a worker pool, calling a `Sync` backend
-/// directly from every worker.
+/// First-pass peer turns on the run's persistent worker pool, calling a
+/// `Sync` backend directly from every worker. Chunking and result order
+/// match the sequential sweep exactly (see `runtime::pool`).
 #[allow(clippy::too_many_arguments)]
 fn step_first_pass_shared(
     exec: &(dyn ExecBackend + Sync),
@@ -1274,41 +1308,23 @@ fn step_first_pass_shared(
     round: u64,
     clock: &RoundClock,
     params: &GauntletParams,
-    threads: usize,
+    pool: &WorkerPool,
 ) -> Result<Vec<(usize, PeerOutput)>> {
-    let chunk_size = peers.len().div_ceil(threads).max(1);
-    let per_chunk: Vec<Result<Vec<(usize, PeerOutput)>>> = std::thread::scope(|s| {
-        let handles: Vec<_> = peers
-            .chunks_mut(chunk_size)
-            .enumerate()
-            .map(|(ci, chunk)| {
-                s.spawn(move || {
-                    step_peer_chunk(
-                        exec,
-                        chunk,
-                        ci * chunk_size,
-                        corpus,
-                        theta,
-                        round,
-                        clock,
-                        params,
-                    )
-                })
-            })
-            .collect();
-        handles.into_iter().map(|h| h.join().expect("peer worker panicked")).collect()
+    let n = peers.len();
+    let per_chunk: Vec<PeerChunkOut> = pool.scatter(peers, pool.threads(), |base, chunk| {
+        step_peer_chunk(exec, chunk, base, corpus, theta, round, clock, params)
     });
-    let mut out = Vec::with_capacity(peers.len());
+    let mut out = Vec::with_capacity(n);
     for r in per_chunk {
         out.extend(r?);
     }
     Ok(out)
 }
 
-/// First-pass peer turns across a worker pool for a thread-affine
+/// First-pass peer turns on the persistent pool for a thread-affine
 /// backend: model execution goes through an [`exec_service`] funnel so
 /// the backend never leaves the calling thread (which serves requests
-/// until all workers finish).
+/// until every dispatched chunk finishes).
 #[allow(clippy::too_many_arguments)]
 fn step_first_pass_funneled<E: ExecBackend + 'static>(
     exec: &E,
@@ -1318,37 +1334,41 @@ fn step_first_pass_funneled<E: ExecBackend + 'static>(
     round: u64,
     clock: &RoundClock,
     params: &GauntletParams,
-    threads: usize,
+    pool: &WorkerPool,
 ) -> Result<Vec<(usize, PeerOutput)>> {
-    let chunk_size = peers.len().div_ceil(threads).max(1);
+    let n = peers.len();
+    let chunk_size = WorkerPool::chunk_len(n, pool.threads());
+    let n_chunks = n.div_ceil(chunk_size);
     let (client, host) = exec_service(exec);
-    let per_chunk: Vec<Result<Vec<(usize, PeerOutput)>>> = std::thread::scope(|s| {
-        let handles: Vec<_> = peers
-            .chunks_mut(chunk_size)
-            .enumerate()
-            .map(|(ci, chunk)| {
-                let client = client.clone();
-                s.spawn(move || {
-                    step_peer_chunk(
-                        &client,
-                        chunk,
-                        ci * chunk_size,
-                        corpus,
-                        theta,
-                        round,
-                        clock,
-                        params,
-                    )
-                })
-            })
-            .collect();
+    let mut slots: Vec<Option<PeerChunkOut>> = Vec::with_capacity(n_chunks);
+    slots.resize_with(n_chunks, || None);
+    let jobs: Vec<Job<'_>> = peers
+        .chunks_mut(chunk_size)
+        .zip(slots.iter_mut())
+        .enumerate()
+        .map(|(ci, (chunk, slot))| {
+            let client = client.clone();
+            Box::new(move || {
+                *slot = Some(step_peer_chunk(
+                    &client,
+                    chunk,
+                    ci * chunk_size,
+                    corpus,
+                    theta,
+                    round,
+                    clock,
+                    params,
+                ));
+            }) as Job<'_>
+        })
+        .collect();
+    pool.run_with(jobs, move || {
         drop(client);
         host.serve();
-        handles.into_iter().map(|h| h.join().expect("peer worker panicked")).collect()
     });
-    let mut out = Vec::with_capacity(peers.len());
-    for r in per_chunk {
-        out.extend(r?);
+    let mut out = Vec::with_capacity(n);
+    for r in slots {
+        out.extend(r.expect("pool job completed")?);
     }
     Ok(out)
 }

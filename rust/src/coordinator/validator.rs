@@ -20,7 +20,7 @@ use super::GauntletParams;
 use crate::chain::{Chain, Uid};
 use crate::data::Corpus;
 use crate::demo::wire::Submission;
-use crate::runtime::ExecBackend;
+use crate::runtime::{ExecBackend, WorkerPool};
 use crate::storage::{ObjectStore, ReadKey};
 use crate::util::Rng;
 
@@ -69,10 +69,12 @@ impl Validator {
     }
 
     /// Evaluate one communication round: fast checks over all peers
-    /// (fanned out over at most `fanout` worker threads), primary
-    /// evaluation of the sampled subset, and the resulting incentive /
-    /// aggregation weights. Pure with respect to the chain — the caller
-    /// commits `RoundOutcome::incentives` via [`Chain::set_weights`].
+    /// (fanned out over at most `fanout` workers of the run's persistent
+    /// `pool` — safe even when this call itself runs on a pool worker),
+    /// primary evaluation of the sampled subset, and the resulting
+    /// incentive / aggregation weights. Pure with respect to the chain —
+    /// the caller commits `RoundOutcome::incentives` via
+    /// [`Chain::set_weights`].
     ///
     /// Every stateful step (phi penalties, EMA updates, rating matches,
     /// the sampling RNG) runs in peer order on this thread, so the outcome
@@ -90,6 +92,7 @@ impl Validator {
         read_keys: &BTreeMap<Uid, ReadKey>,
         peer_uids: &[Uid],
         lr_t: f32,
+        pool: &WorkerPool,
         fanout: usize,
     ) -> Result<RoundOutcome> {
         let meta = exec.meta();
@@ -117,7 +120,7 @@ impl Validator {
             sync_threshold: self.params.sync_threshold,
             window: clock.put_window(round),
         };
-        let fast = fast_evaluate_all(store, &keyed, &checks, fanout)?;
+        let fast = fast_evaluate_all(store, &keyed, &checks, pool, fanout)?;
         for (uid, outcome) in fast {
             let passed = outcome.passed();
             let phi = outcome.phi(self.params.phi_penalty);
@@ -195,8 +198,9 @@ impl Validator {
         lr_t: f32,
     ) -> Result<RoundOutcome> {
         let read_keys = chain_read_keys(chain, peer_uids)?;
+        let pool = WorkerPool::inline();
         let out = self.evaluate_round(
-            exec, corpus, theta, round, clock, store, &read_keys, peer_uids, lr_t, 1,
+            exec, corpus, theta, round, clock, store, &read_keys, peer_uids, lr_t, &pool, 1,
         )?;
         chain.set_weights(self.uid, &out.incentives)?;
         Ok(out)

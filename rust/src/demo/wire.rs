@@ -60,15 +60,13 @@ impl Submission {
         out.extend_from_slice(&self.round.to_le_bytes());
         out.extend_from_slice(&(c as u32).to_le_bytes());
         out.extend_from_slice(&(p as u32).to_le_bytes());
-        for v in &self.grad.vals {
-            out.extend_from_slice(&v.to_le_bytes());
-        }
-        for i in &self.grad.idx {
-            out.extend_from_slice(&i.to_le_bytes());
-        }
-        for v in &self.probe {
-            out.extend_from_slice(&v.to_le_bytes());
-        }
+        // Bulk little-endian fast path for the three numeric sections
+        // (the overwhelming bulk of the object): one memcpy each on LE
+        // targets, byte-wise fallback elsewhere — identical bytes either
+        // way (see `util::extend_f32_le` and its endianness test).
+        crate::util::extend_f32_le(&mut out, &self.grad.vals);
+        crate::util::extend_i32_le(&mut out, &self.grad.idx);
+        crate::util::extend_f32_le(&mut out, &self.probe);
         let digest = Sha256::digest(&out);
         out.extend_from_slice(&digest);
         out
@@ -102,26 +100,15 @@ impl Submission {
         if digest.as_slice() != &bytes[body_end..] {
             return Err(WireError::BadDigest);
         }
-        // Bulk, exactly-sized decode: `chunks_exact` over pre-sliced
-        // regions collects through an exact-size iterator, so each buffer
-        // is allocated once at its final capacity and the per-element
-        // bounds checks of the old byte-offset loop disappear — this runs
-        // once per peer per validator per round on the fast-eval path.
+        // Bulk, exactly-sized decode: each section is one slice copy on
+        // LE targets (byte-wise fallback elsewhere) — this runs once per
+        // peer per validator per round on the fast-eval path.
         let mut off = HEADER;
-        let vals: Vec<f32> = bytes[off..off + 4 * c]
-            .chunks_exact(4)
-            .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
-            .collect();
+        let vals = crate::util::f32_from_le_bytes(&bytes[off..off + 4 * c]);
         off += 4 * c;
-        let idx: Vec<i32> = bytes[off..off + 4 * c]
-            .chunks_exact(4)
-            .map(|b| i32::from_le_bytes(b.try_into().unwrap()))
-            .collect();
+        let idx = crate::util::i32_from_le_bytes(&bytes[off..off + 4 * c]);
         off += 4 * c;
-        let probe: Vec<f32> = bytes[off..off + 4 * p]
-            .chunks_exact(4)
-            .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
-            .collect();
+        let probe = crate::util::f32_from_le_bytes(&bytes[off..off + 4 * p]);
         Ok(Submission { uid, round, grad: SparseGrad { vals, idx }, probe })
     }
 
@@ -227,6 +214,87 @@ mod tests {
             };
             let d = Submission::decode(&s.encode()).map_err(|e| e.to_string())?;
             prop_assert!(d == s, "roundtrip mismatch");
+            Ok(())
+        });
+    }
+
+    /// The byte-wise reference encoder the bulk fast path must match
+    /// exactly (this is the pre-fast-path implementation, kept as the
+    /// format's executable specification).
+    fn encode_bytewise(s: &Submission) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(&MAGIC.to_le_bytes());
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.extend_from_slice(&0u16.to_le_bytes());
+        out.extend_from_slice(&s.uid.to_le_bytes());
+        out.extend_from_slice(&s.round.to_le_bytes());
+        out.extend_from_slice(&(s.grad.vals.len() as u32).to_le_bytes());
+        out.extend_from_slice(&(s.probe.len() as u32).to_le_bytes());
+        for v in &s.grad.vals {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        for i in &s.grad.idx {
+            out.extend_from_slice(&i.to_le_bytes());
+        }
+        for v in &s.probe {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        let digest = Sha256::digest(&out);
+        out.extend_from_slice(&digest);
+        out
+    }
+
+    #[test]
+    fn prop_bulk_encode_matches_bytewise_reference() {
+        // Random shapes — empty sections, odd sizes, large-ish payloads —
+        // plus adversarial values (NaN, ±inf, -0.0) must produce the
+        // byte-identical object under the bulk fast path, whatever the
+        // target endianness. This is the endianness-safety pin for the
+        // `util::extend_*_le` fast path on the wire format itself.
+        // Shape schedule: prop::check's sizes are 1 + (case*7) % 64, so
+        // `size % 5 == 0` (c = 0) and `size % 9 == 0` (p = 0) both occur
+        // within 40 cases — the empty-section encodings (zero-length
+        // bulk copies) really are exercised.
+        prop::check("wire-bulk-vs-bytewise", 40, |rng, size| {
+            let c = if size % 5 == 0 { 0 } else { (size * 37) % 700 };
+            let p = size % 9;
+            let special = [f32::NAN, f32::INFINITY, f32::NEG_INFINITY, -0.0, 0.0];
+            let s = Submission {
+                uid: rng.below(u32::MAX as u64) as u32,
+                round: rng.next_u64() % 1_000_000,
+                grad: SparseGrad {
+                    vals: (0..c)
+                        .map(|i| {
+                            if i % 17 == 0 {
+                                special[i % special.len()]
+                            } else {
+                                rng.normal_f32(0.0, 10.0)
+                            }
+                        })
+                        .collect(),
+                    idx: (0..c).map(|_| rng.below(1 << 24) as i32 - (1 << 23)).collect(),
+                },
+                probe: (0..p).map(|_| rng.normal_f32(0.0, 1.0)).collect(),
+            };
+            let fast = s.encode();
+            let reference = encode_bytewise(&s);
+            prop_assert!(fast == reference, "bulk encoding diverged from byte-wise reference");
+            let d = Submission::decode(&fast).map_err(|e| e.to_string())?;
+            prop_assert!(d.uid == s.uid && d.round == s.round, "header mismatch");
+            prop_assert!(
+                d.grad.vals.len() == s.grad.vals.len()
+                    && d.grad
+                        .vals
+                        .iter()
+                        .zip(&s.grad.vals)
+                        .all(|(a, b)| a.to_bits() == b.to_bits()),
+                "vals bits must survive"
+            );
+            prop_assert!(d.grad.idx == s.grad.idx, "idx mismatch");
+            prop_assert!(
+                d.probe.iter().zip(&s.probe).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "probe bits must survive"
+            );
             Ok(())
         });
     }

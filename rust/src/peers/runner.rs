@@ -67,6 +67,11 @@ pub struct PeerRunner {
     /// scratch: zero-filled before every use, so it is *not* part of
     /// [`PeerRunnerState`] and restarts empty after a snapshot resume.
     grad_accum: Vec<f32>,
+    /// Per-microbatch kernel output scratch (the buffer
+    /// [`ExecBackend::grad_into`] writes into, also reused as the
+    /// `apply_update_into` target for divergent peers). Pure scratch,
+    /// like `grad_accum`: every consumer overwrites it fully.
+    grad_scratch: Vec<f32>,
 }
 
 /// Every persistent field of a [`PeerRunner`], exported as plain data for
@@ -99,6 +104,7 @@ impl PeerRunner {
             last_microbatches: 0,
             last_local_loss: f64::NAN,
             grad_accum: Vec::new(),
+            grad_scratch: Vec::new(),
         }
     }
 
@@ -129,6 +135,7 @@ impl PeerRunner {
             last_microbatches: state.last_microbatches,
             last_local_loss: state.last_local_loss,
             grad_accum: Vec::new(),
+            grad_scratch: Vec::new(),
         }
     }
 
@@ -273,15 +280,17 @@ impl PeerRunner {
         self.last_microbatches = n_mb;
 
         // Zero-fill the reusable accumulator instead of allocating one per
-        // round.
+        // round; the per-microbatch gradient lands in the reusable
+        // `grad_scratch` (`grad_into`), so the inner loop allocates
+        // nothing theta-sized at all.
         self.grad_accum.clear();
         self.grad_accum.resize(meta.param_count, 0.0);
         let mut loss_sum = 0.0f64;
         for mb in 0..n_mb {
             let toks = ctx.corpus.assigned_shard(self.uid, ctx.round, mb as u32, b, s1);
-            let (loss, g) = ctx.exec.grad(theta, &toks)?;
+            let loss = ctx.exec.grad_into(theta, &toks, &mut self.grad_scratch)?;
             loss_sum += loss as f64;
-            for (a, gi) in self.grad_accum.iter_mut().zip(&g) {
+            for (a, gi) in self.grad_accum.iter_mut().zip(&self.grad_scratch) {
                 *a += gi / n_mb as f32;
             }
         }
@@ -326,10 +335,11 @@ impl PeerRunner {
             b,
             s1,
         );
-        let (loss, g) = ctx.exec.grad(theta, &toks)?;
+        let loss = ctx.exec.grad_into(theta, &toks, &mut self.grad_scratch)?;
         self.last_local_loss = loss as f64;
         self.last_microbatches = 1;
-        let (vals, idx, e2) = ctx.exec.demo_compress(&self.error, &g, ctx.params.demo_decay)?;
+        let (vals, idx, e2) =
+            ctx.exec.demo_compress(&self.error, &self.grad_scratch, ctx.params.demo_decay)?;
         self.error = e2;
         let sub = Submission {
             uid: self.uid,
@@ -356,13 +366,16 @@ impl PeerRunner {
                 if round + 1 == at {
                     // entering the pause: freeze the current global model
                     self.theta_local = Some(new_global.to_vec());
-                } else if let Some(local) = &self.theta_local {
+                } else if let Some(local) = &mut self.theta_local {
                     if round + 1 >= at + pause {
                         // resumed: keep applying aggregations to the stale
-                        // base (permanently ~`pause` steps divergent)
+                        // base (permanently ~`pause` steps divergent).
+                        // Applied into the reusable scratch and swapped in,
+                        // so maintaining the divergent copy allocates
+                        // nothing per round.
                         if let Some(coeff) = agg_coeff {
-                            let updated = exec.apply_update(local, coeff, lr)?;
-                            self.theta_local = Some(updated);
+                            exec.apply_update_into(local, coeff, lr, &mut self.grad_scratch)?;
+                            std::mem::swap(local, &mut self.grad_scratch);
                         }
                     }
                     // during the pause: do nothing (model frozen)

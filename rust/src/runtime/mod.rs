@@ -20,9 +20,12 @@
 //! the [`Executor`]. The parallel round pipeline honors this via
 //! [`service::exec_service`]: worker threads hold cloneable
 //! [`service::ExecClient`] handles and the owning thread drains their
-//! requests, so every PJRT call still executes on the owner thread.
+//! requests, so every PJRT call still executes on the owner thread. The
+//! workers themselves come from [`pool::WorkerPool`] — one persistent,
+//! deterministic pool per run, not per-round scoped threads.
 
 pub mod meta;
+pub mod pool;
 pub mod service;
 pub mod sim;
 
@@ -34,6 +37,7 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Context, Result};
 
 pub use meta::{ModelMeta, ParamSpec};
+pub use pool::WorkerPool;
 pub use service::{exec_service, ExecClient, ExecHost};
 pub use sim::{SimExec, SimSpec};
 
@@ -86,6 +90,59 @@ pub trait ExecBackend {
         lr: f32,
         t: f32,
     ) -> Result<(f32, Vec<f32>, Vec<f32>, Vec<f32>)>;
+
+    // ------------------------------------------------------------------
+    // scratch-based in-place kernels
+    //
+    // The allocating entry points above return fresh theta-sized `Vec`s
+    // on every call — fine for the PJRT artifact path (the copy out of
+    // device literals dominates) but the last big per-round allocation
+    // class on the pure-Rust hot path. These variants write into
+    // caller-owned scratch instead; the defaults fall back to the
+    // allocating versions so every backend (including `ExecClient`
+    // proxies) keeps working unchanged, and `SimExec` overrides them
+    // with genuinely allocation-free implementations. All overrides must
+    // stay **value-identical** to the defaults — the determinism
+    // fingerprints in `tests/parallel_determinism.rs` pin this.
+    // ------------------------------------------------------------------
+
+    /// `grad` into a reusable buffer: writes the gradient into
+    /// `grad_out` (cleared first) and returns the loss.
+    fn grad_into(&self, theta: &[f32], tokens: &[i32], grad_out: &mut Vec<f32>) -> Result<f32> {
+        let (loss, g) = self.grad(theta, tokens)?;
+        *grad_out = g;
+        Ok(loss)
+    }
+
+    /// `apply_update` into a reusable buffer: writes `theta'` into `out`
+    /// (cleared first). `out` must not alias `theta`.
+    fn apply_update_into(
+        &self,
+        theta: &[f32],
+        coeff: &[f32],
+        lr: f32,
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        *out = self.apply_update(theta, coeff, lr)?;
+        Ok(())
+    }
+
+    /// Loss before and after one signed evaluation step
+    /// `theta - step * sign(coeff)` on the same token batch, without the
+    /// caller ever materializing the stepped parameters. This is one
+    /// half of `eval_peer` (which measures the delta on two batches).
+    fn loss_delta(
+        &self,
+        theta: &[f32],
+        coeff: &[f32],
+        step: f32,
+        tokens: &[i32],
+    ) -> Result<(f32, f32)> {
+        let before = self.loss(theta, tokens)?;
+        let stepped = self.apply_update(theta, coeff, step)?;
+        let after = self.loss(&stepped, tokens)?;
+        Ok((before, after))
+    }
 
     /// A `Sync` view of this backend, if its entry points may be called
     /// from any thread directly. Thread-affine backends (the PJRT

@@ -30,12 +30,24 @@
 //! scatter, and signed updates consistent with the validator's native-Rust
 //! bookkeeping without a transform library.
 
+use std::cell::RefCell;
+
 use anyhow::{bail, Result};
 use sha2::{Digest, Sha256};
 
 use super::meta::{Hyper, ModelMeta, ParamSpec};
 use super::ExecBackend;
 use crate::util::Rng;
+
+thread_local! {
+    /// Per-worker scratch for the token direction `u_T`. Every loss /
+    /// grad / eval call derives a fresh direction; before this scratch,
+    /// each derivation allocated a theta-sized `Vec` — per peer, per
+    /// microbatch, per validator eval, every round. The round pipeline's
+    /// workers are persistent (`runtime::pool`), so one buffer per
+    /// worker thread lives for the whole run.
+    static DIRECTION_SCRATCH: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
+}
 
 /// Shape of a synthetic model config (everything `ModelMeta` derives from).
 #[derive(Clone, Debug)]
@@ -201,8 +213,8 @@ impl SimExec {
 
     /// Per-batch direction `u_T`: i.i.d. standard normals seeded by a hash
     /// of the tokens (and the run seed, so different runs see different
-    /// data geometry).
-    fn token_direction(&self, tokens: &[i32]) -> Vec<f32> {
+    /// data geometry), written into a reusable buffer (cleared first).
+    fn token_direction_into(&self, tokens: &[i32], out: &mut Vec<f32>) {
         let mut h = Sha256::new();
         h.update(self.seed.to_le_bytes());
         for t in tokens {
@@ -210,7 +222,20 @@ impl SimExec {
         }
         let digest = h.finalize();
         let mut rng = Rng::new(u64::from_le_bytes(digest[..8].try_into().unwrap()));
-        (0..self.meta.param_count).map(|_| rng.normal_f32(0.0, 1.0)).collect()
+        out.clear();
+        out.reserve(self.meta.param_count);
+        out.extend((0..self.meta.param_count).map(|_| rng.normal_f32(0.0, 1.0)));
+    }
+
+    /// Derive `u_T` into this worker's thread-local scratch and hand it
+    /// to `f`. Calls must not nest (each would need its own buffer) —
+    /// every consumer below uses one direction at a time, sequentially.
+    fn with_token_direction<R>(&self, tokens: &[i32], f: impl FnOnce(&[f32]) -> R) -> R {
+        DIRECTION_SCRATCH.with(|cell| {
+            let mut u = cell.borrow_mut();
+            self.token_direction_into(tokens, &mut u);
+            f(&u)
+        })
     }
 
     /// `L(theta, T)` for one direction `u_T` (see module docs).
@@ -224,11 +249,10 @@ impl SimExec {
         self.floor + self.qscale * q / n
     }
 
-    /// One signed evaluation step `theta - step * sign(coeff)` restricted
-    /// to real (non-padding) coefficients.
-    fn signed_step(&self, theta: &[f32], coeff: &[f32], step: f32) -> Vec<f32> {
-        let mut out = theta.to_vec();
-        for (i, t) in out.iter_mut().enumerate() {
+    /// One signed evaluation step `theta - step * sign(coeff)` in place,
+    /// restricted to real (non-padding) coefficients.
+    fn signed_step_in_place(theta: &mut [f32], coeff: &[f32], step: f32) {
+        for (i, t) in theta.iter_mut().enumerate() {
             let c = coeff[i];
             if c > 0.0 {
                 *t -= step;
@@ -236,7 +260,6 @@ impl SimExec {
                 *t += step;
             }
         }
-        out
     }
 }
 
@@ -254,8 +277,7 @@ impl ExecBackend for SimExec {
     fn loss(&self, theta: &[f32], tokens: &[i32]) -> Result<f32> {
         self.check_theta(theta)?;
         self.check_tokens(tokens)?;
-        let u = self.token_direction(tokens);
-        Ok(self.loss_for_direction(theta, &u) as f32)
+        self.with_token_direction(tokens, |u| Ok(self.loss_for_direction(theta, u) as f32))
     }
 
     fn loss_per_seq(&self, theta: &[f32], tokens: &[i32]) -> Result<Vec<f32>> {
@@ -265,23 +287,35 @@ impl ExecBackend for SimExec {
         Ok(tokens
             .chunks(s1)
             .map(|row| {
-                let u = self.token_direction(row);
-                self.loss_for_direction(theta, &u) as f32
+                self.with_token_direction(row, |u| self.loss_for_direction(theta, u) as f32)
             })
             .collect())
     }
 
     fn grad(&self, theta: &[f32], tokens: &[i32]) -> Result<(f32, Vec<f32>)> {
+        let mut g = Vec::new();
+        let loss = self.grad_into(theta, tokens, &mut g)?;
+        Ok((loss, g))
+    }
+
+    fn grad_into(&self, theta: &[f32], tokens: &[i32], grad_out: &mut Vec<f32>) -> Result<f32> {
         self.check_theta(theta)?;
         self.check_tokens(tokens)?;
-        let u = self.token_direction(tokens);
-        let n = theta.len() as f64;
-        let mut g = Vec::with_capacity(theta.len());
-        for i in 0..theta.len() {
-            let x = theta[i] as f64 - self.theta_star[i] as f64 - self.delta * u[i] as f64;
-            g.push((2.0 * self.qscale * x / n) as f32);
-        }
-        Ok((self.loss_for_direction(theta, &u) as f32, g))
+        self.with_token_direction(tokens, |u| {
+            let n = theta.len() as f64;
+            grad_out.clear();
+            grad_out.reserve(theta.len());
+            // Fused loss: `x` here is exactly the term `loss_for_direction`
+            // sums, in the same index order, so accumulating it alongside
+            // the gradient is bit-identical to a separate loss pass.
+            let mut q = 0.0f64;
+            for i in 0..theta.len() {
+                let x = theta[i] as f64 - self.theta_star[i] as f64 - self.delta * u[i] as f64;
+                grad_out.push((2.0 * self.qscale * x / n) as f32);
+                q += x * x;
+            }
+            Ok((self.floor + self.qscale * q / n) as f32)
+        })
     }
 
     fn demo_compress(
@@ -293,12 +327,15 @@ impl ExecBackend for SimExec {
         self.check_theta(error)?;
         self.check_theta(grad)?;
         let m = self.meta.chunk * self.meta.chunk;
-        // Error feedback: e <- decay * e + g.
-        let e: Vec<f32> =
+        // Error feedback: e <- decay * e + g. One buffer serves as both
+        // the ranking source and the returned residual: a chunk is ranked
+        // strictly before any of its entries are zeroed (and chunks cover
+        // disjoint index ranges), so the values read are exactly the
+        // pre-zeroing `e` values the old two-buffer version ranked.
+        let mut residual: Vec<f32> =
             error.iter().zip(grad).map(|(ei, gi)| decay * ei + gi).collect();
         let mut vals = Vec::with_capacity(self.meta.coeff_count);
         let mut idx = Vec::with_capacity(self.meta.coeff_count);
-        let mut residual = e.clone();
         for chunk_id in 0..self.meta.n_chunks {
             let lo = chunk_id * m;
             let hi = ((chunk_id + 1) * m).min(self.meta.param_count);
@@ -306,15 +343,16 @@ impl ExecBackend for SimExec {
             // magnitude; padding positions are zeros and rank last.
             let mut order: Vec<usize> = (lo..hi.max(lo)).collect();
             order.sort_by(|&a, &b| {
-                e[b].abs()
-                    .partial_cmp(&e[a].abs())
+                residual[b]
+                    .abs()
+                    .partial_cmp(&residual[a].abs())
                     .unwrap_or(std::cmp::Ordering::Equal)
                     .then(a.cmp(&b))
             });
             for k in 0..self.meta.topk {
                 match order.get(k) {
                     Some(&i) => {
-                        vals.push(e[i]);
+                        vals.push(residual[i]);
                         idx.push(i as i32);
                         residual[i] = 0.0;
                     }
@@ -331,11 +369,69 @@ impl ExecBackend for SimExec {
     }
 
     fn apply_update(&self, theta: &[f32], coeff: &[f32], lr: f32) -> Result<Vec<f32>> {
+        let mut out = Vec::new();
+        self.apply_update_into(theta, coeff, lr, &mut out)?;
+        Ok(out)
+    }
+
+    fn apply_update_into(
+        &self,
+        theta: &[f32],
+        coeff: &[f32],
+        lr: f32,
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
         self.check_theta(theta)?;
         if coeff.len() != self.meta.padded_count {
             bail!("coeff has {} values, expected {}", coeff.len(), self.meta.padded_count);
         }
-        Ok(self.signed_step(theta, coeff, lr))
+        out.clear();
+        out.extend_from_slice(theta);
+        Self::signed_step_in_place(out, coeff, lr);
+        Ok(())
+    }
+
+    fn loss_delta(
+        &self,
+        theta: &[f32],
+        coeff: &[f32],
+        step: f32,
+        tokens: &[i32],
+    ) -> Result<(f32, f32)> {
+        self.check_theta(theta)?;
+        if coeff.len() != self.meta.padded_count {
+            bail!("coeff has {} values, expected {}", coeff.len(), self.meta.padded_count);
+        }
+        self.check_tokens(tokens)?;
+        // One fused pass, never materializing the stepped parameters.
+        // Bit-compatibility with the default (apply_update + two losses):
+        // the stepped value is computed with the same single f32 subtract
+        // `signed_step_in_place` performs, and each quadratic term keeps
+        // `loss_for_direction`'s exact `(theta - theta*) - delta*u`
+        // association and index-order summation.
+        self.with_token_direction(tokens, |u| {
+            let n = theta.len() as f64;
+            let (mut q0, mut q1) = (0.0f64, 0.0f64);
+            for i in 0..theta.len() {
+                let c = coeff[i];
+                let stepped = if c > 0.0 {
+                    theta[i] - step
+                } else if c < 0.0 {
+                    theta[i] + step
+                } else {
+                    theta[i]
+                };
+                let du = self.delta * u[i] as f64;
+                let x0 = theta[i] as f64 - self.theta_star[i] as f64 - du;
+                let x1 = stepped as f64 - self.theta_star[i] as f64 - du;
+                q0 += x0 * x0;
+                q1 += x1 * x1;
+            }
+            Ok((
+                (self.floor + self.qscale * q0 / n) as f32,
+                (self.floor + self.qscale * q1 / n) as f32,
+            ))
+        })
     }
 
     fn eval_peer(
@@ -346,21 +442,9 @@ impl ExecBackend for SimExec {
         tok_assigned: &[i32],
         tok_rand: &[i32],
     ) -> Result<(f32, f32, f32, f32)> {
-        self.check_theta(theta)?;
-        if coeff.len() != self.meta.padded_count {
-            bail!("coeff has {} values, expected {}", coeff.len(), self.meta.padded_count);
-        }
-        self.check_tokens(tok_assigned)?;
-        self.check_tokens(tok_rand)?;
-        let stepped = self.signed_step(theta, coeff, beta);
-        let ua = self.token_direction(tok_assigned);
-        let ur = self.token_direction(tok_rand);
-        Ok((
-            self.loss_for_direction(theta, &ua) as f32,
-            self.loss_for_direction(&stepped, &ua) as f32,
-            self.loss_for_direction(theta, &ur) as f32,
-            self.loss_for_direction(&stepped, &ur) as f32,
-        ))
+        let (la0, la1) = self.loss_delta(theta, coeff, beta, tok_assigned)?;
+        let (lr0, lr1) = self.loss_delta(theta, coeff, beta, tok_rand)?;
+        Ok((la0, la1, lr0, lr1))
     }
 
     fn as_shared(&self) -> Option<&(dyn ExecBackend + Sync)> {

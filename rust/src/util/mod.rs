@@ -24,20 +24,82 @@ pub fn sign(x: f64) -> f64 {
     }
 }
 
-/// Convert a byte slice (little-endian f32) into a vector of f32.
-pub fn f32_from_le_bytes(bytes: &[u8]) -> Vec<f32> {
-    bytes
-        .chunks_exact(4)
-        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-        .collect()
+// ---------------------------------------------------------------------
+// Bulk little-endian numeric codecs.
+//
+// The wire path (pseudo-gradient submissions, `demo::wire`) and artifact
+// loading move tens of thousands of f32/i32 values per object. On
+// little-endian targets — every platform this runs on in practice — the
+// in-memory representation of `[f32]`/`[i32]` *is* the wire
+// representation, so the hot path is a single `memcpy` instead of a
+// per-element `to_le_bytes`/`from_le_bytes` loop with its bounds checks.
+// Big-endian targets keep the byte-wise loop; `bulk_le_matches_bytewise`
+// below pins the two paths to identical bytes, so the fast path can
+// never silently fork the format.
+// ---------------------------------------------------------------------
+
+macro_rules! le_codec {
+    ($extend:ident, $from:ident, $ty:ty, $doc_ty:literal) => {
+        #[doc = concat!("Append a `", $doc_ty, "` slice to `out` as little-endian bytes ")]
+        /// (bulk memcpy on little-endian targets, byte-wise elsewhere).
+        pub fn $extend(out: &mut Vec<u8>, vals: &[$ty]) {
+            #[cfg(target_endian = "little")]
+            {
+                // SAFETY: the element type has size 4, no padding, and no
+                // invalid byte patterns; on a little-endian target its
+                // in-memory bytes are exactly its little-endian encoding.
+                // The slice covers `vals.len() * 4` initialized bytes.
+                let bytes = unsafe {
+                    std::slice::from_raw_parts(vals.as_ptr().cast::<u8>(), vals.len() * 4)
+                };
+                out.extend_from_slice(bytes);
+            }
+            #[cfg(not(target_endian = "little"))]
+            {
+                for v in vals {
+                    out.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+        }
+
+        #[doc = concat!("Decode little-endian bytes into a `", $doc_ty, "` vector ")]
+        /// (inverse of the extend form; a trailing partial element is
+        /// ignored, matching `chunks_exact`).
+        pub fn $from(bytes: &[u8]) -> Vec<$ty> {
+            let n = bytes.len() / 4;
+            #[cfg(target_endian = "little")]
+            {
+                let mut out = vec![<$ty>::default(); n];
+                // SAFETY: `out` owns `n * 4` writable bytes; any byte
+                // pattern is a valid value of the element type; the copy
+                // stays within both buffers.
+                unsafe {
+                    std::ptr::copy_nonoverlapping(
+                        bytes.as_ptr(),
+                        out.as_mut_ptr().cast::<u8>(),
+                        n * 4,
+                    );
+                }
+                out
+            }
+            #[cfg(not(target_endian = "little"))]
+            {
+                bytes[..n * 4]
+                    .chunks_exact(4)
+                    .map(|c| <$ty>::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect()
+            }
+        }
+    };
 }
+
+le_codec!(extend_f32_le, f32_from_le_bytes, f32, "f32");
+le_codec!(extend_i32_le, i32_from_le_bytes, i32, "i32");
 
 /// Serialize a f32 slice as little-endian bytes.
 pub fn f32_to_le_bytes(vals: &[f32]) -> Vec<u8> {
     let mut out = Vec::with_capacity(vals.len() * 4);
-    for v in vals {
-        out.extend_from_slice(&v.to_le_bytes());
-    }
+    extend_f32_le(&mut out, vals);
     out
 }
 
@@ -56,5 +118,55 @@ mod tests {
         let mut b = f32_to_le_bytes(&[1.0, 2.0]);
         b.push(0xff);
         assert_eq!(f32_from_le_bytes(&b), vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn bulk_le_matches_bytewise_reference() {
+        // The endianness contract: whatever path the target compiles
+        // (memcpy or byte-wise), the emitted bytes must equal the
+        // canonical per-element `to_le_bytes` encoding — including for
+        // NaN, infinities, and -0.0, whose bit patterns must survive.
+        let f = [
+            0.0f32,
+            -0.0,
+            1.5,
+            -2.25e-7,
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+            f32::NAN,
+            f32::MIN_POSITIVE,
+        ];
+        let mut bulk = Vec::new();
+        extend_f32_le(&mut bulk, &f);
+        let mut reference = Vec::new();
+        for v in &f {
+            reference.extend_from_slice(&v.to_le_bytes());
+        }
+        assert_eq!(bulk, reference);
+        let back = f32_from_le_bytes(&bulk);
+        assert_eq!(back.len(), f.len());
+        for (a, b) in back.iter().zip(&f) {
+            assert_eq!(a.to_bits(), b.to_bits(), "f32 bits must survive the round trip");
+        }
+
+        let i = [0i32, 1, -1, i32::MAX, i32::MIN, 0x0102_0304];
+        let mut bulk = Vec::new();
+        extend_i32_le(&mut bulk, &i);
+        let mut reference = Vec::new();
+        for v in &i {
+            reference.extend_from_slice(&v.to_le_bytes());
+        }
+        assert_eq!(bulk, reference);
+        assert_eq!(i32_from_le_bytes(&bulk), i);
+    }
+
+    #[test]
+    fn bulk_le_empty_and_partial_inputs() {
+        let mut out = Vec::new();
+        extend_f32_le(&mut out, &[]);
+        extend_i32_le(&mut out, &[]);
+        assert!(out.is_empty());
+        assert!(f32_from_le_bytes(&[]).is_empty());
+        assert_eq!(i32_from_le_bytes(&[1, 0, 0, 0, 9]), vec![1]);
     }
 }
