@@ -171,6 +171,89 @@ mod tests {
     }
 
     #[test]
+    fn prop_sparse_rows_and_zero_stakes_stay_sane() {
+        // Committed weight rows are sparse in practice (top-G of a large
+        // uid table) and stakes can be zero (scripted demotion): incentives
+        // must stay finite, non-negative, and sum to at most 1 + eps.
+        prop::check("yuma-sparse", 50, |rng, size| {
+            let n_val = 1 + size % 6;
+            let n_peer = 1 + size % 9;
+            let weights: Vec<Vec<f64>> = (0..n_val)
+                .map(|_| {
+                    (0..n_peer)
+                        .map(|_| if rng.chance(0.6) { 0.0 } else { rng.range_f64(0.0, 1.0) })
+                        .collect()
+                })
+                .collect();
+            let stake: Vec<f64> = (0..n_val)
+                .map(|_| if rng.chance(0.25) { 0.0 } else { rng.range_f64(1.0, 100.0) })
+                .collect();
+            let inc = yuma_consensus(&weights, &stake, &p());
+            prop_assert!(inc.len() == n_peer, "length mismatch");
+            let total: f64 = inc.iter().sum();
+            prop_assert!(
+                inc.iter().all(|x| x.is_finite() && *x >= 0.0),
+                "non-finite or negative incentive: {inc:?}"
+            );
+            prop_assert!(total <= 1.0 + 1e-9, "incentives sum {total} > 1");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_permuting_uid_order_never_changes_results() {
+        // Consensus must be a per-column computation: permuting the peer
+        // (column) order permutes the incentives and nothing else, and
+        // permuting the validator (row) order together with stakes changes
+        // nothing at all. A violation would mean registration order leaks
+        // into payouts.
+        prop::check("yuma-permutation", 40, |rng, size| {
+            let n_val = 2 + size % 4;
+            let n_peer = 2 + size % 6;
+            let weights: Vec<Vec<f64>> = (0..n_val)
+                .map(|_| {
+                    (0..n_peer)
+                        .map(|_| if rng.chance(0.5) { 0.0 } else { rng.range_f64(0.0, 1.0) })
+                        .collect()
+                })
+                .collect();
+            let stake: Vec<f64> = (0..n_val).map(|_| rng.range_f64(1.0, 100.0)).collect();
+            let base = yuma_consensus(&weights, &stake, &p());
+
+            let mut cols: Vec<usize> = (0..n_peer).collect();
+            rng.shuffle(&mut cols);
+            let permuted_w: Vec<Vec<f64>> = weights
+                .iter()
+                .map(|row| cols.iter().map(|&j| row[j]).collect())
+                .collect();
+            let permuted = yuma_consensus(&permuted_w, &stake, &p());
+            for (i, &j) in cols.iter().enumerate() {
+                prop_assert!(
+                    (permuted[i] - base[j]).abs() < 1e-12,
+                    "column permutation changed peer {j}: {} vs {}",
+                    permuted[i],
+                    base[j]
+                );
+            }
+
+            let mut rows: Vec<usize> = (0..n_val).collect();
+            rng.shuffle(&mut rows);
+            let rw: Vec<Vec<f64>> = rows.iter().map(|&v| weights[v].clone()).collect();
+            let rs: Vec<f64> = rows.iter().map(|&v| stake[v]).collect();
+            let row_permuted = yuma_consensus(&rw, &rs, &p());
+            for j in 0..n_peer {
+                prop_assert!(
+                    (row_permuted[j] - base[j]).abs() < 1e-12,
+                    "validator order changed peer {j}: {} vs {}",
+                    row_permuted[j],
+                    base[j]
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
     fn prop_stake_scaling_invariance() {
         prop::check("yuma-stake-scale", 30, |rng, size| {
             let n_val = 2 + size % 3;

@@ -867,7 +867,7 @@ impl<E: ExecBackend + 'static> TemplarRunWith<E> {
         // ---------------------- validators evaluate ----------------------
         let peer_uids = self.peer_uids();
         let read_keys = chain_read_keys(&self.chain, &peer_uids)?;
-        let outcomes: Vec<RoundOutcome> = {
+        let mut outcomes: Vec<RoundOutcome> = {
             let exec = &self.exec;
             let corpus = &self.corpus;
             let theta = &self.theta;
@@ -959,6 +959,28 @@ impl<E: ExecBackend + 'static> TemplarRunWith<E> {
                     validator: v.uid,
                     uids: o.evaluated.iter().map(|(u, _)| *u).collect(),
                 });
+            }
+        }
+        // Bribery stage: a Briber peer pays its target validator to commit
+        // an inflated weight for the briber's uid. Applied here, at the
+        // weight-commit boundary, so the bribed validator's own score book,
+        // aggregation weights, and event stream stay honest — the only
+        // corrupted artifact is the on-chain weight row, exactly what Yuma
+        // consensus (stake-weighted clipping at kappa) exists to bound. A
+        // minority-stake target gets clipped to the honest consensus; the
+        // attack only pays once the bribed validator holds a stake
+        // majority (the paper's stake-security assumption).
+        for i in 0..self.peers.len() {
+            let Behavior::Briber { validator } = self.peers[i].behavior else { continue };
+            let briber_uid = self.peers[i].uid;
+            let Some(vi) = self.validators.iter().position(|v| v.uid == validator) else {
+                continue;
+            };
+            let row = &mut outcomes[vi].incentives;
+            let top = row.iter().map(|(_, w)| *w).fold(0.0_f64, f64::max).max(1.0);
+            match row.iter_mut().find(|(u, _)| *u == briber_uid) {
+                Some(entry) => entry.1 = top,
+                None => row.push((briber_uid, top)),
             }
         }
         // Commit weight vectors in validator order (determinism + the

@@ -150,6 +150,25 @@ fn read_f32_bits(v: &Value) -> Result<Vec<f32>> {
         .collect()
 }
 
+/// i32 slice (sparse-gradient indices) as exact JSON integers.
+fn arr_i32(xs: &[i32]) -> Value {
+    Value::Arr(xs.iter().map(|x| Value::Num(*x as f64)).collect())
+}
+
+fn read_i32(v: &Value) -> Result<Vec<i32>> {
+    v.as_arr()
+        .context("expected an i32 array")?
+        .iter()
+        .map(|x| {
+            let n = x.as_f64().context("bad i32")?;
+            if n.fract() != 0.0 || n < i32::MIN as f64 || n > i32::MAX as f64 {
+                bail!("i32 out of range: {n}");
+            }
+            Ok(n as i32)
+        })
+        .collect()
+}
+
 fn arr_bytes(xs: &[u8]) -> Value {
     Value::Arr(xs.iter().map(|b| Value::Num(*b as f64)).collect())
 }
@@ -499,6 +518,24 @@ impl RunSnapshot {
                     ("compute_ms_per_mb", minjson::num(p.compute_ms_per_mb as f64)),
                     ("last_microbatches", minjson::num(p.last_microbatches as f64)),
                     ("last_local_loss", fnum(p.last_local_loss)),
+                    (
+                        // StaleReplayer's gradient archive: [round, vals
+                        // (f32 bits), idx] triples. Empty for every other
+                        // behaviour.
+                        "replay",
+                        Value::Arr(
+                            p.replay_log
+                                .iter()
+                                .map(|(r, g)| {
+                                    Value::Arr(vec![
+                                        minjson::num(*r as f64),
+                                        arr_f32_bits(&g.vals),
+                                        arr_i32(&g.idx),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ),
                 ])
             })
             .collect();
@@ -649,6 +686,22 @@ impl RunSnapshot {
                         .as_usize()
                         .context("last_microbatches")?,
                     last_local_loss: field::f64(p, "last_local_loss")?,
+                    replay_log: p
+                        .get("replay")
+                        .as_arr()
+                        .unwrap_or(&[])
+                        .iter()
+                        .map(|entry| {
+                            let t = entry.as_arr().context("replay entry")?;
+                            let r = t
+                                .first()
+                                .and_then(|x| x.as_f64())
+                                .context("replay round")? as u64;
+                            let vals = read_f32_bits(t.get(1).context("replay vals")?)?;
+                            let idx = read_i32(t.get(2).context("replay idx")?)?;
+                            Ok((r, crate::demo::SparseGrad { vals, idx }))
+                        })
+                        .collect::<Result<Vec<_>>>()?,
                 })
             })
             .collect::<Result<Vec<_>>>()?;

@@ -2,6 +2,8 @@
 //!
 //! Subcommands:
 //!   run       permissionless Gauntlet training run (the paper's system)
+//!   soak      adversary-zoo endurance harness: long runs with rolling
+//!             invariant checks, scenario fuzzing, and seed repro
 //!   bench     PerfLab benchmark suites with a baseline regression gate
 //!   baseline  centralized AdamW DDP comparison run
 //!   eval      downstream zero-shot suites on the initial model
@@ -44,6 +46,7 @@ fn dispatch(args: &[String]) -> Result<()> {
     let flags = parse_flags(&args[1..])?;
     match cmd.as_str() {
         "run" => cmd_run(&flags),
+        "soak" => cmd_soak(&flags),
         "bench" => cmd_bench(&flags),
         "baseline" => cmd_baseline(&flags),
         "eval" => cmd_eval(&flags),
@@ -87,6 +90,17 @@ fn print_usage() {
          \x20                              omit to finish the originally configured rounds)\n\
          \x20           (without compiled artifacts, `run` falls back to the\n\
          \x20            deterministic pure-Rust SimExec backend)\n\
+         \x20 soak      adversary-zoo endurance harness (see README \"Adversary zoo\")\n\
+         \x20           --rounds <n>       soak length (default 2000)\n\
+         \x20           --peers <spec>     population (default: full mixed zoo)\n\
+         \x20           --snapshot-every <n> snapshot/resume self-test cadence (0 = off)\n\
+         \x20           --fuzz <cases>     instead: run N random adversary scripts\n\
+         \x20                              through full engine runs (prop::scenario)\n\
+         \x20           --fuzz-seed <s>    base seed for --fuzz\n\
+         \x20           --failures-out <f> write failing fuzz seeds as JSONL\n\
+         \x20           --repro <seed>     instead: re-run one printed fuzz failure\n\
+         \x20           --size <n>         size hint for --repro (from the report)\n\
+         \x20           --model/--seed/--threads/--eval-every as for `run`\n\
          \x20 bench     PerfLab benchmark suites (see README \"Performance\")\n\
          \x20           --suite <name>     suite to run (default hotpath)\n\
          \x20           --quick            shrink iteration counts (PR gate)\n\
@@ -140,7 +154,9 @@ where
 /// shared with scenario `join` events):
 ///   honest | honest:<mult> | freeloader | desync[:<at>[:<pause>]] |
 ///   late[:<prob>] | silent[:<prob>] | format | rescaler[:<f>] |
-///   poisoner[:<scale>] | copier[:<uid>] | duplicator[:<uid>]
+///   poisoner[:<scale>] | copier[:<uid>] | duplicator[:<uid>] |
+///   sybil[:<ring>[:<eps>]] | copycat[:<uid>[:<noise>]] |
+///   briber[:<uid>] | slowloris | stale[:<lag>]
 pub fn parse_peers(spec: &str) -> Result<Vec<Behavior>> {
     if let Ok(n) = spec.parse::<usize>() {
         return Ok(vec![Behavior::Honest { data_mult: 1.0 }; n]);
@@ -342,6 +358,169 @@ fn drive(engine: &mut GauntletEngine) -> Result<()> {
         ]);
     }
     t.print();
+    Ok(())
+}
+
+/// Parse a fuzzer seed: decimal or `0x`-prefixed hex, so the hex seeds the
+/// failure reports print paste straight back into `--repro`.
+fn parse_seed(s: &str) -> Result<u64> {
+    let t = s.trim();
+    match t.strip_prefix("0x").or_else(|| t.strip_prefix("0X")) {
+        Some(h) => u64::from_str_radix(h, 16).map_err(|e| anyhow::anyhow!("seed {s:?}: {e}")),
+        None => t.parse().map_err(|e| anyhow::anyhow!("seed {s:?}: {e}")),
+    }
+}
+
+/// `gauntlet soak`: the adversary-zoo endurance harness (README "Adversary
+/// zoo"). Three modes:
+///
+/// - default: a multi-thousand-round run of a mixed zoo population with
+///   rolling invariant checks every round, periodic snapshot/resume
+///   self-tests, and a final class-dominance report;
+/// - `--fuzz <cases>`: random churn + adversary scripts through full
+///   engine runs via `prop::scenario`, printing a standalone-reproducing
+///   seed per failure (the CI nightly runs this at high case counts);
+/// - `--repro <seed> --size <n>`: re-run exactly one reported failure.
+fn cmd_soak(flags: &BTreeMap<String, String>) -> Result<()> {
+    use gauntlet::prop::scenario::{check_class_dominance, check_seed, InvariantTracker};
+
+    if let Some(seed) = flags.get("repro") {
+        let seed = parse_seed(seed)?;
+        let size: usize = flag(flags, "size", 32)?;
+        println!("repro: seed={seed:#x} size={size}");
+        return match check_seed(seed, size) {
+            Ok(()) => {
+                println!("repro passed: all invariants hold at this seed");
+                Ok(())
+            }
+            Err(e) => bail!("repro failed:\n{e}"),
+        };
+    }
+
+    if let Some(cases) = flags.get("fuzz") {
+        let cases: u64 = cases.parse().map_err(|e| anyhow::anyhow!("--fuzz {cases:?}: {e}"))?;
+        let base = parse_seed(&flag(flags, "fuzz-seed", format!("{}", 0x9A0C_0000_0000_u64))?)?;
+        let mut failures: Vec<(u64, usize, String)> = Vec::new();
+        for case in 0..cases {
+            // Same seed/size schedule as prop::check so in-tree and CLI
+            // fuzzing explore the same family of cases.
+            let seed = base.wrapping_add(case);
+            let size = 1 + (case as usize * 7) % 64;
+            if let Err(e) = check_seed(seed, size) {
+                eprintln!(
+                    "FAIL case={case} seed={seed:#x} size={size}\n{e}\n  \
+                     repro: gauntlet soak --repro {seed:#x} --size {size}"
+                );
+                failures.push((seed, size, e));
+            }
+            if (case + 1) % 10 == 0 {
+                println!("fuzz: {}/{cases} cases, {} failure(s)", case + 1, failures.len());
+            }
+        }
+        if let Some(path) = flags.get("failures-out") {
+            let lines: String = failures
+                .iter()
+                .map(|(seed, size, e)| {
+                    format!(
+                        "{{\"seed\":\"{seed:#x}\",\"size\":{size},\"error\":{}}}\n",
+                        gauntlet::minjson::Value::Str(e.clone()).write()
+                    )
+                })
+                .collect();
+            std::fs::write(path, lines)
+                .with_context(|| format!("--failures-out: writing {path:?}"))?;
+        }
+        if !failures.is_empty() {
+            bail!("{}/{cases} fuzz case(s) failed (repro commands above)", failures.len());
+        }
+        println!("fuzz: all {cases} cases passed");
+        return Ok(());
+    }
+
+    let model: String = flag(flags, "model", "nano".to_string())?;
+    let rounds: u64 = flag(flags, "rounds", 2_000)?;
+    let seed: u64 = flag(flags, "seed", 0)?;
+    let snapshot_every: u64 = flag(flags, "snapshot-every", 500)?;
+    // One of every adversary class against a honest majority-of-work
+    // population; victim uids point at the honest block (validator is uid
+    // 0, peers start at uid 1). The lone validator holds the stake
+    // majority, so `briber:0` also soaks the successful-bribe regime.
+    let default_zoo = "honest,honest,honest:2,honest,freeloader,late:0.3,silent:0.2,\
+                       rescaler:10,poisoner:50,copier:2,duplicator:3,sybil:1:0.05,\
+                       sybil:1:0.05,copycat:3:0.1,briber:0,slowloris,stale:3";
+    let peers = parse_peers(&flag(flags, "peers", default_zoo.to_string())?)?;
+    let n_peers = peers.len();
+
+    let mut engine = GauntletBuilder::sim()
+        .model(&model)
+        .rounds(rounds)
+        .peers(peers)
+        .seed(seed)
+        .threads(flag(flags, "threads", 0)?)
+        .eval_every(flag(flags, "eval-every", 0)?)
+        .eval_sample(n_peers.max(8))
+        .build()?;
+    println!(
+        "soak: model={model} rounds={rounds} peers={n_peers} seed={seed} \
+         snapshot-every={snapshot_every}"
+    );
+
+    let mut tracker = InvariantTracker::default();
+    let mut self_tests = 0_u64;
+    while engine.round() < rounds {
+        let r = engine.round();
+        let snap = (snapshot_every > 0 && r > 0 && r % snapshot_every == 0)
+            .then(|| engine.snapshot());
+        let rec = engine.run_round()?;
+        tracker
+            .observe(&rec)
+            .map_err(|e| anyhow::anyhow!("invariant violated at round {r} (--seed {seed}): {e}"))?;
+        if let Some(snap) = snap {
+            // The snapshot was taken before this round ran; a resumed
+            // engine replaying just that round must land on the same
+            // fingerprint bit-for-bit.
+            let mut resumed = GauntletBuilder::sim().resume(snap).rounds(r + 1).build()?;
+            resumed.run_round()?;
+            anyhow::ensure!(
+                resumed.fingerprint() == engine.fingerprint(),
+                "snapshot/resume self-test diverged at round {r}: resumed {:016x} vs \
+                 live {:016x} (--seed {seed})",
+                resumed.fingerprint(),
+                engine.fingerprint()
+            );
+            self_tests += 1;
+        }
+        if (r + 1) % 100 == 0 {
+            println!("soak: round {}/{rounds} ok ({self_tests} snapshot self-tests)", r + 1);
+        }
+    }
+
+    let mut honest = Vec::new();
+    let mut groups: BTreeMap<&'static str, Vec<f64>> = BTreeMap::new();
+    for p in engine.peers() {
+        let bal = engine.chain().neuron(p.uid).map(|n| n.balance).unwrap_or(0.0);
+        let class = p.behavior.class();
+        if class == "honest" {
+            honest.push(bal);
+        } else {
+            groups.entry(class).or_default().push(bal);
+        }
+    }
+    let mut t = Table::new("soak class earnings", &["class", "members", "mean balance"]);
+    let h_mean = honest.iter().sum::<f64>() / honest.len().max(1) as f64;
+    t.row(&["honest".to_string(), honest.len().to_string(), format!("{h_mean:.3}")]);
+    for (class, bals) in &groups {
+        let mean = bals.iter().sum::<f64>() / bals.len() as f64;
+        t.row(&[class.to_string(), bals.len().to_string(), format!("{mean:.3}")]);
+    }
+    t.print();
+    check_class_dominance(&honest, &groups)
+        .map_err(|e| anyhow::anyhow!("final class dominance (--seed {seed}): {e}"))?;
+    println!(
+        "soak OK: {rounds} rounds, {self_tests} snapshot/resume self-tests, \
+         fingerprint {:016x}",
+        engine.fingerprint()
+    );
     Ok(())
 }
 

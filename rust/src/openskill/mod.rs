@@ -251,6 +251,79 @@ mod tests {
     }
 
     #[test]
+    fn prop_repeated_wins_are_monotone() {
+        // tau = 0 isolates the measurement update: a constant winner's mu
+        // must never decrease (it strictly beats someone every match) and
+        // every player's sigma must be monotone non-increasing (each match
+        // only adds information).
+        prop::check("openskill-monotone", 20, |rng, size| {
+            let m = PlackettLuce { tau: 0.0, ..PlackettLuce::default() };
+            let n = 2 + size % 5;
+            let mut rs: Vec<Rating> = (0..n)
+                .map(|_| Rating {
+                    mu: rng.range_f64(15.0, 35.0),
+                    sigma: rng.range_f64(2.0, 8.0),
+                })
+                .collect();
+            for round in 0..200 {
+                // player 0 always wins; the rest land in random tiers
+                let mut ranks: Vec<usize> =
+                    (0..n).map(|_| 1 + rng.below(3) as usize).collect();
+                ranks[0] = 0;
+                let prev = rs.clone();
+                rs = m.rate(&rs, &ranks);
+                for (i, (b, a)) in prev.iter().zip(&rs).enumerate() {
+                    prop_assert!(
+                        a.mu.is_finite() && a.sigma.is_finite(),
+                        "round {round}: non-finite rating at {i}"
+                    );
+                    prop_assert!(
+                        a.sigma <= b.sigma + 1e-12,
+                        "round {round}: sigma rose at {i}: {} -> {}",
+                        b.sigma,
+                        a.sigma
+                    );
+                }
+                prop_assert!(
+                    rs[0].mu + 1e-9 >= prev[0].mu,
+                    "round {round}: constant winner's mu fell: {} -> {}",
+                    prev[0].mu,
+                    rs[0].mu
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_ratings_stay_finite_over_thousands_of_matches() {
+        // The validator feeds one match per round for the lifetime of a
+        // run; with the default tau dynamics, ratings must neither blow up
+        // nor collapse over thousands of random-outcome matches.
+        prop::check("openskill-endurance", 8, |rng, size| {
+            let m = model();
+            let n = 3 + size % 5;
+            let mut rs: Vec<Rating> = (0..n).map(|_| m.initial()).collect();
+            for round in 0..2_000 {
+                let scores: Vec<f64> = (0..n).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+                rs = m.rate_by_scores(&rs, &scores);
+                for (i, r) in rs.iter().enumerate() {
+                    prop_assert!(
+                        r.mu.is_finite() && r.sigma.is_finite(),
+                        "round {round}: non-finite rating at {i}"
+                    );
+                    prop_assert!(
+                        r.sigma > 0.0 && r.sigma <= m.sigma0 * 2.0,
+                        "round {round}: sigma left its band at {i}: {}",
+                        r.sigma
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
     fn prop_total_mu_roughly_conserved_for_identical_priors() {
         prop::check("openskill-mu-conservation", 30, |rng, size| {
             let m = model();

@@ -16,6 +16,11 @@
 //! | FormatViolator   | malformed tensors                 | fast checks    |
 //! | Rescaler         | norm inflation of the aggregate   | encoded-domain normalization (§4) |
 //! | Poisoner         | garbage coefficients              | LossScore + normalization |
+//! | Sybil            | k uids share one gradient, perturbed per member | PoC mu (no assigned-shard work) |
+//! | CopycatNoise     | steals a victim's gradient, adds noise to dodge dedup | PoC mu |
+//! | Briber           | pays one validator to inflate its weight | Yuma stake-weighted clipping |
+//! | SlowLoris        | honest work posted at the last moment of the put window | window check (only if it misses) |
+//! | StaleReplayer    | re-posts its own gradient from r−k | LossScore (stale direction) |
 
 pub mod runner;
 
@@ -51,6 +56,26 @@ pub enum Behavior {
     /// Second registration of the same operator as `original`: posts the
     /// identical pseudo-gradient under a different uid.
     Duplicator { original: Uid },
+    /// Collusion-ring member: every peer with the same `ring` id derives
+    /// its gradient from one shared (non-assigned) computation, then
+    /// perturbs the transmitted values by relative noise `eps` so no two
+    /// members post bit-identical submissions (dodging duplicate checks).
+    Sybil { ring: u64, eps: f32 },
+    /// Copier that perturbs the stolen coefficients with relative noise
+    /// `noise` so the copy is not bit-identical to the victim's.
+    CopycatNoise { victim: Uid, noise: f32 },
+    /// Computes honestly but bribes `validator` to inflate the weight it
+    /// commits for this peer — the stake-security attack Yuma consensus
+    /// clips unless the bribed validator holds a stake majority. The
+    /// inflation itself is applied by the coordinator at the weight-commit
+    /// boundary (see `coordinator::run`).
+    Briber { validator: Uid },
+    /// Honest compute, but every upload lands at the last instant of the
+    /// put window (probing the window-close boundary every round).
+    SlowLoris,
+    /// Replays its own submission from `lag` rounds ago under a current
+    /// header and fresh probe (honest until its history is `lag` deep).
+    StaleReplayer { lag: u64 },
 }
 
 impl Behavior {
@@ -59,7 +84,9 @@ impl Behavior {
     ///
     /// `honest | honest:<mult> | freeloader | desync[:<at>[:<pause>]] |
     /// late[:<prob>] | silent[:<prob>] | format | rescaler[:<factor>] |
-    /// poisoner[:<scale>] | copier[:<uid>] | duplicator[:<uid>]`
+    /// poisoner[:<scale>] | copier[:<uid>] | duplicator[:<uid>] |
+    /// sybil[:<ring>[:<eps>]] | copycat[:<uid>[:<noise>]] |
+    /// briber[:<uid>] | slowloris | stale[:<lag>]`
     ///
     /// ```
     /// use gauntlet::peers::Behavior;
@@ -92,6 +119,17 @@ impl Behavior {
             "poisoner" => Behavior::Poisoner { scale: num(&fields, 1, 100.0)? },
             "copier" => Behavior::Copier { victim: num(&fields, 1, 0)? },
             "duplicator" => Behavior::Duplicator { original: num(&fields, 1, 0)? },
+            "sybil" => Behavior::Sybil {
+                ring: num(&fields, 1, 0)?,
+                eps: num(&fields, 2, 0.01)?,
+            },
+            "copycat" => Behavior::CopycatNoise {
+                victim: num(&fields, 1, 0)?,
+                noise: num(&fields, 2, 0.05)?,
+            },
+            "briber" => Behavior::Briber { validator: num(&fields, 1, 0)? },
+            "slowloris" => Behavior::SlowLoris,
+            "stale" => Behavior::StaleReplayer { lag: num(&fields, 1, 3)? },
             other => return Err(format!("unknown peer behaviour {other:?}")),
         };
         Ok(b)
@@ -118,13 +156,21 @@ impl Behavior {
             Behavior::Poisoner { scale } => format!("poisoner:{scale}"),
             Behavior::Copier { victim } => format!("copier:{victim}"),
             Behavior::Duplicator { original } => format!("duplicator:{original}"),
+            Behavior::Sybil { ring, eps } => format!("sybil:{ring}:{eps}"),
+            Behavior::CopycatNoise { victim, noise } => format!("copycat:{victim}:{noise}"),
+            Behavior::Briber { validator } => format!("briber:{validator}"),
+            Behavior::SlowLoris => "slowloris".into(),
+            Behavior::StaleReplayer { lag } => format!("stale:{lag}"),
         }
     }
 
     /// Behaviours that need another peer's submission first (evaluated in
     /// the second pass of the round loop).
     pub fn is_second_pass(&self) -> bool {
-        matches!(self, Behavior::Copier { .. } | Behavior::Duplicator { .. })
+        matches!(
+            self,
+            Behavior::Copier { .. } | Behavior::Duplicator { .. } | Behavior::CopycatNoise { .. }
+        )
     }
 
     /// The uid this behaviour sources its gradient from, if any.
@@ -132,6 +178,7 @@ impl Behavior {
         match self {
             Behavior::Copier { victim } => Some(*victim),
             Behavior::Duplicator { original } => Some(*original),
+            Behavior::CopycatNoise { victim, .. } => Some(*victim),
             _ => None,
         }
     }
@@ -150,6 +197,34 @@ impl Behavior {
             Behavior::Poisoner { .. } => "poisoner".into(),
             Behavior::Copier { victim } => format!("copier-of-{victim}"),
             Behavior::Duplicator { original } => format!("duplicator-of-{original}"),
+            Behavior::Sybil { ring, .. } => format!("sybil-ring-{ring}"),
+            Behavior::CopycatNoise { victim, .. } => format!("copycat-of-{victim}"),
+            Behavior::Briber { validator } => format!("briber-of-{validator}"),
+            Behavior::SlowLoris => "slowloris".into(),
+            Behavior::StaleReplayer { lag } => format!("stale-x{lag}"),
+        }
+    }
+
+    /// A coarse class name grouping parameterizations of the same attack,
+    /// used by the scenario fuzzer and soak harness to aggregate earnings
+    /// per adversary family.
+    pub fn class(&self) -> &'static str {
+        match self {
+            Behavior::Honest { .. } => "honest",
+            Behavior::Freeloader => "freeloader",
+            Behavior::Desync { .. } => "desync",
+            Behavior::Late { .. } => "late",
+            Behavior::Silent { .. } => "silent",
+            Behavior::FormatViolator => "format",
+            Behavior::Rescaler { .. } => "rescaler",
+            Behavior::Poisoner { .. } => "poisoner",
+            Behavior::Copier { .. } => "copier",
+            Behavior::Duplicator { .. } => "duplicator",
+            Behavior::Sybil { .. } => "sybil",
+            Behavior::CopycatNoise { .. } => "copycat",
+            Behavior::Briber { .. } => "briber",
+            Behavior::SlowLoris => "slowloris",
+            Behavior::StaleReplayer { .. } => "stale",
         }
     }
 }
@@ -162,15 +237,22 @@ mod tests {
     fn second_pass_classification() {
         assert!(Behavior::Copier { victim: 1 }.is_second_pass());
         assert!(Behavior::Duplicator { original: 2 }.is_second_pass());
+        assert!(Behavior::CopycatNoise { victim: 1, noise: 0.05 }.is_second_pass());
         assert!(!Behavior::Honest { data_mult: 1.0 }.is_second_pass());
         assert!(!Behavior::Poisoner { scale: 100.0 }.is_second_pass());
+        assert!(!Behavior::Sybil { ring: 0, eps: 0.01 }.is_second_pass());
+        assert!(!Behavior::SlowLoris.is_second_pass());
+        assert!(!Behavior::StaleReplayer { lag: 3 }.is_second_pass());
+        assert!(!Behavior::Briber { validator: 0 }.is_second_pass());
     }
 
     #[test]
     fn source_uid() {
         assert_eq!(Behavior::Copier { victim: 7 }.source_uid(), Some(7));
         assert_eq!(Behavior::Duplicator { original: 3 }.source_uid(), Some(3));
+        assert_eq!(Behavior::CopycatNoise { victim: 5, noise: 0.1 }.source_uid(), Some(5));
         assert_eq!(Behavior::Freeloader.source_uid(), None);
+        assert_eq!(Behavior::Sybil { ring: 2, eps: 0.01 }.source_uid(), None);
     }
 
     #[test]
@@ -189,11 +271,21 @@ mod tests {
             ("poisoner", Behavior::Poisoner { scale: 100.0 }),
             ("copier:4", Behavior::Copier { victim: 4 }),
             ("duplicator:9", Behavior::Duplicator { original: 9 }),
+            ("sybil", Behavior::Sybil { ring: 0, eps: 0.01 }),
+            ("sybil:7:0.25", Behavior::Sybil { ring: 7, eps: 0.25 }),
+            ("copycat:3", Behavior::CopycatNoise { victim: 3, noise: 0.05 }),
+            ("copycat:3:0.5", Behavior::CopycatNoise { victim: 3, noise: 0.5 }),
+            ("briber:1", Behavior::Briber { validator: 1 }),
+            ("slowloris", Behavior::SlowLoris),
+            ("stale", Behavior::StaleReplayer { lag: 3 }),
+            ("stale:5", Behavior::StaleReplayer { lag: 5 }),
         ] {
             assert_eq!(Behavior::parse_spec(spec), Ok(want), "{spec}");
         }
         assert!(Behavior::parse_spec("nope").is_err());
         assert!(Behavior::parse_spec("honest:abc").is_err());
+        assert!(Behavior::parse_spec("sybil:x").is_err());
+        assert!(Behavior::parse_spec("stale:-1").is_err());
     }
 
     #[test]
@@ -210,10 +302,33 @@ mod tests {
             Behavior::Poisoner { scale: 100.0 },
             Behavior::Copier { victim: 4 },
             Behavior::Duplicator { original: 9 },
+            Behavior::Sybil { ring: 7, eps: 0.25 },
+            Behavior::CopycatNoise { victim: 3, noise: 0.5 },
+            Behavior::Briber { validator: 1 },
+            Behavior::SlowLoris,
+            Behavior::StaleReplayer { lag: 5 },
         ];
         for b in all {
             assert_eq!(Behavior::parse_spec(&b.spec()), Ok(b.clone()), "{}", b.spec());
         }
+    }
+
+    #[test]
+    fn spec_roundtrips_over_random_params() {
+        // Satellite: parse_spec(b.spec()) == Ok(b) for EVERY variant over
+        // randomly generated parameters (float Display output is
+        // shortest-roundtrip in Rust, so exact equality is required).
+        crate::prop::check("behavior-spec-roundtrip", 64, |rng, _size| {
+            let b = crate::prop::scenario::arbitrary_behavior(rng, 1000);
+            let spec = b.spec();
+            match Behavior::parse_spec(&spec) {
+                Ok(back) => {
+                    crate::prop_assert!(back == b, "{spec:?} parsed back as {back:?}, not {b:?}");
+                }
+                Err(e) => return Err(format!("{spec:?} failed to parse: {e}")),
+            }
+            Ok(())
+        });
     }
 
     #[test]
@@ -224,6 +339,12 @@ mod tests {
             Behavior::Freeloader,
             Behavior::Desync { at: 5, pause: 3 },
             Behavior::Rescaler { factor: 100.0 },
+            Behavior::Sybil { ring: 1, eps: 0.01 },
+            Behavior::CopycatNoise { victim: 2, noise: 0.05 },
+            Behavior::Copier { victim: 2 },
+            Behavior::Briber { validator: 0 },
+            Behavior::SlowLoris,
+            Behavior::StaleReplayer { lag: 3 },
         ]
         .iter()
         .map(|b| b.label())
@@ -231,5 +352,33 @@ mod tests {
         let mut dedup = labels.clone();
         dedup.dedup();
         assert_eq!(labels, dedup);
+    }
+
+    #[test]
+    fn classes_cover_every_variant_distinctly() {
+        let classes: Vec<&str> = [
+            Behavior::Honest { data_mult: 1.0 },
+            Behavior::Freeloader,
+            Behavior::Desync { at: 3, pause: 3 },
+            Behavior::Late { prob: 0.8 },
+            Behavior::Silent { prob: 0.8 },
+            Behavior::FormatViolator,
+            Behavior::Rescaler { factor: 100.0 },
+            Behavior::Poisoner { scale: 100.0 },
+            Behavior::Copier { victim: 0 },
+            Behavior::Duplicator { original: 0 },
+            Behavior::Sybil { ring: 0, eps: 0.01 },
+            Behavior::CopycatNoise { victim: 0, noise: 0.05 },
+            Behavior::Briber { validator: 0 },
+            Behavior::SlowLoris,
+            Behavior::StaleReplayer { lag: 3 },
+        ]
+        .iter()
+        .map(|b| b.class())
+        .collect();
+        let mut dedup = classes.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(dedup.len(), classes.len(), "class names must be unique");
     }
 }

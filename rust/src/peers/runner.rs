@@ -47,6 +47,13 @@ pub enum PeerOutput {
     Skip,
 }
 
+/// How long before the put-window close a SlowLoris peer sends its upload:
+/// just enough headroom for the mean provider latency, so the object lands
+/// in the last block of the window nearly every round (and occasionally
+/// misses it when the latency draw runs long — that boundary probing is
+/// the attack).
+const SLOW_LORIS_MARGIN_MS: u64 = 2_000;
+
 /// Per-peer persistent state across rounds.
 pub struct PeerRunner {
     pub uid: u32,
@@ -72,6 +79,11 @@ pub struct PeerRunner {
     /// `apply_update_into` target for divergent peers). Pure scratch,
     /// like `grad_accum`: every consumer overwrites it fully.
     grad_scratch: Vec<f32>,
+    /// StaleReplayer's archive of its own recent gradients, keyed by the
+    /// round they were computed in (bounded to the replay lag). Persistent
+    /// state: a resume mid-lag must replay the same stale gradient the
+    /// uninterrupted run would have.
+    replay_log: Vec<(u64, SparseGrad)>,
 }
 
 /// Every persistent field of a [`PeerRunner`], exported as plain data for
@@ -88,6 +100,7 @@ pub struct PeerRunnerState {
     pub compute_ms_per_mb: u64,
     pub last_microbatches: usize,
     pub last_local_loss: f64,
+    pub replay_log: Vec<(u64, SparseGrad)>,
 }
 
 impl PeerRunner {
@@ -105,6 +118,7 @@ impl PeerRunner {
             last_local_loss: f64::NAN,
             grad_accum: Vec::new(),
             grad_scratch: Vec::new(),
+            replay_log: Vec::new(),
         }
     }
 
@@ -119,6 +133,7 @@ impl PeerRunner {
             compute_ms_per_mb: self.compute_ms_per_mb,
             last_microbatches: self.last_microbatches,
             last_local_loss: self.last_local_loss,
+            replay_log: self.replay_log.clone(),
         }
     }
 
@@ -136,6 +151,7 @@ impl PeerRunner {
             last_local_loss: state.last_local_loss,
             grad_accum: Vec::new(),
             grad_scratch: Vec::new(),
+            replay_log: state.replay_log,
         }
     }
 
@@ -215,7 +231,26 @@ impl PeerRunner {
                 };
                 Ok(PeerOutput::Submit { time: self.upload_time(ctx, 1), bytes: sub.encode() })
             }
-            Behavior::Copier { .. } | Behavior::Duplicator { .. } => unreachable!(),
+            Behavior::Sybil { ring, eps } => self.sybil_step(ctx, ring, eps),
+            // A briber's compute is honest — the attack happens at the
+            // weight-commit boundary, applied by the coordinator.
+            Behavior::Briber { .. } => self.honest_step(ctx, 1.0, 1.0),
+            Behavior::SlowLoris => {
+                let out = self.honest_step(ctx, 1.0, 1.0)?;
+                if let PeerOutput::Submit { time, bytes } = out {
+                    // Aim for the last block of the put window, never
+                    // earlier than the honest compute-bound time.
+                    let (_, close) = ctx.clock.put_window(ctx.round);
+                    let t = time.max(close.saturating_sub(SLOW_LORIS_MARGIN_MS));
+                    Ok(PeerOutput::Submit { time: t, bytes })
+                } else {
+                    Ok(out)
+                }
+            }
+            Behavior::StaleReplayer { lag } => self.stale_step(ctx, lag),
+            Behavior::Copier { .. }
+            | Behavior::Duplicator { .. }
+            | Behavior::CopycatNoise { .. } => unreachable!(),
         }
     }
 
@@ -228,10 +263,18 @@ impl PeerRunner {
     ) -> Result<PeerOutput> {
         let Some(bytes) = source_bytes else { return Ok(PeerOutput::Skip) };
         let Ok(src) = Submission::decode(bytes) else { return Ok(PeerOutput::Skip) };
+        let mut grad = src.grad;
+        if let Behavior::CopycatNoise { noise, .. } = self.behavior {
+            // Relative per-coefficient noise: not bit-identical to the
+            // victim, so duplicate detection alone can't flag the theft.
+            for v in &mut grad.vals {
+                *v *= 1.0 + self.rng.normal_f32(0.0, noise);
+            }
+        }
         let sub = Submission {
             uid: self.uid,
             round: ctx.round,
-            grad: src.grad,
+            grad,
             // The copier is synchronized (it follows the public aggregate),
             // so its probe is honest — only PoC can catch it.
             probe: ctx.exec.meta().sync_probe(self.theta_view(ctx)),
@@ -350,6 +393,80 @@ impl PeerRunner {
         Ok(PeerOutput::Submit { time: self.upload_time(ctx, 1), bytes: sub.encode() })
     }
 
+    /// Sybil ring member: one shared gradient computation per ring per
+    /// round (derived from the ring id, not the member's uid or assigned
+    /// shard), perturbed per member so no two submissions are identical.
+    fn sybil_step<E: ExecBackend + ?Sized>(
+        &mut self,
+        ctx: &PeerCtx<'_, E>,
+        ring: u64,
+        eps: f32,
+    ) -> Result<PeerOutput> {
+        let local = self.theta_local.take();
+        let result = self.sybil_core(ctx, local.as_deref().unwrap_or(ctx.global_theta), ring, eps);
+        self.theta_local = local;
+        result
+    }
+
+    fn sybil_core<E: ExecBackend + ?Sized>(
+        &mut self,
+        ctx: &PeerCtx<'_, E>,
+        theta: &[f32],
+        ring: u64,
+        eps: f32,
+    ) -> Result<PeerOutput> {
+        let meta = ctx.exec.meta();
+        let (b, s1) = (meta.batch, meta.seq + 1);
+        // The whole ring shares this batch — k registrations, one unit of
+        // gradient work (and none of it on the assigned shards).
+        let toks =
+            ctx.corpus.batch(&["sybil", &ring.to_string(), &ctx.round.to_string()], b, s1);
+        let loss = ctx.exec.grad_into(theta, &toks, &mut self.grad_scratch)?;
+        self.last_local_loss = loss as f64;
+        self.last_microbatches = 1;
+        let (mut vals, idx, e2) =
+            ctx.exec.demo_compress(&self.error, &self.grad_scratch, ctx.params.demo_decay)?;
+        self.error = e2;
+        // Per-member perturbation (the member's own RNG) to dodge
+        // bit-identical duplicate checks.
+        for v in &mut vals {
+            *v *= 1.0 + self.rng.normal_f32(0.0, eps);
+        }
+        let sub = Submission {
+            uid: self.uid,
+            round: ctx.round,
+            grad: SparseGrad { vals, idx },
+            probe: meta.sync_probe(theta),
+        };
+        Ok(PeerOutput::Submit { time: self.upload_time(ctx, 1), bytes: sub.encode() })
+    }
+
+    /// StaleReplayer: does the honest work every round (keeping its error
+    /// buffer and timing legitimate) but archives the fresh gradient and
+    /// posts the one from `lag` rounds ago under a current header and
+    /// fresh probe. Honest until the archive is `lag` deep.
+    fn stale_step<E: ExecBackend + ?Sized>(
+        &mut self,
+        ctx: &PeerCtx<'_, E>,
+        lag: u64,
+    ) -> Result<PeerOutput> {
+        let out = self.honest_step(ctx, 1.0, 1.0)?;
+        let PeerOutput::Submit { time, bytes } = out else { return Ok(out) };
+        let Ok(mut sub) = Submission::decode(&bytes) else {
+            return Ok(PeerOutput::Submit { time, bytes });
+        };
+        self.replay_log.push((ctx.round, sub.grad.clone()));
+        let cutoff = ctx.round.saturating_sub(lag);
+        self.replay_log.retain(|(r, _)| *r >= cutoff);
+        if lag > 0 && ctx.round >= lag {
+            let want = ctx.round - lag;
+            if let Some((_, old)) = self.replay_log.iter().find(|(r, _)| *r == want) {
+                sub.grad = old.clone();
+            }
+        }
+        Ok(PeerOutput::Submit { time, bytes: sub.encode() })
+    }
+
     /// End-of-round model maintenance: synchronized peers adopt the new
     /// global model; a Desync peer in/after its pause maintains its own
     /// divergent copy by applying the aggregate to the stale base.
@@ -417,6 +534,15 @@ mod tests {
         let p = PeerRunner::new(3, Behavior::Honest { data_mult: 1.0 }, 128, 1);
         assert_eq!(p.error_norm(), 0.0);
         assert!(!p.is_divergent());
+    }
+
+    #[test]
+    fn replay_log_survives_state_roundtrip() {
+        let mut p = PeerRunner::new(2, Behavior::StaleReplayer { lag: 2 }, 8, 1);
+        p.replay_log.push((4, SparseGrad { vals: vec![1.0, -2.0], idx: vec![0, 5] }));
+        p.replay_log.push((5, SparseGrad { vals: vec![0.5, 0.25], idx: vec![3, 7] }));
+        let q = PeerRunner::from_state(p.to_state());
+        assert_eq!(q.replay_log, p.replay_log);
     }
 
     #[test]

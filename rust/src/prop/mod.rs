@@ -8,6 +8,8 @@
 //! parameter and the harness retries failing properties at smaller sizes to
 //! report the smallest size class that still fails.
 
+pub mod scenario;
+
 use crate::util::Rng;
 
 /// Run `prop(rng, size)` for `cases` seeds. Panics with a reproducible

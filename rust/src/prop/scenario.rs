@@ -1,0 +1,571 @@
+//! Property-based scenario fuzzer over full engine runs (the adversary-zoo
+//! tentpole): generate a random churn + adversary script, run it through a
+//! real [`GauntletEngine`](crate::coordinator::engine::GauntletEngine), and
+//! assert the paper's incentive-security claims as machine-checked
+//! invariants. Every failure is reproducible standalone: the
+//! [`crate::prop::check`] harness prints `case`/`seed`/`size`, and
+//! `gauntlet soak --repro <seed> --size <n>` re-runs exactly one case.
+//!
+//! ## Per-round invariants ([`InvariantTracker`], shared with `gauntlet soak`)
+//!
+//! - every incentive is finite and non-negative, and the per-round sum over
+//!   peers never exceeds `1.0 + eps` (Yuma emission is a normalized split);
+//! - balances are finite, non-negative, and monotone non-decreasing per uid
+//!   (emission only accrues), with the per-uid baseline reset on any
+//!   lifecycle event because eviction recycles uids;
+//! - PEERSCORE, PoC mu, and OpenSkill ratings stay finite.
+//!
+//! ## End-of-run invariants
+//!
+//! Dominance is asserted per *class* ([`crate::peers::Behavior::class`]),
+//! over peers registered since round 0 that survived to the end (mid-run
+//! joiners haven't had time to be punished; evicted adversaries already
+//! lost):
+//!
+//! - **strictly punished** classes (`copier`, `copycat`, `duplicator`,
+//!   `format`, `freeloader`, `poisoner`, `sybil`): mean balance strictly
+//!   below the honest mean — these attacks are *detected* (PoC, fast eval)
+//!   and driven to near-zero weight, §5 of the paper;
+//! - **neutralized** classes (`desync`, `late`, `rescaler`, `silent`,
+//!   `slowloris`, `stale`): mean balance bounded by a small multiple of the
+//!   best honest balance — the defense (gradient normalization, the put
+//!   window, sync scoring) removes the *advantage*, so parity with honest
+//!   work is the correct bound, not strict loss;
+//! - `briber` is excluded here: its payoff flips on the bribed validator's
+//!   stake share (Yuma clips minority bribes, majority bribes succeed — the
+//!   paper's stake-security assumption), and the generator caps scripted
+//!   stake moves below validator 0's stake precisely so the fuzzer stays in
+//!   the clipped regime. Both regimes are pinned by the targeted tests in
+//!   `rust/tests/adversary_zoo.rs`;
+//! - surviving `copier`/`copycat`/`duplicator`/`sybil` peers end at
+//!   near-zero *incentive* (not just balance), i.e. the mechanism converges
+//!   to eviction-or-starvation for plagiarists;
+//! - on a random subset of cases: a mid-run snapshot, resumed in a fresh
+//!   engine, reaches a bit-identical [`fingerprint`]; and
+//!   [`replay_trace`] over the emitted JSONL reproduces the live
+//!   [`RunMetrics`] exactly.
+//!
+//! [`fingerprint`]: crate::coordinator::engine::GauntletEngine::fingerprint
+//! [`replay_trace`]: crate::coordinator::events::replay_trace
+//! [`RunMetrics`]: crate::coordinator::run::RunMetrics
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+use crate::chain::Uid;
+use crate::coordinator::engine::GauntletBuilder;
+use crate::coordinator::events::{replay_trace, JsonlTraceObserver};
+use crate::coordinator::run::RoundRecord;
+use crate::peers::Behavior;
+use crate::scenario::{Event, Scenario};
+use crate::util::Rng;
+
+/// Generate any [`Behavior`] variant with random well-formed parameters.
+/// All numeric parameters are dyadic rationals so `parse_spec(spec())`
+/// round-trips bit-exactly through shortest-roundtrip float formatting.
+/// Referenced uids are drawn below `uid_bound`.
+pub fn arbitrary_behavior(rng: &mut Rng, uid_bound: u64) -> Behavior {
+    let bound = uid_bound.max(1);
+    match rng.below(15) {
+        0 => Behavior::Honest { data_mult: 1.0 + rng.below(32) as f64 / 16.0 },
+        1 => Behavior::Freeloader,
+        2 => Behavior::Desync { at: rng.below(10), pause: 1 + rng.below(5) },
+        3 => Behavior::Late { prob: rng.below(64) as f64 / 64.0 },
+        4 => Behavior::Silent { prob: rng.below(64) as f64 / 64.0 },
+        5 => Behavior::FormatViolator,
+        6 => Behavior::Rescaler { factor: 1.0 + rng.below(1024) as f32 / 16.0 },
+        7 => Behavior::Poisoner { scale: 1.0 + rng.below(1024) as f32 / 16.0 },
+        8 => Behavior::Copier { victim: rng.below(bound) as Uid },
+        9 => Behavior::Duplicator { original: rng.below(bound) as Uid },
+        10 => Behavior::Sybil {
+            ring: rng.below(100),
+            eps: (1 + rng.below(63)) as f32 / 256.0,
+        },
+        11 => Behavior::CopycatNoise {
+            victim: rng.below(bound) as Uid,
+            noise: (1 + rng.below(63)) as f32 / 256.0,
+        },
+        12 => Behavior::Briber { validator: rng.below(bound) as Uid },
+        13 => Behavior::SlowLoris,
+        _ => Behavior::StaleReplayer { lag: 1 + rng.below(6) },
+    }
+}
+
+/// Generate a random [`Scenario`] exercising every event kind, sized by the
+/// harness `size` hint. Used by the grammar round-trip property; the engine
+/// fuzzer builds its scripts with [`FuzzScript::generate`] instead, which
+/// keeps churn inside envelopes the dominance invariants assume.
+pub fn arbitrary_scenario(rng: &mut Rng, size: usize) -> Scenario {
+    let mut s = Scenario::new();
+    for _ in 0..rng.below(size as u64 / 4 + 3) {
+        let round = rng.below(16);
+        let ev = match rng.below(4) {
+            0 => Event::JoinPeer { behavior: arbitrary_behavior(rng, 8) },
+            1 => Event::LeavePeer { uid: rng.below(12) as Uid },
+            2 => Event::SetStake {
+                uid: rng.below(8) as Uid,
+                amount: rng.below(2000) as f64 / 4.0,
+            },
+            _ => Event::ProviderOutage {
+                prob: rng.below(32) as f64 / 64.0,
+                rounds: 1 + rng.below(3),
+            },
+        };
+        s = s.at(round, ev);
+    }
+    s
+}
+
+/// One complete fuzz case: engine seed, population, and churn script.
+/// `Display` renders everything needed to rebuild the case by hand.
+#[derive(Clone, Debug)]
+pub struct FuzzScript {
+    /// Engine seed (distinct from the harness seed that generated it).
+    pub seed: u64,
+    pub rounds: u64,
+    pub n_validators: usize,
+    /// Round-0 peer population; uid `n_validators + i` gets `peers[i]`.
+    pub peers: Vec<Behavior>,
+    pub scenario: Scenario,
+    /// `Some(cap)` exercises Bittensor-style lowest-incentive eviction by
+    /// sizing the uid table one above the initial population.
+    pub max_uids: Option<usize>,
+}
+
+impl fmt::Display for FuzzScript {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let specs: Vec<String> = self.peers.iter().map(|b| b.spec()).collect();
+        write!(
+            f,
+            "seed={:#x} rounds={} validators={} max_uids={:?} peers=[{}] scenario=\"{}\"",
+            self.seed,
+            self.rounds,
+            self.n_validators,
+            self.max_uids,
+            specs.join(", "),
+            self.scenario.to_compact().replace('\n', "; "),
+        )
+    }
+}
+
+/// Push one adversary pick onto `peers`. Victim-referencing behaviours
+/// always target a round-0 honest uid (a copier of garbage tests nothing),
+/// and a sybil pick pushes **two** ring members — one "ring" is no ring.
+fn push_adversary(rng: &mut Rng, peers: &mut Vec<Behavior>, honest_uids: &[Uid], n_validators: usize) {
+    let victim = |rng: &mut Rng| honest_uids[rng.below(honest_uids.len() as u64) as usize];
+    match rng.below(14) {
+        0 => peers.push(Behavior::Freeloader),
+        1 => peers.push(Behavior::Desync { at: 1 + rng.below(4), pause: 1 + rng.below(3) }),
+        2 => peers.push(Behavior::Late { prob: rng.below(48) as f64 / 64.0 }),
+        3 => peers.push(Behavior::Silent { prob: rng.below(48) as f64 / 64.0 }),
+        4 => peers.push(Behavior::FormatViolator),
+        5 => peers.push(Behavior::Rescaler { factor: 2.0 + rng.below(64) as f32 / 4.0 }),
+        6 => peers.push(Behavior::Poisoner { scale: 10.0 + rng.below(400) as f32 / 4.0 }),
+        7 => peers.push(Behavior::Copier { victim: victim(rng) }),
+        8 => peers.push(Behavior::Duplicator { original: victim(rng) }),
+        9 => {
+            let ring = rng.below(100);
+            let eps = (1 + rng.below(63)) as f32 / 256.0;
+            peers.push(Behavior::Sybil { ring, eps });
+            peers.push(Behavior::Sybil { ring, eps });
+        }
+        10 => peers.push(Behavior::CopycatNoise {
+            victim: victim(rng),
+            noise: (1 + rng.below(63)) as f32 / 256.0,
+        }),
+        11 => peers.push(Behavior::Briber { validator: rng.below(n_validators as u64) as Uid }),
+        12 => peers.push(Behavior::SlowLoris),
+        _ => peers.push(Behavior::StaleReplayer { lag: 1 + rng.below(5) }),
+    }
+}
+
+impl FuzzScript {
+    /// Generate a random script: 2–3 honest peers, 1–3 adversary picks
+    /// (every class reachable), 8–12 rounds, and 0–3 churn events kept
+    /// inside the envelopes the invariants assume — leaves target round-0
+    /// peer uids, and scripted stake never reaches validator 0's 1000.0 so
+    /// no bribed validator can be handed the stake majority mid-run.
+    pub fn generate(rng: &mut Rng, size: usize) -> FuzzScript {
+        let n_validators = 1 + rng.below(2) as usize;
+        let n_honest = 2 + rng.below(2) as usize;
+        let honest_uids: Vec<Uid> =
+            (0..n_honest).map(|i| (n_validators + i) as Uid).collect();
+
+        let mut peers: Vec<Behavior> = (0..n_honest)
+            .map(|_| Behavior::Honest { data_mult: 1.0 + rng.below(16) as f64 / 16.0 })
+            .collect();
+        for _ in 0..1 + rng.below(3) {
+            push_adversary(rng, &mut peers, &honest_uids, n_validators);
+        }
+
+        let rounds = 8 + rng.below(5);
+        let total_initial = n_validators + peers.len();
+        let peer_uids: Vec<Uid> =
+            (0..peers.len()).map(|i| (n_validators + i) as Uid).collect();
+
+        let mut scenario = Scenario::new();
+        for _ in 0..rng.below(1 + size as u64 % 4) {
+            let round = 1 + rng.below(rounds - 2);
+            let ev = match rng.below(4) {
+                0 => Event::JoinPeer {
+                    behavior: arbitrary_behavior(rng, total_initial as u64),
+                },
+                1 => Event::LeavePeer {
+                    uid: peer_uids[rng.below(peer_uids.len() as u64) as usize],
+                },
+                2 => {
+                    let uid = if n_validators > 1 && rng.chance(0.5) {
+                        1 as Uid
+                    } else {
+                        peer_uids[rng.below(peer_uids.len() as u64) as usize]
+                    };
+                    Event::SetStake { uid, amount: rng.below(1600) as f64 / 4.0 }
+                }
+                _ => Event::ProviderOutage {
+                    prob: rng.below(32) as f64 / 64.0,
+                    rounds: 1 + rng.below(2),
+                },
+            };
+            scenario = scenario.at(round, ev);
+        }
+
+        let max_uids = rng.chance(0.3).then_some(total_initial + 1);
+        FuzzScript { seed: rng.next_u64(), rounds, n_validators, peers, scenario, max_uids }
+    }
+
+    /// Builder for this script: sim backend, nano model, single-threaded
+    /// (1-vs-N determinism is pinned separately), heldout eval off, and an
+    /// eval sample large enough that every valid submission is evaluated
+    /// every round — adversaries cannot hide from PoC by sampling luck.
+    pub fn builder(&self) -> GauntletBuilder {
+        let mut b = GauntletBuilder::sim()
+            .model("nano")
+            .rounds(self.rounds)
+            .peers(self.peers.clone())
+            .scenario(self.scenario.clone())
+            .seed(self.seed)
+            .threads(1)
+            .validators(self.n_validators)
+            .eval_every(0)
+            .eval_sample(32);
+        if let Some(m) = self.max_uids {
+            b = b.max_uids(m);
+        }
+        b
+    }
+}
+
+/// Rolling per-round invariant checks over [`RoundRecord`]s, shared between
+/// the fuzzer and `gauntlet soak` (see the module docs for the list).
+#[derive(Default)]
+pub struct InvariantTracker {
+    /// Last observed balance per uid; cleared on lifecycle events because
+    /// eviction recycles uids with fresh balances.
+    balances: BTreeMap<Uid, f64>,
+}
+
+impl InvariantTracker {
+    pub fn observe(&mut self, rec: &RoundRecord) -> Result<(), String> {
+        let mut sum = 0.0;
+        for p in &rec.peers {
+            crate::prop_assert!(
+                p.incentive.is_finite() && p.incentive >= -1e-12,
+                "round {}: uid {} incentive {} is not finite and non-negative",
+                rec.round,
+                p.uid,
+                p.incentive
+            );
+            crate::prop_assert!(
+                p.balance.is_finite() && p.balance >= -1e-9,
+                "round {}: uid {} balance {} is not finite and non-negative",
+                rec.round,
+                p.uid,
+                p.balance
+            );
+            crate::prop_assert!(
+                p.peer_score.is_finite()
+                    && p.mu.is_finite()
+                    && p.rating_mu.is_finite()
+                    && p.rating_ordinal.is_finite(),
+                "round {}: uid {} has a non-finite score \
+                 (peer_score={} mu={} rating_mu={} ordinal={})",
+                rec.round,
+                p.uid,
+                p.peer_score,
+                p.mu,
+                p.rating_mu,
+                p.rating_ordinal
+            );
+            sum += p.incentive;
+        }
+        crate::prop_assert!(
+            sum <= 1.0 + 1e-6,
+            "round {}: incentives sum to {sum} > 1",
+            rec.round
+        );
+        if !rec.events.is_empty() {
+            self.balances.clear();
+        }
+        for p in &rec.peers {
+            if let Some(prev) = self.balances.get(&p.uid) {
+                crate::prop_assert!(
+                    p.balance + 1e-9 >= *prev,
+                    "round {}: uid {} balance shrank from {prev} to {}",
+                    rec.round,
+                    p.uid,
+                    p.balance
+                );
+            }
+            self.balances.insert(p.uid, p.balance);
+        }
+        Ok(())
+    }
+}
+
+/// Adversary classes the mechanism actively detects and starves — honest
+/// mean balance must strictly dominate theirs.
+pub const STRICT_CLASSES: [&str; 7] =
+    ["copier", "copycat", "duplicator", "format", "freeloader", "poisoner", "sybil"];
+
+/// Adversary classes the mechanism *neutralizes* rather than punishes
+/// (normalization, put window, sync probes): bounded by honest parity.
+pub const PARITY_CLASSES: [&str; 6] =
+    ["desync", "late", "rescaler", "silent", "slowloris", "stale"];
+
+/// Assert class dominance over final balances grouped by
+/// [`Behavior::class`]. `honest` holds honest balances; skipped entirely
+/// when the run is degenerate (no honest survivors or zero honest mean).
+pub fn check_class_dominance(
+    honest: &[f64],
+    groups: &BTreeMap<&'static str, Vec<f64>>,
+) -> Result<(), String> {
+    if honest.is_empty() {
+        return Ok(());
+    }
+    let h_mean = honest.iter().sum::<f64>() / honest.len() as f64;
+    let h_max = honest.iter().fold(0.0_f64, |a, &b| a.max(b));
+    if h_mean <= 1e-9 {
+        return Ok(());
+    }
+    for (class, bals) in groups {
+        if bals.is_empty() {
+            continue;
+        }
+        let mean = bals.iter().sum::<f64>() / bals.len() as f64;
+        if STRICT_CLASSES.contains(class) {
+            crate::prop_assert!(
+                mean < h_mean,
+                "class {class}: mean balance {mean} does not strictly trail honest mean {h_mean}"
+            );
+        } else if PARITY_CLASSES.contains(class) {
+            crate::prop_assert!(
+                mean <= h_max * 1.5 + 1e-6,
+                "class {class}: mean balance {mean} materially out-earns best honest {h_max}"
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Run one fuzz case end to end: generate a script, run it, check every
+/// invariant. The rng also decides whether this case additionally performs
+/// the snapshot/resume and trace-replay self-tests. Designed as the body
+/// of a [`crate::prop::check`] property; failures embed the full script.
+pub fn check_case(rng: &mut Rng, size: usize) -> Result<(), String> {
+    let script = FuzzScript::generate(rng, size);
+    let do_snapshot = rng.chance(0.5);
+    let do_replay = rng.chance(0.35);
+    let tag = rng.next_u64();
+    run_script(&script, do_snapshot, do_replay, tag)
+        .map_err(|e| format!("{e}\n  failing script: {script}"))
+}
+
+/// Standalone re-run of one fuzz case from a harness seed, for
+/// `gauntlet soak --repro <seed> --size <n>` and CI triage.
+pub fn check_seed(seed: u64, size: usize) -> Result<(), String> {
+    check_case(&mut Rng::new(seed), size)
+}
+
+fn run_script(
+    script: &FuzzScript,
+    do_snapshot: bool,
+    do_replay: bool,
+    tag: u64,
+) -> Result<(), String> {
+    let trace_path = std::env::temp_dir()
+        .join(format!("gauntlet-fuzz-{tag:016x}-{}.jsonl", std::process::id()));
+    let trace = if do_replay {
+        Some(
+            JsonlTraceObserver::create(&trace_path)
+                .map_err(|e| format!("trace create: {e:#}"))?,
+        )
+    } else {
+        None
+    };
+
+    let mut b = script.builder();
+    if let Some(t) = &trace {
+        b = b.observer(t.clone());
+    }
+    let mut engine = b.build().map_err(|e| format!("build: {e:#}"))?;
+
+    let snap_at = script.rounds / 2;
+    let mut mid = None;
+    let mut tracker = InvariantTracker::default();
+    while engine.round() < script.rounds {
+        if do_snapshot && engine.round() == snap_at {
+            mid = Some(engine.snapshot());
+        }
+        let r = engine.round();
+        let rec = engine.run_round().map_err(|e| format!("round {r}: {e:#}"))?;
+        tracker.observe(&rec)?;
+    }
+
+    // Class dominance over round-0 peers that survived to the end. A slot
+    // is "original" only if its uid maps back into the initial population
+    // AND the behavior still matches — eviction recycles uids, and a
+    // recycled slot says nothing about the original occupant's earnings.
+    let mut honest = Vec::new();
+    let mut honest_uids = Vec::new();
+    let mut groups: BTreeMap<&'static str, Vec<f64>> = BTreeMap::new();
+    let mut plagiarists: Vec<Uid> = Vec::new();
+    for p in engine.peers() {
+        let Some(idx) = (p.uid as usize).checked_sub(script.n_validators) else { continue };
+        if idx >= script.peers.len() || script.peers[idx] != p.behavior {
+            continue;
+        }
+        let bal = engine.chain().neuron(p.uid).map(|n| n.balance).unwrap_or(0.0);
+        let class = p.behavior.class();
+        if class == "honest" {
+            honest.push(bal);
+            honest_uids.push(p.uid);
+        } else {
+            groups.entry(class).or_default().push(bal);
+            if matches!(class, "copier" | "copycat" | "duplicator" | "sybil") {
+                plagiarists.push(p.uid);
+            }
+        }
+    }
+    check_class_dominance(&honest, &groups)?;
+
+    // Plagiarist classes must *converge* to near-zero weight, not merely
+    // trail on cumulative balance: final-round incentive at most half the
+    // honest mean.
+    if let Some(last) = engine.metrics_observer().last_record() {
+        let inc = |uid: Uid| last.peers.iter().find(|p| p.uid == uid).map(|p| p.incentive);
+        let h_inc: Vec<f64> = honest_uids.iter().filter_map(|&u| inc(u)).collect();
+        if !h_inc.is_empty() {
+            let h_mean = h_inc.iter().sum::<f64>() / h_inc.len() as f64;
+            if h_mean > 1e-9 {
+                for &uid in &plagiarists {
+                    if let Some(i) = inc(uid) {
+                        crate::prop_assert!(
+                            i <= h_mean * 0.5 + 1e-9,
+                            "plagiarist uid {uid} final incentive {i} has not \
+                             converged to near-zero (honest mean {h_mean})"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    if let Some(snap) = mid {
+        let mut resumed = GauntletBuilder::sim()
+            .resume(snap)
+            .build()
+            .map_err(|e| format!("resume build: {e:#}"))?;
+        resumed.run().map_err(|e| format!("resumed run: {e:#}"))?;
+        crate::prop_assert!(
+            resumed.fingerprint() == engine.fingerprint(),
+            "snapshot/resume fingerprint {:#x} diverged from uninterrupted run {:#x}",
+            resumed.fingerprint(),
+            engine.fingerprint()
+        );
+    }
+
+    if let Some(t) = trace {
+        t.flush().map_err(|e| format!("trace flush: {e:#}"))?;
+        let replayed =
+            replay_trace(&trace_path).map_err(|e| format!("replay_trace: {e:#}"))?;
+        let live = engine.metrics_observer().metrics();
+        // Compare through JSON so NaN diagnostics (heldout loss is off
+        // here) compare by bit pattern rather than poisoning PartialEq.
+        crate::prop_assert!(
+            replayed.to_json().write() == live.to_json().write(),
+            "replay_trace metrics diverged from the live run (trace kept at {})",
+            trace_path.display()
+        );
+        let _ = std::fs::remove_file(&trace_path);
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scripts_are_deterministic_per_seed() {
+        let a = FuzzScript::generate(&mut Rng::new(42), 17);
+        let b = FuzzScript::generate(&mut Rng::new(42), 17);
+        assert_eq!(a.to_string(), b.to_string());
+        let c = FuzzScript::generate(&mut Rng::new(43), 17);
+        assert_ne!(a.seed, c.seed, "different harness seeds give different engine seeds");
+    }
+
+    #[test]
+    fn generated_sybil_rings_have_at_least_two_members() {
+        for seed in 0..200 {
+            let s = FuzzScript::generate(&mut Rng::new(seed), 11);
+            let mut rings: BTreeMap<u64, usize> = BTreeMap::new();
+            for b in &s.peers {
+                if let Behavior::Sybil { ring, .. } = b {
+                    *rings.entry(*ring).or_default() += 1;
+                }
+            }
+            for (ring, n) in rings {
+                assert!(n >= 2, "seed {seed}: ring {ring} has a lone member");
+            }
+        }
+    }
+
+    #[test]
+    fn generated_scripts_stay_inside_safe_envelopes() {
+        for seed in 0..200 {
+            let s = FuzzScript::generate(&mut Rng::new(seed), 23);
+            assert!((8..=12).contains(&s.rounds));
+            assert!((1..=2).contains(&s.n_validators));
+            let honest =
+                s.peers.iter().filter(|b| b.class() == "honest").count();
+            assert!((2..=3).contains(&honest), "seed {seed}: {honest} honest peers");
+            for (round, ev) in s.scenario.events() {
+                assert!(*round >= 1 && *round < s.rounds);
+                if let Event::SetStake { amount, .. } = ev {
+                    assert!(
+                        *amount < 1000.0,
+                        "seed {seed}: scripted stake {amount} could flip the majority"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn class_dominance_rejects_out_earning_plagiarist() {
+        let mut groups = BTreeMap::new();
+        groups.insert("copier", vec![2.0]);
+        assert!(check_class_dominance(&[1.0, 1.2], &groups).is_err());
+        groups.insert("copier", vec![0.01]);
+        assert!(check_class_dominance(&[1.0, 1.2], &groups).is_ok());
+        // parity classes tolerate honest-level earnings but not multiples
+        let mut parity = BTreeMap::new();
+        parity.insert("slowloris", vec![1.1]);
+        assert!(check_class_dominance(&[1.0, 1.2], &parity).is_ok());
+        parity.insert("slowloris", vec![5.0]);
+        assert!(check_class_dominance(&[1.0, 1.2], &parity).is_err());
+        // degenerate runs are skipped, not failed
+        assert!(check_class_dominance(&[], &groups).is_ok());
+        assert!(check_class_dominance(&[0.0], &groups).is_ok());
+    }
+}

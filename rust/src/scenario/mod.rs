@@ -95,6 +95,11 @@ impl Scenario {
         self.events.push((round, event));
     }
 
+    /// All `(round, event)` pairs in authoring order.
+    pub fn events(&self) -> impl Iterator<Item = &(u64, Event)> {
+        self.events.iter()
+    }
+
     /// Events scheduled for `round`, in authoring order.
     pub fn events_at(&self, round: u64) -> Vec<Event> {
         self.events.iter().filter(|(r, _)| *r == round).map(|(_, e)| e.clone()).collect()
@@ -139,6 +144,25 @@ impl Scenario {
             })
             .collect();
         minjson::obj(vec![("events", Value::Arr(events))])
+    }
+
+    /// Render the schedule in the documented compact one-event-per-line
+    /// form, such that `Scenario::parse(&s.to_compact())` reconstructs it
+    /// exactly. The scenario fuzzer prints failing scripts this way so
+    /// they paste straight back into `gauntlet run --scenario`.
+    pub fn to_compact(&self) -> String {
+        self.events
+            .iter()
+            .map(|(round, e)| match e {
+                Event::JoinPeer { behavior } => format!("@{round} join {}", behavior.spec()),
+                Event::LeavePeer { uid } => format!("@{round} leave {uid}"),
+                Event::SetStake { uid, amount } => format!("@{round} stake {uid} {amount}"),
+                Event::ProviderOutage { prob, rounds } => {
+                    format!("@{round} outage {prob} {rounds}")
+                }
+            })
+            .collect::<Vec<_>>()
+            .join("\n")
     }
 
     /// Parse either form (see module docs): JSON when the first non-space
@@ -347,6 +371,31 @@ mod tests {
         let back = Scenario::parse(&s.to_json().write()).unwrap();
         assert_eq!(s, back);
         assert_eq!(Scenario::parse(&Scenario::default().to_json().write()).unwrap().len(), 0);
+    }
+
+    #[test]
+    fn to_compact_roundtrips_through_parse() {
+        let s = Scenario::parse(
+            "@3 join honest:2\n@3 join sybil:7:0.25\n@5 leave 4\n\
+             @6 stake 0 512.5\n@7 outage 0.5 2\n@9 join stale:3",
+        )
+        .unwrap();
+        assert_eq!(Scenario::parse(&s.to_compact()).unwrap(), s);
+        assert_eq!(Scenario::default().to_compact(), "");
+    }
+
+    #[test]
+    fn random_scenarios_roundtrip_compact_and_json() {
+        crate::prop::check("scenario-grammar-roundtrip", 48, |rng, size| {
+            let s = crate::prop::scenario::arbitrary_scenario(rng, size);
+            let compact = Scenario::parse(&s.to_compact())
+                .map_err(|e| format!("compact parse failed: {e}\n{}", s.to_compact()))?;
+            crate::prop_assert!(compact == s, "compact roundtrip drifted:\n{}", s.to_compact());
+            let json = Scenario::parse(&s.to_json().write())
+                .map_err(|e| format!("json parse failed: {e}\n{}", s.to_json().write()))?;
+            crate::prop_assert!(json == s, "json roundtrip drifted:\n{}", s.to_json().write());
+            Ok(())
+        });
     }
 
     #[test]

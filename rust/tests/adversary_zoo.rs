@@ -1,0 +1,221 @@
+//! Adversary-zoo acceptance tests (the PR 6 tentpole):
+//!
+//! - the deterministic in-tree fuzzer budget: 25 random churn + adversary
+//!   scripts through full engine runs via `prop::scenario`, every
+//!   incentive-security invariant checked, every failure reproducible from
+//!   the printed seed (`gauntlet soak --repro <seed> --size <n>`);
+//! - targeted stake-bribery tests pinning both Yuma regimes: a
+//!   minority-stake bribe is clipped to the honest consensus, a
+//!   majority-stake bribe succeeds (the paper's stake-security assumption);
+//! - a 1-vs-N thread fingerprint pin over a population with copy chains
+//!   (copier, copycat, duplicator) plus the new zoo classes — the
+//!   second-pass copy stage must not depend on thread count;
+//! - deterministic relative-earnings checks for the sybil ring and the
+//!   stale replayer.
+
+use gauntlet::coordinator::engine::{GauntletBuilder, GauntletEngine};
+use gauntlet::peers::Behavior;
+use gauntlet::prop;
+use gauntlet::scenario::Scenario;
+
+/// The deterministic fuzzer budget that ships inside `cargo test -q`: the
+/// CI nightly runs the same generator at much higher case counts through
+/// `gauntlet soak --fuzz`.
+#[test]
+fn scenario_fuzzer_deterministic_budget() {
+    prop::check("adversary-zoo-fuzz", 25, prop::scenario::check_case);
+}
+
+/// Mixed zoo including every new class plus copy chains, victims pointing
+/// at the leading honest uids (validators take uids 0..n_validators).
+fn zoo(n_validators: usize) -> Vec<Behavior> {
+    let h = n_validators as u32; // first honest peer uid
+    vec![
+        Behavior::Honest { data_mult: 1.0 },
+        Behavior::Honest { data_mult: 2.0 },
+        Behavior::Honest { data_mult: 1.0 },
+        Behavior::Copier { victim: h },
+        Behavior::CopycatNoise { victim: h + 1, noise: 0.1 },
+        Behavior::Duplicator { original: h + 2 },
+        Behavior::Sybil { ring: 7, eps: 0.05 },
+        Behavior::Sybil { ring: 7, eps: 0.05 },
+        Behavior::SlowLoris,
+        Behavior::StaleReplayer { lag: 2 },
+    ]
+}
+
+fn build(n_validators: usize, threads: usize, scenario: Scenario) -> GauntletEngine {
+    GauntletBuilder::sim()
+        .model("nano")
+        .rounds(8)
+        .peers(zoo(n_validators))
+        .scenario(scenario)
+        .seed(23)
+        .threads(threads)
+        .validators(n_validators)
+        .eval_every(0)
+        .eval_sample(16)
+        .build()
+        .expect("sim engine builds")
+}
+
+fn balance(e: &GauntletEngine, uid: u32) -> f64 {
+    e.chain().neuron(uid).map(|n| n.balance).unwrap_or(0.0)
+}
+
+/// Satellite 4 pin: the copy stage (copier/copycat/duplicator posting in
+/// the same round their victims post) is sequential on the coordinator
+/// thread, so the whole zoo must be bit-identical at any thread count.
+#[test]
+fn zoo_fingerprint_identical_at_any_thread_count() {
+    let mut seq = build(2, 1, Scenario::default());
+    seq.run().expect("sequential run");
+    for threads in [2, 8] {
+        let mut par = build(2, threads, Scenario::default());
+        par.run().expect("parallel run");
+        assert_eq!(
+            seq.fingerprint(),
+            par.fingerprint(),
+            "zoo run diverged at {threads} threads"
+        );
+    }
+}
+
+/// A minority-stake bribe buys one validator's weight row, but Yuma clips
+/// values lacking kappa-majority stake support back to the honest
+/// consensus: the briber cannot materially out-earn the best honest peer.
+/// Validator stakes are 1000 (uid 0) and 500 (uid 1), so uid 1 is the
+/// minority target.
+#[test]
+fn minority_stake_bribe_is_clipped_by_yuma() {
+    let peers = vec![
+        Behavior::Honest { data_mult: 1.0 },  // uid 2
+        Behavior::Honest { data_mult: 1.0 },  // uid 3
+        Behavior::Honest { data_mult: 2.0 },  // uid 4
+        Behavior::Briber { validator: 1 },    // uid 5
+    ];
+    let mut engine = GauntletBuilder::sim()
+        .model("nano")
+        .rounds(8)
+        .peers(peers)
+        .seed(31)
+        .threads(1)
+        .validators(2)
+        .eval_every(0)
+        .eval_sample(16)
+        .build()
+        .expect("engine builds");
+    engine.run().expect("run");
+    let best_honest = [2u32, 3, 4].iter().map(|&u| balance(&engine, u)).fold(0.0, f64::max);
+    let briber = balance(&engine, 5);
+    assert!(best_honest > 0.0, "honest peers earned nothing — degenerate run");
+    assert!(
+        briber <= best_honest * 1.5 + 1e-6,
+        "minority bribe paid off: briber balance {briber} vs best honest {best_honest}"
+    );
+}
+
+/// Hand the bribed validator the stake majority via a scripted stake move
+/// and the same attack succeeds — the incentive guarantee is conditional
+/// on honest stake majority, exactly as the paper assumes.
+#[test]
+fn majority_stake_bribe_succeeds() {
+    let peers = vec![
+        Behavior::Honest { data_mult: 1.0 },  // uid 2
+        Behavior::Honest { data_mult: 1.0 },  // uid 3
+        Behavior::Honest { data_mult: 2.0 },  // uid 4
+        Behavior::Briber { validator: 1 },    // uid 5
+    ];
+    // uid 1 starts at stake 500 vs uid 0's 1000; @0 raise it to 3000.
+    let scenario = Scenario::parse("@0 stake 1 3000").expect("scenario parses");
+    let mut engine = GauntletBuilder::sim()
+        .model("nano")
+        .rounds(8)
+        .peers(peers)
+        .scenario(scenario)
+        .seed(31)
+        .threads(1)
+        .validators(2)
+        .eval_every(0)
+        .eval_sample(16)
+        .build()
+        .expect("engine builds");
+    engine.run().expect("run");
+    let honest_mean =
+        [2u32, 3, 4].iter().map(|&u| balance(&engine, u)).sum::<f64>() / 3.0;
+    let briber = balance(&engine, 5);
+    assert!(
+        briber > honest_mean,
+        "majority bribe should dominate: briber balance {briber} vs honest mean {honest_mean}"
+    );
+}
+
+/// Sybil ring members share one gradient computation with per-member
+/// perturbations; proof-of-computation scores them against their own
+/// assigned shards, so each member must earn strictly less than the mean
+/// honest peer and end at near-zero incentive.
+#[test]
+fn sybil_ring_converges_to_near_zero() {
+    let mut engine = build(1, 1, Scenario::default());
+    engine.run().expect("run");
+    let honest_mean =
+        [1u32, 2, 3].iter().map(|&u| balance(&engine, u)).sum::<f64>() / 3.0;
+    assert!(honest_mean > 0.0, "honest peers earned nothing — degenerate run");
+    for uid in [7u32, 8] {
+        let b = balance(&engine, uid);
+        assert!(
+            b < honest_mean,
+            "sybil uid {uid} balance {b} not strictly below honest mean {honest_mean}"
+        );
+    }
+    let last = engine.metrics_observer().last_record().expect("final round record");
+    let inc = |uid: u32| {
+        last.peers.iter().find(|p| p.uid == uid).map(|p| p.incentive).unwrap_or(0.0)
+    };
+    let honest_inc = ([1u32, 2, 3].iter().map(|&u| inc(u)).sum::<f64>()) / 3.0;
+    for uid in [7u32, 8] {
+        assert!(
+            inc(uid) <= honest_inc * 0.5 + 1e-9,
+            "sybil uid {uid} final incentive {} has not converged toward zero \
+             (honest mean {honest_inc})",
+            inc(uid)
+        );
+    }
+}
+
+/// The stale replayer re-posts its own round-(r-k) submission. It still
+/// does real work, so it is *neutralized*, not necessarily starved: it
+/// must never materially out-earn the best honest peer.
+#[test]
+fn stale_replayer_never_out_earns_honest() {
+    let mut engine = build(1, 1, Scenario::default());
+    engine.run().expect("run");
+    let best_honest = [1u32, 2, 3].iter().map(|&u| balance(&engine, u)).fold(0.0, f64::max);
+    let stale = balance(&engine, 10);
+    assert!(best_honest > 0.0, "honest peers earned nothing — degenerate run");
+    assert!(
+        stale <= best_honest * 1.5 + 1e-6,
+        "stale replayer balance {stale} materially out-earns best honest {best_honest}"
+    );
+}
+
+/// Mid-run snapshot + resume over the full zoo matches the uninterrupted
+/// fingerprint (the fuzzer also samples this; here it is pinned on a
+/// population with every copy chain active).
+#[test]
+fn zoo_snapshot_resume_is_bit_identical() {
+    let mut live = build(2, 1, Scenario::default());
+    let mut snap = None;
+    while live.round() < 8 {
+        if live.round() == 4 {
+            snap = Some(live.snapshot());
+        }
+        live.run_round().expect("live round");
+    }
+    let mut resumed = GauntletBuilder::sim()
+        .resume(snap.expect("snapshot taken"))
+        .build()
+        .expect("resumed engine builds");
+    resumed.run().expect("resumed run");
+    assert_eq!(resumed.fingerprint(), live.fingerprint(), "resume diverged from live run");
+}
