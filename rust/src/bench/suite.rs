@@ -7,8 +7,10 @@
 //!
 //! 1. **A registry of named benchmarks** ([`registry`]): sparse DeMo
 //!    aggregation, wire encode/decode, OpenSkill updates, a Yuma epoch at
-//!    deployed scale (64 validators x 256 peers), the fast-eval fan-out,
-//!    and the full round pipeline swept over worker-thread counts. Names
+//!    deployed scale (64 validators x 256 peers), the SimExec lane kernels
+//!    (`grad_into`, `loss_delta` single vs batched at 8/32 candidates vs
+//!    the scalar reference, `eval_peer_batch`), the fast-eval fan-out, and
+//!    the full round pipeline swept over worker-thread counts. Names
 //!    are stable identifiers — they are what baseline diffs key on.
 //! 2. **A machine-readable schema** ([`SuiteResult`]): `BENCH_<suite>.json`
 //!    carries a run fingerprint (git commit, thread budget, OS) plus
@@ -18,7 +20,7 @@
 //!    baseline mean per bench, with anything slower than `fail_over`
 //!    reported as a regression — the CI `perf-smoke` job exits non-zero
 //!    on it (`gauntlet bench --suite hotpath --compare
-//!    baseline/BENCH_hotpath.json --fail-over 1.5`).
+//!    baseline/BENCH_hotpath.json --fail-over 1.25`).
 //!
 //! `--quick` shrinks iteration counts (and the round-pipeline workload)
 //! for PR-gate latency but still runs **every** registered bench, so quick
@@ -44,7 +46,7 @@ use crate::demo::SparseGrad;
 use crate::minjson::{self, field, fnum, read_f64, Value};
 use crate::openskill::{PlackettLuce, Rating};
 use crate::peers::Behavior;
-use crate::runtime::WorkerPool;
+use crate::runtime::{EvalPeerCase, ExecBackend, SimExec, SimSpec, WorkerPool};
 use crate::storage::{ObjectStore, ProviderModel, ReadKey};
 use crate::util::Rng;
 
@@ -123,8 +125,8 @@ pub fn registry() -> Vec<SuiteSpec> {
         SuiteSpec {
             name: "hotpath",
             description: "per-round critical path: aggregation, wire codec, \
-                          ratings, Yuma, pool dispatch, fast-eval fan-out, \
-                          full-round thread sweep",
+                          ratings, Yuma, pool dispatch, SimExec lane kernels, \
+                          fast-eval fan-out, full-round thread sweep",
             benches: vec![
                 bench("aggregate_g4_c1312", |c| bench_aggregate(c, 4, 1312, 167_936)),
                 bench("aggregate_g15_c1312", |c| bench_aggregate(c, 15, 1312, 167_936)),
@@ -137,6 +139,12 @@ pub fn registry() -> Vec<SuiteSpec> {
                 bench("yuma_epoch_64x256", bench_yuma),
                 bench("corpus_shard", bench_corpus),
                 bench("pool_dispatch_j16_t4", bench_pool_dispatch),
+                bench("kernel_grad_into_mid", bench_kernel_grad),
+                bench("kernel_loss_delta_scalar_ref_mid", bench_kernel_loss_delta_scalar),
+                bench("kernel_loss_delta_mid", |c| bench_kernel_loss_delta(c, 1)),
+                bench("kernel_loss_delta_batch8_mid", |c| bench_kernel_loss_delta(c, 8)),
+                bench("kernel_loss_delta_batch32_mid", |c| bench_kernel_loss_delta(c, 32)),
+                bench("kernel_eval_peer_batch8_mid", |c| bench_kernel_eval_peer(c, 8)),
                 bench("fasteval_32p_seq", |c| bench_fasteval(c, 1)),
                 bench("fasteval_32p_fan4", |c| bench_fasteval(c, 4)),
                 bench("round_pipeline_t1", |c| bench_round_pipeline(c, 1)),
@@ -650,6 +658,113 @@ fn bench_round_pipeline(ctx: &BenchCtx, threads: usize) -> Result<Option<BenchOu
     });
     let rounds_per_s = rounds as f64 / timing.mean_s.max(1e-12);
     Ok(Some(BenchOutcome { timing, throughput: Some((rounds_per_s, "rounds/s")) }))
+}
+
+// ---------------------------------------------------------------------
+// kernel-level shapes (VectorLane)
+// ---------------------------------------------------------------------
+
+/// The mid-model SimExec (60k params) plus its initial parameters and a
+/// deterministic token set — the shared fixture for the kernel benches.
+fn kernel_fixture() -> (SimExec, Vec<f32>, Vec<i32>) {
+    let exec = SimExec::new(&SimSpec::mid(), 7);
+    let theta = exec.init_params().expect("init params");
+    let toks = kernel_tokens(&exec, 5);
+    (exec, theta, toks)
+}
+
+/// One full token batch (`batch * (seq + 1)` ids), varied by `tag` so
+/// multi-case benches exercise distinct `u_T` directions.
+fn kernel_tokens(exec: &SimExec, tag: i32) -> Vec<i32> {
+    let m = exec.meta();
+    let n = m.batch * (m.seq + 1);
+    (0..n as i32).map(|i| (i * 31 + tag) % m.vocab as i32).collect()
+}
+
+/// Dense ±1 sign-pattern coefficient vectors (full padded width), one per
+/// candidate, each with a distinct phase so nothing folds away.
+fn kernel_coeffs(exec: &SimExec, n: usize) -> Vec<Vec<f32>> {
+    let padded = exec.meta().padded_count;
+    (0..n)
+        .map(|c| (0..padded).map(|i| if (i + c) % 3 == 0 { 1.0 } else { -1.0 }).collect())
+        .collect()
+}
+
+/// The fused loss+gradient lane kernel, writing into a reused buffer —
+/// the inner loop of every honest peer's training step.
+fn bench_kernel_grad(ctx: &BenchCtx) -> Result<Option<BenchOutcome>> {
+    let (exec, theta, toks) = kernel_fixture();
+    let mut g = Vec::new();
+    let timing = time_it(ctx.warmup(5), ctx.iters(200), || {
+        let _ = exec.grad_into(&theta, &toks, &mut g).expect("grad_into");
+        std::hint::black_box(&g);
+    });
+    let mparam_per_s = theta.len() as f64 / timing.mean_s.max(1e-12) / 1e6;
+    Ok(Some(BenchOutcome { timing, throughput: Some((mparam_per_s, "Mparam/s")) }))
+}
+
+/// `loss_delta` at one candidate (the per-call kernel) or `n_cand`
+/// candidates in one `loss_delta_batch` call sharing the token direction —
+/// the validator's primary-evaluation inner loop. Throughput counts every
+/// candidate's full parameter sweep, so the single and batched variants
+/// are directly comparable.
+fn bench_kernel_loss_delta(ctx: &BenchCtx, n_cand: usize) -> Result<Option<BenchOutcome>> {
+    let (exec, theta, toks) = kernel_fixture();
+    let coeffs = kernel_coeffs(&exec, n_cand);
+    let cands: Vec<(&[f32], f32)> = coeffs
+        .iter()
+        .enumerate()
+        .map(|(i, c)| (c.as_slice(), 0.01 + i as f32 * 1e-4))
+        .collect();
+    let timing = if n_cand == 1 {
+        time_it(ctx.warmup(5), ctx.iters(200), || {
+            let _ =
+                exec.loss_delta(&theta, cands[0].0, cands[0].1, &toks).expect("loss_delta");
+        })
+    } else {
+        time_it(ctx.warmup(5), ctx.iters(200), || {
+            let _ = exec.loss_delta_batch(&theta, &cands, &toks).expect("loss_delta_batch");
+        })
+    };
+    let mparam_per_s = (n_cand * theta.len()) as f64 / timing.mean_s.max(1e-12) / 1e6;
+    Ok(Some(BenchOutcome { timing, throughput: Some((mparam_per_s, "Mparam/s")) }))
+}
+
+/// The pre-VectorLane scalar `loss_delta` (sequential f64 accumulators),
+/// kept as a registered reference so one suite run shows the lane
+/// kernels' speedup as a same-machine ratio against
+/// `kernel_loss_delta_mid`, rather than across baseline files.
+fn bench_kernel_loss_delta_scalar(ctx: &BenchCtx) -> Result<Option<BenchOutcome>> {
+    let (exec, theta, toks) = kernel_fixture();
+    let coeffs = kernel_coeffs(&exec, 1);
+    let timing = time_it(ctx.warmup(5), ctx.iters(200), || {
+        let _ = exec
+            .loss_delta_scalar_ref(&theta, &coeffs[0], 0.01, &toks)
+            .expect("loss_delta_scalar_ref");
+    });
+    let mparam_per_s = theta.len() as f64 / timing.mean_s.max(1e-12) / 1e6;
+    Ok(Some(BenchOutcome { timing, throughput: Some((mparam_per_s, "Mparam/s")) }))
+}
+
+/// `eval_peer_batch` over `n_cases` peers with distinct coefficient
+/// vectors and distinct assigned/random token sets — the exact shape
+/// `PrimaryEvaluator::evaluate_batch` hands the backend each round.
+fn bench_kernel_eval_peer(ctx: &BenchCtx, n_cases: usize) -> Result<Option<BenchOutcome>> {
+    let (exec, theta, _) = kernel_fixture();
+    let coeffs = kernel_coeffs(&exec, n_cases);
+    let tok_sets: Vec<(Vec<i32>, Vec<i32>)> = (0..n_cases as i32)
+        .map(|c| (kernel_tokens(&exec, 2 * c), kernel_tokens(&exec, 2 * c + 1)))
+        .collect();
+    let cases: Vec<EvalPeerCase<'_>> = coeffs
+        .iter()
+        .zip(&tok_sets)
+        .map(|(c, (a, r))| EvalPeerCase { coeff: c, tok_assigned: a, tok_rand: r })
+        .collect();
+    let timing = time_it(ctx.warmup(3), ctx.iters(100), || {
+        let _ = exec.eval_peer_batch(&theta, 0.01, &cases).expect("eval_peer_batch");
+    });
+    let evals_per_s = n_cases as f64 / timing.mean_s.max(1e-12);
+    Ok(Some(BenchOutcome { timing, throughput: Some((evals_per_s, "evals/s")) }))
 }
 
 // ---------------------------------------------------------------------

@@ -112,8 +112,8 @@ pub struct FastEvalCtx<'a> {
 /// Run every fast check against a windowed GET result.
 pub fn fast_evaluate(get: &WindowedGet, ctx: &FastEvalCtx<'_>) -> FastEvalOutcome {
     let mut violations = Vec::new();
-    let bytes: &[u8] = match get {
-        WindowedGet::InWindow(obj) => &obj.bytes,
+    let obj = match get {
+        WindowedGet::InWindow(obj) => obj,
         WindowedGet::Missing => {
             return FastEvalOutcome { violations: vec![FastViolation::Missing], submission: None }
         }
@@ -125,7 +125,10 @@ pub fn fast_evaluate(get: &WindowedGet, ctx: &FastEvalCtx<'_>) -> FastEvalOutcom
         }
     };
 
-    let sub = match Submission::decode(bytes) {
+    // `decode_object` memoizes the SHA-256 integrity verdict on the
+    // shared `Arc<Object>`: one stored submission is read by every
+    // validator each round, and only the first pays the hash.
+    let sub = match Submission::decode_object(obj) {
         Ok(s) => s,
         Err(e @ (WireError::Truncated(_)
         | WireError::BadMagic(_)
@@ -248,11 +251,7 @@ pub fn fast_evaluate_all(
 
 /// Convenience for tests/benches: fast-evaluate an in-memory submission.
 pub fn fast_evaluate_decoded(sub: &Submission, ctx: &FastEvalCtx<'_>) -> FastEvalOutcome {
-    let obj = crate::storage::Object {
-        key: String::new(),
-        bytes: sub.encode(),
-        stored_at: 0,
-    };
+    let obj = crate::storage::Object::new(String::new(), sub.encode(), 0);
     fast_evaluate(&WindowedGet::InWindow(std::sync::Arc::new(obj)), ctx)
 }
 
@@ -317,7 +316,7 @@ mod tests {
     #[test]
     fn corrupt_bytes_fail_format() {
         let vp = vec![0.0];
-        let obj = Object { key: "k".into(), bytes: vec![1, 2, 3], stored_at: 0 };
+        let obj = Object::new("k".into(), vec![1, 2, 3], 0);
         let out = fast_evaluate(&WindowedGet::InWindow(Arc::new(obj)), &ctx(&vp));
         assert!(matches!(out.violations[0], FastViolation::BadFormat(_)));
     }

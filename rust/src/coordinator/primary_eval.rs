@@ -17,7 +17,7 @@ use anyhow::Result;
 
 use crate::data::Corpus;
 use crate::demo::SparseGrad;
-use crate::runtime::ExecBackend;
+use crate::runtime::{EvalPeerCase, ExecBackend};
 
 /// Result of one primary evaluation.
 #[derive(Clone, Copy, Debug)]
@@ -62,10 +62,12 @@ impl PrimaryEvaluator {
         beta: f32,
     ) -> Result<PrimaryEval> {
         let meta = exec.meta();
+        let padded = meta.padded_count;
         // Validator-side decode: scatter the sparse submission into the
         // dense coefficient space (normalized exactly like aggregation
         // normalizes, so scale games don't help here either).
-        self.dense.iter_mut().for_each(|x| *x = 0.0);
+        self.dense.clear();
+        self.dense.resize(padded, 0.0);
         let norm = grad.l2_norm();
         if norm > 1e-12 {
             grad.scatter_into(&mut self.dense, (1.0 / norm) as f32);
@@ -85,6 +87,67 @@ impl PrimaryEvaluator {
             loss_before_assigned: la0 as f64,
             loss_before_rand: lr0 as f64,
         })
+    }
+
+    /// Evaluate a whole sampled subset S_t in one backend call.
+    ///
+    /// The dense scratch becomes a flat `peers × padded_count` coefficient
+    /// matrix (reused across rounds), each peer's shards are derived
+    /// exactly as [`PrimaryEvaluator::evaluate`] derives them, and one
+    /// [`ExecBackend::eval_peer_batch`] sweep scores everything — so a
+    /// native batched backend pays one theta pass for the whole sample.
+    /// Results are in `peers` order and bit-identical to calling
+    /// `evaluate` per peer.
+    pub fn evaluate_batch<E: ExecBackend + ?Sized>(
+        &mut self,
+        exec: &E,
+        theta: &[f32],
+        peers: &[(u32, &SparseGrad)],
+        round: u64,
+        corpus: &Corpus,
+        beta: f32,
+    ) -> Result<Vec<PrimaryEval>> {
+        let meta = exec.meta();
+        let padded = meta.padded_count;
+        self.dense.clear();
+        self.dense.resize(peers.len() * padded, 0.0);
+        for ((_, grad), row) in peers.iter().zip(self.dense.chunks_mut(padded.max(1))) {
+            let norm = grad.l2_norm();
+            if norm > 1e-12 {
+                grad.scatter_into(row, (1.0 / norm) as f32);
+            }
+        }
+
+        let (b, s1) = (meta.batch, meta.seq + 1);
+        let toks: Vec<(Vec<i32>, Vec<i32>)> = peers
+            .iter()
+            .map(|&(uid, _)| {
+                (
+                    corpus.assigned_shard(uid, round, 0, b, s1),
+                    corpus.random_eval(round, uid, b, s1),
+                )
+            })
+            .collect();
+        let cases: Vec<EvalPeerCase<'_>> = self
+            .dense
+            .chunks(padded.max(1))
+            .zip(&toks)
+            .map(|(coeff, (tok_assigned, tok_rand))| EvalPeerCase {
+                coeff,
+                tok_assigned,
+                tok_rand,
+            })
+            .collect();
+        let raw = exec.eval_peer_batch(theta, beta, &cases)?;
+        Ok(raw
+            .into_iter()
+            .map(|(la0, la1, lr0, lr1)| PrimaryEval {
+                score_assigned: la0 as f64 - la1 as f64,
+                score_rand: lr0 as f64 - lr1 as f64,
+                loss_before_assigned: la0 as f64,
+                loss_before_rand: lr0 as f64,
+            })
+            .collect())
     }
 }
 

@@ -848,7 +848,7 @@ impl<E: ExecBackend + 'static> TemplarRunWith<E> {
             }
             let uid = self.peers[i].uid;
             let src_uid = self.peers[i].behavior.source_uid().unwrap();
-            let src_bytes = self.read_public(src_uid, round);
+            let src_obj = self.read_public(src_uid, round);
             let ctx = PeerCtx {
                 exec: &self.exec,
                 corpus: &self.corpus,
@@ -857,7 +857,8 @@ impl<E: ExecBackend + 'static> TemplarRunWith<E> {
                 clock: &self.clock,
                 params: &self.cfg.params,
             };
-            let out = self.peers[i].step_copy(&ctx, src_bytes.as_deref())?;
+            let out =
+                self.peers[i].step_copy(&ctx, src_obj.as_deref().map(|o| o.bytes.as_slice()))?;
             let (label, local_loss) =
                 (self.peers[i].behavior.label(), self.peers[i].last_local_loss);
             let ok = self.emit_turn_and_put(round, uid, label, true, local_loss, 0, out);
@@ -1278,12 +1279,14 @@ impl<E: ExecBackend + 'static> TemplarRunWith<E> {
     }
 
     /// Read another peer's public object (pseudo-gradients are broadcast:
-    /// every peer's read key is on the chain).
-    fn read_public(&self, uid: Uid, round: u64) -> Option<Vec<u8>> {
+    /// every peer's read key is on the chain). Hands back the store's
+    /// shared `Arc<Object>` — no byte copy, and the copier's decode hits
+    /// the same digest memo the validators warmed.
+    fn read_public(&self, uid: Uid, round: u64) -> Option<Arc<crate::storage::Object>> {
         let rk = self.chain.neuron(uid)?.bucket_read_key.clone()?;
         let bucket = format!("peer-{uid}");
         let key = Submission::object_key(uid, round);
-        self.store.get(&bucket, &rk, &key).ok()?.map(|o| o.bytes.clone())
+        self.store.get(&bucket, &rk, &key).ok()?
     }
 }
 

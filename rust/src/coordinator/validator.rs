@@ -139,12 +139,16 @@ impl Validator {
         let candidates: Vec<Uid> = out.valid_submissions.keys().copied().collect();
         let sample = self.rng.choose_k(&candidates, self.params.eval_sample);
         let beta = self.params.beta_frac * lr_t; // beta_t = c * alpha_t
+        // One batched sweep for the whole sample: a native backend
+        // (SimExec) pays one token-direction derivation and one theta
+        // pass, and the exec-service funnel carries one request instead
+        // of |S_t|. Bit-identical to the old per-peer evaluate loop.
+        let peers: Vec<(Uid, &crate::demo::SparseGrad)> =
+            sample.iter().map(|&uid| (uid, &out.valid_submissions[&uid].grad)).collect();
+        let evals =
+            self.evaluator.evaluate_batch(exec, theta, &peers, round, corpus, beta)?;
         let mut scores_rand = Vec::with_capacity(sample.len());
-        for &uid in &sample {
-            let sub = &out.valid_submissions[&uid];
-            let ev = self.evaluator.evaluate(
-                exec, theta, uid, round, &sub.grad, corpus, beta,
-            )?;
+        for (&uid, ev) in sample.iter().zip(evals) {
             self.book.record_primary(uid, ev.score_assigned, ev.score_rand);
             scores_rand.push(ev.score_rand);
             out.evaluated.push((uid, ev));

@@ -73,7 +73,70 @@ impl Submission {
     }
 
     pub fn decode(bytes: &[u8]) -> Result<Submission, WireError> {
-        const HEADER: usize = 4 + 2 + 2 + 4 + 8 + 4 + 4;
+        let frame = Frame::parse(bytes)?;
+        if !frame.digest_ok(bytes) {
+            return Err(WireError::BadDigest);
+        }
+        Ok(frame.decode_sections(bytes))
+    }
+
+    /// Decode a stored object, memoizing the SHA-256 integrity check on
+    /// the object itself. Validators share one `Arc<Object>` per (peer,
+    /// round) submission, so the first reader pays the hash and every
+    /// other validator (and every later probe of the same object) gets
+    /// the verdict for free — encode-once, hash-once.
+    ///
+    /// Structural checks (magic/version/length) stay per-call: they are
+    /// a few header reads, and keeping them out of the memo means the
+    /// memo is purely the digest verdict the doc above promises.
+    pub fn decode_object(obj: &crate::storage::Object) -> Result<Submission, WireError> {
+        let bytes = &obj.bytes;
+        let frame = Frame::parse(bytes)?;
+        if !obj.integrity_memo(|b| match Frame::parse(b) {
+            Ok(f) => f.digest_ok(b),
+            Err(_) => false,
+        }) {
+            return Err(WireError::BadDigest);
+        }
+        Ok(frame.decode_sections(bytes))
+    }
+
+    /// The object key a submission is stored under in its peer's bucket.
+    pub fn object_key(uid: u32, round: u64) -> String {
+        let mut out = String::with_capacity(32);
+        Self::write_object_key(&mut out, uid, round);
+        out
+    }
+
+    /// Append the object key to a reusable buffer — the allocation-free
+    /// form of [`Submission::object_key`] for the validator's fast-eval
+    /// sweep, which derives one key per peer per round.
+    pub fn write_object_key(out: &mut String, uid: u32, round: u64) {
+        use std::fmt::Write as _;
+        let _ = write!(out, "grad/round-{round:08}/uid-{uid}");
+    }
+}
+
+/// Fixed-size wire header length (see the layout in the module docs).
+const HEADER: usize = 4 + 2 + 2 + 4 + 8 + 4 + 4;
+
+/// A structurally validated view of an encoded submission: header fields
+/// plus section geometry. Splitting structural parsing from the digest
+/// check lets [`Submission::decode_object`] memoize only the expensive
+/// SHA-256 pass while re-running the cheap header checks per call.
+struct Frame {
+    uid: u32,
+    round: u64,
+    coeff_count: usize,
+    probe_count: usize,
+    /// Offset where the digest trailer starts (= body length).
+    body_end: usize,
+}
+
+impl Frame {
+    /// Magic / version / declared-length validation — everything `decode`
+    /// checks except the integrity digest.
+    fn parse(bytes: &[u8]) -> Result<Frame, WireError> {
         if bytes.len() < HEADER + 32 {
             return Err(WireError::Truncated(bytes.len()));
         }
@@ -95,36 +158,32 @@ impl Submission {
         if bytes.len() != expected {
             return Err(WireError::LengthMismatch { expected, actual: bytes.len() });
         }
-        let body_end = expected - 32;
-        let digest = Sha256::digest(&bytes[..body_end]);
-        if digest.as_slice() != &bytes[body_end..] {
-            return Err(WireError::BadDigest);
-        }
-        // Bulk, exactly-sized decode: each section is one slice copy on
-        // LE targets (byte-wise fallback elsewhere) — this runs once per
-        // peer per validator per round on the fast-eval path.
+        Ok(Frame { uid, round, coeff_count: c, probe_count: p, body_end: expected - 32 })
+    }
+
+    /// Recompute the body digest and compare against the trailer.
+    fn digest_ok(&self, bytes: &[u8]) -> bool {
+        Sha256::digest(&bytes[..self.body_end]).as_slice() == &bytes[self.body_end..]
+    }
+
+    /// Copy out the numeric sections (assumes `parse` validated lengths).
+    /// Bulk, exactly-sized decode: each section is one slice copy on LE
+    /// targets (byte-wise fallback elsewhere) — this runs once per peer
+    /// per validator per round on the fast-eval path.
+    fn decode_sections(&self, bytes: &[u8]) -> Submission {
+        let (c, p) = (self.coeff_count, self.probe_count);
         let mut off = HEADER;
         let vals = crate::util::f32_from_le_bytes(&bytes[off..off + 4 * c]);
         off += 4 * c;
         let idx = crate::util::i32_from_le_bytes(&bytes[off..off + 4 * c]);
         off += 4 * c;
         let probe = crate::util::f32_from_le_bytes(&bytes[off..off + 4 * p]);
-        Ok(Submission { uid, round, grad: SparseGrad { vals, idx }, probe })
-    }
-
-    /// The object key a submission is stored under in its peer's bucket.
-    pub fn object_key(uid: u32, round: u64) -> String {
-        let mut out = String::with_capacity(32);
-        Self::write_object_key(&mut out, uid, round);
-        out
-    }
-
-    /// Append the object key to a reusable buffer — the allocation-free
-    /// form of [`Submission::object_key`] for the validator's fast-eval
-    /// sweep, which derives one key per peer per round.
-    pub fn write_object_key(out: &mut String, uid: u32, round: u64) {
-        use std::fmt::Write as _;
-        let _ = write!(out, "grad/round-{round:08}/uid-{uid}");
+        Submission {
+            uid: self.uid,
+            round: self.round,
+            grad: SparseGrad { vals, idx },
+            probe,
+        }
     }
 }
 
@@ -189,6 +248,33 @@ mod tests {
         // inflate coeff_count field
         b[20..24].copy_from_slice(&1000u32.to_le_bytes());
         assert!(matches!(Submission::decode(&b), Err(WireError::LengthMismatch { .. })));
+    }
+
+    #[test]
+    fn decode_object_matches_decode_and_memoizes_the_digest() {
+        use crate::storage::Object;
+        let s = sub();
+        let obj = Object::new("k".into(), s.encode(), 0);
+        // First decode pays the hash; the second serves from the memo —
+        // both must agree with the plain byte decode.
+        assert_eq!(Submission::decode_object(&obj).unwrap(), s);
+        assert_eq!(Submission::decode_object(&obj).unwrap(), s);
+        assert_eq!(Submission::decode(&obj.bytes).unwrap(), s);
+    }
+
+    #[test]
+    fn decode_object_rejects_corruption_and_structural_errors() {
+        use crate::storage::Object;
+        let mut b = sub().encode();
+        let mid = b.len() / 2;
+        b[mid] ^= 0x40;
+        let corrupt = Object::new("k".into(), b, 0);
+        assert_eq!(Submission::decode_object(&corrupt), Err(WireError::BadDigest));
+        // The memo caches the *verdict*, not a success: still rejected.
+        assert_eq!(Submission::decode_object(&corrupt), Err(WireError::BadDigest));
+
+        let truncated = Object::new("k".into(), vec![1, 2, 3], 0);
+        assert!(matches!(Submission::decode_object(&truncated), Err(WireError::Truncated(3))));
     }
 
     #[test]

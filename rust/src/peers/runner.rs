@@ -339,9 +339,17 @@ impl PeerRunner {
         }
         self.last_local_loss = loss_sum / n_mb as f64;
 
-        let (mut vals, idx, e2) =
-            ctx.exec.demo_compress(&self.error, &self.grad_accum, ctx.params.demo_decay)?;
-        self.error = e2;
+        // In-place compression: the error-feedback buffer is folded and
+        // re-ranked where it lives — the last theta-sized allocation on
+        // the honest step path.
+        let (mut vals, mut idx) = (Vec::new(), Vec::new());
+        ctx.exec.demo_compress_into(
+            &mut self.error,
+            &self.grad_accum,
+            ctx.params.demo_decay,
+            &mut vals,
+            &mut idx,
+        )?;
         if grad_scale != 1.0 {
             for v in &mut vals {
                 *v *= grad_scale;
@@ -381,9 +389,14 @@ impl PeerRunner {
         let loss = ctx.exec.grad_into(theta, &toks, &mut self.grad_scratch)?;
         self.last_local_loss = loss as f64;
         self.last_microbatches = 1;
-        let (vals, idx, e2) =
-            ctx.exec.demo_compress(&self.error, &self.grad_scratch, ctx.params.demo_decay)?;
-        self.error = e2;
+        let (mut vals, mut idx) = (Vec::new(), Vec::new());
+        ctx.exec.demo_compress_into(
+            &mut self.error,
+            &self.grad_scratch,
+            ctx.params.demo_decay,
+            &mut vals,
+            &mut idx,
+        )?;
         let sub = Submission {
             uid: self.uid,
             round: ctx.round,
@@ -424,9 +437,14 @@ impl PeerRunner {
         let loss = ctx.exec.grad_into(theta, &toks, &mut self.grad_scratch)?;
         self.last_local_loss = loss as f64;
         self.last_microbatches = 1;
-        let (mut vals, idx, e2) =
-            ctx.exec.demo_compress(&self.error, &self.grad_scratch, ctx.params.demo_decay)?;
-        self.error = e2;
+        let (mut vals, mut idx) = (Vec::new(), Vec::new());
+        ctx.exec.demo_compress_into(
+            &mut self.error,
+            &self.grad_scratch,
+            ctx.params.demo_decay,
+            &mut vals,
+            &mut idx,
+        )?;
         // Per-member perturbation (the member's own RNG) to dodge
         // bit-identical duplicate checks.
         for v in &mut vals {

@@ -39,7 +39,17 @@ use anyhow::{bail, Context, Result};
 pub use meta::{ModelMeta, ParamSpec};
 pub use pool::WorkerPool;
 pub use service::{exec_service, ExecClient, ExecHost};
-pub use sim::{SimExec, SimSpec};
+pub use sim::{SimExec, SimSpec, LANES};
+
+/// One case of a batched [`ExecBackend::eval_peer_batch`] sweep: a dense
+/// coefficient vector plus the two token batches it is scored on (the
+/// peer's assigned shard and the validator's random-eval shard).
+#[derive(Clone, Copy)]
+pub struct EvalPeerCase<'a> {
+    pub coeff: &'a [f32],
+    pub tok_assigned: &'a [i32],
+    pub tok_rand: &'a [i32],
+}
 
 /// The model-execution ABI every backend provides: exactly the typed entry
 /// points the AOT artifacts export (`meta.json` `artifacts` list), plus the
@@ -142,6 +152,72 @@ pub trait ExecBackend {
         let stepped = self.apply_update(theta, coeff, step)?;
         let after = self.loss(&stepped, tokens)?;
         Ok((before, after))
+    }
+
+    /// `demo_compress` into caller-owned buffers: folds `grad` into the
+    /// error-feedback buffer **in place** (`e <- decay*e + g` minus the
+    /// extracted coefficients) and writes the top-k values and indices
+    /// into `vals_out`/`idx_out` (both cleared first). Finishes the
+    /// allocation purge on the peer step path: the theta-sized residual
+    /// stops being reallocated per peer per round.
+    fn demo_compress_into(
+        &self,
+        error: &mut [f32],
+        grad: &[f32],
+        decay: f32,
+        vals_out: &mut Vec<f32>,
+        idx_out: &mut Vec<i32>,
+    ) -> Result<()> {
+        let (vals, idx, e2) = self.demo_compress(error, grad, decay)?;
+        error.copy_from_slice(&e2);
+        *vals_out = vals;
+        *idx_out = idx;
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // batched kernels
+    //
+    // A validator scores many candidates against the same theta every
+    // round; calling the single-candidate kernels in a loop re-derives
+    // the token direction and re-walks theta once per candidate. These
+    // batched entry points let a backend amortize that: the defaults
+    // fall back to per-candidate calls (so `Executor` and other thin
+    // backends keep working unchanged), `SimExec` implements them
+    // natively (one direction derivation + one theta pass per sweep),
+    // and `ExecClient` forwards a whole batch as a single funnel
+    // round-trip. Overrides must stay **bit-identical** to the
+    // per-call defaults — `tests/kernel_equivalence.rs` pins this.
+    // ------------------------------------------------------------------
+
+    /// [`ExecBackend::loss_delta`] for many `(coeff, step)` candidates
+    /// on one token batch. Returns one `(before, after)` pair per
+    /// candidate, in input order; the `before` loss is shared.
+    fn loss_delta_batch(
+        &self,
+        theta: &[f32],
+        candidates: &[(&[f32], f32)],
+        tokens: &[i32],
+    ) -> Result<Vec<(f32, f32)>> {
+        candidates
+            .iter()
+            .map(|&(coeff, step)| self.loss_delta(theta, coeff, step, tokens))
+            .collect()
+    }
+
+    /// [`ExecBackend::eval_peer`] for many cases, each with its own
+    /// token pair — the multi-token-set variant that serves a
+    /// validator's whole sampled peer sweep. Results in case order.
+    fn eval_peer_batch(
+        &self,
+        theta: &[f32],
+        beta: f32,
+        cases: &[EvalPeerCase<'_>],
+    ) -> Result<Vec<(f32, f32, f32, f32)>> {
+        cases
+            .iter()
+            .map(|c| self.eval_peer(theta, c.coeff, beta, c.tok_assigned, c.tok_rand))
+            .collect()
     }
 
     /// A `Sync` view of this backend, if its entry points may be called

@@ -32,7 +32,7 @@ use std::sync::mpsc::{channel, Receiver, Sender};
 
 use anyhow::{anyhow, Result};
 
-use super::{ExecBackend, ModelMeta};
+use super::{EvalPeerCase, ExecBackend, ModelMeta};
 
 /// A boxed request: runs against the backend on the owner thread.
 type Job<E> = Box<dyn FnOnce(&E) + Send>;
@@ -158,6 +158,79 @@ impl<E: ExecBackend + 'static> ExecBackend for ExecClient<E> {
         let tokens = tokens.to_vec();
         self.call(move |e| e.adamw_step(&theta, &m, &v, &tokens, lr, t))
     }
+
+    // The trait defaults for the kernels below would decompose into
+    // several base calls — several funnel round-trips each. Forwarding
+    // them whole keeps one validator sweep (or one fused delta) at one
+    // request, and lets the owner-side backend use its native batched
+    // implementations.
+
+    fn loss_delta(
+        &self,
+        theta: &[f32],
+        coeff: &[f32],
+        step: f32,
+        tokens: &[i32],
+    ) -> Result<(f32, f32)> {
+        let (theta, coeff, tokens) = (theta.to_vec(), coeff.to_vec(), tokens.to_vec());
+        self.call(move |e| e.loss_delta(&theta, &coeff, step, &tokens))
+    }
+
+    fn loss_delta_batch(
+        &self,
+        theta: &[f32],
+        candidates: &[(&[f32], f32)],
+        tokens: &[i32],
+    ) -> Result<Vec<(f32, f32)>> {
+        let (theta, tokens) = (theta.to_vec(), tokens.to_vec());
+        let owned: Vec<(Vec<f32>, f32)> =
+            candidates.iter().map(|&(c, s)| (c.to_vec(), s)).collect();
+        self.call(move |e| {
+            let views: Vec<(&[f32], f32)> =
+                owned.iter().map(|(c, s)| (c.as_slice(), *s)).collect();
+            e.loss_delta_batch(&theta, &views, &tokens)
+        })
+    }
+
+    fn eval_peer_batch(
+        &self,
+        theta: &[f32],
+        beta: f32,
+        cases: &[EvalPeerCase<'_>],
+    ) -> Result<Vec<(f32, f32, f32, f32)>> {
+        let theta = theta.to_vec();
+        let owned: Vec<(Vec<f32>, Vec<i32>, Vec<i32>)> = cases
+            .iter()
+            .map(|c| (c.coeff.to_vec(), c.tok_assigned.to_vec(), c.tok_rand.to_vec()))
+            .collect();
+        self.call(move |e| {
+            let views: Vec<EvalPeerCase<'_>> = owned
+                .iter()
+                .map(|(coeff, tok_assigned, tok_rand)| EvalPeerCase {
+                    coeff,
+                    tok_assigned,
+                    tok_rand,
+                })
+                .collect();
+            e.eval_peer_batch(&theta, beta, &views)
+        })
+    }
+
+    fn demo_compress_into(
+        &self,
+        error: &mut [f32],
+        grad: &[f32],
+        decay: f32,
+        vals_out: &mut Vec<f32>,
+        idx_out: &mut Vec<i32>,
+    ) -> Result<()> {
+        let (e0, g) = (error.to_vec(), grad.to_vec());
+        let (vals, idx, e2) = self.call(move |e| e.demo_compress(&e0, &g, decay))?;
+        error.copy_from_slice(&e2);
+        *vals_out = vals;
+        *idx_out = idx;
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -187,6 +260,36 @@ mod tests {
         });
         for l in losses {
             assert_eq!(l.to_bits(), direct.to_bits(), "funnel must be bit-transparent");
+        }
+    }
+
+    #[test]
+    fn batched_kernels_cross_the_funnel_bit_transparently() {
+        let sim = SimExec::new(&SimSpec::nano(), 5);
+        let theta = ExecBackend::init_params(&sim).unwrap();
+        let n_tok = sim.meta().batch * (sim.meta().seq + 1);
+        let toks: Vec<i32> = (0..n_tok as i32).collect();
+        let mut coeff = vec![0.0f32; sim.meta().padded_count];
+        for (i, c) in coeff.iter_mut().enumerate() {
+            *c = if i % 3 == 0 { 1.0 } else { -1.0 };
+        }
+        let cands: Vec<(&[f32], f32)> = vec![(&coeff, 0.01), (&coeff, 0.02)];
+        let direct = sim.loss_delta_batch(&theta, &cands, &toks).unwrap();
+
+        let (client, host) = exec_service(&sim);
+        let via_funnel = std::thread::scope(|s| {
+            let c = client.clone();
+            let (theta, coeff, toks) = (&theta, &coeff, &toks);
+            let h = s.spawn(move || {
+                let cands: Vec<(&[f32], f32)> = vec![(coeff, 0.01), (coeff, 0.02)];
+                c.loss_delta_batch(theta, &cands, toks).unwrap()
+            });
+            drop(client);
+            host.serve();
+            h.join().unwrap()
+        });
+        for (a, b) in direct.iter().zip(&via_funnel) {
+            assert_eq!((a.0.to_bits(), a.1.to_bits()), (b.0.to_bits(), b.1.to_bits()));
         }
     }
 

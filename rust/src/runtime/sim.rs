@@ -25,6 +25,18 @@
 //! results are bit-identical regardless of call order or thread count —
 //! the property the parallel-pipeline determinism tests pin down.
 //!
+//! **Fixed-lane summation contract.** Every quadratic reduction in this
+//! file accumulates into [`LANES`] parallel f64 lanes — index `i`
+//! always lands in lane `i % LANES`, in increasing `i` order — and the
+//! lanes collapse through the fixed pairwise tree in [`lane_reduce`].
+//! The summation order is therefore a pure function of index: identical
+//! across thread counts, platforms, and between the single-call and
+//! batched kernels (which is what lets `loss_delta_batch` share one
+//! theta pass across a whole peer sweep while staying bit-identical to
+//! per-call `loss_delta`). The chunked inner loops are written so LLVM
+//! autovectorizes them; the lane count is part of the numeric contract,
+//! so changing `LANES` is a re-baselining event for run fingerprints.
+//!
 //! The "DCT" is the identity chunking: coefficient `i` is parameter `i`
 //! (indices past `param_count` are padding). That keeps compression,
 //! scatter, and signed updates consistent with the validator's native-Rust
@@ -36,7 +48,7 @@ use anyhow::{bail, Result};
 use sha2::{Digest, Sha256};
 
 use super::meta::{Hyper, ModelMeta, ParamSpec};
-use super::ExecBackend;
+use super::{EvalPeerCase, ExecBackend};
 use crate::util::Rng;
 
 thread_local! {
@@ -47,6 +59,25 @@ thread_local! {
     /// workers are persistent (`runtime::pool`), so one buffer per
     /// worker thread lives for the whole run.
     static DIRECTION_SCRATCH: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
+
+    /// Per-worker scratch for batched eval: all of a sweep's token
+    /// directions, concatenated (`2 * cases * param_count` floats for
+    /// `eval_peer_batch`). Separate from `DIRECTION_SCRATCH` so batched
+    /// kernels never contend with a single-direction caller's borrow.
+    static BATCH_DIRECTION_SCRATCH: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Accumulator width of the fixed-lane reductions (see module docs).
+/// Eight f64 lanes span one AVX-512 register / two AVX2 registers; the
+/// value is part of the determinism contract, not just a tuning knob.
+pub const LANES: usize = 8;
+
+/// Collapse a lane accumulator through a fixed pairwise tree. Keeping
+/// the tree shape constant (rather than a left fold) is what makes the
+/// total independent of how the compiler schedules the adds.
+#[inline(always)]
+fn lane_reduce(acc: [f64; LANES]) -> f64 {
+    ((acc[0] + acc[1]) + (acc[2] + acc[3])) + ((acc[4] + acc[5]) + (acc[6] + acc[7]))
 }
 
 /// Shape of a synthetic model config (everything `ModelMeta` derives from).
@@ -215,6 +246,13 @@ impl SimExec {
     /// of the tokens (and the run seed, so different runs see different
     /// data geometry), written into a reusable buffer (cleared first).
     fn token_direction_into(&self, tokens: &[i32], out: &mut Vec<f32>) {
+        out.clear();
+        self.token_direction_extend(tokens, out);
+    }
+
+    /// `token_direction_into` that *appends* — the batched kernels pack
+    /// many directions into one flat scratch matrix with this.
+    fn token_direction_extend(&self, tokens: &[i32], out: &mut Vec<f32>) {
         let mut h = Sha256::new();
         h.update(self.seed.to_le_bytes());
         for t in tokens {
@@ -222,7 +260,6 @@ impl SimExec {
         }
         let digest = h.finalize();
         let mut rng = Rng::new(u64::from_le_bytes(digest[..8].try_into().unwrap()));
-        out.clear();
         out.reserve(self.meta.param_count);
         out.extend((0..self.meta.param_count).map(|_| rng.normal_f32(0.0, 1.0)));
     }
@@ -238,28 +275,97 @@ impl SimExec {
         })
     }
 
-    /// `L(theta, T)` for one direction `u_T` (see module docs).
+    /// `L(theta, T)` for one direction `u_T` (see module docs). Fixed-lane
+    /// reduction: index `k` accumulates into lane `k % LANES`, collapsed
+    /// by `lane_reduce` — every other quadratic sum in this file follows
+    /// the same scheme so all paths agree bitwise.
     fn loss_for_direction(&self, theta: &[f32], u: &[f32]) -> f64 {
-        let n = theta.len() as f64;
-        let mut q = 0.0f64;
-        for i in 0..theta.len() {
-            let x = theta[i] as f64 - self.theta_star[i] as f64 - self.delta * u[i] as f64;
-            q += x * x;
+        let len = theta.len();
+        let n = len as f64;
+        let term = |k: usize| {
+            let x = theta[k] as f64 - self.theta_star[k] as f64 - self.delta * u[k] as f64;
+            x * x
+        };
+        let mut acc = [0.0f64; LANES];
+        let mut i = 0;
+        while i + LANES <= len {
+            for j in 0..LANES {
+                acc[j] += term(i + j);
+            }
+            i += LANES;
         }
-        self.floor + self.qscale * q / n
+        for j in 0..len - i {
+            acc[j] += term(i + j);
+        }
+        self.floor + self.qscale * lane_reduce(acc) / n
     }
 
     /// One signed evaluation step `theta - step * sign(coeff)` in place,
-    /// restricted to real (non-padding) coefficients.
+    /// restricted to real (non-padding) coefficients. Branchless select
+    /// form (autovectorizes to a masked subtract); subtracting a `0.0`
+    /// step is bit-identical to not touching the value, signed zeros
+    /// included, so this matches the old branchy loop exactly.
     fn signed_step_in_place(theta: &mut [f32], coeff: &[f32], step: f32) {
-        for (i, t) in theta.iter_mut().enumerate() {
-            let c = coeff[i];
-            if c > 0.0 {
-                *t -= step;
+        for (t, &c) in theta.iter_mut().zip(coeff) {
+            let d = if c > 0.0 {
+                step
             } else if c < 0.0 {
-                *t += step;
-            }
+                -step
+            } else {
+                0.0
+            };
+            *t -= d;
         }
+    }
+
+    /// The evaluation-stepped parameter `loss_delta` scores: the same
+    /// single f32 subtract `signed_step_in_place` performs.
+    #[inline(always)]
+    fn stepped_at(theta: &[f32], coeff: &[f32], step: f32, k: usize) -> f32 {
+        let c = coeff[k];
+        let d = if c > 0.0 {
+            step
+        } else if c < 0.0 {
+            -step
+        } else {
+            0.0
+        };
+        theta[k] - d
+    }
+
+    /// The pre-lane scalar `loss_delta`: one sequential f64 accumulator
+    /// per loss, same math in index order. No production path calls this
+    /// — it exists so `bench::suite` can report the lane kernels' speedup
+    /// against the old scalar shape on the same machine, and so tests can
+    /// bound the lane scheme's reassociation error.
+    pub fn loss_delta_scalar_ref(
+        &self,
+        theta: &[f32],
+        coeff: &[f32],
+        step: f32,
+        tokens: &[i32],
+    ) -> Result<(f32, f32)> {
+        self.check_theta(theta)?;
+        if coeff.len() != self.meta.padded_count {
+            bail!("coeff has {} values, expected {}", coeff.len(), self.meta.padded_count);
+        }
+        self.check_tokens(tokens)?;
+        self.with_token_direction(tokens, |u| {
+            let n = theta.len() as f64;
+            let (mut q0, mut q1) = (0.0f64, 0.0f64);
+            for k in 0..theta.len() {
+                let stepped = Self::stepped_at(theta, coeff, step, k);
+                let du = self.delta * u[k] as f64;
+                let x0 = theta[k] as f64 - self.theta_star[k] as f64 - du;
+                let x1 = stepped as f64 - self.theta_star[k] as f64 - du;
+                q0 += x0 * x0;
+                q1 += x1 * x1;
+            }
+            Ok((
+                (self.floor + self.qscale * q0 / n) as f32,
+                (self.floor + self.qscale * q1 / n) as f32,
+            ))
+        })
     }
 }
 
@@ -302,19 +408,33 @@ impl ExecBackend for SimExec {
         self.check_theta(theta)?;
         self.check_tokens(tokens)?;
         self.with_token_direction(tokens, |u| {
-            let n = theta.len() as f64;
+            let len = theta.len();
+            let n = len as f64;
             grad_out.clear();
-            grad_out.reserve(theta.len());
+            grad_out.resize(len, 0.0);
+            let g = grad_out.as_mut_slice();
             // Fused loss: `x` here is exactly the term `loss_for_direction`
-            // sums, in the same index order, so accumulating it alongside
-            // the gradient is bit-identical to a separate loss pass.
-            let mut q = 0.0f64;
-            for i in 0..theta.len() {
-                let x = theta[i] as f64 - self.theta_star[i] as f64 - self.delta * u[i] as f64;
-                grad_out.push((2.0 * self.qscale * x / n) as f32);
-                q += x * x;
+            // sums, with the same lane-per-index accumulation, so fusing
+            // the gradient write is bit-identical to a separate loss pass.
+            let mut acc = [0.0f64; LANES];
+            let mut i = 0;
+            while i + LANES <= len {
+                for j in 0..LANES {
+                    let k = i + j;
+                    let x =
+                        theta[k] as f64 - self.theta_star[k] as f64 - self.delta * u[k] as f64;
+                    g[k] = (2.0 * self.qscale * x / n) as f32;
+                    acc[j] += x * x;
+                }
+                i += LANES;
             }
-            Ok((self.floor + self.qscale * q / n) as f32)
+            for j in 0..len - i {
+                let k = i + j;
+                let x = theta[k] as f64 - self.theta_star[k] as f64 - self.delta * u[k] as f64;
+                g[k] = (2.0 * self.qscale * x / n) as f32;
+                acc[j] += x * x;
+            }
+            Ok((self.floor + self.qscale * lane_reduce(acc) / n) as f32)
         })
     }
 
@@ -324,48 +444,69 @@ impl ExecBackend for SimExec {
         grad: &[f32],
         decay: f32,
     ) -> Result<(Vec<f32>, Vec<i32>, Vec<f32>)> {
+        let mut residual = error.to_vec();
+        let mut vals = Vec::new();
+        let mut idx = Vec::new();
+        self.demo_compress_into(&mut residual, grad, decay, &mut vals, &mut idx)?;
+        Ok((vals, idx, residual))
+    }
+
+    fn demo_compress_into(
+        &self,
+        error: &mut [f32],
+        grad: &[f32],
+        decay: f32,
+        vals_out: &mut Vec<f32>,
+        idx_out: &mut Vec<i32>,
+    ) -> Result<()> {
         self.check_theta(error)?;
         self.check_theta(grad)?;
         let m = self.meta.chunk * self.meta.chunk;
-        // Error feedback: e <- decay * e + g. One buffer serves as both
-        // the ranking source and the returned residual: a chunk is ranked
-        // strictly before any of its entries are zeroed (and chunks cover
-        // disjoint index ranges), so the values read are exactly the
-        // pre-zeroing `e` values the old two-buffer version ranked.
-        let mut residual: Vec<f32> =
-            error.iter().zip(grad).map(|(ei, gi)| decay * ei + gi).collect();
-        let mut vals = Vec::with_capacity(self.meta.coeff_count);
-        let mut idx = Vec::with_capacity(self.meta.coeff_count);
+        // Error feedback: e <- decay * e + g, in place. One buffer serves
+        // as both the ranking source and the residual left behind: a
+        // chunk is ranked strictly before any of its entries are zeroed
+        // (and chunks cover disjoint index ranges), so the values read
+        // are exactly the post-feedback, pre-zeroing `e` values the old
+        // two-buffer version ranked.
+        for (e, &g) in error.iter_mut().zip(grad) {
+            *e = decay * *e + g;
+        }
+        vals_out.clear();
+        idx_out.clear();
+        vals_out.reserve(self.meta.coeff_count);
+        idx_out.reserve(self.meta.coeff_count);
+        let mut order: Vec<usize> = Vec::with_capacity(m);
         for chunk_id in 0..self.meta.n_chunks {
             let lo = chunk_id * m;
             let hi = ((chunk_id + 1) * m).min(self.meta.param_count);
             // Rank this chunk's (identity-transformed) coefficients by
             // magnitude; padding positions are zeros and rank last.
-            let mut order: Vec<usize> = (lo..hi.max(lo)).collect();
+            order.clear();
+            order.extend(lo..hi.max(lo));
             order.sort_by(|&a, &b| {
-                residual[b]
+                error[b]
                     .abs()
-                    .partial_cmp(&residual[a].abs())
+                    .partial_cmp(&error[a].abs())
                     .unwrap_or(std::cmp::Ordering::Equal)
                     .then(a.cmp(&b))
             });
             for k in 0..self.meta.topk {
                 match order.get(k) {
                     Some(&i) => {
-                        vals.push(residual[i]);
-                        idx.push(i as i32);
-                        residual[i] = 0.0;
+                        vals_out.push(error[i]);
+                        idx_out.push(i as i32);
+                        error[i] = 0.0;
                     }
                     None => {
                         // Chunk entirely past param_count: emit padding
                         // coefficients so the wire shape stays fixed.
-                        vals.push(0.0);
-                        idx.push((lo + k) as i32);
+                        vals_out.push(0.0);
+                        idx_out.push((lo + k) as i32);
                     }
                 }
             }
         }
-        Ok((vals, idx, residual))
+        Ok(())
     }
 
     fn apply_update(&self, theta: &[f32], coeff: &[f32], lr: f32) -> Result<Vec<f32>> {
@@ -408,28 +549,36 @@ impl ExecBackend for SimExec {
         // the stepped value is computed with the same single f32 subtract
         // `signed_step_in_place` performs, and each quadratic term keeps
         // `loss_for_direction`'s exact `(theta - theta*) - delta*u`
-        // association and index-order summation.
+        // association and lane-per-index summation.
         self.with_token_direction(tokens, |u| {
-            let n = theta.len() as f64;
-            let (mut q0, mut q1) = (0.0f64, 0.0f64);
-            for i in 0..theta.len() {
-                let c = coeff[i];
-                let stepped = if c > 0.0 {
-                    theta[i] - step
-                } else if c < 0.0 {
-                    theta[i] + step
-                } else {
-                    theta[i]
-                };
-                let du = self.delta * u[i] as f64;
-                let x0 = theta[i] as f64 - self.theta_star[i] as f64 - du;
-                let x1 = stepped as f64 - self.theta_star[i] as f64 - du;
-                q0 += x0 * x0;
-                q1 += x1 * x1;
+            let len = theta.len();
+            let n = len as f64;
+            let term = |k: usize| {
+                let stepped = Self::stepped_at(theta, coeff, step, k);
+                let du = self.delta * u[k] as f64;
+                let x0 = theta[k] as f64 - self.theta_star[k] as f64 - du;
+                let x1 = stepped as f64 - self.theta_star[k] as f64 - du;
+                (x0 * x0, x1 * x1)
+            };
+            let mut a0 = [0.0f64; LANES];
+            let mut a1 = [0.0f64; LANES];
+            let mut i = 0;
+            while i + LANES <= len {
+                for j in 0..LANES {
+                    let (t0, t1) = term(i + j);
+                    a0[j] += t0;
+                    a1[j] += t1;
+                }
+                i += LANES;
+            }
+            for j in 0..len - i {
+                let (t0, t1) = term(i + j);
+                a0[j] += t0;
+                a1[j] += t1;
             }
             Ok((
-                (self.floor + self.qscale * q0 / n) as f32,
-                (self.floor + self.qscale * q1 / n) as f32,
+                (self.floor + self.qscale * lane_reduce(a0) / n) as f32,
+                (self.floor + self.qscale * lane_reduce(a1) / n) as f32,
             ))
         })
     }
@@ -445,6 +594,127 @@ impl ExecBackend for SimExec {
         let (la0, la1) = self.loss_delta(theta, coeff, beta, tok_assigned)?;
         let (lr0, lr1) = self.loss_delta(theta, coeff, beta, tok_rand)?;
         Ok((la0, la1, lr0, lr1))
+    }
+
+    fn loss_delta_batch(
+        &self,
+        theta: &[f32],
+        candidates: &[(&[f32], f32)],
+        tokens: &[i32],
+    ) -> Result<Vec<(f32, f32)>> {
+        self.check_theta(theta)?;
+        for (coeff, _) in candidates {
+            if coeff.len() != self.meta.padded_count {
+                bail!("coeff has {} values, expected {}", coeff.len(), self.meta.padded_count);
+            }
+        }
+        self.check_tokens(tokens)?;
+        // One direction derivation + one theta pass serve every candidate.
+        // Bit-identity with per-call `loss_delta`: each candidate's `a1`
+        // lanes receive exactly its own terms, in index order, through
+        // the same expressions — the i-outer / candidate-inner loop never
+        // mixes accumulators across candidates.
+        self.with_token_direction(tokens, |u| {
+            let len = theta.len();
+            let n = len as f64;
+            let mut a0 = [0.0f64; LANES];
+            let mut a1: Vec<[f64; LANES]> = vec![[0.0f64; LANES]; candidates.len()];
+            let mut i = 0;
+            while i < len {
+                let width = LANES.min(len - i);
+                for j in 0..width {
+                    let k = i + j;
+                    let du = self.delta * u[k] as f64;
+                    let x0 = theta[k] as f64 - self.theta_star[k] as f64 - du;
+                    a0[j] += x0 * x0;
+                    for (ci, &(coeff, step)) in candidates.iter().enumerate() {
+                        let stepped = Self::stepped_at(theta, coeff, step, k);
+                        let x1 = stepped as f64 - self.theta_star[k] as f64 - du;
+                        a1[ci][j] += x1 * x1;
+                    }
+                }
+                i += width;
+            }
+            let before = (self.floor + self.qscale * lane_reduce(a0) / n) as f32;
+            Ok(a1
+                .into_iter()
+                .map(|acc| (before, (self.floor + self.qscale * lane_reduce(acc) / n) as f32))
+                .collect())
+        })
+    }
+
+    fn eval_peer_batch(
+        &self,
+        theta: &[f32],
+        beta: f32,
+        cases: &[EvalPeerCase<'_>],
+    ) -> Result<Vec<(f32, f32, f32, f32)>> {
+        self.check_theta(theta)?;
+        for case in cases {
+            if case.coeff.len() != self.meta.padded_count {
+                bail!(
+                    "coeff has {} values, expected {}",
+                    case.coeff.len(),
+                    self.meta.padded_count
+                );
+            }
+            self.check_tokens(case.tok_assigned)?;
+            self.check_tokens(case.tok_rand)?;
+        }
+        if cases.is_empty() {
+            return Ok(Vec::new());
+        }
+        // Materialize all 2C directions once (the SHA-256 + normal-stream
+        // derivation is itself a hot cost at validator fan-outs), then run
+        // one fused theta pass for the whole sweep. Accumulator layout:
+        // [assigned-before, assigned-after, rand-before, rand-after] lane
+        // arrays per case, each receiving only its own terms in index
+        // order — bit-identical to per-call `eval_peer`.
+        BATCH_DIRECTION_SCRATCH.with(|cell| {
+            let mut dirs = cell.borrow_mut();
+            dirs.clear();
+            dirs.reserve(2 * cases.len() * self.meta.param_count);
+            for case in cases {
+                self.token_direction_extend(case.tok_assigned, &mut dirs);
+                self.token_direction_extend(case.tok_rand, &mut dirs);
+            }
+            let p = self.meta.param_count;
+            let len = theta.len();
+            let n = len as f64;
+            let mut acc: Vec<[[f64; LANES]; 4]> = vec![[[0.0f64; LANES]; 4]; cases.len()];
+            let mut i = 0;
+            while i < len {
+                let width = LANES.min(len - i);
+                for j in 0..width {
+                    let k = i + j;
+                    let base = theta[k] as f64 - self.theta_star[k] as f64;
+                    for (ci, case) in cases.iter().enumerate() {
+                        let stepped =
+                            Self::stepped_at(theta, case.coeff, beta, k) as f64
+                                - self.theta_star[k] as f64;
+                        let dua = self.delta * dirs[2 * ci * p + k] as f64;
+                        let x0 = base - dua;
+                        let x1 = stepped - dua;
+                        let dur = self.delta * dirs[(2 * ci + 1) * p + k] as f64;
+                        let y0 = base - dur;
+                        let y1 = stepped - dur;
+                        let a = &mut acc[ci];
+                        a[0][j] += x0 * x0;
+                        a[1][j] += x1 * x1;
+                        a[2][j] += y0 * y0;
+                        a[3][j] += y1 * y1;
+                    }
+                }
+                i += width;
+            }
+            Ok(acc
+                .into_iter()
+                .map(|a| {
+                    let l = |lanes| (self.floor + self.qscale * lane_reduce(lanes) / n) as f32;
+                    (l(a[0]), l(a[1]), l(a[2]), l(a[3]))
+                })
+                .collect())
+        })
     }
 
     fn as_shared(&self) -> Option<&(dyn ExecBackend + Sync)> {
@@ -614,5 +884,100 @@ mod tests {
         assert!(e.loss(&theta[1..], &tokens(&e, 0)).is_err());
         assert!(e.loss(&theta, &[1, 2, 3]).is_err());
         assert!(e.apply_update(&theta, &[0.0; 3], 0.1).is_err());
+    }
+
+    /// A spec with an arbitrary `param_count`, so the lane kernels can be
+    /// pinned at every remainder `param_count % LANES`.
+    fn spec_with(param_count: usize) -> SimSpec {
+        SimSpec {
+            name: format!("lane-{param_count}"),
+            chunk: 8,
+            n_chunks: param_count.div_ceil(64).max(1),
+            topk: 4,
+            param_count,
+            ..SimSpec::nano()
+        }
+    }
+
+    /// Lengths covering every residue mod LANES, both below and above one
+    /// full lane block, plus the stock sizes.
+    fn lane_width_sweep() -> Vec<usize> {
+        let mut v: Vec<usize> = (1..=2 * LANES + 3).collect();
+        v.extend([31, 64, 65, 200, 333]);
+        v
+    }
+
+    #[test]
+    fn lane_sum_matches_index_mod_lane_specification() {
+        // The determinism contract in the module docs, executable: lane j
+        // accumulates exactly the terms of indices i with i % LANES == j,
+        // in increasing i, collapsed by the fixed pairwise tree. The
+        // chunked kernel loops must be bit-identical to this naive spec.
+        for len in lane_width_sweep() {
+            let e = SimExec::new(&spec_with(len), 11);
+            let theta = e.init_params().unwrap();
+            let toks = tokens(&e, len as i32);
+            let mut u = Vec::new();
+            e.token_direction_into(&toks, &mut u);
+
+            let mut acc = [0.0f64; LANES];
+            for i in 0..len {
+                let x = theta[i] as f64 - e.theta_star[i] as f64 - e.delta * u[i] as f64;
+                acc[i % LANES] += x * x;
+            }
+            let spec_loss = e.floor + e.qscale * lane_reduce(acc) / len as f64;
+
+            let kernel_loss = e.loss_for_direction(&theta, &u);
+            assert_eq!(kernel_loss.to_bits(), spec_loss.to_bits(), "len {len}");
+
+            // …and the plain sequential sum agrees to rounding error, so
+            // the lane scheme is a reassociation, not a different formula.
+            let mut q = 0.0f64;
+            for i in 0..len {
+                let x = theta[i] as f64 - e.theta_star[i] as f64 - e.delta * u[i] as f64;
+                q += x * x;
+            }
+            let seq_loss = e.floor + e.qscale * q / len as f64;
+            assert!(
+                (kernel_loss - seq_loss).abs() <= 1e-9 * seq_loss.abs().max(1.0),
+                "len {len}: lane {kernel_loss} vs sequential {seq_loss}"
+            );
+        }
+    }
+
+    #[test]
+    fn fused_kernels_agree_with_composed_calls_at_every_lane_width() {
+        // grad_into's fused loss == loss(); loss_delta == the allocating
+        // default composition (loss + apply_update + loss) — bitwise, at
+        // every remainder mod LANES.
+        for len in lane_width_sweep() {
+            let e = SimExec::new(&spec_with(len), 13);
+            let theta = e.init_params().unwrap();
+            let toks = tokens(&e, 7 * len as i32 + 1);
+            let padded = e.meta.padded_count;
+            let mut rng = Rng::new(len as u64);
+            let coeff: Vec<f32> = (0..padded)
+                .map(|_| match rng.below(3) {
+                    0 => 1.0,
+                    1 => -1.0,
+                    _ => 0.0,
+                })
+                .collect();
+            let step = 0.013f32;
+
+            let mut g = Vec::new();
+            let fused_loss = e.grad_into(&theta, &toks, &mut g).unwrap();
+            assert_eq!(
+                fused_loss.to_bits(),
+                e.loss(&theta, &toks).unwrap().to_bits(),
+                "len {len}: grad_into loss"
+            );
+
+            let (d0, d1) = e.loss_delta(&theta, &coeff, step, &toks).unwrap();
+            let stepped = e.apply_update(&theta, &coeff, step).unwrap();
+            let (c0, c1) =
+                (e.loss(&theta, &toks).unwrap(), e.loss(&stepped, &toks).unwrap());
+            assert_eq!((d0.to_bits(), d1.to_bits()), (c0.to_bits(), c1.to_bits()), "len {len}");
+        }
     }
 }

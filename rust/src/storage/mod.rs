@@ -32,7 +32,7 @@
 use std::collections::BTreeMap;
 use std::hash::{Hash, Hasher};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex, RwLock};
+use std::sync::{Arc, Mutex, OnceLock, RwLock};
 
 use crate::util::Rng;
 
@@ -43,12 +43,54 @@ pub type SimTime = u64;
 pub const SHARDS: usize = 16;
 
 /// A stored object with its server-assigned timestamp.
-#[derive(Clone, Debug, PartialEq)]
+///
+/// The store hands out `Arc<Object>` clones, so one stored submission is
+/// shared by every validator that reads it in a round. That sharing is
+/// what makes the integrity memo below worthwhile: the wire codec's
+/// SHA-256 digest check is a function of `bytes` alone, so the first
+/// reader's verdict can be cached on the object and served to every
+/// later reader (`OnceLock` — thread-safe, computed at most once).
+#[derive(Debug)]
 pub struct Object {
     pub key: String,
     pub bytes: Vec<u8>,
     /// Server-side receive time — what the validator trusts.
     pub stored_at: SimTime,
+    /// Memoized wire-integrity verdict (see [`Object::integrity_memo`]).
+    integrity: OnceLock<bool>,
+}
+
+impl Object {
+    pub fn new(key: String, bytes: Vec<u8>, stored_at: SimTime) -> Object {
+        Object { key, bytes, stored_at, integrity: OnceLock::new() }
+    }
+
+    /// Whether `bytes` passes the caller's integrity check, computing
+    /// `check` at most once for this object's lifetime. `check` must be
+    /// a pure function of `self.bytes` (the wire codec's digest check
+    /// is) — the verdict is shared across every holder of the `Arc`.
+    pub fn integrity_memo(&self, check: impl FnOnce(&[u8]) -> bool) -> bool {
+        *self.integrity.get_or_init(|| check(&self.bytes))
+    }
+}
+
+// Manual impls: the memo is a cache, not state — a clone may carry the
+// already-computed verdict, and equality ignores it entirely.
+impl Clone for Object {
+    fn clone(&self) -> Object {
+        Object {
+            key: self.key.clone(),
+            bytes: self.bytes.clone(),
+            stored_at: self.stored_at,
+            integrity: self.integrity.clone(),
+        }
+    }
+}
+
+impl PartialEq for Object {
+    fn eq(&self, other: &Object) -> bool {
+        self.key == other.key && self.bytes == other.bytes && self.stored_at == other.stored_at
+    }
 }
 
 /// Read credential a peer publishes on-chain (paper: read-access keys).
@@ -179,10 +221,7 @@ impl ObjectStore {
             return Err(StorageError::AccessDenied(bucket.to_string()));
         }
         let stored_at = now + latency;
-        b.objects.insert(
-            key.to_string(),
-            Arc::new(Object { key: key.to_string(), bytes, stored_at }),
-        );
+        b.objects.insert(key.to_string(), Arc::new(Object::new(key.to_string(), bytes, stored_at)));
         Ok(stored_at)
     }
 
@@ -488,6 +527,31 @@ mod tests {
         let ta = s.put("peer-0", "peer-0", "h", vec![2], 500).unwrap();
         let tb = rebuilt.put("peer-0", "peer-0", "h", vec![2], 500).unwrap();
         assert_eq!(ta, tb);
+    }
+
+    #[test]
+    fn integrity_memo_computes_once_and_is_shared_across_arc_holders() {
+        let s = store();
+        let rk = s.create_bucket("b", "b");
+        s.put("b", "b", "k", vec![9, 9, 9], 0).unwrap();
+        let a = s.get("b", &rk, "k").unwrap().unwrap();
+        let b = s.get("b", &rk, "k").unwrap().unwrap();
+        let calls = std::cell::Cell::new(0u32);
+        let verdict = a.integrity_memo(|bytes| {
+            calls.set(calls.get() + 1);
+            bytes == [9, 9, 9]
+        });
+        assert!(verdict);
+        // Second holder of the same Arc sees the memo; its closure never runs.
+        let again = b.integrity_memo(|_| {
+            calls.set(calls.get() + 100);
+            false
+        });
+        assert!(again, "memoized verdict wins over a later closure");
+        assert_eq!(calls.get(), 1, "check ran exactly once across both readers");
+        // Equality ignores the memo: a fresh equal object compares equal.
+        let fresh = Object::new("k".into(), vec![9, 9, 9], a.stored_at);
+        assert_eq!(*a, fresh);
     }
 
     #[test]

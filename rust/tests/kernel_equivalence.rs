@@ -1,0 +1,180 @@
+//! VectorLane equivalence pins: the batched kernels (`loss_delta_batch`,
+//! `eval_peer_batch`), the fused kernels (`loss_delta`, `grad_into`), and
+//! the scratch compressor (`demo_compress_into`) must all be
+//! **bit-identical** to their per-call / composed / allocating
+//! counterparts — at every parameter-count remainder mod the lane width,
+//! so neither the main lane loop nor the remainder tail can drift.
+//!
+//! These are the tests the `ExecBackend` doc contract points at: a
+//! backend overriding a batched default must keep these green.
+
+use gauntlet::runtime::{EvalPeerCase, ExecBackend, SimExec, SimSpec, LANES};
+
+/// A spec with an arbitrary `param_count`; `n_chunks` is sized so the
+/// padded coefficient space always covers it.
+fn spec_with(param_count: usize) -> SimSpec {
+    SimSpec {
+        name: format!("lane-{param_count}"),
+        chunk: 8,
+        n_chunks: param_count.div_ceil(64).max(1),
+        topk: 4,
+        param_count,
+        ..SimSpec::nano()
+    }
+}
+
+/// Parameter counts covering every residue mod LANES below and above one
+/// full lane block, plus a few larger sizes.
+fn lane_width_sweep() -> Vec<usize> {
+    let mut v: Vec<usize> = (1..=2 * LANES + 3).collect();
+    v.extend([31, 64, 65, 200, 333]);
+    v
+}
+
+fn tokens(exec: &SimExec, tag: i32) -> Vec<i32> {
+    let m = exec.meta();
+    let n = m.batch * (m.seq + 1);
+    (0..n as i32).map(|i| (i * 31 + tag) % m.vocab as i32).collect()
+}
+
+/// A deterministic ±1/0 coefficient pattern over the padded space.
+fn coeff_pattern(exec: &SimExec, phase: usize) -> Vec<f32> {
+    (0..exec.meta().padded_count)
+        .map(|i| match (i + phase) % 3 {
+            0 => 1.0,
+            1 => -1.0,
+            _ => 0.0,
+        })
+        .collect()
+}
+
+#[test]
+fn loss_delta_batch_is_bit_identical_to_per_call_loss_delta() {
+    for len in lane_width_sweep() {
+        let exec = SimExec::new(&spec_with(len), 21);
+        let theta = exec.init_params().unwrap();
+        let toks = tokens(&exec, len as i32);
+        let coeffs: Vec<Vec<f32>> = (0..5).map(|p| coeff_pattern(&exec, p)).collect();
+        let cands: Vec<(&[f32], f32)> = coeffs
+            .iter()
+            .enumerate()
+            .map(|(i, c)| (c.as_slice(), 0.01 + i as f32 * 1e-3))
+            .collect();
+
+        let batched = exec.loss_delta_batch(&theta, &cands, &toks).unwrap();
+        assert_eq!(batched.len(), cands.len());
+        for (i, &(coeff, step)) in cands.iter().enumerate() {
+            let single = exec.loss_delta(&theta, coeff, step, &toks).unwrap();
+            assert_eq!(
+                (batched[i].0.to_bits(), batched[i].1.to_bits()),
+                (single.0.to_bits(), single.1.to_bits()),
+                "len {len}, candidate {i}"
+            );
+        }
+    }
+}
+
+#[test]
+fn eval_peer_batch_is_bit_identical_to_per_call_eval_peer() {
+    for len in lane_width_sweep() {
+        let exec = SimExec::new(&spec_with(len), 22);
+        let theta = exec.init_params().unwrap();
+        let coeffs: Vec<Vec<f32>> = (0..4).map(|p| coeff_pattern(&exec, p)).collect();
+        let toks: Vec<(Vec<i32>, Vec<i32>)> = (0..4)
+            .map(|c| (tokens(&exec, 2 * c), tokens(&exec, 2 * c + 1)))
+            .collect();
+        let cases: Vec<EvalPeerCase<'_>> = coeffs
+            .iter()
+            .zip(&toks)
+            .map(|(c, (a, r))| EvalPeerCase { coeff: c, tok_assigned: a, tok_rand: r })
+            .collect();
+
+        let batched = exec.eval_peer_batch(&theta, 0.013, &cases).unwrap();
+        assert_eq!(batched.len(), cases.len());
+        for (i, case) in cases.iter().enumerate() {
+            let single = exec
+                .eval_peer(&theta, case.coeff, 0.013, case.tok_assigned, case.tok_rand)
+                .unwrap();
+            let b = batched[i];
+            assert_eq!(
+                [b.0.to_bits(), b.1.to_bits(), b.2.to_bits(), b.3.to_bits()],
+                [
+                    single.0.to_bits(),
+                    single.1.to_bits(),
+                    single.2.to_bits(),
+                    single.3.to_bits()
+                ],
+                "len {len}, case {i}"
+            );
+        }
+    }
+}
+
+#[test]
+fn fused_loss_delta_matches_apply_update_plus_two_losses() {
+    for len in lane_width_sweep() {
+        let exec = SimExec::new(&spec_with(len), 23);
+        let theta = exec.init_params().unwrap();
+        let toks = tokens(&exec, 3);
+        let coeff = coeff_pattern(&exec, 1);
+        let step = 0.02f32;
+
+        let (d0, d1) = exec.loss_delta(&theta, &coeff, step, &toks).unwrap();
+        let stepped = exec.apply_update(&theta, &coeff, step).unwrap();
+        let c0 = exec.loss(&theta, &toks).unwrap();
+        let c1 = exec.loss(&stepped, &toks).unwrap();
+        assert_eq!((d0.to_bits(), d1.to_bits()), (c0.to_bits(), c1.to_bits()), "len {len}");
+    }
+}
+
+#[test]
+fn lane_kernel_agrees_with_scalar_reference_to_rounding_error() {
+    // The lane scheme is a fixed reassociation of the same f64 terms, so
+    // after the final f32 round the two paths may differ by at most a few
+    // ulps — pin a tight relative bound at every width.
+    for len in lane_width_sweep() {
+        let exec = SimExec::new(&spec_with(len), 24);
+        let theta = exec.init_params().unwrap();
+        let toks = tokens(&exec, 9);
+        let coeff = coeff_pattern(&exec, 2);
+
+        let (l0, l1) = exec.loss_delta(&theta, &coeff, 0.01, &toks).unwrap();
+        let (s0, s1) = exec.loss_delta_scalar_ref(&theta, &coeff, 0.01, &toks).unwrap();
+        for (lane, scalar) in [(l0, s0), (l1, s1)] {
+            assert!(
+                (lane - scalar).abs() <= 1e-5 * scalar.abs().max(1.0),
+                "len {len}: lane {lane} vs scalar {scalar}"
+            );
+        }
+    }
+}
+
+#[test]
+fn demo_compress_into_is_bit_identical_to_allocating_demo_compress() {
+    for len in lane_width_sweep() {
+        let exec = SimExec::new(&spec_with(len), 25);
+        let theta = exec.init_params().unwrap();
+        let toks = tokens(&exec, 4);
+        let (_, grad) = exec.grad(&theta, &toks).unwrap();
+        let error: Vec<f32> = (0..len).map(|i| (i as f32 * 0.37).sin() * 0.1).collect();
+        let decay = 0.999f32;
+
+        let (vals, idx, residual) = exec.demo_compress(&error, &grad, decay).unwrap();
+
+        let mut error2 = error.clone();
+        let (mut vals2, mut idx2) = (Vec::new(), Vec::new());
+        exec.demo_compress_into(&mut error2, &grad, decay, &mut vals2, &mut idx2).unwrap();
+
+        assert_eq!(idx, idx2, "len {len}");
+        assert_eq!(
+            vals.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            vals2.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            "len {len}"
+        );
+        assert_eq!(
+            residual.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            error2.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            "len {len}"
+        );
+    }
+}
