@@ -1,0 +1,8 @@
+fn main() {
+    // `--cfg loom` selects the model-checked build of runtime::pool (see
+    // rust/tests/loom_pool.rs and the README's "Correctness tooling"
+    // section). Declare it so check-cfg-aware toolchains (1.80+) don't
+    // flag the cfg as unexpected; older toolchains ignore this directive
+    // with a build-script warning, which is harmless.
+    println!("cargo:rustc-check-cfg=cfg(loom)");
+}

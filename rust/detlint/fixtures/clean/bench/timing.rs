@@ -1,0 +1,20 @@
+//! Must-not-fire fixture: `bench` is an edge module — measurement code
+//! legitimately reads clocks, environment, and hash-iterates scratch maps.
+//! Not compiled; consumed by `tests/corpus.rs`.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+pub fn measure(reps: usize) -> f64 {
+    let t0 = Instant::now();
+    let mut counts: HashMap<&'static str, u64> = HashMap::new();
+    for _ in 0..reps {
+        *counts.entry("iter").or_insert(0) += 1;
+    }
+    for (_, n) in counts.iter() {
+        let _ = n;
+    }
+    let budget = std::env::var("GAUNTLET_BENCH_BUDGET").ok();
+    let _ = budget;
+    t0.elapsed().as_secs_f64()
+}

@@ -1,0 +1,44 @@
+//! Must-not-fire fixture: keyed hash lookups, ordered iteration, integer
+//! sums, and min/max folds are all fine on the round path.
+//! Not compiled; consumed by `tests/corpus.rs`.
+
+use std::collections::{BTreeMap, HashMap};
+
+pub struct Registry {
+    by_uid: HashMap<u16, u64>,
+    ordered: BTreeMap<u16, u64>,
+}
+
+impl Registry {
+    pub fn lookup(&self, uid: u16) -> Option<u64> {
+        // Keyed lookup is order-free: fine.
+        self.by_uid.get(&uid).copied()
+    }
+
+    pub fn install(&mut self, uid: u16, stake: u64) {
+        self.by_uid.insert(uid, stake);
+        self.ordered.insert(uid, stake);
+        let _ = self.by_uid.contains_key(&uid);
+    }
+
+    pub fn walk(&self) -> u64 {
+        // BTreeMap iteration is key-ordered: fine.
+        let mut acc = 0u64;
+        for (_, stake) in self.ordered.iter() {
+            acc += stake;
+        }
+        acc
+    }
+}
+
+pub fn int_sum(ns: &[usize]) -> usize {
+    // Integer sums are exact in any order: fine.
+    ns.iter().sum()
+}
+
+pub fn extremes(xs: &[f64]) -> (f64, f64) {
+    // Pure min/max folds are order-insensitive: fine.
+    let hi = xs.iter().copied().fold(0.0_f64, f64::max);
+    let lo = xs.iter().copied().fold(f64::INFINITY, f64::min);
+    (hi, lo)
+}

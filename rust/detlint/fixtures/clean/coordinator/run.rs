@@ -1,0 +1,20 @@
+//! Must-not-fire fixture: the single blessed env-read site. D002 exempts
+//! the body of `fn effective_threads` by name — thread count is resolved
+//! once at assembly, and the fingerprint tests prove the result is
+//! thread-count invariant anyway.
+//! Not compiled; consumed by `tests/corpus.rs`.
+
+pub struct RunConfig {
+    pub threads: usize,
+}
+
+impl RunConfig {
+    pub fn effective_threads(&self) -> usize {
+        if let Ok(v) = std::env::var("GAUNTLET_THREADS") {
+            if let Ok(n) = v.parse::<usize>() {
+                return n.max(1);
+            }
+        }
+        self.threads.max(1)
+    }
+}

@@ -1,0 +1,44 @@
+//! Must-not-fire fixture: blessed reductions, a justified allow, and
+//! cfg(test)-gated code (tests assert on round behaviour, they don't
+//! produce it). Not compiled; consumed by `tests/corpus.rs`.
+
+pub fn det_sum<I: IntoIterator<Item = f64>>(xs: I) -> f64 {
+    // Open-coded in-order accumulation IS the blessed reduction: the
+    // association order is pinned by construction.
+    let mut acc = 0.0;
+    for x in xs {
+        acc += x;
+    }
+    acc
+}
+
+pub fn norm(xs: &[f64]) -> f64 {
+    det_sum(xs.iter().map(|x| x * x)).sqrt()
+}
+
+pub fn checksum(xs: &[f64]) -> f64 {
+    // detlint: allow(D003, slice iteration is strictly in-order, bit-identical to det_sum)
+    xs.iter().sum::<f64>()
+}
+
+#[cfg(test)]
+mod tests {
+    use std::collections::HashMap;
+    use std::time::Instant;
+
+    #[test]
+    fn test_code_is_exempt() {
+        // Inside cfg(test): clocks, hash iteration, and bare sums are all
+        // fine — tests observe the round path, they don't feed it.
+        let t0 = Instant::now();
+        let mut m = HashMap::new();
+        m.insert(1u16, 2.0f64);
+        let mut total = 0.0;
+        for (_, v) in m.iter() {
+            total += v;
+        }
+        let s: f64 = [1.0f64, 2.0].iter().copied().sum();
+        assert!(total + s > 0.0);
+        let _ = t0.elapsed();
+    }
+}

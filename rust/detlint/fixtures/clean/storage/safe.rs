@@ -1,0 +1,28 @@
+//! Must-not-fire fixture: every unsafe site carries a justification —
+//! a `// SAFETY:` comment on/above the statement, or a `# Safety` doc
+//! section on an unsafe fn. Not compiled; consumed by `tests/corpus.rs`.
+
+pub fn read_checked(bytes: &[u8]) -> u32 {
+    let mut buf = [0u8; 4];
+    buf.copy_from_slice(&bytes[..4]);
+    // SAFETY: `buf` is a fully-initialized 4-byte array; transmuting to
+    // u32 reads exactly those 4 bytes with no padding.
+    unsafe { std::mem::transmute::<[u8; 4], u32>(buf) }
+}
+
+/// Reads a raw pointer.
+///
+/// # Safety
+///
+/// `p` must be non-null, aligned, and valid for reads of one byte.
+pub unsafe fn read_raw(p: *const u8) -> u8 {
+    // SAFETY: contract forwarded verbatim to the caller.
+    unsafe { *p }
+}
+
+pub fn multiline_statement(p: *const u8) -> u8 {
+    // SAFETY: `p` comes from a live Box in this module, so it is valid.
+    let value =
+        unsafe { read_raw(p) };
+    value
+}

@@ -1,0 +1,33 @@
+//! Must-fire fixture: D001 — hash-ordered iteration in a round-path module.
+//! Not compiled; consumed by `tests/corpus.rs`.
+
+use std::collections::{HashMap, HashSet};
+
+pub struct Book {
+    scores: HashMap<u16, f64>,
+}
+
+impl Book {
+    pub fn total_bad(&self) -> f64 {
+        let mut acc = 0.0;
+        // FIRE: iteration order depends on the hasher seed.
+        for (_, v) in self.scores.iter() {
+            acc += v;
+        }
+        acc
+    }
+
+    pub fn drain_bad(&mut self) {
+        // FIRE: drain() yields in hash order.
+        for (_, _) in self.scores.drain() {}
+    }
+}
+
+pub fn visit_bad() {
+    let mut seen = HashSet::new();
+    seen.insert(3u16);
+    // FIRE: bare `for .. in set` iterates in hash order.
+    for uid in seen {
+        let _ = uid;
+    }
+}

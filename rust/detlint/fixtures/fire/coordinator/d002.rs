@@ -1,0 +1,25 @@
+//! Must-fire fixture: D002 — clock/entropy/env reads in a round-path module.
+//! Not compiled; consumed by `tests/corpus.rs`.
+
+use std::time::{Instant, SystemTime};
+
+pub fn timed_round() -> u64 {
+    // FIRE: wall-clock read on the round path.
+    let t0 = Instant::now();
+    let _wall = SystemTime::now(); // FIRE
+    t0.elapsed().as_nanos() as u64
+}
+
+pub fn env_round() -> usize {
+    // FIRE: environment read outside the blessed effective_threads site.
+    match std::env::var("GAUNTLET_SECRET_KNOB") {
+        Ok(v) => v.len(),
+        Err(_) => 0,
+    }
+}
+
+pub fn entropy_round() -> u64 {
+    // FIRE: OS entropy on the round path.
+    let mut rng = thread_rng();
+    rng.next_u64()
+}

@@ -1,0 +1,18 @@
+//! Must-fire fixture: D003 — bare float reductions in a round-path module.
+//! Not compiled; consumed by `tests/corpus.rs`.
+
+pub fn norm_bad(xs: &[f32]) -> f64 {
+    // FIRE: turbofish float sum; association order is the iterator's business.
+    xs.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>()
+}
+
+pub fn total_bad(xs: &[f64]) -> f64 {
+    // FIRE: bare .sum() on a statement that is visibly float-typed.
+    let total: f64 = xs.iter().copied().sum();
+    total
+}
+
+pub fn fold_bad(xs: &[f64]) -> f64 {
+    // FIRE: additive fold seeded with a float literal.
+    xs.iter().fold(0.0_f64, |acc, x| acc + x)
+}

@@ -1,0 +1,14 @@
+//! Must-fire fixture: U001 (unjustified unsafe) and ALLOW (bare allow with
+//! no reason). Not compiled; consumed by `tests/corpus.rs`.
+
+pub fn read_bad(p: *const u8) -> u8 {
+    // FIRE(U001): no justification comment anywhere near this block.
+    unsafe { *p }
+}
+
+pub fn sum_bad(xs: &[f64]) -> f64 {
+    // detlint: allow(D003)
+    // FIRE(ALLOW): the directive above has no reason, so it is reported
+    // AND the D003 underneath still fires.
+    xs.iter().sum::<f64>()
+}

@@ -1,0 +1,1193 @@
+//! detlint — Gauntlet's in-tree determinism & unsafety linter.
+//!
+//! Every validator in the Gauntlet incentive pipeline must reproduce
+//! **bit-identical** scores: the paper's two-stage filtering and
+//! loss-delta attribution collapse if summation order, map iteration
+//! order, or a wall-clock branch makes two honest validators disagree.
+//! That contract is enforced dynamically by the 1-vs-N-thread fingerprint
+//! tests; this crate enforces it *statically*, so the next PR cannot
+//! quietly introduce a `HashMap` iteration or an `Instant::now()` branch
+//! into the round path.
+//!
+//! The scanner is hand-rolled (no syn, no rustc plumbing, no
+//! dependencies, in the same spirit as the crate's `minjson`): a
+//! comment/string-stripping pass, a line/token scanner, and a handful of
+//! context trackers (brace depth, enclosing `fn`, `#[cfg(test)]`
+//! regions). It trades full type resolution for auditability — the
+//! heuristics and their blind spots are documented on each rule.
+//!
+//! # Module classification
+//!
+//! Files are classified by their top-level module (first path component
+//! under the scan root):
+//!
+//! - **edge** — `bench`, `main.rs`, `prop`: measurement, CLI, and fuzz
+//!   harness code that legitimately reads clocks and environment.
+//! - **round-path** — everything else (`chain`, `coordinator`, `demo`,
+//!   `eval`, `openskill`, `peers`, `runtime`, `storage`, `scenario`,
+//!   `data`, `util`, `minjson`, `lib.rs`, and any *new* module until it
+//!   is explicitly classified): code that can influence a round's
+//!   scores, weights, or artifacts. Unknown modules default to
+//!   round-path on purpose — a new subsystem must opt *out* of the
+//!   determinism contract, never silently fall outside it.
+//!
+//! `#[cfg(test)]` (and `#[cfg(loom)]`) items are skipped entirely: tests
+//! assert on round-path behaviour but do not produce it.
+//!
+//! # Rules
+//!
+//! | rule | fires on (round-path unless noted) |
+//! |------|------------------------------------|
+//! | D001 | iteration over a `HashMap`/`HashSet` binding (`.iter()`, `.keys()`, `.values()`, `.drain()`, `.retain()`, `for .. in map`, ...). Keyed lookup (`get`/`insert`/`contains_key`) is fine; iteration must use ordered structures (`BTreeMap`) or sort first. |
+//! | D002 | wall-clock / entropy / environment reads (`Instant::now`, `SystemTime::now`, `env::var`, `env::var_os`, `env::args`, `env::temp_dir`, `thread_rng`, `from_entropy`) anywhere outside edge modules and the single blessed `effective_threads()` resolution site. |
+//! | D003 | bare float reductions: `.sum::<f32/f64>()`, `.sum()` in a statement mentioning `f32`/`f64`, and `.fold(<float literal>, ..)` with an additive/unknown combiner (pure `min`/`max` folds are order-insensitive and exempt). Reductions must go through the `lane_reduce` kernels, `util::det_sum`, or carry a per-site allow with a determinism argument. |
+//! | U001 | an `unsafe` block/fn/impl (any module) whose statement is not preceded by a `// SAFETY:` comment or a `# Safety` doc section. |
+//!
+//! # Allow grammar
+//!
+//! A finding is suppressed by a comment on the same line, or in the
+//! comment block immediately above the flagged statement:
+//!
+//! ```text
+//! // detlint: allow(D002, resolved once at backend construction, never per round)
+//! ```
+//!
+//! The reason is mandatory — an allow without one is itself reported
+//! (rule `ALLOW`). The reason should state *why the site is still
+//! deterministic* (or why nondeterminism cannot reach round state), not
+//! merely that the author wanted the lint gone.
+//!
+//! # Known blind spots (by design of a token-level scanner)
+//!
+//! - D001 tracks bindings declared in the same file (`let m: HashMap<..>`,
+//!   struct fields, fn params). A map smuggled through a type alias or a
+//!   cross-file getter is not seen.
+//! - D003 does not see open-coded `for`-loop float accumulation; those
+//!   are in-order by construction, which is exactly the property the
+//!   rule forces `.sum()` call sites to make explicit.
+//! - `#[cfg(test)] mod tests;` (out-of-line test module) would be
+//!   scanned as regular code; the workspace keeps test modules inline.
+
+use std::fmt;
+use std::fs;
+use std::io;
+use std::path::Path;
+
+/// All rule identifiers, in severity-agnostic display order.
+pub const RULES: &[(&str, &str)] = &[
+    ("D001", "no HashMap/HashSet iteration in round-path modules"),
+    ("D002", "no wall-clock/entropy/env reads outside edge modules"),
+    ("D003", "no bare float .sum()/.fold() reductions in round-path modules"),
+    ("U001", "every `unsafe` must carry a SAFETY justification"),
+    ("ALLOW", "malformed `detlint: allow(..)` directive"),
+];
+
+/// Whether a module may read clocks/entropy/environment and is exempt
+/// from the determinism rules (D001–D003). U001 applies everywhere.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ModuleClass {
+    /// Code that can influence a round's scores, weights, or artifacts.
+    RoundPath,
+    /// Measurement / CLI / fuzz-harness code (`bench`, `main.rs`, `prop`).
+    Edge,
+}
+
+/// Classify a path *relative to the scan root* (e.g. `chain/yuma.rs`).
+pub fn classify(rel: &str) -> ModuleClass {
+    let top = rel.split('/').next().unwrap_or(rel);
+    let name = top.strip_suffix(".rs").unwrap_or(top);
+    match name {
+        "bench" | "main" | "prop" => ModuleClass::Edge,
+        _ => ModuleClass::RoundPath,
+    }
+}
+
+/// One diagnostic, with a stable `file:line` anchor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Finding {
+    /// Path relative to the scan root, `/`-separated.
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// Rule identifier (`D001`..`U001`, `ALLOW`).
+    pub rule: &'static str,
+    pub message: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: {} {}", self.file, self.line, self.rule, self.message)
+    }
+}
+
+/// Aggregate result of a tree scan.
+#[derive(Debug, Default)]
+pub struct Report {
+    pub findings: Vec<Finding>,
+    /// Number of `.rs` files scanned.
+    pub files: usize,
+    /// Number of findings suppressed by a valid allow directive.
+    pub allows_used: usize,
+}
+
+// ---------------------------------------------------------------------
+// Pass 1: strip comments and literals.
+// ---------------------------------------------------------------------
+
+/// Source text split into per-line *code* (comments and literal contents
+/// blanked) and per-line *comment text* (line, block, and doc comments).
+struct Stripped {
+    code: Vec<String>,
+    comments: Vec<String>,
+}
+
+struct StripState {
+    code: Vec<String>,
+    comments: Vec<String>,
+    line: usize,
+}
+
+impl StripState {
+    fn new() -> StripState {
+        StripState { code: vec![String::new()], comments: vec![String::new()], line: 0 }
+    }
+    fn newline(&mut self) {
+        self.code.push(String::new());
+        self.comments.push(String::new());
+        self.line += 1;
+    }
+    fn code_push(&mut self, c: char) {
+        self.code[self.line].push(c);
+    }
+    fn comment_push(&mut self, c: char) {
+        self.comments[self.line].push(c);
+    }
+}
+
+fn strip(src: &str) -> Stripped {
+    let chars: Vec<char> = src.chars().collect();
+    let n = chars.len();
+    let mut st = StripState::new();
+    let mut i = 0;
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            st.newline();
+            i += 1;
+        } else if c == '/' && i + 1 < n && chars[i + 1] == '/' {
+            i += 2;
+            while i < n && chars[i] != '\n' {
+                st.comment_push(chars[i]);
+                i += 1;
+            }
+        } else if c == '/' && i + 1 < n && chars[i + 1] == '*' {
+            // Block comment; Rust block comments nest.
+            let mut depth = 1usize;
+            i += 2;
+            while i < n && depth > 0 {
+                if chars[i] == '\n' {
+                    st.newline();
+                    i += 1;
+                } else if chars[i] == '/' && i + 1 < n && chars[i + 1] == '*' {
+                    depth += 1;
+                    i += 2;
+                } else if chars[i] == '*' && i + 1 < n && chars[i + 1] == '/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    st.comment_push(chars[i]);
+                    i += 1;
+                }
+            }
+        } else if c == '"' {
+            st.code_push(' ');
+            i += 1;
+            skip_escaped_string(&chars, &mut i, &mut st);
+        } else if c == '\'' {
+            // Char literal vs lifetime. A `'` followed by a backslash is
+            // always a char escape; `'x'` (closing quote two ahead) is a
+            // plain char literal; anything else (`'env`, `'static`) is a
+            // lifetime and stays in the code stream.
+            if i + 1 < n && chars[i + 1] == '\\' {
+                i += 2;
+                while i < n && chars[i] != '\'' {
+                    if chars[i] == '\n' {
+                        st.newline();
+                    }
+                    i += 1;
+                }
+                i += 1;
+                st.code_push(' ');
+            } else if i + 2 < n && chars[i + 2] == '\'' && chars[i + 1] != '\'' {
+                i += 3;
+                st.code_push(' ');
+            } else {
+                st.code_push('\'');
+                i += 1;
+            }
+        } else if c.is_alphabetic() || c == '_' {
+            // Consume the identifier, then check for raw/byte string
+            // heads (`r"..."`, `r#"..."#`, `br"..."`, `b"..."`).
+            let mut ident = String::new();
+            while i < n && (chars[i].is_alphanumeric() || chars[i] == '_') {
+                ident.push(chars[i]);
+                i += 1;
+            }
+            let raw = ident == "r" || ident == "br";
+            let byte = ident == "b";
+            if raw && i < n && (chars[i] == '"' || chars[i] == '#') {
+                let mut hashes = 0usize;
+                let mut j = i;
+                while j < n && chars[j] == '#' {
+                    hashes += 1;
+                    j += 1;
+                }
+                if j < n && chars[j] == '"' {
+                    // Raw string: no escapes; terminated by `"` + hashes.
+                    i = j + 1;
+                    st.code_push(' ');
+                    while i < n {
+                        if chars[i] == '\n' {
+                            st.newline();
+                            i += 1;
+                        } else if chars[i] == '"' {
+                            let mut k = i + 1;
+                            let mut h = 0usize;
+                            while k < n && h < hashes && chars[k] == '#' {
+                                h += 1;
+                                k += 1;
+                            }
+                            i = k;
+                            if h == hashes {
+                                break;
+                            }
+                        } else {
+                            i += 1;
+                        }
+                    }
+                    continue;
+                }
+                // `r#ident` (raw identifier): fall through, emit as code.
+            }
+            if byte && i < n && chars[i] == '"' {
+                i += 1;
+                st.code_push(' ');
+                skip_escaped_string(&chars, &mut i, &mut st);
+                continue;
+            }
+            for c in ident.chars() {
+                st.code_push(c);
+            }
+        } else {
+            st.code_push(c);
+            i += 1;
+        }
+    }
+    Stripped { code: st.code, comments: st.comments }
+}
+
+/// Consume an escape-aware string body; `*i` points just past the opening
+/// quote on entry and just past the closing quote on exit.
+fn skip_escaped_string(chars: &[char], i: &mut usize, st: &mut StripState) {
+    while *i < chars.len() {
+        match chars[*i] {
+            '\\' => *i += 2,
+            '"' => {
+                *i += 1;
+                return;
+            }
+            '\n' => {
+                st.newline();
+                *i += 1;
+            }
+            _ => *i += 1,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Pass 2: tokenize the stripped code.
+// ---------------------------------------------------------------------
+
+#[derive(Debug, Clone, PartialEq)]
+enum TokKind {
+    Ident(String),
+    Num(String),
+    Punct(char),
+}
+
+#[derive(Debug, Clone)]
+struct Tok {
+    kind: TokKind,
+    /// 0-based source line.
+    line: usize,
+}
+
+fn tokenize(code: &[String]) -> Vec<Tok> {
+    let mut toks = Vec::new();
+    for (line, text) in code.iter().enumerate() {
+        let chars: Vec<char> = text.chars().collect();
+        let n = chars.len();
+        let mut i = 0;
+        while i < n {
+            let c = chars[i];
+            if c.is_whitespace() {
+                i += 1;
+            } else if c.is_alphabetic() || c == '_' {
+                let mut s = String::new();
+                while i < n && (chars[i].is_alphanumeric() || chars[i] == '_') {
+                    s.push(chars[i]);
+                    i += 1;
+                }
+                toks.push(Tok { kind: TokKind::Ident(s), line });
+            } else if c.is_ascii_digit() {
+                // Number: integer part, optional `.digits` fraction (but
+                // not `0..n` ranges), then any suffix/exponent run
+                // (`_f64`, `e10`, `u64`, ...).
+                let mut s = String::new();
+                while i < n && (chars[i].is_ascii_digit() || chars[i] == '_') {
+                    s.push(chars[i]);
+                    i += 1;
+                }
+                if i + 1 < n && chars[i] == '.' && chars[i + 1].is_ascii_digit() {
+                    s.push('.');
+                    i += 1;
+                    while i < n && (chars[i].is_ascii_digit() || chars[i] == '_') {
+                        s.push(chars[i]);
+                        i += 1;
+                    }
+                }
+                while i < n && (chars[i].is_alphanumeric() || chars[i] == '_') {
+                    s.push(chars[i]);
+                    i += 1;
+                    // Exponent sign: `1e-3`.
+                    if (s.ends_with('e') || s.ends_with('E'))
+                        && i < n
+                        && (chars[i] == '+' || chars[i] == '-')
+                        && i + 1 < n
+                        && chars[i + 1].is_ascii_digit()
+                    {
+                        s.push(chars[i]);
+                        i += 1;
+                    }
+                }
+                toks.push(Tok { kind: TokKind::Num(s), line });
+            } else {
+                toks.push(Tok { kind: TokKind::Punct(c), line });
+                i += 1;
+            }
+        }
+    }
+    toks
+}
+
+fn ident(toks: &[Tok], i: usize) -> Option<&str> {
+    match toks.get(i).map(|t| &t.kind) {
+        Some(TokKind::Ident(s)) => Some(s.as_str()),
+        _ => None,
+    }
+}
+
+fn punct(toks: &[Tok], i: usize, c: char) -> bool {
+    matches!(toks.get(i).map(|t| &t.kind), Some(TokKind::Punct(p)) if *p == c)
+}
+
+// ---------------------------------------------------------------------
+// Pass 3: context — statement starts, cfg(test) regions, enclosing fns.
+// ---------------------------------------------------------------------
+
+struct Context {
+    /// For each token: index of the first token of its statement
+    /// (statements are delimited by `;`, `{`, `}`).
+    stmt_start: Vec<usize>,
+    /// For each token: inside a `#[cfg(test)]` / `#[cfg(loom)]` item.
+    skipped: Vec<bool>,
+    /// For each token: inside the blessed `fn effective_threads`.
+    blessed_env_fn: Vec<bool>,
+}
+
+fn build_context(toks: &[Tok]) -> Context {
+    let n = toks.len();
+    let mut stmt_start = vec![0usize; n];
+    let mut skipped = vec![false; n];
+    let mut blessed = vec![false; n];
+
+    let mut start = 0usize;
+    let mut depth = 0usize;
+    // Stack of depths at which a skip region opened.
+    let mut skip_open: Vec<usize> = Vec::new();
+    let mut pending_skip = false;
+    // Stack of (depth, fn name) for enclosing named fns.
+    let mut fn_stack: Vec<(usize, String)> = Vec::new();
+    let mut pending_fn: Option<String> = None;
+
+    let mut i = 0;
+    while i < n {
+        stmt_start[i] = start;
+        skipped[i] = !skip_open.is_empty();
+        blessed[i] = fn_stack.iter().any(|(_, name)| name == "effective_threads");
+
+        match &toks[i].kind {
+            TokKind::Punct('#') if punct(toks, i + 1, '[') => {
+                // Attribute: scan to the matching `]`, look for a cfg
+                // gated on `test`/`loom` (but not `not(test)`).
+                let mut j = i + 2;
+                let mut bdepth = 1usize;
+                let attr_start = j;
+                while j < n && bdepth > 0 {
+                    match toks[j].kind {
+                        TokKind::Punct('[') => bdepth += 1,
+                        TokKind::Punct(']') => bdepth -= 1,
+                        _ => {}
+                    }
+                    j += 1;
+                }
+                let attr = &toks[attr_start..j.saturating_sub(1).max(attr_start)];
+                let is_cfg =
+                    attr.first().is_some_and(|t| matches!(&t.kind, TokKind::Ident(s) if s == "cfg"));
+                if is_cfg {
+                    let mut k = 0;
+                    while k < attr.len() {
+                        if let TokKind::Ident(name) = &attr[k].kind {
+                            if (name == "test" || name == "loom")
+                                && !(k >= 2
+                                    && matches!(&attr[k - 2].kind, TokKind::Ident(p) if p == "not")
+                                    && matches!(attr[k - 1].kind, TokKind::Punct('(')))
+                            {
+                                pending_skip = true;
+                            }
+                        }
+                        k += 1;
+                    }
+                }
+                // Mark the attribute's own tokens and move past it.
+                while i < j {
+                    stmt_start[i] = start;
+                    skipped[i] = !skip_open.is_empty();
+                    blessed[i] =
+                        fn_stack.iter().any(|(_, name)| name == "effective_threads");
+                    i += 1;
+                }
+                continue;
+            }
+            TokKind::Ident(s) if s == "fn" => {
+                if let Some(name) = ident(toks, i + 1) {
+                    pending_fn = Some(name.to_string());
+                }
+            }
+            TokKind::Punct('{') => {
+                if pending_skip {
+                    skip_open.push(depth);
+                    pending_skip = false;
+                    // The brace itself belongs to the skipped item.
+                    skipped[i] = true;
+                }
+                if let Some(name) = pending_fn.take() {
+                    fn_stack.push((depth, name));
+                }
+                depth += 1;
+                start = i + 1;
+            }
+            TokKind::Punct('}') => {
+                depth = depth.saturating_sub(1);
+                if skip_open.last() == Some(&depth) {
+                    skip_open.pop();
+                }
+                if fn_stack.last().map(|(d, _)| *d) == Some(depth) {
+                    fn_stack.pop();
+                }
+                start = i + 1;
+            }
+            TokKind::Punct(';') => {
+                // An item ended before any body: cancel pending markers
+                // (`#[cfg(test)] mod tests;`, trait fn declarations).
+                pending_skip = false;
+                pending_fn = None;
+                start = i + 1;
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    Context { stmt_start, skipped, blessed_env_fn: blessed }
+}
+
+// ---------------------------------------------------------------------
+// Allow directives.
+// ---------------------------------------------------------------------
+
+/// Valid allows per 0-based line: rule names suppressible on that line.
+struct Allows {
+    by_line: Vec<Vec<String>>,
+}
+
+fn parse_allows(rel: &str, comments: &[String], findings: &mut Vec<Finding>) -> Allows {
+    let mut by_line: Vec<Vec<String>> = vec![Vec::new(); comments.len()];
+    for (line, text) in comments.iter().enumerate() {
+        let mut rest = text.as_str();
+        while let Some(pos) = rest.find("detlint:") {
+            rest = &rest[pos + "detlint:".len()..];
+            let body = rest.trim_start();
+            let Some(args) = body.strip_prefix("allow").map(|b| b.trim_start()) else {
+                findings.push(Finding {
+                    file: rel.to_string(),
+                    line: line + 1,
+                    rule: "ALLOW",
+                    message: "malformed directive: expected `detlint: allow(RULE, reason)`"
+                        .to_string(),
+                });
+                continue;
+            };
+            let Some(inner) = args.strip_prefix('(').and_then(|a| a.split_once(')')) else {
+                findings.push(Finding {
+                    file: rel.to_string(),
+                    line: line + 1,
+                    rule: "ALLOW",
+                    message: "malformed directive: missing `(RULE, reason)`".to_string(),
+                });
+                continue;
+            };
+            let (inside, _after) = inner;
+            let (rule, reason) = match inside.split_once(',') {
+                Some((r, why)) => (r.trim(), why.trim()),
+                None => (inside.trim(), ""),
+            };
+            if !RULES.iter().any(|(id, _)| *id == rule && *id != "ALLOW") {
+                findings.push(Finding {
+                    file: rel.to_string(),
+                    line: line + 1,
+                    rule: "ALLOW",
+                    message: format!("unknown rule {rule:?} in allow directive"),
+                });
+            } else if reason.is_empty() {
+                findings.push(Finding {
+                    file: rel.to_string(),
+                    line: line + 1,
+                    rule: "ALLOW",
+                    message: format!(
+                        "allow({rule}) needs a reason: `detlint: allow({rule}, why this \
+                         site stays deterministic)`"
+                    ),
+                });
+            } else {
+                by_line[line].push(rule.to_string());
+            }
+        }
+    }
+    Allows { by_line }
+}
+
+impl Allows {
+    /// A finding on `line` (0-based), whose statement starts on
+    /// `stmt_line`, is suppressed by an allow on the finding line itself,
+    /// or anywhere in the contiguous comment/blank block directly above
+    /// the finding line or the statement start line.
+    fn covers(&self, code: &[String], rule: &str, line: usize, stmt_line: usize) -> bool {
+        let has = |l: usize| self.by_line.get(l).is_some_and(|v| v.iter().any(|r| r == rule));
+        if has(line) {
+            return true;
+        }
+        for anchor in [line, stmt_line] {
+            let mut l = anchor;
+            while l > 0 {
+                l -= 1;
+                if !code[l].trim().is_empty() {
+                    break;
+                }
+                if has(l) {
+                    return true;
+                }
+            }
+        }
+        false
+    }
+}
+
+// ---------------------------------------------------------------------
+// Rules.
+// ---------------------------------------------------------------------
+
+const D001_ITER_METHODS: &[&str] = &[
+    "iter",
+    "iter_mut",
+    "keys",
+    "values",
+    "values_mut",
+    "drain",
+    "into_iter",
+    "into_keys",
+    "into_values",
+    "retain",
+];
+
+const D002_PATTERNS: &[(&[&str], &str)] = &[
+    (&["Instant", ":", ":", "now"], "wall-clock read (Instant::now)"),
+    (&["SystemTime", ":", ":", "now"], "wall-clock read (SystemTime::now)"),
+    (&["env", ":", ":", "var"], "environment read (env::var)"),
+    (&["env", ":", ":", "var_os"], "environment read (env::var_os)"),
+    (&["env", ":", ":", "args"], "process-argument read (env::args)"),
+    (&["env", ":", ":", "args_os"], "process-argument read (env::args_os)"),
+    (&["env", ":", ":", "temp_dir"], "environment read (env::temp_dir)"),
+    (&["thread_rng"], "OS entropy (thread_rng)"),
+    (&["from_entropy"], "OS entropy (from_entropy)"),
+];
+
+/// Match an ident/punct pattern (`":"` entries are `:` puncts) at `i`.
+fn match_pattern(toks: &[Tok], i: usize, pat: &[&str]) -> bool {
+    for (off, want) in pat.iter().enumerate() {
+        let ok = match toks.get(i + off).map(|t| &t.kind) {
+            Some(TokKind::Ident(s)) => s == want,
+            Some(TokKind::Punct(c)) => want.len() == 1 && want.chars().next() == Some(*c),
+            _ => false,
+        };
+        if !ok {
+            return false;
+        }
+    }
+    true
+}
+
+/// Collect identifiers bound to a `HashMap`/`HashSet` in this file:
+/// `let m: HashMap<..>`, `m: HashMap<..>` struct fields / fn params, and
+/// `let m = HashMap::new()` / `HashMap::from(..)` / `with_capacity`.
+fn collect_hash_bindings(toks: &[Tok], ctx: &Context) -> Vec<String> {
+    let mut names = Vec::new();
+    let mut i = 0;
+    while i < toks.len() {
+        if ctx.skipped[i] {
+            i += 1;
+            continue;
+        }
+        let is_hash = matches!(ident(toks, i), Some("HashMap") | Some("HashSet"));
+        if is_hash {
+            let start = ctx.stmt_start[i];
+            // `name : HashMap` (possibly through `&`, `&mut`): annotation.
+            let mut j = i;
+            while j > start && (punct(toks, j - 1, '&') || ident(toks, j - 1) == Some("mut")) {
+                j -= 1;
+            }
+            if j >= 2 && punct(toks, j - 1, ':') && !punct(toks, j - 2, ':') {
+                if let Some(name) = ident(toks, j - 2) {
+                    names.push(name.to_string());
+                    i += 1;
+                    continue;
+                }
+            }
+            // `let name = HashMap::...` / `let mut name = HashMap::...`.
+            let mut k = i;
+            while k > start {
+                k -= 1;
+                if ident(toks, k) == Some("let") {
+                    let mut m = k + 1;
+                    if ident(toks, m) == Some("mut") {
+                        m += 1;
+                    }
+                    if let Some(name) = ident(toks, m) {
+                        if punct(toks, m + 1, '=') {
+                            names.push(name.to_string());
+                        }
+                    }
+                    break;
+                }
+            }
+        }
+        i += 1;
+    }
+    names.sort();
+    names.dedup();
+    names
+}
+
+struct FileScan<'a> {
+    rel: &'a str,
+    class: ModuleClass,
+    toks: Vec<Tok>,
+    ctx: Context,
+    stripped: Stripped,
+}
+
+impl FileScan<'_> {
+    fn finding(&self, i: usize, rule: &'static str, message: String) -> Finding {
+        Finding { file: self.rel.to_string(), line: self.toks[i].line + 1, rule, message }
+    }
+
+    /// The statement's float reduction context: does any token of the
+    /// current statement before `i` name `f32`/`f64`?
+    fn stmt_mentions_float(&self, i: usize) -> bool {
+        let start = self.ctx.stmt_start[i];
+        (start..i).any(|k| matches!(ident(&self.toks, k), Some("f32") | Some("f64")))
+    }
+
+    fn d001(&self, out: &mut Vec<Finding>) {
+        if self.class != ModuleClass::RoundPath {
+            return;
+        }
+        let bindings = collect_hash_bindings(&self.toks, &self.ctx);
+        if bindings.is_empty() {
+            return;
+        }
+        let toks = &self.toks;
+        let mut in_for_header = false;
+        let mut i = 0;
+        while i < toks.len() {
+            if self.ctx.skipped[i] {
+                i += 1;
+                continue;
+            }
+            match &toks[i].kind {
+                TokKind::Ident(s) if s == "for" => {
+                    // `impl Trait for Type` headers contain no hash
+                    // bindings (type names, not locals), so a single
+                    // header mode is enough.
+                    in_for_header = true;
+                }
+                TokKind::Punct('{') | TokKind::Punct(';') => in_for_header = false,
+                TokKind::Ident(name) if bindings.iter().any(|b| b == name) => {
+                    if punct(toks, i + 1, '.') {
+                        if let Some(m) = ident(toks, i + 2) {
+                            if D001_ITER_METHODS.contains(&m) && punct(toks, i + 3, '(') {
+                                out.push(self.finding(
+                                    i,
+                                    "D001",
+                                    format!(
+                                        "iteration over hash-ordered `{name}.{m}()`; round-path \
+                                         iteration must use an ordered structure (BTreeMap/\
+                                         BTreeSet, indexed Vec) or sort first"
+                                    ),
+                                ));
+                            }
+                        }
+                    } else if in_for_header && punct(toks, i + 1, '{') {
+                        out.push(self.finding(
+                            i,
+                            "D001",
+                            format!(
+                                "`for .. in {name}` iterates a hash-ordered container; \
+                                 round-path iteration must use an ordered structure"
+                            ),
+                        ));
+                    }
+                }
+                _ => {}
+            }
+            i += 1;
+        }
+    }
+
+    fn d002(&self, out: &mut Vec<Finding>) {
+        if self.class != ModuleClass::RoundPath {
+            return;
+        }
+        let mut i = 0;
+        while i < self.toks.len() {
+            if self.ctx.skipped[i] || self.ctx.blessed_env_fn[i] {
+                i += 1;
+                continue;
+            }
+            for (pat, what) in D002_PATTERNS {
+                if match_pattern(&self.toks, i, pat) {
+                    out.push(self.finding(
+                        i,
+                        "D002",
+                        format!(
+                            "{what} in a round-path module; resolve once at assembly \
+                             (see RunConfig::effective_threads) or move to an edge module"
+                        ),
+                    ));
+                    i += pat.len() - 1;
+                    break;
+                }
+            }
+            i += 1;
+        }
+    }
+
+    fn d003(&self, out: &mut Vec<Finding>) {
+        if self.class != ModuleClass::RoundPath {
+            return;
+        }
+        let toks = &self.toks;
+        let mut i = 0;
+        while i < toks.len() {
+            if self.ctx.skipped[i] || !punct(toks, i, '.') {
+                i += 1;
+                continue;
+            }
+            match ident(toks, i + 1) {
+                Some("sum") => {
+                    let turbo_float = punct(toks, i + 2, ':')
+                        && punct(toks, i + 3, ':')
+                        && punct(toks, i + 4, '<')
+                        && matches!(ident(toks, i + 5), Some("f32") | Some("f64"));
+                    let bare = punct(toks, i + 2, '(');
+                    if turbo_float || (bare && self.stmt_mentions_float(i)) {
+                        out.push(self.finding(
+                            i + 1,
+                            "D003",
+                            "bare float `.sum()`; use the lane_reduce kernels or \
+                             util::det_sum (strictly in-order), or add an allow with a \
+                             determinism argument"
+                                .to_string(),
+                        ));
+                    }
+                }
+                Some("fold") if punct(toks, i + 2, '(') => {
+                    if let Some(f) = self.check_fold(i) {
+                        out.push(f);
+                    }
+                }
+                _ => {}
+            }
+            i += 1;
+        }
+    }
+
+    /// `.fold(<float literal>, combiner)`: flag unless the combiner is a
+    /// pure `min`/`max` (order-insensitive up to NaN placement, which the
+    /// callers pin separately).
+    fn check_fold(&self, dot: usize) -> Option<Finding> {
+        let toks = &self.toks;
+        let open = dot + 2;
+        let mut depth = 1usize;
+        let mut j = open + 1;
+        while j < toks.len() && depth > 0 {
+            match toks[j].kind {
+                TokKind::Punct('(') => depth += 1,
+                TokKind::Punct(')') => depth -= 1,
+                _ => {}
+            }
+            j += 1;
+        }
+        let close = j - 1;
+        // Split the argument list at the first top-level comma.
+        let mut depth = 0usize;
+        let mut comma = None;
+        for k in open + 1..close {
+            match toks[k].kind {
+                TokKind::Punct('(') | TokKind::Punct('[') | TokKind::Punct('{') => depth += 1,
+                TokKind::Punct(')') | TokKind::Punct(']') | TokKind::Punct('}') => {
+                    depth = depth.saturating_sub(1)
+                }
+                TokKind::Punct(',') if depth == 0 => {
+                    comma = Some(k);
+                    break;
+                }
+                _ => {}
+            }
+        }
+        let comma = comma?;
+        // Seed: a float literal (skip a leading unary minus)?
+        let mut s = open + 1;
+        if punct(toks, s, '-') {
+            s += 1;
+        }
+        let seed_is_float = match toks.get(s).map(|t| &t.kind) {
+            Some(TokKind::Num(num)) if s + 1 == comma => {
+                num.contains('.') || num.ends_with("f32") || num.ends_with("f64")
+            }
+            _ => false,
+        };
+        if !seed_is_float {
+            return None;
+        }
+        let combiner = &toks[comma + 1..close];
+        let has = |pred: &dyn Fn(&TokKind) -> bool| combiner.iter().any(|t| pred(&t.kind));
+        let additive = has(&|k| {
+            matches!(k, TokKind::Punct('+') | TokKind::Punct('*'))
+                || matches!(k, TokKind::Ident(s) if s == "mul_add" || s == "sum")
+        });
+        let minmax = has(&|k| matches!(k, TokKind::Ident(s) if s == "max" || s == "min"));
+        if !additive && minmax {
+            return None;
+        }
+        Some(self.finding(
+            dot + 1,
+            "D003",
+            "float fold-accumulation; use the lane_reduce kernels or util::det_sum \
+             (strictly in-order), or add an allow with a determinism argument"
+                .to_string(),
+        ))
+    }
+
+    fn u001(&self, out: &mut Vec<Finding>) {
+        let toks = &self.toks;
+        let mut i = 0;
+        while i < toks.len() {
+            if !self.ctx.skipped[i] && ident(toks, i) == Some("unsafe") {
+                let line = toks[i].line;
+                let stmt_line = toks[self.ctx.stmt_start[i]].line;
+                if !self.has_safety_comment(stmt_line, line) {
+                    out.push(self.finding(
+                        i,
+                        "U001",
+                        "`unsafe` without a justification; precede the statement with a \
+                         `// SAFETY:` comment (or a `# Safety` doc section) stating the \
+                         discharged obligations"
+                            .to_string(),
+                    ));
+                }
+            }
+            i += 1;
+        }
+    }
+
+    /// A SAFETY justification covers an `unsafe` on `line` if it appears
+    /// in a comment on any line of the statement (`stmt_line..=line`) or
+    /// in the contiguous comment/blank block directly above the statement.
+    fn has_safety_comment(&self, stmt_line: usize, line: usize) -> bool {
+        let marker = |l: usize| {
+            self.stripped
+                .comments
+                .get(l)
+                .is_some_and(|c| c.contains("SAFETY") || c.contains("# Safety"))
+        };
+        if (stmt_line..=line).any(marker) {
+            return true;
+        }
+        let mut l = stmt_line;
+        while l > 0 {
+            l -= 1;
+            if !self.stripped.code[l].trim().is_empty() {
+                return false;
+            }
+            if marker(l) {
+                return true;
+            }
+        }
+        false
+    }
+}
+
+/// Scan one file's source. `rel` is the path relative to the scan root
+/// (used for classification and reporting). Returns surviving findings
+/// and the number of allow-suppressed ones.
+pub fn scan_source(rel: &str, src: &str) -> (Vec<Finding>, usize) {
+    let stripped = strip(src);
+    let toks = tokenize(&stripped.code);
+    let ctx = build_context(&toks);
+    let scan = FileScan { rel, class: classify(rel), toks, ctx, stripped };
+
+    let mut findings = Vec::new();
+    let allows = parse_allows(rel, &scan.stripped.comments, &mut findings);
+    let mut raw = Vec::new();
+    scan.d001(&mut raw);
+    scan.d002(&mut raw);
+    scan.d003(&mut raw);
+    scan.u001(&mut raw);
+
+    let mut suppressed = 0usize;
+    for f in raw {
+        // Re-derive the statement line for the allow search: findings
+        // carry 1-based lines.
+        let line0 = f.line - 1;
+        let stmt_line = scan
+            .toks
+            .iter()
+            .position(|t| t.line == line0)
+            .map(|i| scan.toks[scan.ctx.stmt_start[i]].line)
+            .unwrap_or(line0);
+        if allows.covers(&scan.stripped.code, f.rule, line0, stmt_line) {
+            suppressed += 1;
+        } else {
+            findings.push(f);
+        }
+    }
+    findings.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    (findings, suppressed)
+}
+
+/// Recursively scan `root` (a directory of `.rs` files, or a single
+/// file). Files are visited in sorted path order, so output is stable.
+pub fn scan_tree(root: &Path) -> io::Result<Report> {
+    let mut files = Vec::new();
+    collect_rs_files(root, &mut files)?;
+    files.sort();
+    let mut report = Report::default();
+    for path in files {
+        let rel = path
+            .strip_prefix(root)
+            .map(|p| {
+                p.components()
+                    .map(|c| c.as_os_str().to_string_lossy().into_owned())
+                    .collect::<Vec<_>>()
+                    .join("/")
+            })
+            .unwrap_or_else(|_| path.to_string_lossy().into_owned());
+        let rel = if rel.is_empty() { path.to_string_lossy().into_owned() } else { rel };
+        let src = fs::read_to_string(&path)?;
+        let (findings, suppressed) = scan_source(&rel, &src);
+        report.findings.extend(findings);
+        report.allows_used += suppressed;
+        report.files += 1;
+    }
+    Ok(report)
+}
+
+fn collect_rs_files(path: &Path, out: &mut Vec<std::path::PathBuf>) -> io::Result<()> {
+    let meta = fs::metadata(path)?;
+    if meta.is_file() {
+        if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path.to_path_buf());
+        }
+        return Ok(());
+    }
+    for entry in fs::read_dir(path)? {
+        collect_rs_files(&entry?.path(), out)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn findings(rel: &str, src: &str) -> Vec<(usize, &'static str)> {
+        scan_source(rel, src).0.into_iter().map(|f| (f.line, f.rule)).collect()
+    }
+
+    // ---- classification -------------------------------------------------
+
+    #[test]
+    fn classification_defaults_unknown_modules_to_round_path() {
+        assert_eq!(classify("chain/yuma.rs"), ModuleClass::RoundPath);
+        assert_eq!(classify("lib.rs"), ModuleClass::RoundPath);
+        assert_eq!(classify("shiny_new_subsystem/mod.rs"), ModuleClass::RoundPath);
+        assert_eq!(classify("bench/suite.rs"), ModuleClass::Edge);
+        assert_eq!(classify("main.rs"), ModuleClass::Edge);
+        assert_eq!(classify("prop/scenario.rs"), ModuleClass::Edge);
+    }
+
+    // ---- D001 -----------------------------------------------------------
+
+    #[test]
+    fn d001_fires_on_hashmap_iteration() {
+        let src = "fn f() {\n    let m: HashMap<u32, f64> = HashMap::new();\n    for (k, v) in m.iter() { use_it(k, v); }\n}\n";
+        assert_eq!(findings("chain/mod.rs", src), vec![(3, "D001")]);
+    }
+
+    #[test]
+    fn d001_fires_on_bare_for_over_hashset() {
+        let src = "fn f() {\n    let mut seen = HashSet::new();\n    for x in seen { go(x); }\n}\n";
+        assert_eq!(findings("coordinator/round.rs", src), vec![(3, "D001")]);
+    }
+
+    #[test]
+    fn d001_ignores_keyed_lookup_and_btreemap() {
+        let src = "fn f() {\n    let m: HashMap<u32, f64> = HashMap::new();\n    let v = m.get(&3);\n    m.insert(1, 2.0);\n    let b: BTreeMap<u32, f64> = BTreeMap::new();\n    for (k, v) in b.iter() { use_it(k, v); }\n}\n";
+        assert!(findings("chain/mod.rs", src).is_empty());
+    }
+
+    #[test]
+    fn d001_silent_in_edge_modules_and_tests() {
+        let src = "fn f() {\n    let m = HashMap::new();\n    for x in m.keys() { go(x); }\n}\n";
+        assert!(findings("bench/suite.rs", src).is_empty());
+        let gated = format!("#[cfg(test)]\nmod tests {{\n{src}\n}}\n");
+        assert!(findings("chain/mod.rs", &gated).is_empty());
+    }
+
+    // ---- D002 -----------------------------------------------------------
+
+    #[test]
+    fn d002_fires_on_clock_env_entropy() {
+        let src = "fn f() {\n    let t = Instant::now();\n    let v = std::env::var(\"X\");\n    let r = thread_rng();\n}\n";
+        assert_eq!(
+            findings("runtime/mod.rs", src),
+            vec![(2, "D002"), (3, "D002"), (4, "D002")]
+        );
+    }
+
+    #[test]
+    fn d002_blesses_effective_threads_and_edge() {
+        let src = "impl RunConfig {\n    pub fn effective_threads(&self) -> usize {\n        if let Ok(v) = std::env::var(\"GAUNTLET_THREADS\") { return 1; }\n        4\n    }\n}\n";
+        assert!(findings("coordinator/run.rs", src).is_empty());
+        let edge = "fn f() { let t = Instant::now(); }\n";
+        assert!(findings("bench/mod.rs", edge).is_empty());
+    }
+
+    #[test]
+    fn d002_not_fooled_by_env_macro_or_comments() {
+        let src = "fn f() {\n    let d = env!(\"CARGO_MANIFEST_DIR\");\n    // Instant::now in a comment\n    let s = \"Instant::now\";\n}\n";
+        assert!(findings("runtime/mod.rs", src).is_empty());
+    }
+
+    // ---- D003 -----------------------------------------------------------
+
+    #[test]
+    fn d003_fires_on_turbofish_and_annotated_sum() {
+        let src = "fn f(xs: &[f64]) -> f64 {\n    let a = xs.iter().copied().sum::<f64>();\n    let b: f64 = xs.iter().copied().sum();\n    a + b\n}\n";
+        assert_eq!(findings("openskill/mod.rs", src), vec![(2, "D003"), (3, "D003")]);
+    }
+
+    #[test]
+    fn d003_fires_on_additive_float_fold() {
+        let src = "fn f(xs: &[f64]) -> f64 {\n    xs.iter().fold(0.0, |a, b| a + b)\n}\n";
+        assert_eq!(findings("demo/mod.rs", src), vec![(2, "D003")]);
+    }
+
+    #[test]
+    fn d003_exempts_int_sums_and_minmax_folds() {
+        let src = "fn f(xs: &[f64], ns: &[usize]) -> f64 {\n    let n: usize = ns.iter().sum();\n    let hi = xs.iter().copied().fold(0.0_f64, f64::max);\n    let lo = xs.iter().copied().fold(f64::INFINITY, f64::min);\n    hi + lo + n as f64\n}\n";
+        assert!(findings("chain/yuma.rs", src).is_empty());
+    }
+
+    #[test]
+    fn d003_allow_with_reason_suppresses() {
+        let src = "fn f(xs: &[f64]) -> f64 {\n    // detlint: allow(D003, in-order slice sum; order fixed by construction)\n    xs.iter().sum::<f64>()\n}\n";
+        let (found, suppressed) = scan_source("chain/yuma.rs", src);
+        assert!(found.is_empty(), "{found:?}");
+        assert_eq!(suppressed, 1);
+    }
+
+    #[test]
+    fn d003_allow_without_reason_is_reported() {
+        let src = "fn f(xs: &[f64]) -> f64 {\n    // detlint: allow(D003)\n    xs.iter().sum::<f64>()\n}\n";
+        let rules: Vec<&str> = scan_source("chain/yuma.rs", src)
+            .0
+            .into_iter()
+            .map(|f| f.rule)
+            .collect();
+        assert!(rules.contains(&"ALLOW"), "{rules:?}");
+        assert!(rules.contains(&"D003"), "bare allow must not suppress: {rules:?}");
+    }
+
+    // ---- U001 -----------------------------------------------------------
+
+    #[test]
+    fn u001_fires_without_safety_comment() {
+        let src = "fn f(p: *const u8) -> u8 {\n    unsafe { *p }\n}\n";
+        assert_eq!(findings("storage/mod.rs", src), vec![(2, "U001")]);
+    }
+
+    #[test]
+    fn u001_accepts_safety_comment_and_doc_section() {
+        let src = "fn f(p: *const u8) -> u8 {\n    // SAFETY: caller guarantees p is valid.\n    unsafe { *p }\n}\n\n/// Does things.\n///\n/// # Safety\n///\n/// `p` must be valid.\npub unsafe fn g(p: *const u8) -> u8 {\n    // SAFETY: contract forwarded to the caller.\n    unsafe { *p }\n}\n";
+        assert!(findings("util/mod.rs", src).is_empty());
+    }
+
+    #[test]
+    fn u001_safety_comment_above_multiline_statement() {
+        let src = "fn f(p: *const u8) -> u8 {\n    // SAFETY: p valid.\n    let x =\n        unsafe { *p };\n    x\n}\n";
+        assert!(findings("util/mod.rs", src).is_empty());
+    }
+
+    #[test]
+    fn u001_applies_in_edge_modules_too() {
+        let src = "fn f(p: *const u8) -> u8 {\n    unsafe { *p }\n}\n";
+        assert_eq!(findings("bench/mod.rs", src), vec![(2, "U001")]);
+    }
+
+    // ---- scanner robustness --------------------------------------------
+
+    #[test]
+    fn scanner_survives_strings_chars_lifetimes_raw_strings() {
+        let src = "fn f<'env>(x: &'env str) -> char {\n    let a = \"Instant::now() \\\" escaped\";\n    let b = r#\"env::var(\"inside raw\")\"#;\n    let c = '\"';\n    let d = '\\n';\n    let e = b\"thread_rng\";\n    c\n}\n";
+        assert!(findings("runtime/mod.rs", src).is_empty());
+    }
+
+    #[test]
+    fn cfg_not_loom_is_not_skipped() {
+        // `#[cfg(not(loom))]` items are real round-path code.
+        let src = "#[cfg(not(loom))]\nfn f() {\n    let t = Instant::now();\n}\n";
+        assert_eq!(findings("runtime/pool.rs", src), vec![(3, "D002")]);
+    }
+}

@@ -1,0 +1,79 @@
+//! `detlint` CLI — scan one or more paths, print `file:line: RULE message`
+//! diagnostics, exit non-zero if any finding survives.
+//!
+//! ```text
+//! detlint [--list-rules] [--quiet] <path>...
+//! ```
+//!
+//! Paths may be directories (scanned recursively for `.rs` files, in
+//! sorted order) or single files. With no path, scans `rust/src` if it
+//! exists under the current directory, else errors.
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let mut paths: Vec<PathBuf> = Vec::new();
+    let mut quiet = false;
+    for arg in std::env::args().skip(1) {
+        match arg.as_str() {
+            "--list-rules" => {
+                for (id, what) in detlint::RULES {
+                    println!("{id}  {what}");
+                }
+                return ExitCode::SUCCESS;
+            }
+            "--quiet" | "-q" => quiet = true,
+            "--help" | "-h" => {
+                println!("usage: detlint [--list-rules] [--quiet] <path>...");
+                println!("scans .rs trees for determinism/unsafety violations; exits 1 on findings");
+                return ExitCode::SUCCESS;
+            }
+            other if other.starts_with('-') => {
+                eprintln!("detlint: unknown flag {other:?} (try --help)");
+                return ExitCode::from(2);
+            }
+            other => paths.push(PathBuf::from(other)),
+        }
+    }
+    if paths.is_empty() {
+        let default = Path::new("rust/src");
+        if default.is_dir() {
+            paths.push(default.to_path_buf());
+        } else {
+            eprintln!("detlint: no path given and ./rust/src not found (try --help)");
+            return ExitCode::from(2);
+        }
+    }
+
+    let mut total_findings = 0usize;
+    let mut total_files = 0usize;
+    let mut total_allows = 0usize;
+    for path in &paths {
+        match detlint::scan_tree(path) {
+            Ok(report) => {
+                for f in &report.findings {
+                    println!("{f}");
+                }
+                total_findings += report.findings.len();
+                total_files += report.files;
+                total_allows += report.allows_used;
+            }
+            Err(e) => {
+                eprintln!("detlint: {}: {e}", path.display());
+                return ExitCode::from(2);
+            }
+        }
+    }
+    if !quiet {
+        eprintln!(
+            "detlint: {total_files} file(s), {total_findings} finding(s), \
+             {total_allows} allow(s) in effect"
+        );
+    }
+    if total_findings == 0 {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}

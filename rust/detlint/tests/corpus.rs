@@ -1,0 +1,79 @@
+//! Corpus tests: every rule has a must-fire fixture under `fixtures/fire`
+//! and a must-not-fire fixture under `fixtures/clean`, and the real
+//! `rust/src` tree scans clean — the same assertion CI's static-analysis
+//! job makes via the binary.
+
+use std::path::{Path, PathBuf};
+
+fn fixtures(which: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("fixtures").join(which)
+}
+
+fn rules_fired(report: &detlint::Report) -> Vec<&'static str> {
+    let mut rules: Vec<&'static str> = report.findings.iter().map(|f| f.rule).collect();
+    rules.sort();
+    rules.dedup();
+    rules
+}
+
+#[test]
+fn fire_corpus_raises_every_rule() {
+    let report = detlint::scan_tree(&fixtures("fire")).expect("scan fire corpus");
+    let rules = rules_fired(&report);
+    for want in ["ALLOW", "D001", "D002", "D003", "U001"] {
+        assert!(
+            rules.contains(&want),
+            "fire corpus must raise {want}; raised {rules:?}:\n{}",
+            render(&report)
+        );
+    }
+    // The exact per-file shape is pinned so a scanner regression that
+    // half-fires (or double-fires) is caught, not just total silence.
+    let count = |file: &str, rule: &str| {
+        report.findings.iter().filter(|f| f.file == file && f.rule == rule).count()
+    };
+    assert_eq!(count("chain/d001.rs", "D001"), 3, "{}", render(&report));
+    assert_eq!(count("coordinator/d002.rs", "D002"), 4, "{}", render(&report));
+    assert_eq!(count("runtime/d003.rs", "D003"), 3, "{}", render(&report));
+    assert_eq!(count("storage/u001.rs", "U001"), 1, "{}", render(&report));
+    assert_eq!(count("storage/u001.rs", "ALLOW"), 1, "{}", render(&report));
+    // A bare allow must not suppress the finding underneath it.
+    assert_eq!(count("storage/u001.rs", "D003"), 1, "{}", render(&report));
+    assert_eq!(report.allows_used, 0);
+}
+
+#[test]
+fn fire_findings_carry_line_anchors() {
+    let report = detlint::scan_tree(&fixtures("fire")).expect("scan fire corpus");
+    for f in &report.findings {
+        assert!(f.line > 0, "finding without a line anchor: {f}");
+        assert!(!f.message.is_empty(), "finding without a message: {f}");
+    }
+}
+
+#[test]
+fn clean_corpus_is_silent() {
+    let report = detlint::scan_tree(&fixtures("clean")).expect("scan clean corpus");
+    assert!(report.findings.is_empty(), "clean corpus must not fire:\n{}", render(&report));
+    // Exactly one justified allow is exercised (runtime/kernels.rs).
+    assert_eq!(report.allows_used, 1);
+    assert_eq!(report.files, 5);
+}
+
+#[test]
+fn gauntlet_round_path_scans_clean() {
+    // The production assertion: the real tree has zero findings. This is
+    // the in-process twin of CI's `cargo run -p detlint -- rust/src`.
+    let src = Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("src");
+    let report = detlint::scan_tree(&src).expect("scan rust/src");
+    assert!(report.files > 20, "expected the full gauntlet tree, got {} files", report.files);
+    assert!(
+        report.findings.is_empty(),
+        "rust/src must scan clean; fix the site or add a reasoned allow:\n{}",
+        render(&report)
+    );
+}
+
+fn render(report: &detlint::Report) -> String {
+    report.findings.iter().map(|f| format!("  {f}\n")).collect()
+}

@@ -13,6 +13,11 @@
 //! artifacts are not built). The run used for EXPERIMENTS.md §Fig.1 is
 //! `templar_run small 150`.
 
+// An example is edge code (like the bench module): it times whole runs
+// for the console report, so the clippy disallowed-methods tier (which
+// guards the round path against wall-clock reads) is opted out here.
+#![allow(clippy::disallowed_methods)]
+
 use gauntlet::bench::{save_json, series_json, sparkline, Table};
 use gauntlet::coordinator::baseline::{AdamWParams, AdamWTrainer};
 use gauntlet::coordinator::engine::{GauntletBuilder, GauntletEngine};

@@ -44,6 +44,9 @@ pub fn human_duration(secs: f64) -> String {
 }
 
 /// Time `f` for `iters` iterations after `warmup` warmup calls.
+// bench is an edge module (detlint classification): measurement code is
+// *about* the clock, so the disallowed-methods tier is opted out here.
+#[allow(clippy::disallowed_methods)]
 pub fn time_it<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Timing {
     for _ in 0..warmup {
         f();
@@ -80,6 +83,7 @@ pub fn summarize(samples: &[f64]) -> Timing {
 }
 
 /// Wall-clock a single closure.
+#[allow(clippy::disallowed_methods)]
 pub fn elapsed<T, F: FnOnce() -> T>(f: F) -> (T, Duration) {
     let t0 = Instant::now();
     let out = f();

@@ -9,6 +9,8 @@
 //! sum to 1. A dishonest minority validator therefore cannot pump a peer's
 //! incentive above what the stake majority supports.
 
+use crate::util::det_sum;
+
 #[derive(Clone, Copy, Debug)]
 pub struct YumaParams {
     /// Stake-majority threshold (mainnet default 0.5).
@@ -33,7 +35,7 @@ pub fn yuma_consensus(weights: &[Vec<f64>], stake: &[f64], params: &YumaParams) 
     for row in weights {
         assert_eq!(row.len(), n_peers, "ragged weight matrix");
     }
-    let total_stake: f64 = stake.iter().sum();
+    let total_stake = det_sum(stake.iter().copied());
     if total_stake <= 0.0 {
         return vec![0.0; n_peers];
     }
@@ -43,7 +45,7 @@ pub fn yuma_consensus(weights: &[Vec<f64>], stake: &[f64], params: &YumaParams) 
     let norm: Vec<Vec<f64>> = weights
         .iter()
         .map(|row| {
-            let s: f64 = row.iter().sum();
+            let s = det_sum(row.iter().copied());
             if s > 0.0 {
                 row.iter().map(|w| w / s).collect()
             } else {
@@ -63,8 +65,8 @@ pub fn yuma_consensus(weights: &[Vec<f64>], stake: &[f64], params: &YumaParams) 
             // >= kappa * total
             let mut best = 0.0;
             for &(w, _) in &col {
-                let supporting: f64 =
-                    col.iter().filter(|(wi, _)| *wi >= w).map(|(_, s)| *s).sum();
+                let supporting =
+                    det_sum(col.iter().filter(|(wi, _)| *wi >= w).map(|(_, s)| *s));
                 if supporting >= params.kappa * total_stake {
                     best = w;
                 }
@@ -80,7 +82,7 @@ pub fn yuma_consensus(weights: &[Vec<f64>], stake: &[f64], params: &YumaParams) 
             rank[j] += s * row[j].min(consensus[j]);
         }
     }
-    let total: f64 = rank.iter().sum();
+    let total = det_sum(rank.iter().copied());
     if total > 0.0 {
         for r in &mut rank {
             *r /= total;

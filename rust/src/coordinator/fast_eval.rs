@@ -85,11 +85,12 @@ pub fn sync_score(validator_probe: &[f32], peer_probe: &[f32], lr: f32) -> f64 {
         return 0.0;
     }
     let n = validator_probe.len() as f64;
-    let sum: f64 = validator_probe
-        .iter()
-        .zip(peer_probe)
-        .map(|(a, b)| (*a as f64 - *b as f64).abs())
-        .sum();
+    let sum = crate::util::det_sum(
+        validator_probe
+            .iter()
+            .zip(peer_probe)
+            .map(|(a, b)| (*a as f64 - *b as f64).abs()),
+    );
     sum / (lr as f64 * n)
 }
 

@@ -154,6 +154,12 @@ impl RunConfig {
     /// sizes the persistent `runtime::pool::WorkerPool` the round
     /// pipeline dispatches onto, so the env lookup and CPU probe never
     /// happen per round.
+    // This is THE blessed env-read site: detlint rule D002 exempts the
+    // body of `effective_threads` by name, and the clippy disallowed-
+    // methods tier is opted out here for the same reason — resolution
+    // happens once at assembly, and the fingerprint tests prove round
+    // results are invariant to the resolved width anyway.
+    #[allow(clippy::disallowed_methods)]
     pub fn effective_threads(&self) -> usize {
         if self.threads > 0 {
             return self.threads;

@@ -149,7 +149,7 @@ pub fn normalize_scores(scores: &[f64], power: f64) -> Vec<f64> {
         .iter()
         .map(|s| if s.is_finite() { (s - min).max(0.0).powf(power) } else { 0.0 })
         .collect();
-    let total: f64 = shifted.iter().sum();
+    let total = crate::util::det_sum(shifted.iter().copied());
     if total <= 0.0 || !total.is_finite() {
         return vec![0.0; scores.len()];
     }

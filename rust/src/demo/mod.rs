@@ -32,7 +32,7 @@ impl SparseGrad {
     }
 
     pub fn l2_norm(&self) -> f64 {
-        self.vals.iter().map(|v| (*v as f64) * (*v as f64)).sum::<f64>().sqrt()
+        crate::util::det_sum(self.vals.iter().map(|v| (*v as f64) * (*v as f64))).sqrt()
     }
 
     /// Structural validation against the config's expected dimensions —

@@ -44,6 +44,19 @@
 //! Start with [`coordinator::engine::GauntletBuilder`] or the
 //! `rust/examples/` directory (each example documents which paper
 //! figure it reproduces — see `rust/examples/README.md`).
+//!
+//! **Correctness tooling** (README: "Correctness tooling"): the round
+//! path is statically audited by the in-tree `detlint` crate
+//! (`gauntlet lint` / `cargo run -p detlint`), `unsafe` code must
+//! discharge its obligations explicitly (`unsafe_op_in_unsafe_fn` is
+//! deny-level, and detlint rule U001 requires a `// SAFETY:` comment on
+//! every site), and the `WorkerPool`'s dispatch choreography is
+//! loom-model-checked in `rust/tests/loom_pool.rs`.
+
+// Inside an `unsafe fn`, each unsafe operation must sit in its own
+// `unsafe {}` block with its own SAFETY justification — a fn-level
+// unsafe blanket hides which line carries which obligation.
+#![deny(unsafe_op_in_unsafe_fn)]
 
 pub mod bench;
 pub mod chain;

@@ -8,6 +8,7 @@
 //!   baseline  centralized AdamW DDP comparison run
 //!   eval      downstream zero-shot suites on the initial model
 //!   info      print a config's artifact/ABI summary
+//!   lint      determinism & unsafety static analysis (in-tree detlint)
 //!
 //! Examples:
 //!   gauntlet run --model nano --rounds 20 --peers 6 --topg 3
@@ -51,6 +52,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         "baseline" => cmd_baseline(&flags),
         "eval" => cmd_eval(&flags),
         "info" => cmd_info(&flags),
+        "lint" => cmd_lint(&flags),
         "help" | "--help" | "-h" => {
             print_usage();
             Ok(())
@@ -113,7 +115,9 @@ fn print_usage() {
          \x20           --model/--rounds/--workers/--seed\n\
          \x20 eval      downstream suites on the init model\n\
          \x20           --model/--items\n\
-         \x20 info      print a config's ABI summary (--model)\n"
+         \x20 info      print a config's ABI summary (--model)\n\
+         \x20 lint      determinism & unsafety lint (see README \"Correctness tooling\")\n\
+         \x20           --path <dir>       source tree to scan (default rust/src)\n"
     );
 }
 
@@ -690,6 +694,43 @@ fn cmd_info(flags: &BTreeMap<String, String>) -> Result<()> {
     );
     println!("  artifacts: {}", m.artifacts.join(", "));
     println!("  tensors: {}", m.params.len());
+    Ok(())
+}
+
+/// `gauntlet lint`: the in-tree determinism/unsafety scan, identical to
+/// `cargo run -p detlint -- rust/src` (see README "Correctness tooling").
+fn cmd_lint(flags: &BTreeMap<String, String>) -> Result<()> {
+    let path = match flags.get("path") {
+        Some(p) => std::path::PathBuf::from(p),
+        None => {
+            // From the workspace root `rust/src` exists; when invoked
+            // from elsewhere, fall back to this crate's own source tree.
+            let local = std::path::Path::new("rust/src");
+            if local.is_dir() {
+                local.to_path_buf()
+            } else {
+                std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("src")
+            }
+        }
+    };
+    let report =
+        detlint::scan_tree(&path).with_context(|| format!("scanning {}", path.display()))?;
+    for f in &report.findings {
+        println!("{f}");
+    }
+    println!(
+        "detlint: {} file(s), {} finding(s), {} allow(s) in effect",
+        report.files,
+        report.findings.len(),
+        report.allows_used
+    );
+    if !report.findings.is_empty() {
+        bail!(
+            "{} determinism/unsafety finding(s); fix the site or add a reasoned \
+             `// detlint: allow(RULE, reason)`",
+            report.findings.len()
+        );
+    }
     Ok(())
 }
 

@@ -71,16 +71,15 @@ impl PlackettLuce {
 
         let beta_sq = self.beta * self.beta;
         // c = sqrt(sum_i (sigma_i^2 + beta^2))
-        let c: f64 = rs.iter().map(|r| r.sigma * r.sigma + beta_sq).sum::<f64>().sqrt();
+        let c = crate::util::det_sum(rs.iter().map(|r| r.sigma * r.sigma + beta_sq)).sqrt();
 
         // sum_q[q] = sum over players i with rank_i >= rank_q of exp(mu_i/c)
         let exp_mu: Vec<f64> = rs.iter().map(|r| (r.mu / c).exp()).collect();
         let sum_q: Vec<f64> = (0..n)
             .map(|q| {
-                (0..n)
-                    .filter(|&i| ranks[i] >= ranks[q])
-                    .map(|i| exp_mu[i])
-                    .sum::<f64>()
+                crate::util::det_sum(
+                    (0..n).filter(|&i| ranks[i] >= ranks[q]).map(|i| exp_mu[i]),
+                )
             })
             .collect();
         // a[i] = number of players tied with player i (including itself)

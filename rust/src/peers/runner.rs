@@ -526,7 +526,7 @@ impl PeerRunner {
 
     /// Expose the error-feedback buffer length (tests).
     pub fn error_norm(&self) -> f64 {
-        self.error.iter().map(|x| (*x as f64).powi(2)).sum::<f64>().sqrt()
+        crate::util::det_sum(self.error.iter().map(|x| (*x as f64).powi(2))).sqrt()
     }
 
     pub fn is_divergent(&self) -> bool {

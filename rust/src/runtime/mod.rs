@@ -292,6 +292,8 @@ impl Executor {
     /// Raw tuple-call on an artifact with literal arguments.
     fn call(&self, name: &str, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
         let exe = self.exes.get(name).with_context(|| format!("no artifact {name:?}"))?;
+        // detlint: allow(D002, observability only — the duration feeds ExecStats and is never branched on, so round results cannot depend on it)
+        #[allow(clippy::disallowed_methods)]
         let t0 = Instant::now();
         let out = exe.execute::<xla::Literal>(args).with_context(|| format!("executing {name}"))?;
         let lit = out[0][0].to_literal_sync()?;
@@ -488,7 +490,9 @@ impl ExecBackend for Executor {
 /// Locate `artifacts/<cfg>` relative to the crate root (works from
 /// examples, tests, and benches). Override the artifacts root with the
 /// `GAUNTLET_ARTIFACT_DIR` environment variable (see README).
+#[allow(clippy::disallowed_methods)]
 pub fn artifact_dir(cfg: &str) -> PathBuf {
+    // detlint: allow(D002, artifact location is resolved once when a backend is constructed, before any round runs; it selects which bytes to load, never how they are scored)
     match std::env::var_os("GAUNTLET_ARTIFACT_DIR") {
         Some(dir) => PathBuf::from(dir).join(cfg),
         None => PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts").join(cfg),

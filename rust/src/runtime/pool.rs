@@ -51,7 +51,19 @@
 use std::collections::VecDeque;
 use std::marker::PhantomData;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+
+// Under `--cfg loom` the pool's synchronization primitives are swapped
+// for loom's model-checked equivalents, and `rust/tests/loom_pool.rs`
+// exhaustively explores the dispatch/help-wait/panic interleavings (see
+// README "Correctness tooling" for how to run it — loom is a CI-side
+// dev-dependency only, the normal build stays dependency-free).
+#[cfg(loom)]
+use loom::sync::{Arc, Condvar, Mutex};
+#[cfg(loom)]
+use loom::thread::JoinHandle;
+#[cfg(not(loom))]
 use std::sync::{Arc, Condvar, Mutex};
+#[cfg(not(loom))]
 use std::thread::JoinHandle;
 
 /// A unit of work handed to [`WorkerPool::dispatch`]. The borrow lifetime
@@ -131,6 +143,22 @@ impl Latch {
             // loop, and re-help.
         }
     }
+}
+
+/// Spawn one persistent worker. Loom's scheduler owns thread identity, so
+/// the model-checked build uses its plain `spawn`; the real build names
+/// the thread for debuggers and profilers.
+#[cfg(not(loom))]
+fn spawn_worker(i: usize, shared: Arc<PoolShared>) -> JoinHandle<()> {
+    std::thread::Builder::new()
+        .name(format!("gauntlet-pool-{i}"))
+        .spawn(move || worker_loop(&shared))
+        .expect("spawning pool worker")
+}
+
+#[cfg(loom)]
+fn spawn_worker(_i: usize, shared: Arc<PoolShared>) -> JoinHandle<()> {
+    loom::thread::spawn(move || worker_loop(&shared))
 }
 
 fn worker_loop(shared: &PoolShared) {
@@ -256,15 +284,7 @@ impl WorkerPool {
             available: Condvar::new(),
         });
         let workers = if threads > 1 {
-            (0..threads)
-                .map(|i| {
-                    let shared = Arc::clone(&shared);
-                    std::thread::Builder::new()
-                        .name(format!("gauntlet-pool-{i}"))
-                        .spawn(move || worker_loop(&shared))
-                        .expect("spawning pool worker")
-                })
-                .collect()
+            (0..threads).map(|i| spawn_worker(i, Arc::clone(&shared))).collect()
         } else {
             Vec::new()
         };
@@ -439,7 +459,15 @@ impl std::fmt::Debug for WorkerPool {
     }
 }
 
-#[cfg(test)]
+// Not compiled under loom: these tests exercise real OS threads and
+// timing-dependent shapes; the loom build has its own model-checked
+// suite in `rust/tests/loom_pool.rs`.
+#[cfg(all(test, not(loom)))]
+// detlint is silent in cfg(test) code, but clippy's disallowed-types
+// tier needs an explicit opt-out: ThreadId implements Hash, not Ord, so
+// HashSet is the only std container that can hold it — and the test
+// only asks set-membership questions, never iterates.
+#[allow(clippy::disallowed_types)]
 mod tests {
     use super::*;
     use std::collections::HashSet;

@@ -10,7 +10,7 @@ pub mod rng;
 pub mod stats;
 
 pub use rng::Rng;
-pub use stats::{mean, percentile, std_dev, Ema, OnlineStats};
+pub use stats::{det_sum, mean, percentile, std_dev, Ema, OnlineStats};
 
 /// Mathematical sign with sign(0) = 0 (Rust's `f64::signum` maps +0.0 to
 /// +1.0, which would bias the paper's eq. 3 EMA on exact ties).

@@ -1,11 +1,25 @@
 //! Streaming statistics used by the scoring, metrics, and bench code.
 
+/// Deterministic scalar reduction: a strictly in-order left fold,
+/// `((0 + x0) + x1) + ...`, so the association order is pinned by the
+/// iterator's order rather than left to the `Sum` impl. This is the
+/// blessed spelling for round-path float totals (detlint rule D003);
+/// bulk hot-path reductions should use the fixed-lane `lane_reduce`
+/// kernels instead.
+pub fn det_sum<I: IntoIterator<Item = f64>>(xs: I) -> f64 {
+    let mut acc = 0.0;
+    for x in xs {
+        acc += x;
+    }
+    acc
+}
+
 /// Arithmetic mean; 0.0 for an empty slice.
 pub fn mean(xs: &[f64]) -> f64 {
     if xs.is_empty() {
         return 0.0;
     }
-    xs.iter().sum::<f64>() / xs.len() as f64
+    det_sum(xs.iter().copied()) / xs.len() as f64
 }
 
 /// Sample standard deviation (n-1 denominator); 0.0 below two samples.
@@ -14,7 +28,7 @@ pub fn std_dev(xs: &[f64]) -> f64 {
         return 0.0;
     }
     let m = mean(xs);
-    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+    (det_sum(xs.iter().map(|x| (x - m) * (x - m))) / (xs.len() - 1) as f64).sqrt()
 }
 
 /// Linear-interpolated percentile, q in [0, 100]. Sorts a copy.

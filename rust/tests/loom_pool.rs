@@ -1,0 +1,96 @@
+#![cfg(loom)]
+//! Loom model checks for the `WorkerPool` dispatch choreography.
+//!
+//! Under `--cfg loom` the pool's `Mutex`/`Condvar`/`Arc`/threads are
+//! loom's instrumented versions, and each `loom::model` below runs its
+//! body under **every** schedule the bounded explorer can reach —
+//! compile-time lifetime erasure plus run-time latch blocking is exactly
+//! the kind of choreography where a one-in-a-million interleaving hides
+//! a use-after-free, and these models make that interleaving a
+//! deterministic test failure instead.
+//!
+//! This file compiles to nothing in a normal build (the `#![cfg(loom)]`
+//! above): loom is not a dependency of the workspace. CI's `loom` job
+//! appends the `[target."cfg(loom)".dependencies]` section to
+//! `rust/Cargo.toml` and runs
+//! `RUSTFLAGS="--cfg loom" cargo test --release -p gauntlet --test loom_pool`
+//! (see README "Correctness tooling" to run it locally).
+//!
+//! Loom bounds: each model uses a width-2 pool (2 workers + the model's
+//! main thread = 3 loom threads, under loom's limit of 4), and CI sets
+//! `LOOM_MAX_PREEMPTIONS=2` to keep exploration tractable.
+
+use gauntlet::runtime::WorkerPool;
+
+/// Plain dispatch: a scatter over an even split completes under every
+/// schedule, returns chunks in chunk order, and the pool joins cleanly.
+#[test]
+fn plain_dispatch_completes_in_chunk_order() {
+    loom::model(|| {
+        let pool = WorkerPool::new(2);
+        let mut items: Vec<u32> = vec![1, 2, 3, 4];
+        let out =
+            pool.scatter(&mut items, 2, |base, ch| (base, ch.iter().copied().sum::<u32>()));
+        assert_eq!(out, vec![(0, 3), (2, 7)]);
+    });
+}
+
+/// Uneven-chunk scatter: 3 items over width 2 must split [2, 1] (the
+/// `ceil(len / width)` rule) with per-chunk bases intact, regardless of
+/// which thread runs which chunk or how the help-waiting main thread
+/// interleaves with the workers.
+#[test]
+fn uneven_chunk_scatter_keeps_bases_and_sizes() {
+    loom::model(|| {
+        let pool = WorkerPool::new(2);
+        let mut items: Vec<u32> = vec![7, 8, 9];
+        let out = pool.scatter(&mut items, 2, |base, ch| (base, ch.len()));
+        assert_eq!(out, vec![(0, 2), (2, 1)]);
+    });
+}
+
+/// Nested dispatch on one pool: outer jobs each scatter inner work on
+/// the *same* pool, the validator fan-out shape. The help-while-waiting
+/// protocol (waiters drain the shared queue before blocking) is what
+/// makes this deadlock-free; loom explores the schedules where both
+/// outer jobs wait on inner work simultaneously.
+#[test]
+fn nested_dispatch_on_one_pool_is_deadlock_free() {
+    loom::model(|| {
+        let pool = WorkerPool::new(2);
+        let mut outer: Vec<u32> = vec![10, 20];
+        let pool_ref = &pool;
+        let totals = pool.map_indexed(&mut outer, |i, x| {
+            let mut inner: Vec<u32> = vec![*x, *x + 1];
+            let sums =
+                pool_ref.scatter(&mut inner, 2, |_, ch| ch.iter().copied().sum::<u32>());
+            (i, sums.into_iter().sum::<u32>())
+        });
+        assert_eq!(totals, vec![(0, 21), (1, 41)]);
+    });
+}
+
+/// Worker-panic resume: a panicking job must surface on the waiting
+/// thread (same contract as `join().unwrap()` on a scoped spawn), the
+/// worker that caught it must survive, and the pool must keep serving —
+/// under every schedule, including the one where the *helping waiter*
+/// itself runs the panicking job.
+#[test]
+fn job_panic_resumes_on_waiter_and_pool_survives() {
+    loom::model(|| {
+        let pool = WorkerPool::new(2);
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut items = vec![0u8; 2];
+            pool.scatter(&mut items, 2, |base, _| {
+                if base == 0 {
+                    panic!("deliberate model panic");
+                }
+                base
+            });
+        }));
+        assert!(caught.is_err(), "the job panic must propagate to the waiter");
+        let mut items = vec![0u8; 2];
+        let ok = pool.scatter(&mut items, 2, |base, ch| base + ch.len());
+        assert_eq!(ok, vec![1, 2], "the pool must keep serving after a job panic");
+    });
+}
