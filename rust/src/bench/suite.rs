@@ -34,8 +34,10 @@ use std::path::PathBuf;
 use anyhow::{bail, Context, Result};
 
 use super::{human_duration, time_it, Table, Timing};
-use crate::chain::yuma::{yuma_consensus, YumaParams};
-use crate::chain::Uid;
+#[allow(deprecated)] // yuma_epoch_64x256 deliberately pins the dense shim
+use crate::chain::yuma::yuma_consensus;
+use crate::chain::yuma::YumaParams;
+use crate::chain::{Chain, Uid};
 use crate::coordinator::engine::GauntletBuilder;
 use crate::coordinator::fast_eval::{fast_evaluate_all, RoundChecks};
 use crate::coordinator::run::RunConfig;
@@ -137,6 +139,9 @@ pub fn registry() -> Vec<SuiteSpec> {
                 bench("wire_decode_c57952", |c| bench_wire(c, 57_952, false)),
                 bench("openskill_match_16", bench_openskill),
                 bench("yuma_epoch_64x256", bench_yuma),
+                bench("chain_epoch_10k", |c| bench_chain_epoch(c, 10_000, 1_000, 16)),
+                bench("chain_epoch_100k", |c| bench_chain_epoch(c, 100_000, 1_000, 16)),
+                bench("chain_epoch_1m_sparse", |c| bench_chain_epoch(c, 1_000_000, 1_000, 16)),
                 bench("corpus_shard", bench_corpus),
                 bench("pool_dispatch_j16_t4", bench_pool_dispatch),
                 bench("kernel_grad_into_mid", bench_kernel_grad),
@@ -524,6 +529,7 @@ fn bench_openskill(ctx: &BenchCtx) -> Result<Option<BenchOutcome>> {
 }
 
 /// A Yuma consensus epoch at deployed scale: 64 validators x 256 peers.
+#[allow(deprecated)] // pins the dense shim (now a forwarder into the sparse path)
 fn bench_yuma(ctx: &BenchCtx) -> Result<Option<BenchOutcome>> {
     let (n_val, n_peer) = (64usize, 256usize);
     let mut rng = Rng::new(4);
@@ -534,6 +540,45 @@ fn bench_yuma(ctx: &BenchCtx) -> Result<Option<BenchOutcome>> {
         let _ = yuma_consensus(&w, &stake, &YumaParams::default());
     });
     Ok(Some(BenchOutcome { timing, throughput: None }))
+}
+
+/// Full `Chain::run_epoch` at a registered/active shape: `n_reg` uids on
+/// the table, `active` of them carrying committed weight from each of
+/// `n_val` staked validators. The sparse epoch must scale with the active
+/// set — the 1M shape's dense validator×table matrix would be ~128 GB,
+/// while the sparse union is 1k columns whatever the table size.
+fn bench_chain_epoch(
+    ctx: &BenchCtx,
+    n_reg: u32,
+    active: u32,
+    n_val: u32,
+) -> Result<Option<BenchOutcome>> {
+    let mut chain = Chain::new();
+    let mut validators = Vec::with_capacity(n_val as usize);
+    for v in 0..n_val {
+        let uid = chain.register(&format!("val-{v}"))?;
+        chain.add_stake(uid, 100.0 + v as f64)?;
+        validators.push(uid);
+    }
+    for i in 0..n_reg {
+        chain.register(&format!("peer-{i}"))?;
+    }
+    // Active uids stride across the whole table so the sparse path cannot
+    // win by accidental locality.
+    let stride = (n_reg / active).max(1);
+    let mut rng = Rng::new(9);
+    let weights: Vec<Vec<(Uid, f64)>> = validators
+        .iter()
+        .map(|_| (0..active).map(|i| (n_val + i * stride, rng.range_f64(0.1, 1.0))).collect())
+        .collect();
+    for (v, w) in validators.iter().zip(&weights) {
+        chain.set_weights(*v, w)?;
+    }
+    let timing = time_it(ctx.warmup(1), ctx.iters(10), || {
+        let _ = chain.run_epoch();
+    });
+    let kuid_per_s = active as f64 / timing.mean_s.max(1e-12) / 1e3;
+    Ok(Some(BenchOutcome { timing, throughput: Some((kuid_per_s, "kuid/s")) }))
 }
 
 /// Deterministic assigned-shard generation (the data a peer must train on).

@@ -41,7 +41,9 @@ use std::collections::{BTreeMap, BTreeSet};
 
 pub mod yuma;
 
-pub use yuma::{yuma_consensus, YumaParams};
+#[allow(deprecated)] // the dense shim stays re-exported for downstream callers
+pub use yuma::yuma_consensus;
+pub use yuma::{yuma_consensus_sparse, WeightRows, YumaParams};
 
 use crate::storage::ReadKey;
 
@@ -115,7 +117,34 @@ pub struct ChainState {
     pub immunity_blocks: u64,
 }
 
+/// Total-order key for the stake index: orders stakes *descending* via
+/// `total_cmp`, so `(StakeOrd, Uid)` tuples iterate best-first with an
+/// ascending-uid tiebreak and never panic, whatever the float.
+#[derive(Clone, Copy, Debug, PartialEq)]
+struct StakeOrd(f64);
+
+impl Eq for StakeOrd {}
+
+impl Ord for StakeOrd {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        other.0.total_cmp(&self.0)
+    }
+}
+
+impl PartialOrd for StakeOrd {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
 /// The simulated subnet.
+///
+/// All per-round queries are served from incrementally maintained indexes
+/// — `hotkeys` (registration duplicate check), `staked` (validator order),
+/// `paid` (uids holding a nonzero `last_incentive`) — so registration,
+/// validator resolution, and the Yuma epoch cost O(active · log table)
+/// rather than O(table). The indexes are derived state: [`ChainState`]
+/// does not carry them and [`Chain::from_state`] rebuilds them.
 pub struct Chain {
     pub block: u64,
     neurons: BTreeMap<Uid, Neuron>,
@@ -124,6 +153,13 @@ pub struct Chain {
     free_uids: BTreeSet<Uid>,
     /// Latest committed weight vector per validator uid: target uid -> w.
     weights: BTreeMap<Uid, BTreeMap<Uid, f64>>,
+    /// Registered hotkey -> uid (duplicate check without a table scan).
+    hotkeys: BTreeMap<String, Uid>,
+    /// Staked neurons keyed best-first: stake descending, uid ascending.
+    staked: BTreeSet<(StakeOrd, Uid)>,
+    /// Uids whose `last_incentive` is nonzero — exactly the entries the
+    /// next epoch must clear, replacing the old full-table sweep.
+    paid: BTreeSet<Uid>,
     pub yuma: YumaParams,
     /// TAO emitted to contributors per epoch (paper: real-valued payouts).
     pub emission_per_epoch: f64,
@@ -142,6 +178,9 @@ impl Chain {
             next_uid: 0,
             free_uids: BTreeSet::new(),
             weights: BTreeMap::new(),
+            hotkeys: BTreeMap::new(),
+            staked: BTreeSet::new(),
+            paid: BTreeSet::new(),
             yuma: YumaParams::default(),
             emission_per_epoch: 1.0,
             max_uids: 0,
@@ -170,11 +209,26 @@ impl Chain {
 
     /// Rebuild a chain from an exported [`ChainState`] — the exact inverse
     /// of [`Chain::to_state`], so a resumed run's registrations, epochs,
-    /// and evictions continue bit-identically.
+    /// and evictions continue bit-identically. The hotkey / stake / paid
+    /// indexes are derived from the neuron table here rather than carried
+    /// in the state.
     pub fn from_state(state: ChainState) -> Chain {
+        let neurons: BTreeMap<Uid, Neuron> =
+            state.neurons.into_iter().map(|n| (n.uid, n)).collect();
+        let hotkeys = neurons.values().map(|n| (n.hotkey.clone(), n.uid)).collect();
+        let staked = neurons
+            .values()
+            .filter(|n| n.stake > 0.0)
+            .map(|n| (StakeOrd(n.stake), n.uid))
+            .collect();
+        let paid = neurons
+            .values()
+            .filter(|n| n.last_incentive != 0.0)
+            .map(|n| n.uid)
+            .collect();
         Chain {
             block: state.block,
-            neurons: state.neurons.into_iter().map(|n| (n.uid, n)).collect(),
+            neurons,
             next_uid: state.next_uid,
             free_uids: state.free_uids.into_iter().collect(),
             weights: state
@@ -182,6 +236,9 @@ impl Chain {
                 .into_iter()
                 .map(|(v, row)| (v, row.into_iter().collect()))
                 .collect(),
+            hotkeys,
+            staked,
+            paid,
             yuma: state.yuma,
             emission_per_epoch: state.emission_per_epoch,
             max_uids: state.max_uids,
@@ -216,7 +273,10 @@ impl Chain {
     /// [`Registration::recycled`] whether off-chain per-uid state must be
     /// reset.
     pub fn register_replacing(&mut self, hotkey: &str) -> Result<Registration, ChainError> {
-        if self.neurons.values().any(|n| n.hotkey == hotkey) {
+        // Indexed duplicate check: a table scan here would make bulk
+        // registration O(n^2) — at the 1M-uid scale the sparse epoch
+        // targets, registration itself must stay O(log table).
+        if self.hotkeys.contains_key(hotkey) {
             return Err(ChainError::DuplicateHotkey(hotkey.to_string()));
         }
         let lowest_free = self.free_uids.iter().next().copied();
@@ -247,6 +307,7 @@ impl Chain {
                 validator_permit: false,
             },
         );
+        self.hotkeys.insert(hotkey.to_string(), uid);
         Ok(Registration { uid, recycled, evicted_hotkey })
     }
 
@@ -255,9 +316,14 @@ impl Chain {
     /// validators committed *for* it, so a future occupant of the uid
     /// inherits nothing.
     pub fn deregister(&mut self, uid: Uid) -> Result<(), ChainError> {
-        if self.neurons.remove(&uid).is_none() {
+        let Some(n) = self.neurons.remove(&uid) else {
             return Err(ChainError::UnknownUid(uid));
+        };
+        self.hotkeys.remove(&n.hotkey);
+        if n.stake > 0.0 {
+            self.staked.remove(&(StakeOrd(n.stake), uid));
         }
+        self.paid.remove(&uid);
         self.weights.remove(&uid);
         for row in self.weights.values_mut() {
             row.remove(&uid);
@@ -292,16 +358,38 @@ impl Chain {
             .map(|n| n.uid)
     }
 
+    /// Keep the best-first stake index in step with a stake change: only
+    /// strictly positive stakes are indexed (NaN compares `> 0.0` false on
+    /// both sides, so a NaN-staked neuron simply never enters the index).
+    fn reindex_stake(&mut self, uid: Uid, old: f64, new: f64) {
+        if old > 0.0 {
+            self.staked.remove(&(StakeOrd(old), uid));
+        }
+        if new > 0.0 {
+            self.staked.insert((StakeOrd(new), uid));
+        }
+    }
+
     pub fn add_stake(&mut self, uid: Uid, amount: f64) -> Result<(), ChainError> {
-        let n = self.neurons.get_mut(&uid).ok_or(ChainError::UnknownUid(uid))?;
-        n.stake += amount;
+        let (old, new) = {
+            let n = self.neurons.get_mut(&uid).ok_or(ChainError::UnknownUid(uid))?;
+            let old = n.stake;
+            n.stake += amount;
+            (old, n.stake)
+        };
+        self.reindex_stake(uid, old, new);
         Ok(())
     }
 
     /// Set a neuron's stake to an absolute amount (scenario scripting).
     pub fn set_stake(&mut self, uid: Uid, amount: f64) -> Result<(), ChainError> {
-        let n = self.neurons.get_mut(&uid).ok_or(ChainError::UnknownUid(uid))?;
-        n.stake = amount;
+        let old = {
+            let n = self.neurons.get_mut(&uid).ok_or(ChainError::UnknownUid(uid))?;
+            let old = n.stake;
+            n.stake = amount;
+            old
+        };
+        self.reindex_stake(uid, old, amount);
         Ok(())
     }
 
@@ -320,24 +408,33 @@ impl Chain {
         self.neurons.values()
     }
 
-    pub fn uids(&self) -> Vec<Uid> {
-        self.neurons.keys().copied().collect()
+    /// Registered uids in ascending order, borrowed — collect only if a
+    /// materialized set is really needed.
+    pub fn uids(&self) -> impl Iterator<Item = Uid> + '_ {
+        self.neurons.keys().copied()
+    }
+
+    /// Number of registered neurons.
+    pub fn n_registered(&self) -> usize {
+        self.neurons.len()
     }
 
     /// Validators = staked neurons, ordered by stake descending with an
-    /// ascending-uid tiebreak. `total_cmp` keeps the order total (and
-    /// panic-free) even for NaN stakes, so the lead validator — and thus
-    /// which weight vector drives aggregation — is always deterministic.
-    pub fn validators(&self) -> Vec<Uid> {
-        let mut v: Vec<&Neuron> = self.neurons.values().filter(|n| n.stake > 0.0).collect();
-        v.sort_by(|a, b| b.stake.total_cmp(&a.stake).then(a.uid.cmp(&b.uid)));
-        v.into_iter().map(|n| n.uid).collect()
+    /// ascending-uid tiebreak, served as a borrowed iterator over the
+    /// incrementally maintained stake index — O(#validators), not an
+    /// O(table) filter-and-sort-and-clone. `total_cmp` keeps the index
+    /// order total (and panic-free) even for NaN stakes, so the lead
+    /// validator — and thus which weight vector drives aggregation — is
+    /// always deterministic.
+    pub fn validators(&self) -> impl Iterator<Item = Uid> + '_ {
+        self.staked.iter().map(|(_, u)| *u)
     }
 
     /// The highest-staked validator provides checkpoint locations and the
-    /// top-G peer list in the current protocol (paper §3.3).
+    /// top-G peer list in the current protocol (paper §3.3). O(1) off the
+    /// stake index.
     pub fn lead_validator(&self) -> Option<Uid> {
-        self.validators().first().copied()
+        self.staked.iter().next().map(|(_, u)| *u)
     }
 
     /// A validator commits its (pre-normalized, non-negative) weights.
@@ -366,45 +463,52 @@ impl Chain {
     /// consensus incentives and pay emission. Returns (uid, incentive)
     /// with incentives summing to 1 over peers with any weight (or empty
     /// if no validator has committed anything).
+    ///
+    /// The epoch is *incremental*: consensus runs over the sparse union of
+    /// uids carrying committed weight ([`yuma_consensus_sparse`]), and
+    /// stale eviction scores are cleared through the `paid` index rather
+    /// than a table sweep, so the whole epoch costs
+    /// O(active · validators), independent of how many uids are
+    /// registered.
     pub fn run_epoch(&mut self) -> Vec<(Uid, f64)> {
         // Every epoch resets the eviction scores first — including epochs
         // that pay nobody (no staked committer left): `last_incentive`
         // must reflect the *current* epoch, or eviction would rank peers
-        // by a consensus that no longer exists.
-        for n in self.neurons.values_mut() {
-            n.last_incentive = 0.0;
+        // by a consensus that no longer exists. Only uids in `paid` can
+        // hold a nonzero score, so clearing them is O(previously paid).
+        for uid in std::mem::take(&mut self.paid) {
+            if let Some(n) = self.neurons.get_mut(&uid) {
+                n.last_incentive = 0.0;
+            }
         }
         // Defensive re-check: a committer may have lost its stake (or its
-        // slot) since it set weights.
-        let validators: Vec<Uid> = self
+        // slot) since it set weights. Row order is ascending validator
+        // uid (BTreeMap), the same order the dense path used.
+        let rows_owned: Vec<(f64, Vec<(Uid, f64)>)> = self
             .weights
-            .keys()
-            .copied()
-            .filter(|v| self.neurons.get(v).is_some_and(|n| n.stake > 0.0))
-            .collect();
-        if validators.is_empty() {
-            return vec![];
-        }
-        let stakes: Vec<f64> = validators.iter().map(|v| self.neurons[v].stake).collect();
-        let all_uids = self.uids();
-        let wmat: Vec<Vec<f64>> = validators
             .iter()
-            .map(|v| {
-                let row = &self.weights[v];
-                all_uids.iter().map(|u| row.get(u).copied().unwrap_or(0.0)).collect()
+            .filter_map(|(v, row)| {
+                let n = self.neurons.get(v)?;
+                (n.stake > 0.0)
+                    .then(|| (n.stake, row.iter().map(|(u, w)| (*u, *w)).collect()))
             })
             .collect();
-        let incentives = yuma_consensus(&wmat, &stakes, &self.yuma);
-        let out: Vec<(Uid, f64)> = all_uids
-            .iter()
-            .copied()
-            .zip(incentives.iter().copied())
+        if rows_owned.is_empty() {
+            return vec![];
+        }
+        let mut rows = WeightRows::with_capacity(rows_owned.len());
+        for (stake, row) in &rows_owned {
+            rows.push(*stake, row);
+        }
+        let out: Vec<(Uid, f64)> = yuma_consensus_sparse(&rows, &self.yuma)
+            .into_iter()
             .filter(|(_, inc)| *inc > 0.0)
             .collect();
         for (uid, inc) in &out {
             let n = self.neurons.get_mut(uid).unwrap();
             n.balance += inc * self.emission_per_epoch;
             n.last_incentive = *inc;
+            self.paid.insert(*uid);
         }
         out
     }
@@ -506,7 +610,7 @@ mod tests {
         c.add_stake(b, 50.0).unwrap();
         c.add_stake(a, 50.0).unwrap();
         c.add_stake(d, 50.0).unwrap();
-        assert_eq!(c.validators(), vec![a, b, d], "ties break by ascending uid");
+        assert_eq!(c.validators().collect::<Vec<_>>(), vec![a, b, d], "ties break by uid");
         assert_eq!(c.lead_validator(), Some(a));
     }
 
@@ -519,7 +623,7 @@ mod tests {
         c.add_stake(b, 10.0).unwrap();
         // NaN > 0.0 is false, so the NaN-staked neuron is not a validator;
         // the point is the sort is total and the outcome deterministic.
-        assert_eq!(c.validators(), vec![b]);
+        assert_eq!(c.validators().collect::<Vec<_>>(), vec![b]);
         assert_eq!(c.lead_validator(), Some(b));
     }
 
@@ -698,10 +802,10 @@ mod tests {
 
         let mut rebuilt = Chain::from_state(c.to_state());
         assert_eq!(rebuilt.block, c.block);
-        assert_eq!(rebuilt.uids(), c.uids());
+        assert_eq!(rebuilt.uids().collect::<Vec<_>>(), c.uids().collect::<Vec<_>>());
         assert_eq!(rebuilt.neuron(p0), c.neuron(p0));
         assert_eq!(rebuilt.committed_weights(v), c.committed_weights(v));
-        assert_eq!(rebuilt.validators(), c.validators());
+        assert_eq!(rebuilt.validators().collect::<Vec<_>>(), c.validators().collect::<Vec<_>>());
         // The freed uid is recycled identically on both chains…
         let a = rebuilt.register_replacing("next").unwrap();
         let b = c.register_replacing("next").unwrap();
@@ -709,6 +813,86 @@ mod tests {
         assert_eq!(a.uid, p1);
         // …and the next epoch pays identically.
         assert_eq!(rebuilt.run_epoch(), c.run_epoch());
+    }
+
+    #[test]
+    fn stale_eviction_scores_clear_without_full_sweep() {
+        // Round 1 pays p0; round 2's weights drop p0 entirely. The sparse
+        // epoch never visits p0's column, so its stale `last_incentive`
+        // must be cleared through the paid index — a leak here would let a
+        // once-paid peer dodge eviction forever.
+        let (mut c, v) = chain_with_validator();
+        let p0 = c.register("p0").unwrap();
+        let p1 = c.register("p1").unwrap();
+        c.set_weights(v, &[(p0, 1.0)]).unwrap();
+        c.run_epoch();
+        assert!(c.neuron(p0).unwrap().last_incentive > 0.9);
+        c.set_weights(v, &[(p1, 1.0)]).unwrap();
+        c.run_epoch();
+        assert_eq!(c.neuron(p0).unwrap().last_incentive, 0.0, "stale score cleared");
+        assert!(c.neuron(p1).unwrap().last_incentive > 0.9);
+    }
+
+    #[test]
+    fn hotkey_index_released_on_deregistration() {
+        let mut c = Chain::new();
+        let a = c.register("alice").unwrap();
+        assert_eq!(c.register("alice").unwrap_err(), ChainError::DuplicateHotkey("alice".into()));
+        c.deregister(a).unwrap();
+        // The name is free again (and takes the recycled uid).
+        assert_eq!(c.register("alice").unwrap(), a);
+    }
+
+    #[test]
+    fn stake_index_tracks_add_set_and_deregister() {
+        let mut c = Chain::new();
+        let a = c.register("a").unwrap();
+        let b = c.register("b").unwrap();
+        c.add_stake(a, 10.0).unwrap();
+        c.add_stake(b, 5.0).unwrap();
+        c.add_stake(b, 10.0).unwrap(); // 15 total: b overtakes a
+        assert_eq!(c.validators().collect::<Vec<_>>(), vec![b, a]);
+        c.set_stake(b, 0.0).unwrap(); // demotion leaves the index
+        assert_eq!(c.validators().collect::<Vec<_>>(), vec![a]);
+        assert_eq!(c.lead_validator(), Some(a));
+        c.deregister(a).unwrap();
+        assert_eq!(c.validators().next(), None);
+        assert_eq!(c.lead_validator(), None);
+    }
+
+    #[test]
+    fn epoch_cost_tracks_active_set_not_table() {
+        // 50k registered uids, 32 active: the epoch output and payouts are
+        // exactly those of a 32-uid chain — the other 49,968 slots are
+        // never part of the consensus. (The hotpath suite's
+        // `chain_epoch_1m_sparse` pins the timing claim; this pins the
+        // semantics at a size a unit test can afford.)
+        let mut big = Chain::new();
+        let mut small = Chain::new();
+        let v_big = big.register("v").unwrap();
+        let v_small = small.register("v").unwrap();
+        big.add_stake(v_big, 100.0).unwrap();
+        small.add_stake(v_small, 100.0).unwrap();
+        for i in 0..50_000u32 {
+            big.register(&format!("n{i}")).unwrap();
+        }
+        let mut w_big = Vec::new();
+        let mut w_small = Vec::new();
+        for i in 0..32u32 {
+            // Spread the active uids across the big table.
+            let uid_big = 1 + i * 1_500;
+            let uid_small = small.register(&format!("n{i}")).unwrap();
+            w_big.push((uid_big, (i + 1) as f64));
+            w_small.push((uid_small, (i + 1) as f64));
+        }
+        big.set_weights(v_big, &w_big).unwrap();
+        small.set_weights(v_small, &w_small).unwrap();
+        let inc_big = big.run_epoch();
+        let inc_small = small.run_epoch();
+        assert_eq!(inc_big.len(), 32);
+        let a: Vec<f64> = inc_big.iter().map(|(_, x)| *x).collect();
+        let b: Vec<f64> = inc_small.iter().map(|(_, x)| *x).collect();
+        assert_eq!(a, b, "table size must not leak into the consensus values");
     }
 
     #[test]

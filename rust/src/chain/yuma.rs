@@ -8,7 +8,25 @@
 //! incentives are the stake-weighted sum of clipped weights, normalized to
 //! sum to 1. A dishonest minority validator therefore cannot pump a peer's
 //! incentive above what the stake majority supports.
+//!
+//! # Sparse rows
+//!
+//! The registered uid table is permissionless and can be orders of
+//! magnitude larger than the set of uids any validator actually weights
+//! (the paper's "no control over the users that can register"). The
+//! primary entry point is therefore [`yuma_consensus_sparse`] over
+//! [`WeightRows`] — per-validator `(uid, weight)` rows — which computes
+//! consensus only over the *union of touched uids*, so an epoch costs
+//! O(active), not O(table). A uid absent from every row holds weight 0
+//! with every validator: it can never raise the consensus above 0 and
+//! contributes exactly 0 to each clipped stake-weighted rank, so skipping
+//! it is not an approximation (the dense equivalence is pinned to 1e-12 by
+//! `prop_sparse_equals_dense`). The dense [`yuma_consensus`] survives as a
+//! deprecated forwarding shim.
 
+use std::collections::BTreeMap;
+
+use crate::chain::Uid;
 use crate::util::det_sum;
 
 #[derive(Clone, Copy, Debug)]
@@ -23,9 +41,121 @@ impl Default for YumaParams {
     }
 }
 
+/// Borrowed view of per-validator sparse weight rows for
+/// [`yuma_consensus_sparse`]: each entry is one validator's stake and its
+/// committed `(target uid, weight)` row, sorted by ascending uid — exactly
+/// the shape the chain stores (`BTreeMap` iteration order). Rows may be
+/// empty (a committed-then-scrubbed validator still contributes its stake
+/// to the consensus denominator, as in the dense formulation).
+#[derive(Default)]
+pub struct WeightRows<'a> {
+    rows: Vec<(f64, &'a [(Uid, f64)])>,
+}
+
+impl<'a> WeightRows<'a> {
+    pub fn new() -> Self {
+        WeightRows { rows: Vec::new() }
+    }
+
+    pub fn with_capacity(n: usize) -> Self {
+        WeightRows { rows: Vec::with_capacity(n) }
+    }
+
+    /// Add one validator's stake and sparse weight row. The row must be
+    /// sorted by ascending uid with no duplicates (debug-asserted inside
+    /// the consensus): normalization and rank folds run in uid order, the
+    /// order that makes the sparse epoch bit-compatible with the dense one.
+    pub fn push(&mut self, stake: f64, row: &'a [(Uid, f64)]) {
+        self.rows.push((stake, row));
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+}
+
+/// Yuma consensus over sparse per-validator weight rows: returns
+/// `(uid, incentive)` pairs in ascending uid order for every uid touched
+/// by at least one row (untouched uids have incentive exactly 0 and are
+/// not materialized). Incentives sum to 1 (or all zeros if every weight —
+/// or all stake — is zero), matching [`yuma_consensus`] on the densified
+/// matrix to 1e-12.
+pub fn yuma_consensus_sparse(rows: &WeightRows<'_>, params: &YumaParams) -> Vec<(Uid, f64)> {
+    if rows.rows.is_empty() {
+        return vec![];
+    }
+    let total_stake = det_sum(rows.rows.iter().map(|(s, _)| *s));
+
+    // One pass over the rows builds, per touched uid, the (normalized
+    // weight, stake) column restricted to the validators that committed a
+    // weight for it — in validator order, which the rank fold below
+    // preserves. Row normalization divides by the row's det_sum, exactly
+    // as the dense path does (zeros interleave as exact no-ops).
+    let mut cols: BTreeMap<Uid, Vec<(f64, f64)>> = BTreeMap::new();
+    for (stake, row) in &rows.rows {
+        debug_assert!(
+            row.windows(2).all(|p| p[0].0 < p[1].0),
+            "weight row must be sorted by ascending uid without duplicates"
+        );
+        let scale = det_sum(row.iter().map(|(_, w)| *w));
+        for &(uid, w) in *row {
+            let nw = if scale > 0.0 { w / scale } else { w };
+            cols.entry(uid).or_default().push((nw, *stake));
+        }
+    }
+    if total_stake <= 0.0 {
+        return cols.keys().map(|&u| (u, 0.0)).collect();
+    }
+
+    // Per touched uid: the kappa-stake-weighted consensus quantile over
+    // its column, then the stake-weighted sum of clipped weights. Absent
+    // validators hold weight 0 here — below any positive candidate
+    // threshold, and a +0.0 term in the rank fold — so the column scan
+    // over touching validators is equivalent to the dense column scan.
+    let mut rank: Vec<(Uid, f64)> = Vec::with_capacity(cols.len());
+    for (&uid, col) in &cols {
+        let mut sorted = col.clone();
+        sorted.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        // largest w s.t. stake of validators with weight >= w is
+        // >= kappa * total
+        let mut best = 0.0;
+        for &(w, _) in &sorted {
+            let supporting =
+                det_sum(sorted.iter().filter(|(wi, _)| *wi >= w).map(|(_, s)| *s));
+            if supporting >= params.kappa * total_stake {
+                best = w;
+            }
+        }
+        // Clip and combine by stake, in validator order (`col`, not
+        // `sorted` — the fold order is part of the determinism contract).
+        let r = det_sum(col.iter().map(|&(w, s)| s * w.min(best)));
+        rank.push((uid, r));
+    }
+
+    let total = det_sum(rank.iter().map(|(_, r)| *r));
+    if total > 0.0 {
+        for (_, r) in &mut rank {
+            *r /= total;
+        }
+    }
+    rank
+}
+
 /// `weights[v][j]` = validator v's (non-negative) weight on peer j.
 /// `stake[v]` = validator v's stake. Returns per-peer incentives summing to
 /// 1 (all zeros if every weight is zero).
+///
+/// Dense shim over [`yuma_consensus_sparse`]: it materializes every
+/// `(column index, weight)` pair — zeros included — so it costs
+/// O(validators × peers) regardless of sparsity.
+#[deprecated(
+    note = "use `yuma_consensus_sparse` over `WeightRows`; the dense matrix \
+            costs O(validators × table) per epoch"
+)]
 pub fn yuma_consensus(weights: &[Vec<f64>], stake: &[f64], params: &YumaParams) -> Vec<f64> {
     assert_eq!(weights.len(), stake.len());
     if weights.is_empty() {
@@ -35,63 +165,23 @@ pub fn yuma_consensus(weights: &[Vec<f64>], stake: &[f64], params: &YumaParams) 
     for row in weights {
         assert_eq!(row.len(), n_peers, "ragged weight matrix");
     }
-    let total_stake = det_sum(stake.iter().copied());
-    if total_stake <= 0.0 {
-        return vec![0.0; n_peers];
-    }
-
-    // Row-normalize each validator's weights (the chain stores weights
-    // already normalized; we re-normalize defensively).
-    let norm: Vec<Vec<f64>> = weights
+    let owned: Vec<Vec<(Uid, f64)>> = weights
         .iter()
-        .map(|row| {
-            let s = det_sum(row.iter().copied());
-            if s > 0.0 {
-                row.iter().map(|w| w / s).collect()
-            } else {
-                row.clone()
-            }
-        })
+        .map(|row| row.iter().enumerate().map(|(j, &w)| (j as Uid, w)).collect())
         .collect();
-
-    // Consensus per peer: kappa-stake-weighted quantile of the column.
-    let consensus: Vec<f64> = (0..n_peers)
-        .map(|j| {
-            // candidate thresholds are the committed weights themselves
-            let mut col: Vec<(f64, f64)> =
-                norm.iter().zip(stake).map(|(row, &s)| (row[j], s)).collect();
-            col.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
-            // largest w s.t. stake of validators with weight >= w is
-            // >= kappa * total
-            let mut best = 0.0;
-            for &(w, _) in &col {
-                let supporting =
-                    det_sum(col.iter().filter(|(wi, _)| *wi >= w).map(|(_, s)| *s));
-                if supporting >= params.kappa * total_stake {
-                    best = w;
-                }
-            }
-            best
-        })
-        .collect();
-
-    // Clip and combine by stake.
-    let mut rank = vec![0.0; n_peers];
-    for (row, &s) in norm.iter().zip(stake) {
-        for j in 0..n_peers {
-            rank[j] += s * row[j].min(consensus[j]);
-        }
+    let mut rows = WeightRows::with_capacity(owned.len());
+    for (row, &s) in owned.iter().zip(stake) {
+        rows.push(s, row);
     }
-    let total = det_sum(rank.iter().copied());
-    if total > 0.0 {
-        for r in &mut rank {
-            *r /= total;
-        }
+    let mut out = vec![0.0; n_peers];
+    for (uid, inc) in yuma_consensus_sparse(&rows, params) {
+        out[uid as usize] = inc;
     }
-    rank
+    out
 }
 
 #[cfg(test)]
+#[allow(deprecated)] // the dense shim is exercised deliberately throughout
 mod tests {
     use super::*;
     use crate::prop;
@@ -106,6 +196,49 @@ mod tests {
         let inc = yuma_consensus(&[vec![0.75, 0.25]], &[100.0], &p());
         assert!((inc[0] - 0.75).abs() < 1e-12);
         assert!((inc[1] - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sparse_single_validator_passthrough() {
+        let row = vec![(7 as Uid, 0.75), (900_000 as Uid, 0.25)];
+        let mut rows = WeightRows::new();
+        rows.push(100.0, &row);
+        let inc = yuma_consensus_sparse(&rows, &p());
+        assert_eq!(inc.len(), 2, "only touched uids materialize: {inc:?}");
+        assert_eq!(inc[0].0, 7);
+        assert_eq!(inc[1].0, 900_000);
+        assert!((inc[0].1 - 0.75).abs() < 1e-12);
+        assert!((inc[1].1 - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sparse_zero_everything_is_safe() {
+        assert_eq!(yuma_consensus_sparse(&WeightRows::new(), &p()), vec![]);
+        let row = vec![(3 as Uid, 1.0)];
+        let mut rows = WeightRows::new();
+        rows.push(0.0, &row);
+        assert_eq!(yuma_consensus_sparse(&rows, &p()), vec![(3, 0.0)], "no stake, no payout");
+        let zero_row = vec![(3 as Uid, 0.0)];
+        let mut rows = WeightRows::new();
+        rows.push(5.0, &zero_row);
+        assert_eq!(yuma_consensus_sparse(&rows, &p()), vec![(3, 0.0)]);
+    }
+
+    #[test]
+    fn sparse_minority_validator_cannot_pump_a_peer() {
+        // Same economics as the dense test below, but over a huge uid
+        // space: the touched union is {10, 999_999} and nothing else is
+        // ever visited.
+        let honest = vec![(10 as Uid, 1.0)];
+        let dishonest = vec![(999_999 as Uid, 1.0)];
+        let mut rows = WeightRows::new();
+        rows.push(45.0, &honest);
+        rows.push(45.0, &honest);
+        rows.push(10.0, &dishonest);
+        let inc = yuma_consensus_sparse(&rows, &p());
+        let get = |u: Uid| inc.iter().find(|(x, _)| *x == u).map(|(_, i)| *i).unwrap();
+        assert!(get(999_999) < 1e-9, "pumped peer got {}", get(999_999));
+        assert!((get(10) - 1.0).abs() < 1e-9);
     }
 
     #[test]
@@ -198,6 +331,71 @@ mod tests {
                 "non-finite or negative incentive: {inc:?}"
             );
             prop_assert!(total <= 1.0 + 1e-9, "incentives sum {total} > 1");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_sparse_equals_dense() {
+        // The API-redesign pin: consensus over sparse rows holding only the
+        // nonzero entries must match the dense matrix — zeros and all — to
+        // 1e-12, including columns nobody touches (implicitly zero) and
+        // zero-stake validators. Uids are spread over a range far larger
+        // than the active count so the sparse path cannot secretly
+        // densify.
+        prop::check("yuma-sparse-vs-dense", 60, |rng, size| {
+            let n_val = 1 + size % 6;
+            let n_peer = 2 + size % 12;
+            let stride = 1 + (size as u32 % 1000) * 97; // uid gaps up to ~100k
+            let uids: Vec<Uid> = (0..n_peer as u32).map(|j| j * stride).collect();
+            let weights: Vec<Vec<f64>> = (0..n_val)
+                .map(|_| {
+                    (0..n_peer)
+                        .map(|_| if rng.chance(0.6) { 0.0 } else { rng.range_f64(0.0, 1.0) })
+                        .collect()
+                })
+                .collect();
+            let stake: Vec<f64> = (0..n_val)
+                .map(|_| if rng.chance(0.2) { 0.0 } else { rng.range_f64(1.0, 100.0) })
+                .collect();
+
+            let dense = yuma_consensus(&weights, &stake, &p());
+
+            let sparse_rows: Vec<Vec<(Uid, f64)>> = weights
+                .iter()
+                .map(|row| {
+                    row.iter()
+                        .enumerate()
+                        .filter(|(_, w)| **w != 0.0)
+                        .map(|(j, &w)| (uids[j], w))
+                        .collect()
+                })
+                .collect();
+            let mut rows = WeightRows::with_capacity(n_val);
+            for (row, &s) in sparse_rows.iter().zip(&stake) {
+                rows.push(s, row);
+            }
+            let sparse = yuma_consensus_sparse(&rows, &p());
+
+            prop_assert!(
+                sparse.windows(2).all(|p| p[0].0 < p[1].0),
+                "sparse output not ascending-uid: {sparse:?}"
+            );
+            for (j, &uid) in uids.iter().enumerate() {
+                let s = sparse
+                    .iter()
+                    .find(|(u, _)| *u == uid)
+                    .map(|(_, i)| *i)
+                    .unwrap_or(0.0);
+                prop_assert!(
+                    (s - dense[j]).abs() < 1e-12,
+                    "uid {uid} (col {j}): sparse {s} vs dense {}",
+                    dense[j]
+                );
+            }
+            for (u, _) in &sparse {
+                prop_assert!(uids.contains(u), "sparse invented uid {u}");
+            }
             Ok(())
         });
     }

@@ -17,7 +17,7 @@ use anyhow::Result;
 
 use crate::data::Corpus;
 use crate::demo::SparseGrad;
-use crate::runtime::{EvalPeerCase, ExecBackend};
+use crate::runtime::{EvalPeerCase, ExecBackend, ThetaShared};
 
 /// Result of one primary evaluation.
 #[derive(Clone, Copy, Debug)]
@@ -101,7 +101,7 @@ impl PrimaryEvaluator {
     pub fn evaluate_batch<E: ExecBackend + ?Sized>(
         &mut self,
         exec: &E,
-        theta: &[f32],
+        theta: &ThetaShared,
         peers: &[(u32, &SparseGrad)],
         round: u64,
         corpus: &Corpus,
@@ -138,7 +138,7 @@ impl PrimaryEvaluator {
                 tok_rand,
             })
             .collect();
-        let raw = exec.eval_peer_batch(theta, beta, &cases)?;
+        let raw = exec.eval_peer_batch_shared(theta, beta, &cases)?;
         Ok(raw
             .into_iter()
             .map(|(la0, la1, lr0, lr1)| PrimaryEval {

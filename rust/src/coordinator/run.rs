@@ -52,7 +52,7 @@
 //! PEERSCOREs, weights, and parameters are bit-identical at any thread
 //! count (pinned by `tests/parallel_determinism.rs`).
 
-use std::collections::{BTreeMap, BTreeSet};
+use std::collections::BTreeMap;
 use std::sync::Arc;
 
 use anyhow::{Context, Result};
@@ -70,7 +70,9 @@ use crate::demo::wire::Submission;
 use crate::minjson::{self, fnum, read_f64, Value};
 use crate::peers::{Behavior, PeerCtx, PeerOutput, PeerRunner};
 use crate::runtime::pool::Job;
-use crate::runtime::{artifact_dir, exec_service, ExecBackend, Executor, SimExec, WorkerPool};
+use crate::runtime::{
+    artifact_dir, exec_service, ExecBackend, Executor, SimExec, ThetaShared, WorkerPool,
+};
 use crate::scenario::{Event, Scenario};
 use crate::storage::{ObjectStore, ProviderModel};
 
@@ -739,10 +741,13 @@ impl<E: ExecBackend + 'static> TemplarRunWith<E> {
 
         // Resolve the peer set from the chain registry: a runner whose uid
         // is gone (scripted leave above, or an eviction by any
-        // registration path) no longer takes turns.
-        let registered: BTreeSet<Uid> = self.chain.uids().into_iter().collect();
+        // registration path) no longer takes turns. Membership is probed
+        // per runner — O(active · log table) — rather than materializing
+        // the registered set, which at 1M uids would cost more than the
+        // round itself.
         let before = self.peers.len();
-        self.peers.retain(|p| registered.contains(&p.uid));
+        let chain = &self.chain;
+        self.peers.retain(|p| chain.neuron(p.uid).is_some());
         if self.peers.len() != before {
             let count = before - self.peers.len();
             self.emit(RoundEvent::RunnersDropped { round, count });
@@ -877,7 +882,11 @@ impl<E: ExecBackend + 'static> TemplarRunWith<E> {
         let mut outcomes: Vec<RoundOutcome> = {
             let exec = &self.exec;
             let corpus = &self.corpus;
-            let theta = &self.theta;
+            // Freeze theta once per round: every validator's evaluation
+            // requests clone this handle, so the funnel ships pointers,
+            // not per-call copies of the parameter vector.
+            let theta_shared: ThetaShared = ThetaShared::from(self.theta.as_slice());
+            let theta = &theta_shared;
             let clock = &self.clock;
             let store = &self.store;
             let pool = &self.pool;
@@ -1018,8 +1027,7 @@ impl<E: ExecBackend + 'static> TemplarRunWith<E> {
         let lead_idx = self
             .chain
             .validators()
-            .iter()
-            .find_map(|u| self.validators.iter().position(|v| v.uid == *u))
+            .find_map(|u| self.validators.iter().position(|v| v.uid == u))
             .unwrap_or(0);
         let outcome = outcomes
             .into_iter()

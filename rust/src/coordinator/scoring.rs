@@ -59,8 +59,11 @@ impl ScoreBook {
         self.states.remove(&uid)
     }
 
-    pub fn uids(&self) -> Vec<Uid> {
-        self.states.keys().copied().collect()
+    /// Known peer uids in ascending order, borrowed. The book only ever
+    /// holds active peers (states are created by `ensure` and removed on
+    /// uid recycling), so iteration here is O(active) by construction.
+    pub fn uids(&self) -> impl Iterator<Item = Uid> + '_ {
+        self.states.keys().copied()
     }
 
     /// Iterate every `(uid, state)` pair in uid order (snapshot export).

@@ -326,6 +326,15 @@ fn cfg_from_json(v: &Value) -> Result<RunConfig> {
 
 // ------------------------- chain codec -----------------------------------
 
+/// Schema note — sparse weight books: `"weights"` serializes each
+/// validator's committed row as `[validator_uid, [[uid, w], ...]]`, i.e.
+/// only the uids the validator actually weighted. This is the same sparse
+/// shape `Chain::run_epoch` consumes, so a snapshot of a 1M-uid table
+/// costs O(active) weight entries, not O(validators × table). The chain's
+/// derived indexes (hotkey map, stake order, the `paid` set of uids
+/// holding a nonzero `last_incentive`) are deliberately NOT serialized:
+/// `Chain::from_state` rebuilds all three from the neuron records, so the
+/// snapshot format did not change when the indexes were introduced.
 fn chain_to_json(c: &ChainState) -> Value {
     minjson::obj(vec![
         ("block", minjson::num(c.block as f64)),
@@ -827,6 +836,35 @@ mod tests {
         for (a, b) in xs.iter().zip(&back) {
             assert_eq!(a.to_bits(), b.to_bits());
         }
+    }
+
+    #[test]
+    fn chain_codec_roundtrips_sparse_weight_books() {
+        use crate::chain::Chain;
+        let mut chain = Chain::new();
+        let v = chain.register("val").unwrap();
+        chain.add_stake(v, 10.0).unwrap();
+        let mut far = 0;
+        for i in 0..500 {
+            far = chain.register(&format!("peer-{i}")).unwrap();
+        }
+        chain.set_weights(v, &[(1, 0.25), (far, 0.75)]).unwrap();
+        let paid = chain.run_epoch(); // populate last_incentive / paid index
+        assert_eq!(paid.len(), 2);
+
+        let state = chain.to_state();
+        let back = chain_from_json(&chain_to_json(&state)).unwrap();
+        // The book stays sparse on the wire: two entries for the one
+        // committed row, however many uids the table holds.
+        assert_eq!(back.weights, state.weights);
+        assert_eq!(back.weights[0].1.len(), 2);
+        assert_eq!(back.neurons, state.neurons);
+        assert_eq!(back.next_uid, state.next_uid);
+        assert_eq!(back.free_uids, state.free_uids);
+        // And the rebuilt chain re-derives the indexes: a second epoch on
+        // the restored chain pays the same uids the same incentives.
+        let mut restored = Chain::from_state(back);
+        assert_eq!(restored.run_epoch(), chain.run_epoch());
     }
 
     #[test]

@@ -20,7 +20,7 @@ use super::GauntletParams;
 use crate::chain::{Chain, Uid};
 use crate::data::Corpus;
 use crate::demo::wire::Submission;
-use crate::runtime::{ExecBackend, WorkerPool};
+use crate::runtime::{ExecBackend, ThetaShared, WorkerPool};
 use crate::storage::{ObjectStore, ReadKey};
 use crate::util::Rng;
 
@@ -80,12 +80,15 @@ impl Validator {
     /// the sampling RNG) runs in peer order on this thread, so the outcome
     /// is independent of `fanout` — the determinism the parallel pipeline
     /// relies on.
+    /// `theta` is the round's frozen parameter snapshot as a shared
+    /// handle: evaluation requests clone the `Arc`, so a funneled backend
+    /// (`ExecClient`) ships a pointer per sweep, not a theta-sized copy.
     #[allow(clippy::too_many_arguments)]
     pub fn evaluate_round<E: ExecBackend + ?Sized>(
         &mut self,
         exec: &E,
         corpus: &Corpus,
-        theta: &[f32],
+        theta: &ThetaShared,
         round: u64,
         clock: &RoundClock,
         store: &ObjectStore,
@@ -203,8 +206,9 @@ impl Validator {
     ) -> Result<RoundOutcome> {
         let read_keys = chain_read_keys(chain, peer_uids)?;
         let pool = WorkerPool::inline();
+        let theta: ThetaShared = theta.into(); // one copy; callers stay slice-based
         let out = self.evaluate_round(
-            exec, corpus, theta, round, clock, store, &read_keys, peer_uids, lr_t, &pool, 1,
+            exec, corpus, &theta, round, clock, store, &read_keys, peer_uids, lr_t, &pool, 1,
         )?;
         chain.set_weights(self.uid, &out.incentives)?;
         Ok(out)

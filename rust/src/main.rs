@@ -96,6 +96,9 @@ fn print_usage() {
          \x20           --rounds <n>       soak length (default 2000)\n\
          \x20           --peers <spec>     population (default: full mixed zoo)\n\
          \x20           --snapshot-every <n> snapshot/resume self-test cadence (0 = off)\n\
+         \x20           --churn <rate>     production-rate registration churn:\n\
+         \x20                              steady joins/round against a capped slot\n\
+         \x20                              table (0 = off; evicts lowest incentive)\n\
          \x20           --fuzz <cases>     instead: run N random adversary scripts\n\
          \x20                              through full engine runs (prop::scenario)\n\
          \x20           --fuzz-seed <s>    base seed for --fuzz\n\
@@ -455,10 +458,45 @@ fn cmd_soak(flags: &BTreeMap<String, String>) -> Result<()> {
     let peers = parse_peers(&flag(flags, "peers", default_zoo.to_string())?)?;
     let n_peers = peers.len();
 
+    // Production-rate registration churn (`--churn <joins/round>`):
+    // newcomers arrive at a steady rate against a capped slot table, so
+    // once the table fills every join displaces the lowest-incentive
+    // peer. This soaks the chain's derived indexes (hotkey map, stake
+    // order, paid set) at the registration rhythm a live subnet sees —
+    // a long churny run cycles far more uids through the table than are
+    // ever active, exactly the regime the sparse epoch is built for.
+    let churn: f64 = flag(flags, "churn", 0.0)?;
+    anyhow::ensure!(
+        churn >= 0.0 && churn.is_finite(),
+        "--churn must be a finite joins-per-round rate >= 0"
+    );
+    let scenario = if churn > 0.0 {
+        let classes = ["honest", "freeloader", "late:0.3", "stale:3"];
+        let mut script = String::new();
+        let mut due = 0.0_f64;
+        let mut k = 0usize;
+        for r in 1..rounds {
+            due += churn;
+            while due >= 1.0 {
+                due -= 1.0;
+                script.push_str(&format!("@{r} join {}\n", classes[k % classes.len()]));
+                k += 1;
+            }
+        }
+        gauntlet::scenario::Scenario::parse(&script)?
+    } else {
+        gauntlet::scenario::Scenario::default()
+    };
+    let churn_events = scenario.len();
+
     let mut engine = GauntletBuilder::sim()
         .model(&model)
         .rounds(rounds)
         .peers(peers)
+        .scenario(scenario)
+        // The cap (initial population + slack) is what turns the steady
+        // join stream into production churn: join -> immunity -> evict.
+        .max_uids(if churn > 0.0 { 1 + n_peers + 2 } else { 0 })
         .seed(seed)
         .threads(flag(flags, "threads", 0)?)
         .eval_every(flag(flags, "eval-every", 0)?)
@@ -466,7 +504,7 @@ fn cmd_soak(flags: &BTreeMap<String, String>) -> Result<()> {
         .build()?;
     println!(
         "soak: model={model} rounds={rounds} peers={n_peers} seed={seed} \
-         snapshot-every={snapshot_every}"
+         snapshot-every={snapshot_every} churn={churn}/round ({churn_events} joins)"
     );
 
     let mut tracker = InvariantTracker::default();

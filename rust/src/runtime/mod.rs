@@ -41,6 +41,13 @@ pub use pool::WorkerPool;
 pub use service::{exec_service, ExecClient, ExecHost};
 pub use sim::{SimExec, SimSpec, LANES};
 
+/// Shared theta snapshot handle: the round pipeline freezes theta into one
+/// `Arc<[f32]>` per round and every evaluation request clones the handle,
+/// so calls crossing the exec-service funnel carry a pointer instead of a
+/// fresh copy of the parameter vector (ROADMAP: "zero-copy data plane,
+/// remaining surface").
+pub type ThetaShared = std::sync::Arc<[f32]>;
+
 /// One case of a batched [`ExecBackend::eval_peer_batch`] sweep: a dense
 /// coefficient vector plus the two token batches it is scored on (the
 /// peer's assigned shard and the validator's random-eval shard).
@@ -218,6 +225,38 @@ pub trait ExecBackend {
             .iter()
             .map(|c| self.eval_peer(theta, c.coeff, beta, c.tok_assigned, c.tok_rand))
             .collect()
+    }
+
+    // ------------------------------------------------------------------
+    // shared-theta batched kernels (zero-copy funnel surface)
+    //
+    // The validator stage evaluates every peer against the *same* theta
+    // snapshot; taking it as a [`ThetaShared`] handle lets a proxying
+    // backend ship an `Arc` clone across the exec-service funnel instead
+    // of copying the full parameter vector per request. The defaults
+    // deref to the slice kernels, so in-process backends are untouched
+    // and bit-transparency is structural.
+    // ------------------------------------------------------------------
+
+    /// [`ExecBackend::loss_delta_batch`] over a shared theta handle.
+    fn loss_delta_batch_shared(
+        &self,
+        theta: &ThetaShared,
+        candidates: &[(&[f32], f32)],
+        tokens: &[i32],
+    ) -> Result<Vec<(f32, f32)>> {
+        self.loss_delta_batch(theta, candidates, tokens)
+    }
+
+    /// [`ExecBackend::eval_peer_batch`] over a shared theta handle — the
+    /// entry point the validator's sampled peer sweep uses.
+    fn eval_peer_batch_shared(
+        &self,
+        theta: &ThetaShared,
+        beta: f32,
+        cases: &[EvalPeerCase<'_>],
+    ) -> Result<Vec<(f32, f32, f32, f32)>> {
+        self.eval_peer_batch(theta, beta, cases)
     }
 
     /// A `Sync` view of this backend, if its entry points may be called

@@ -32,7 +32,7 @@ use std::sync::mpsc::{channel, Receiver, Sender};
 
 use anyhow::{anyhow, Result};
 
-use super::{EvalPeerCase, ExecBackend, ModelMeta};
+use super::{EvalPeerCase, ExecBackend, ModelMeta, ThetaShared};
 
 /// A boxed request: runs against the backend on the owner thread.
 type Job<E> = Box<dyn FnOnce(&E) + Send>;
@@ -231,6 +231,52 @@ impl<E: ExecBackend + 'static> ExecBackend for ExecClient<E> {
         *idx_out = idx;
         Ok(())
     }
+
+    // Shared-theta kernels: the whole point of the handle is that these
+    // overrides move an `Arc` clone into the request instead of
+    // `theta.to_vec()` — the one theta-sized copy left on the validator
+    // path. The owner-side backend still sees a plain `&[f32]`.
+
+    fn loss_delta_batch_shared(
+        &self,
+        theta: &ThetaShared,
+        candidates: &[(&[f32], f32)],
+        tokens: &[i32],
+    ) -> Result<Vec<(f32, f32)>> {
+        let theta = ThetaShared::clone(theta);
+        let tokens = tokens.to_vec();
+        let owned: Vec<(Vec<f32>, f32)> =
+            candidates.iter().map(|&(c, s)| (c.to_vec(), s)).collect();
+        self.call(move |e| {
+            let views: Vec<(&[f32], f32)> =
+                owned.iter().map(|(c, s)| (c.as_slice(), *s)).collect();
+            e.loss_delta_batch(&theta, &views, &tokens)
+        })
+    }
+
+    fn eval_peer_batch_shared(
+        &self,
+        theta: &ThetaShared,
+        beta: f32,
+        cases: &[EvalPeerCase<'_>],
+    ) -> Result<Vec<(f32, f32, f32, f32)>> {
+        let theta = ThetaShared::clone(theta);
+        let owned: Vec<(Vec<f32>, Vec<i32>, Vec<i32>)> = cases
+            .iter()
+            .map(|c| (c.coeff.to_vec(), c.tok_assigned.to_vec(), c.tok_rand.to_vec()))
+            .collect();
+        self.call(move |e| {
+            let views: Vec<EvalPeerCase<'_>> = owned
+                .iter()
+                .map(|(coeff, tok_assigned, tok_rand)| EvalPeerCase {
+                    coeff,
+                    tok_assigned,
+                    tok_rand,
+                })
+                .collect();
+            e.eval_peer_batch(&theta, beta, &views)
+        })
+    }
 }
 
 #[cfg(test)]
@@ -289,6 +335,66 @@ mod tests {
             h.join().unwrap()
         });
         for (a, b) in direct.iter().zip(&via_funnel) {
+            assert_eq!((a.0.to_bits(), a.1.to_bits()), (b.0.to_bits(), b.1.to_bits()));
+        }
+    }
+
+    #[test]
+    fn shared_theta_handle_crosses_the_funnel_bit_transparently() {
+        // The Arc-handle path must be indistinguishable from the slice
+        // path: same bits out of eval_peer_batch whether theta crosses the
+        // funnel as a per-call copy or as a shared handle — and the handle
+        // itself must not be copied (same allocation before/after).
+        let sim = SimExec::new(&SimSpec::nano(), 9);
+        let theta: ThetaShared = ExecBackend::init_params(&sim).unwrap().into();
+        let n_tok = sim.meta().batch * (sim.meta().seq + 1);
+        let tok_a: Vec<i32> = (0..n_tok as i32).collect();
+        let tok_r: Vec<i32> = (0..n_tok as i32).rev().collect();
+        let coeff = vec![0.5f32; sim.meta().padded_count];
+        let cases =
+            vec![EvalPeerCase { coeff: &coeff, tok_assigned: &tok_a, tok_rand: &tok_r }];
+        let direct = sim.eval_peer_batch(&theta, 0.01, &cases).unwrap();
+
+        let (client, host) = exec_service(&sim);
+        let via_funnel = std::thread::scope(|s| {
+            let c = client.clone();
+            let (theta, coeff, tok_a, tok_r) = (&theta, &coeff, &tok_a, &tok_r);
+            let h = s.spawn(move || {
+                let cases = vec![EvalPeerCase {
+                    coeff,
+                    tok_assigned: tok_a,
+                    tok_rand: tok_r,
+                }];
+                c.eval_peer_batch_shared(theta, 0.01, &cases).unwrap()
+            });
+            drop(client);
+            host.serve();
+            h.join().unwrap()
+        });
+        for (a, b) in direct.iter().zip(&via_funnel) {
+            assert_eq!(
+                (a.0.to_bits(), a.1.to_bits(), a.2.to_bits(), a.3.to_bits()),
+                (b.0.to_bits(), b.1.to_bits(), b.2.to_bits(), b.3.to_bits()),
+                "shared-theta funnel must be bit-transparent"
+            );
+        }
+        // Zero-copy: the client round-trips cloned the handle, never the
+        // buffer — ours is still the only named owner plus none in flight.
+        assert_eq!(std::sync::Arc::strong_count(&theta), 1);
+
+        let (client2, host2) = exec_service(&sim);
+        let direct_ld = sim.loss_delta_batch(&theta, &[(&coeff[..], 0.01)], &tok_a).unwrap();
+        let via2 = std::thread::scope(|s| {
+            let c = client2.clone();
+            let (theta, coeff, tok_a) = (&theta, &coeff, &tok_a);
+            let h = s.spawn(move || {
+                c.loss_delta_batch_shared(theta, &[(&coeff[..], 0.01)], tok_a).unwrap()
+            });
+            drop(client2);
+            host2.serve();
+            h.join().unwrap()
+        });
+        for (a, b) in direct_ld.iter().zip(&via2) {
             assert_eq!((a.0.to_bits(), a.1.to_bits()), (b.0.to_bits(), b.1.to_bits()));
         }
     }

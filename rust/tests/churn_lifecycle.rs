@@ -189,7 +189,7 @@ fn validator_demotion_and_validator_leave_do_not_abort_the_run() {
     assert!(saw_reject);
     let v = run.chain.neuron(0).expect("validator slot survives a scripted leave");
     assert_eq!(v.stake, 0.0, "demotion applied");
-    assert!(run.chain.validators().is_empty(), "no staked validators remain");
+    assert!(run.chain.validators().next().is_none(), "no staked validators remain");
     // Demoted at the top of round 3: rounds 3+ paid nothing, so balances
     // froze at their round-2 values.
     let total: f64 = run.chain.neurons().map(|n| n.balance).sum();
