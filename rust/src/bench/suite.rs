@@ -152,10 +152,11 @@ pub fn registry() -> Vec<SuiteSpec> {
                 bench("kernel_eval_peer_batch8_mid", |c| bench_kernel_eval_peer(c, 8)),
                 bench("fasteval_32p_seq", |c| bench_fasteval(c, 1)),
                 bench("fasteval_32p_fan4", |c| bench_fasteval(c, 4)),
-                bench("round_pipeline_t1", |c| bench_round_pipeline(c, 1)),
-                bench("round_pipeline_t2", |c| bench_round_pipeline(c, 2)),
-                bench("round_pipeline_t4", |c| bench_round_pipeline(c, 4)),
-                bench("round_pipeline_t8", |c| bench_round_pipeline(c, 8)),
+                bench("round_pipeline_t1", |c| bench_round_pipeline(c, 1, 0.0)),
+                bench("round_pipeline_t2", |c| bench_round_pipeline(c, 2, 0.0)),
+                bench("round_pipeline_t4", |c| bench_round_pipeline(c, 4, 0.0)),
+                bench("round_pipeline_t8", |c| bench_round_pipeline(c, 8, 0.0)),
+                bench("round_pipeline_chaos_t4", |c| bench_round_pipeline(c, 4, 0.1)),
             ],
         },
     ]
@@ -653,6 +654,8 @@ fn bench_fasteval(ctx: &BenchCtx, fanout: usize) -> Result<Option<BenchOutcome>>
         lr: 0.02,
         sync_threshold: 3.0,
         window: (200, 2_000),
+        reader: 0,
+        retry: crate::storage::RetryPolicy::default(),
     };
     let pool = WorkerPool::new(fanout);
     let timing = time_it(ctx.warmup(2), ctx.iters(30), || {
@@ -667,7 +670,11 @@ fn bench_fasteval(ctx: &BenchCtx, fanout: usize) -> Result<Option<BenchOutcome>>
 /// SimExec backend at a fixed worker-thread count. Determinism across
 /// thread counts is pinned by `tests/parallel_determinism.rs`; this only
 /// measures.
-fn bench_round_pipeline(ctx: &BenchCtx, threads: usize) -> Result<Option<BenchOutcome>> {
+fn bench_round_pipeline(
+    ctx: &BenchCtx,
+    threads: usize,
+    get_fail: f64,
+) -> Result<Option<BenchOutcome>> {
     let (model, n_peers, rounds, reps) =
         if ctx.quick { ("nano", 8usize, 2u64, 2usize) } else { ("mid", 32, 3, 3) };
     let mk_run = || {
@@ -690,6 +697,10 @@ fn bench_round_pipeline(ctx: &BenchCtx, threads: usize) -> Result<Option<BenchOu
         cfg.params.top_g = 8;
         cfg.params.eval_sample = 4;
         cfg.threads = threads;
+        // Nonzero GET-failure probability routes every fast-eval read
+        // through the retry/backoff path, so the chaos variant prices
+        // the fault plane rather than the happy path.
+        cfg.provider.get_fail_prob = get_fail;
         GauntletBuilder::sim().config(cfg).build().expect("sim run")
     };
     // Pre-build one run per timing iteration (plus warmup) so construction

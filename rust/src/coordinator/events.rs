@@ -24,12 +24,15 @@
 //!
 //! Within one round, events always arrive in pipeline-stage order:
 //! `RoundStarted`, lifecycle events (registrations, departures, stake
-//! moves, outages), `Checkpointed`, per-peer `PeerTurn`/`PutApplied` in
-//! peer order (first pass, then second pass), per-validator `FastEval`
-//! (uid order) / `PrimaryEval` (sample order) / `RatingMatch` /
-//! `WeightsCommitted` in validator order, `YumaEpoch`, `Aggregated`,
-//! `HeldoutEval`, per-peer `PeerScoreboard`, `RoundCompleted`. The stream
-//! is bit-identical at any worker-thread count.
+//! moves, outage/chaos/eclipse window boundaries), `Checkpointed`,
+//! per-peer `PeerTurn`/`StorageRetry`/`PutApplied` in peer order (first
+//! pass, then second pass), per-validator `StorageRetry` /
+//! `SubmissionUnavailable` / `FastEval` (uid order) / `PrimaryEval`
+//! (sample order) / `RatingMatch` / `WeightsCommitted` in validator
+//! order, `YumaEpoch`, `Aggregated` (preceded by `AggregationDegraded`
+//! when the publication write failed), `HeldoutEval`, per-peer
+//! `PeerScoreboard`, `RoundCompleted`. The stream is bit-identical at any
+//! worker-thread count.
 //!
 //! ```
 //! use std::sync::{Arc, Mutex};
@@ -94,6 +97,15 @@ pub enum RoundEvent {
     OutageStarted { round: u64, prob: f64, until_round: u64 },
     /// The provider recovered from a scripted outage.
     OutageEnded { round: u64 },
+    /// A scripted chaos window opened: read-path faults of `kind`
+    /// (`"get-fail"` or `"corrupt"`) fire with probability `prob`.
+    ChaosStarted { round: u64, kind: String, prob: f64, until_round: u64 },
+    /// A chaos window closed; the read path is clean again for `kind`.
+    ChaosEnded { round: u64, kind: String },
+    /// A scripted eclipse began: `validator` cannot read `peer`'s bucket.
+    EclipseStarted { round: u64, validator: Uid, peer: Uid, until_round: u64 },
+    /// An eclipse lifted: `validator` sees `peer`'s bucket again.
+    EclipseEnded { round: u64, validator: Uid, peer: Uid },
     /// A scripted event was rejected (e.g. `leave` on a validator uid);
     /// the run continues.
     ScenarioRejected { round: u64, description: String },
@@ -113,6 +125,20 @@ pub enum RoundEvent {
     },
     /// A peer's submission PUT resolved against the storage provider.
     PutApplied { round: u64, uid: Uid, accepted: bool },
+    /// A storage operation on peer `uid`'s bucket spent bounded retries on
+    /// transient faults before resolving. `actor` is the party driving the
+    /// operation: a validator for submission GETs, the peer itself for its
+    /// submission PUT. Emitted by the coordinator in deterministic
+    /// peer/validator order — never from worker threads.
+    StorageRetry { round: u64, actor: Uid, uid: Uid, retries: u32 },
+    /// A validator could not read peer `uid`'s submission at all (retry
+    /// budget exhausted, or an eclipsed view): the submission is scored as
+    /// a miss instead of aborting the round.
+    SubmissionUnavailable { round: u64, validator: Uid, uid: Uid },
+    /// The lead validator's aggregate publication write failed even after
+    /// retries; the round degraded to re-publishing the previous
+    /// checkpoint instead of the fresh aggregate.
+    AggregationDegraded { round: u64, attempts: u32 },
     /// One validator's fast-evaluation verdict for one peer (§3.2), with
     /// the phi multiplier applied to the peer's PoC EMA.
     FastEval { round: u64, validator: Uid, uid: Uid, passed: bool, phi: f64 },
@@ -152,11 +178,18 @@ impl RoundEvent {
             | RoundEvent::StakeSet { round, .. }
             | RoundEvent::OutageStarted { round, .. }
             | RoundEvent::OutageEnded { round }
+            | RoundEvent::ChaosStarted { round, .. }
+            | RoundEvent::ChaosEnded { round, .. }
+            | RoundEvent::EclipseStarted { round, .. }
+            | RoundEvent::EclipseEnded { round, .. }
             | RoundEvent::ScenarioRejected { round, .. }
             | RoundEvent::RunnersDropped { round, .. }
             | RoundEvent::Checkpointed { round }
             | RoundEvent::PeerTurn { round, .. }
             | RoundEvent::PutApplied { round, .. }
+            | RoundEvent::StorageRetry { round, .. }
+            | RoundEvent::SubmissionUnavailable { round, .. }
+            | RoundEvent::AggregationDegraded { round, .. }
             | RoundEvent::FastEval { round, .. }
             | RoundEvent::PrimaryEval { round, .. }
             | RoundEvent::RatingMatch { round, .. }
@@ -170,7 +203,11 @@ impl RoundEvent {
     }
 
     /// Whether this is a population/lifecycle event — the subset that
-    /// [`RoundRecord::events`] records as human-readable lines.
+    /// [`RoundRecord::events`] records as human-readable lines. Chaos and
+    /// eclipse *window boundaries* qualify (they fire once per window);
+    /// the high-frequency fault telemetry (`StorageRetry`,
+    /// `SubmissionUnavailable`) deliberately does not — a chaos-window
+    /// interior must not flood every round's record.
     pub fn is_lifecycle(&self) -> bool {
         matches!(
             self,
@@ -179,8 +216,13 @@ impl RoundEvent {
                 | RoundEvent::StakeSet { .. }
                 | RoundEvent::OutageStarted { .. }
                 | RoundEvent::OutageEnded { .. }
+                | RoundEvent::ChaosStarted { .. }
+                | RoundEvent::ChaosEnded { .. }
+                | RoundEvent::EclipseStarted { .. }
+                | RoundEvent::EclipseEnded { .. }
                 | RoundEvent::ScenarioRejected { .. }
                 | RoundEvent::RunnersDropped { .. }
+                | RoundEvent::AggregationDegraded { .. }
         )
     }
 
@@ -237,6 +279,33 @@ impl RoundEvent {
                 ("ev", minjson::s("outage_ended")),
                 ("round", minjson::num(*round as f64)),
             ]),
+            RoundEvent::ChaosStarted { round, kind, prob, until_round } => minjson::obj(vec![
+                ("ev", minjson::s("chaos_started")),
+                ("round", minjson::num(*round as f64)),
+                ("kind", minjson::s(kind)),
+                ("prob", fnum(*prob)),
+                ("until_round", minjson::num(*until_round as f64)),
+            ]),
+            RoundEvent::ChaosEnded { round, kind } => minjson::obj(vec![
+                ("ev", minjson::s("chaos_ended")),
+                ("round", minjson::num(*round as f64)),
+                ("kind", minjson::s(kind)),
+            ]),
+            RoundEvent::EclipseStarted { round, validator, peer, until_round } => {
+                minjson::obj(vec![
+                    ("ev", minjson::s("eclipse_started")),
+                    ("round", minjson::num(*round as f64)),
+                    ("validator", minjson::num(*validator as f64)),
+                    ("peer", minjson::num(*peer as f64)),
+                    ("until_round", minjson::num(*until_round as f64)),
+                ])
+            }
+            RoundEvent::EclipseEnded { round, validator, peer } => minjson::obj(vec![
+                ("ev", minjson::s("eclipse_ended")),
+                ("round", minjson::num(*round as f64)),
+                ("validator", minjson::num(*validator as f64)),
+                ("peer", minjson::num(*peer as f64)),
+            ]),
             RoundEvent::ScenarioRejected { round, description } => minjson::obj(vec![
                 ("ev", minjson::s("scenario_rejected")),
                 ("round", minjson::num(*round as f64)),
@@ -267,6 +336,24 @@ impl RoundEvent {
                 ("round", minjson::num(*round as f64)),
                 ("uid", minjson::num(*uid as f64)),
                 ("accepted", Value::Bool(*accepted)),
+            ]),
+            RoundEvent::StorageRetry { round, actor, uid, retries } => minjson::obj(vec![
+                ("ev", minjson::s("storage_retry")),
+                ("round", minjson::num(*round as f64)),
+                ("actor", minjson::num(*actor as f64)),
+                ("uid", minjson::num(*uid as f64)),
+                ("retries", minjson::num(*retries as f64)),
+            ]),
+            RoundEvent::SubmissionUnavailable { round, validator, uid } => minjson::obj(vec![
+                ("ev", minjson::s("submission_unavailable")),
+                ("round", minjson::num(*round as f64)),
+                ("validator", minjson::num(*validator as f64)),
+                ("uid", minjson::num(*uid as f64)),
+            ]),
+            RoundEvent::AggregationDegraded { round, attempts } => minjson::obj(vec![
+                ("ev", minjson::s("aggregation_degraded")),
+                ("round", minjson::num(*round as f64)),
+                ("attempts", minjson::num(*attempts as f64)),
             ]),
             RoundEvent::FastEval { round, validator, uid, passed, phi } => minjson::obj(vec![
                 ("ev", minjson::s("fast_eval")),
@@ -392,6 +479,27 @@ impl RoundEvent {
                 until_round: v.get("until_round").as_f64().context("until_round")? as u64,
             },
             "outage_ended" => RoundEvent::OutageEnded { round: round(v)? },
+            "chaos_started" => RoundEvent::ChaosStarted {
+                round: round(v)?,
+                kind: field::string(v, "kind")?,
+                prob: field::f64(v, "prob")?,
+                until_round: v.get("until_round").as_f64().context("until_round")? as u64,
+            },
+            "chaos_ended" => RoundEvent::ChaosEnded {
+                round: round(v)?,
+                kind: field::string(v, "kind")?,
+            },
+            "eclipse_started" => RoundEvent::EclipseStarted {
+                round: round(v)?,
+                validator: uid_of(v, "validator")?,
+                peer: uid_of(v, "peer")?,
+                until_round: v.get("until_round").as_f64().context("until_round")? as u64,
+            },
+            "eclipse_ended" => RoundEvent::EclipseEnded {
+                round: round(v)?,
+                validator: uid_of(v, "validator")?,
+                peer: uid_of(v, "peer")?,
+            },
             "scenario_rejected" => RoundEvent::ScenarioRejected {
                 round: round(v)?,
                 description: field::string(v, "description")?,
@@ -413,6 +521,21 @@ impl RoundEvent {
                 round: round(v)?,
                 uid: uid_of(v, "uid")?,
                 accepted: field::boolean(v, "accepted")?,
+            },
+            "storage_retry" => RoundEvent::StorageRetry {
+                round: round(v)?,
+                actor: uid_of(v, "actor")?,
+                uid: uid_of(v, "uid")?,
+                retries: v.get("retries").as_usize().context("retries")? as u32,
+            },
+            "submission_unavailable" => RoundEvent::SubmissionUnavailable {
+                round: round(v)?,
+                validator: uid_of(v, "validator")?,
+                uid: uid_of(v, "uid")?,
+            },
+            "aggregation_degraded" => RoundEvent::AggregationDegraded {
+                round: round(v)?,
+                attempts: v.get("attempts").as_usize().context("attempts")? as u32,
             },
             "fast_eval" => RoundEvent::FastEval {
                 round: round(v)?,
@@ -486,6 +609,19 @@ impl fmt::Display for RoundEvent {
                 write!(f, "provider outage p={prob} until round {until_round}")
             }
             RoundEvent::OutageEnded { .. } => write!(f, "provider recovered"),
+            RoundEvent::ChaosStarted { kind, prob, until_round, .. } => {
+                write!(f, "chaos {kind} p={prob} until round {until_round}")
+            }
+            RoundEvent::ChaosEnded { kind, .. } => write!(f, "chaos {kind} cleared"),
+            RoundEvent::EclipseStarted { validator, peer, until_round, .. } => {
+                write!(f, "validator {validator} eclipsed from peer {peer} until round {until_round}")
+            }
+            RoundEvent::EclipseEnded { validator, peer, .. } => {
+                write!(f, "validator {validator} sees peer {peer} again")
+            }
+            RoundEvent::AggregationDegraded { attempts, .. } => {
+                write!(f, "aggregate publication failed after {attempts} attempt(s); republished previous checkpoint")
+            }
             RoundEvent::ScenarioRejected { description, .. } => write!(f, "{description}"),
             RoundEvent::RunnersDropped { count, .. } => {
                 write!(f, "{count} runner(s) dropped by registry resolution")
@@ -767,6 +903,18 @@ mod tests {
             RoundEvent::StakeSet { round: 3, uid: 0, amount: 500.0 },
             RoundEvent::OutageStarted { round: 3, prob: 0.5, until_round: 5 },
             RoundEvent::OutageEnded { round: 3 },
+            RoundEvent::ChaosStarted {
+                round: 3,
+                kind: "get-fail".into(),
+                prob: 0.25,
+                until_round: 6,
+            },
+            RoundEvent::ChaosEnded { round: 3, kind: "corrupt".into() },
+            RoundEvent::EclipseStarted { round: 3, validator: 0, peer: 7, until_round: 5 },
+            RoundEvent::EclipseEnded { round: 3, validator: 0, peer: 7 },
+            RoundEvent::StorageRetry { round: 3, actor: 0, uid: 7, retries: 2 },
+            RoundEvent::SubmissionUnavailable { round: 3, validator: 0, uid: 7 },
+            RoundEvent::AggregationDegraded { round: 3, attempts: 3 },
             RoundEvent::ScenarioRejected { round: 3, description: "leave uid 0 rejected".into() },
             RoundEvent::RunnersDropped { round: 3, count: 2 },
             RoundEvent::Checkpointed { round: 3 },
@@ -815,7 +963,15 @@ mod tests {
         assert_eq!(evs[3].to_string(), "stake of uid 0 set to 500");
         assert_eq!(evs[4].to_string(), "provider outage p=0.5 until round 5");
         assert_eq!(evs[5].to_string(), "provider recovered");
-        assert_eq!(evs[7].to_string(), "2 runner(s) dropped by registry resolution");
+        assert_eq!(evs[6].to_string(), "chaos get-fail p=0.25 until round 6");
+        assert_eq!(evs[7].to_string(), "chaos corrupt cleared");
+        assert_eq!(evs[8].to_string(), "validator 0 eclipsed from peer 7 until round 5");
+        assert_eq!(evs[9].to_string(), "validator 0 sees peer 7 again");
+        assert_eq!(
+            evs[12].to_string(),
+            "aggregate publication failed after 3 attempt(s); republished previous checkpoint"
+        );
+        assert_eq!(evs[14].to_string(), "2 runner(s) dropped by registry resolution");
         let plain = RoundEvent::PeerRegistered {
             round: 0,
             uid: 2,

@@ -18,7 +18,7 @@ use crate::chain::Uid;
 use crate::demo::wire::{Submission, WireError};
 use crate::demo::SparseGrad;
 use crate::runtime::WorkerPool;
-use crate::storage::{ObjectStore, ReadKey, SimTime, WindowedGet};
+use crate::storage::{ObjectStore, ReadKey, RetryPolicy, SimTime, WindowedGet};
 
 /// Why fast evaluation failed (diagnostics + tests).
 #[derive(Clone, Debug, PartialEq)]
@@ -30,6 +30,10 @@ pub enum FastViolation {
     WrongRound { declared: u64, expected: u64 },
     WrongUid { declared: u32, expected: u32 },
     Desynchronized { sync_score: f64 },
+    /// The submission could not be *read at all*: the GET retry budget
+    /// exhausted on transient failures, or the reader is eclipsed from the
+    /// peer's bucket. Scored as a miss — the run never aborts for it.
+    Unavailable,
 }
 
 /// Outcome of fast evaluation for one peer.
@@ -40,6 +44,10 @@ pub struct FastEvalOutcome {
     /// peer failed SyncScore, so diagnostics can inspect it; the validator
     /// only *aggregates* submissions from peers that passed everything).
     pub submission: Option<Submission>,
+    /// GET retries spent reading this peer's submission (0 on a clean
+    /// first read). Surfaced so the coordinator can emit `StorageRetry`
+    /// events in deterministic order — workers must not emit themselves.
+    pub retries: u32,
 }
 
 impl FastEvalOutcome {
@@ -55,12 +63,13 @@ impl FastEvalOutcome {
     /// ```
     /// use gauntlet::coordinator::fast_eval::{FastEvalOutcome, FastViolation};
     ///
-    /// let clean = FastEvalOutcome { violations: vec![], submission: None };
+    /// let clean = FastEvalOutcome { violations: vec![], submission: None, retries: 0 };
     /// assert_eq!(clean.phi(0.75), 1.0); // compliant: mu untouched
     ///
     /// let late = FastEvalOutcome {
     ///     violations: vec![FastViolation::TooLate],
     ///     submission: None,
+    ///     retries: 0,
     /// };
     /// assert_eq!(late.phi(0.75), 0.75); // any violation: mu *= phi_penalty
     /// ```
@@ -113,17 +122,16 @@ pub struct FastEvalCtx<'a> {
 /// Run every fast check against a windowed GET result.
 pub fn fast_evaluate(get: &WindowedGet, ctx: &FastEvalCtx<'_>) -> FastEvalOutcome {
     let mut violations = Vec::new();
+    let miss = |v: FastViolation| FastEvalOutcome {
+        violations: vec![v],
+        submission: None,
+        retries: 0,
+    };
     let obj = match get {
         WindowedGet::InWindow(obj) => obj,
-        WindowedGet::Missing => {
-            return FastEvalOutcome { violations: vec![FastViolation::Missing], submission: None }
-        }
-        WindowedGet::TooEarly(_) => {
-            return FastEvalOutcome { violations: vec![FastViolation::TooEarly], submission: None }
-        }
-        WindowedGet::TooLate(_) => {
-            return FastEvalOutcome { violations: vec![FastViolation::TooLate], submission: None }
-        }
+        WindowedGet::Missing => return miss(FastViolation::Missing),
+        WindowedGet::TooEarly(_) => return miss(FastViolation::TooEarly),
+        WindowedGet::TooLate(_) => return miss(FastViolation::TooLate),
     };
 
     // `decode_object` memoizes the SHA-256 integrity verdict on the
@@ -139,6 +147,7 @@ pub fn fast_evaluate(get: &WindowedGet, ctx: &FastEvalCtx<'_>) -> FastEvalOutcom
             return FastEvalOutcome {
                 violations: vec![FastViolation::BadFormat(e.to_string())],
                 submission: None,
+                retries: 0,
             }
         }
     };
@@ -164,7 +173,7 @@ pub fn fast_evaluate(get: &WindowedGet, ctx: &FastEvalCtx<'_>) -> FastEvalOutcom
             violations.push(FastViolation::Desynchronized { sync_score: s });
         }
     }
-    FastEvalOutcome { violations, submission: Some(sub) }
+    FastEvalOutcome { violations, submission: Some(sub), retries: 0 }
 }
 
 /// The per-round inputs shared by every peer's fast checks (everything in
@@ -179,6 +188,14 @@ pub struct RoundChecks<'a> {
     pub sync_threshold: f64,
     /// Inclusive `[open, close]` put window for this round.
     pub window: (SimTime, SimTime),
+    /// The reading validator's uid — the *named reader* for the store's
+    /// keyed fault draws and targeted eclipse faults.
+    pub reader: Uid,
+    /// Retry budget for transient GET failures. A retry salts the keyed
+    /// fault draw with a higher attempt number (a genuinely fresh draw);
+    /// an exhausted budget degrades the peer to
+    /// [`FastViolation::Unavailable`] instead of aborting the round.
+    pub retry: RetryPolicy,
 }
 
 impl RoundChecks<'_> {
@@ -211,15 +228,43 @@ fn fast_evaluate_chunk(
     // multiply fastest here).
     let mut bucket = String::new();
     let mut key = String::new();
+    let budget = checks.retry.max_attempts.max(1);
     for (uid, rk) in peers {
         bucket.clear();
         let _ = write!(bucket, "peer-{uid}");
         key.clear();
         Submission::write_object_key(&mut key, *uid, checks.round);
-        let get = store
-            .get_within_window(&bucket, rk, &key, open, close)
-            .with_context(|| format!("reading {bucket}/{key}"))?;
-        out.push((*uid, fast_evaluate(&get, &checks.ctx_for(*uid))));
+        // Bounded retry on *transient* GET failures only. Draws are keyed
+        // on (bucket, key, reader, attempt), so the loop is deterministic
+        // on any worker thread; definitive errors (eclipse → NotFound)
+        // skip the budget and degrade immediately.
+        let mut attempt: u32 = 0;
+        let got = loop {
+            match store.get_within_window_as(
+                u64::from(checks.reader),
+                attempt,
+                &bucket,
+                rk,
+                &key,
+                open,
+                close,
+            ) {
+                Ok(g) => break Some(g),
+                Err(e) if e.is_transient() && attempt + 1 < budget => attempt += 1,
+                Err(e) if e.is_transient() => break None, // budget exhausted
+                Err(crate::storage::StorageError::NotFound(_)) => break None,
+                Err(e) => return Err(e).with_context(|| format!("reading {bucket}/{key}")),
+            }
+        };
+        let outcome = match got {
+            Some(g) => fast_evaluate(&g, &checks.ctx_for(*uid)),
+            None => FastEvalOutcome {
+                violations: vec![FastViolation::Unavailable],
+                submission: None,
+                retries: 0,
+            },
+        };
+        out.push((*uid, FastEvalOutcome { retries: attempt, ..outcome }));
     }
     Ok(out)
 }
@@ -428,20 +473,26 @@ mod tests {
         (store, peers, probe)
     }
 
-    #[test]
-    fn fast_evaluate_all_parallel_matches_sequential() {
-        let round = 4;
-        let (store, peers, probe) = seeded_store_with_peers(13, round);
-        let checks = RoundChecks {
+    fn checks<'a>(round: u64, probe: &'a [f32]) -> RoundChecks<'a> {
+        RoundChecks {
             round,
             coeff_count: 3,
             padded_count: 100,
             probe_len: probe.len(),
-            validator_probe: &probe,
+            validator_probe: probe,
             lr: 0.02,
             sync_threshold: 3.0,
             window: (200, 2_000),
-        };
+            reader: 99,
+            retry: RetryPolicy::default(),
+        }
+    }
+
+    #[test]
+    fn fast_evaluate_all_parallel_matches_sequential() {
+        let round = 4;
+        let (store, peers, probe) = seeded_store_with_peers(13, round);
+        let checks = checks(round, &probe);
         let pool = WorkerPool::new(4);
         let seq = fast_evaluate_all(&store, &peers, &checks, &pool, 1).unwrap();
         for fanout in [2, 4, 8, 32] {
@@ -457,5 +508,68 @@ mod tests {
         assert!(seq[0].1.passed());
         assert!(seq[1].1.violations.contains(&FastViolation::TooLate));
         assert!(seq[2].1.violations.contains(&FastViolation::Missing));
+    }
+
+    #[test]
+    fn transient_get_failures_retry_then_degrade_to_unavailable() {
+        let round = 4;
+        let (mut store, peers, probe) = seeded_store_with_peers(6, round);
+        store.model.get_fail_prob = 1.0;
+        let c = checks(round, &probe);
+        let pool = WorkerPool::new(2);
+        let seq = fast_evaluate_all(&store, &peers, &c, &pool, 1).unwrap();
+        for (uid, o) in &seq {
+            assert_eq!(o.violations, vec![FastViolation::Unavailable], "uid {uid}");
+            assert_eq!(o.retries, c.retry.max_attempts - 1, "budget fully spent");
+            assert!(o.submission.is_none());
+        }
+        // Sequential and parallel degrade identically — keyed draws.
+        let par = fast_evaluate_all(&store, &peers, &c, &pool, 4).unwrap();
+        for ((ua, a), (ub, b)) in seq.iter().zip(&par) {
+            assert_eq!(ua, ub);
+            assert_eq!(a.violations, b.violations);
+            assert_eq!(a.retries, b.retries);
+        }
+    }
+
+    #[test]
+    fn eclipsed_reader_degrades_immediately_without_spending_budget() {
+        let round = 4;
+        let (store, peers, probe) = seeded_store_with_peers(6, round);
+        store.set_eclipse(99, "peer-0");
+        let c = checks(round, &probe);
+        let pool = WorkerPool::new(2);
+        let out = fast_evaluate_all(&store, &peers, &c, &pool, 1).unwrap();
+        assert_eq!(out[0].1.violations, vec![FastViolation::Unavailable]);
+        assert_eq!(out[0].1.retries, 0, "NotFound is definitive: no retries");
+        assert!(out[3].1.passed(), "other peers unaffected: {:?}", out[3].1.violations);
+        // A different reader's view of peer-0 is intact.
+        let mut c2 = checks(round, &probe);
+        c2.reader = 98;
+        let out2 = fast_evaluate_all(&store, &peers, &c2, &pool, 1).unwrap();
+        assert!(out2[0].1.passed(), "{:?}", out2[0].1.violations);
+    }
+
+    #[test]
+    fn corrupted_payloads_are_rejected_by_the_digest_verdict() {
+        let round = 4;
+        let (mut store, peers, probe) = seeded_store_with_peers(6, round);
+        store.model.corrupt_prob = 1.0;
+        let c = checks(round, &probe);
+        let pool = WorkerPool::new(2);
+        let out = fast_evaluate_all(&store, &peers, &c, &pool, 1).unwrap();
+        // uids 0 and 3 submitted well-formed objects; every read is
+        // damaged in transit, so the digest/frame verdict must reject them
+        // as format failures — never a panic, never an abort.
+        for i in [0usize, 3] {
+            assert!(
+                matches!(out[i].1.violations[0], FastViolation::BadFormat(_)),
+                "uid {i}: {:?}",
+                out[i].1.violations
+            );
+        }
+        // Missing/late classifications are untouched by payload damage.
+        assert!(out[1].1.violations.contains(&FastViolation::TooLate));
+        assert!(out[2].1.violations.contains(&FastViolation::Missing));
     }
 }

@@ -85,6 +85,9 @@ pub struct GauntletParams {
     pub base_microbatches: usize,
     /// Checkpoint every this many rounds (catchup replays signed updates).
     pub checkpoint_every: u64,
+    /// Storage retry budget + backoff for peer PUTs and validator GETs
+    /// (transient faults only; definitive errors degrade immediately).
+    pub retry: crate::storage::RetryPolicy,
 }
 
 impl Default for GauntletParams {
@@ -102,6 +105,7 @@ impl Default for GauntletParams {
             demo_decay: 0.999,
             base_microbatches: 1,
             checkpoint_every: 25,
+            retry: crate::storage::RetryPolicy::default(),
         }
     }
 }

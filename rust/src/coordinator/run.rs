@@ -434,6 +434,13 @@ pub struct TemplarRunWith<E: ExecBackend + 'static> {
     /// Active provider-outage window: restore `outage_prob` to `.1` at the
     /// top of round `.0`.
     outage_restore: Option<(u64, f64)>,
+    /// Active read-path chaos windows, keyed by kind (`"get-fail"` |
+    /// `"corrupt"`): restore the provider probability to `.1` at the top
+    /// of round `.0`. Same overlap semantics as `outage_restore`.
+    chaos_restore: BTreeMap<String, (u64, f64)>,
+    /// Active targeted eclipses: `(validator, peer)` → the round at which
+    /// the validator's view of the peer's bucket is restored.
+    eclipse_restore: BTreeMap<(Uid, Uid), u64>,
     /// The built-in metrics observer: the only producer of
     /// [`RoundRecord`]/[`RunMetrics`] (what `run_round()` returns).
     metrics: Arc<MetricsObserver>,
@@ -511,6 +518,11 @@ impl<E: ExecBackend + 'static> TemplarRunWith<E> {
         let blocks_per_round = (cfg.clock.round_ms / BLOCK_MS).max(1);
         chain.immunity_blocks = cfg.immunity_rounds * blocks_per_round;
         let store = ObjectStore::new(cfg.provider.clone(), cfg.seed ^ 0x5702);
+        // The shared bucket the lead validator publishes each updating
+        // round's aggregate header into (peer buckets are created at
+        // registration). The minted read key is not posted on-chain —
+        // monitors read it through the store's snapshot accessors.
+        let _ = store.create_bucket("aggregate", "aggregate");
         let corpus = Corpus::new(meta.vocab as u32, cfg.seed);
 
         // Validators register and stake first (peers then get the next
@@ -553,6 +565,8 @@ impl<E: ExecBackend + 'static> TemplarRunWith<E> {
             last_coeff_valid: false,
             next_hotkey: 0,
             outage_restore: None,
+            chaos_restore: BTreeMap::new(),
+            eclipse_restore: BTreeMap::new(),
             metrics: Arc::new(MetricsObserver::new()),
             observers: Vec::new(),
             emit_enabled: false,
@@ -692,6 +706,37 @@ impl<E: ExecBackend + 'static> TemplarRunWith<E> {
                 self.emit(RoundEvent::OutageEnded { round });
             }
         }
+        // Chaos windows (read-path faults) expire the same way: restore
+        // the original probability and announce the all-clear, in BTreeMap
+        // (kind) order so the event stream is deterministic.
+        let expired: Vec<String> = self
+            .chaos_restore
+            .iter()
+            .filter(|(_, &(until, _))| round >= until)
+            .map(|(kind, _)| kind.clone())
+            .collect();
+        for kind in expired {
+            let (_, orig) = self.chaos_restore.remove(&kind).expect("expired window exists");
+            match kind.as_str() {
+                "get-fail" => self.store.model.get_fail_prob = orig,
+                "corrupt" => self.store.model.corrupt_prob = orig,
+                other => unreachable!("unknown chaos window kind {other:?}"),
+            }
+            self.emit(RoundEvent::ChaosEnded { round, kind });
+        }
+        // Targeted eclipses lift at their scheduled round, in (validator,
+        // peer) order.
+        let lifted: Vec<(Uid, Uid)> = self
+            .eclipse_restore
+            .iter()
+            .filter(|(_, &until)| round >= until)
+            .map(|(&pair, _)| pair)
+            .collect();
+        for (validator, peer) in lifted {
+            self.eclipse_restore.remove(&(validator, peer));
+            self.store.clear_eclipse(u64::from(validator), &format!("peer-{peer}"));
+            self.emit(RoundEvent::EclipseEnded { round, validator, peer });
+        }
 
         for event in self.cfg.scenario.events_at(round) {
             match event {
@@ -735,6 +780,54 @@ impl<E: ExecBackend + 'static> TemplarRunWith<E> {
                     let until = (round + rounds.max(1)).max(prev_until);
                     self.outage_restore = Some((until, orig));
                     self.emit(RoundEvent::OutageStarted { round, prob, until_round: until });
+                }
+                Event::ChaosGetFail { prob, rounds } => {
+                    // Same overlap contract as outages: the new probability
+                    // takes over, recovery waits for the latest scheduled
+                    // restore, and the *original* (pre-chaos) probability
+                    // is what eventually comes back.
+                    let (prev_until, orig) = self
+                        .chaos_restore
+                        .get("get-fail")
+                        .copied()
+                        .unwrap_or((0, self.store.model.get_fail_prob));
+                    self.store.model.get_fail_prob = prob;
+                    let until = (round + rounds.max(1)).max(prev_until);
+                    self.chaos_restore.insert("get-fail".to_string(), (until, orig));
+                    self.emit(RoundEvent::ChaosStarted {
+                        round,
+                        kind: "get-fail".to_string(),
+                        prob,
+                        until_round: until,
+                    });
+                }
+                Event::ChaosCorrupt { prob, rounds } => {
+                    let (prev_until, orig) = self
+                        .chaos_restore
+                        .get("corrupt")
+                        .copied()
+                        .unwrap_or((0, self.store.model.corrupt_prob));
+                    self.store.model.corrupt_prob = prob;
+                    let until = (round + rounds.max(1)).max(prev_until);
+                    self.chaos_restore.insert("corrupt".to_string(), (until, orig));
+                    self.emit(RoundEvent::ChaosStarted {
+                        round,
+                        kind: "corrupt".to_string(),
+                        prob,
+                        until_round: until,
+                    });
+                }
+                Event::Eclipse { validator, peer, rounds } => {
+                    let until = (round + rounds.max(1))
+                        .max(self.eclipse_restore.get(&(validator, peer)).copied().unwrap_or(0));
+                    self.eclipse_restore.insert((validator, peer), until);
+                    self.store.set_eclipse(u64::from(validator), &format!("peer-{peer}"));
+                    self.emit(RoundEvent::EclipseStarted {
+                        round,
+                        validator,
+                        peer,
+                        until_round: until,
+                    });
                 }
             }
         }
@@ -956,6 +1049,14 @@ impl<E: ExecBackend + 'static> TemplarRunWith<E> {
         // Publish each validator's verdicts in validator order (the
         // parallel fan-out above already returned them ordered).
         for (v, o) in self.validators.iter().zip(&outcomes) {
+            // Storage friction first (retries spent, unreadable peers),
+            // then the verdicts those reads produced.
+            for (&uid, &retries) in &o.fast_retries {
+                self.emit(RoundEvent::StorageRetry { round, actor: v.uid, uid, retries });
+            }
+            for &uid in &o.unavailable {
+                self.emit(RoundEvent::SubmissionUnavailable { round, validator: v.uid, uid });
+            }
             for (&uid, &passed) in &o.fast_pass {
                 let phi = o.fast_phi.get(&uid).copied().unwrap_or(1.0);
                 self.emit(RoundEvent::FastEval { round, validator: v.uid, uid, passed, phi });
@@ -1094,6 +1195,46 @@ impl<E: ExecBackend + 'static> TemplarRunWith<E> {
             had_update,
         });
 
+        // -------------------- aggregate publication ----------------------
+        // The lead validator publishes a compact aggregate header (round,
+        // lr, theta digest) to the shared bucket so late joiners and
+        // monitors can verify which parameters this round produced. The
+        // write runs through the same retry policy as peer PUTs; if the
+        // budget is exhausted the round *degrades* instead of aborting:
+        // a pointer at the latest durable checkpoint is posted best-effort
+        // and the run continues on the already-applied update.
+        if had_update {
+            let lead_uid = self.validators[lead_idx].uid;
+            let key = format!("agg-{round}");
+            let send = self.clock.put_window(round).1;
+            let payload = aggregate_payload(round, lr_t, &self.theta);
+            let policy = &self.cfg.params.retry;
+            match self.store.put_with_retry("aggregate", "aggregate", &key, payload, send, policy)
+            {
+                Ok((_, attempts)) => {
+                    if attempts > 1 {
+                        self.emit(RoundEvent::StorageRetry {
+                            round,
+                            actor: lead_uid,
+                            uid: lead_uid,
+                            retries: attempts - 1,
+                        });
+                    }
+                }
+                Err(_) => {
+                    let attempts = policy.max_attempts.max(1);
+                    self.emit(RoundEvent::AggregationDegraded { round, attempts });
+                    let every = self.cfg.params.checkpoint_every.max(1);
+                    let ckpt_round = round - round % every;
+                    let fallback = degraded_payload(round, ckpt_round);
+                    // Best-effort: under a total outage this fails too, and
+                    // that is fine — the degradation event already tells the
+                    // story, and readers fall back to the checkpoint anyway.
+                    let _ = self.store.put("aggregate", "aggregate", &key, fallback, send);
+                }
+            }
+        }
+
         // -------------------- peers synchronize --------------------------
         let agg_coeff: Option<&[f32]> =
             if self.last_coeff_valid { Some(&self.last_coeff) } else { None };
@@ -1159,6 +1300,8 @@ impl<E: ExecBackend + 'static> TemplarRunWith<E> {
             theta: self.theta.clone(),
             next_hotkey: self.next_hotkey,
             outage_restore: self.outage_restore,
+            chaos_restore: self.chaos_restore.clone(),
+            eclipse_restore: self.eclipse_restore.clone(),
             chain: self.chain.to_state(),
             validators: self
                 .validators
@@ -1174,6 +1317,8 @@ impl<E: ExecBackend + 'static> TemplarRunWith<E> {
                 rng_state: self.store.rng_state(),
                 next_key_id: self.store.next_key_id(),
                 outage_prob: self.store.model.outage_prob,
+                get_fail_prob: self.store.model.get_fail_prob,
+                corrupt_prob: self.store.model.corrupt_prob,
                 buckets: self.store.export_buckets(),
             },
             // Lifecycle lines from direct register/deregister calls since
@@ -1199,16 +1344,25 @@ impl<E: ExecBackend + 'static> TemplarRunWith<E> {
         );
         let chain = Chain::from_state(snap.chain);
         // The store restarts from the captured control state: RNG stream,
-        // read-key mint, bucket registry, live (possibly mid-outage)
-        // failure probability. Object payloads never cross a round
-        // boundary, so none are carried.
+        // read-key mint, bucket registry, live (possibly mid-outage /
+        // mid-chaos) failure probabilities. Object payloads never cross a
+        // round boundary, so none are carried. The fault seed is derived
+        // from the config seed exactly as `assemble` derives it, so the
+        // keyed read-path draws continue bit-identically across the
+        // snapshot boundary.
         let mut provider = cfg.provider.clone();
         provider.outage_prob = snap.store.outage_prob;
-        let store = ObjectStore::new(provider, 0);
+        provider.get_fail_prob = snap.store.get_fail_prob;
+        provider.corrupt_prob = snap.store.corrupt_prob;
+        let store = ObjectStore::new(provider, cfg.seed ^ 0x5702);
         store.set_rng_state(snap.store.rng_state);
         store.set_next_key_id(snap.store.next_key_id);
         for (name, owner, key) in snap.store.buckets {
             store.restore_bucket(&name, &owner, key);
+        }
+        // Re-arm the targeted faults that were live at the boundary.
+        for &(validator, peer) in snap.eclipse_restore.keys() {
+            store.set_eclipse(u64::from(validator), &format!("peer-{peer}"));
         }
         let corpus = Corpus::new(meta.vocab as u32, cfg.seed);
         let mut validators = Vec::with_capacity(snap.validators.len());
@@ -1251,6 +1405,8 @@ impl<E: ExecBackend + 'static> TemplarRunWith<E> {
             last_coeff_valid: false,
             next_hotkey: snap.next_hotkey,
             outage_restore: snap.outage_restore,
+            chaos_restore: snap.chaos_restore,
+            eclipse_restore: snap.eclipse_restore,
             metrics,
             observers: Vec::new(),
             emit_enabled: true,
@@ -1274,21 +1430,35 @@ impl<E: ExecBackend + 'static> TemplarRunWith<E> {
     ) -> bool {
         self.emit(RoundEvent::PeerTurn { round, uid, label, second_pass, local_loss, tokens });
         let attempted = matches!(out, PeerOutput::Submit { .. });
-        let ok = self.put_output(uid, out);
+        let (ok, retries) = self.put_output(uid, out);
+        if retries > 0 {
+            // The peer is both the actor (it ran the retry loop) and the
+            // bucket owner.
+            self.emit(RoundEvent::StorageRetry { round, actor: uid, uid, retries });
+        }
         if attempted {
             self.emit(RoundEvent::PutApplied { round, uid, accepted: ok });
         }
         ok
     }
 
-    fn put_output(&self, uid: Uid, out: PeerOutput) -> bool {
+    /// Apply one peer's submission PUT through the retry policy. Returns
+    /// `(landed, retries_spent)` — a PUT that exhausts its budget on
+    /// transient outages reports the full spend; a definitive rejection
+    /// reports none (no attempt would have helped).
+    fn put_output(&self, uid: Uid, out: PeerOutput) -> (bool, u32) {
         match out {
             PeerOutput::Submit { time, bytes } => {
                 let bucket = format!("peer-{uid}");
                 let key = Submission::object_key(uid, self.round);
-                self.store.put(&bucket, &bucket, &key, bytes, time).is_ok()
+                let policy = &self.cfg.params.retry;
+                match self.store.put_with_retry(&bucket, &bucket, &key, bytes, time, policy) {
+                    Ok((_, attempts)) => (true, attempts - 1),
+                    Err(e) if e.is_transient() => (false, policy.max_attempts.max(1) - 1),
+                    Err(_) => (false, 0),
+                }
             }
-            PeerOutput::Skip => false,
+            PeerOutput::Skip => (false, 0),
         }
     }
 
@@ -1302,6 +1472,37 @@ impl<E: ExecBackend + 'static> TemplarRunWith<E> {
         let key = Submission::object_key(uid, round);
         self.store.get(&bucket, &rk, &key).ok()?
     }
+}
+
+/// The aggregate header published each updating round: magic, round,
+/// this round's lr, and an FNV-1a digest over the post-update parameter
+/// bits — enough for a reader to verify which theta the round produced
+/// without shipping theta itself.
+fn aggregate_payload(round: u64, lr_t: f32, theta: &[f32]) -> Vec<u8> {
+    let mut digest = 0xcbf2_9ce4_8422_2325_u64;
+    for x in theta {
+        for b in x.to_le_bytes() {
+            digest ^= u64::from(b);
+            digest = digest.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    let mut out = Vec::with_capacity(24);
+    out.extend_from_slice(b"AGG1");
+    out.extend_from_slice(&round.to_le_bytes());
+    out.extend_from_slice(&lr_t.to_le_bytes());
+    out.extend_from_slice(&digest.to_le_bytes());
+    out
+}
+
+/// The degraded header posted when the aggregate publication exhausts its
+/// retry budget: points readers at the latest durable checkpoint round
+/// instead of this round's (unpublishable) aggregate.
+fn degraded_payload(round: u64, checkpoint_round: u64) -> Vec<u8> {
+    let mut out = Vec::with_capacity(20);
+    out.extend_from_slice(b"AGG0");
+    out.extend_from_slice(&round.to_le_bytes());
+    out.extend_from_slice(&checkpoint_round.to_le_bytes());
+    out
 }
 
 /// What one first-pass pool job produces: the chunk's `(peer_index,

@@ -47,6 +47,8 @@
 //! # anyhow::Ok(())
 //! ```
 
+use std::collections::BTreeMap;
+
 use anyhow::{bail, Context, Result};
 
 use super::checkpoint::SignVector;
@@ -83,6 +85,11 @@ pub struct StoreState {
     pub next_key_id: u64,
     /// The *live* outage probability (a scripted outage may be active).
     pub outage_prob: f64,
+    /// The *live* transient-GET-failure probability (a scripted chaos
+    /// window may be active).
+    pub get_fail_prob: f64,
+    /// The *live* payload-corruption probability (ditto).
+    pub corrupt_prob: f64,
     /// `(bucket name, owner, read key)`, sorted by name.
     pub buckets: Vec<(String, String, ReadKey)>,
 }
@@ -103,6 +110,10 @@ pub struct RunSnapshot {
     pub next_hotkey: u64,
     /// Active provider-outage window: `(restore round, original prob)`.
     pub outage_restore: Option<(u64, f64)>,
+    /// Active chaos windows: kind → `(restore round, original prob)`.
+    pub chaos_restore: BTreeMap<String, (u64, f64)>,
+    /// Active targeted eclipses: `(validator, peer)` → restore round.
+    pub eclipse_restore: BTreeMap<(Uid, Uid), u64>,
     pub chain: ChainState,
     pub validators: Vec<ValidatorState>,
     pub peers: Vec<PeerRunnerState>,
@@ -232,6 +243,14 @@ fn cfg_to_json(cfg: &RunConfig) -> Value {
                 ("demo_decay", fnum(p.demo_decay as f64)),
                 ("base_microbatches", minjson::num(p.base_microbatches as f64)),
                 ("checkpoint_every", minjson::num(p.checkpoint_every as f64)),
+                (
+                    "retry",
+                    minjson::obj(vec![
+                        ("max_attempts", minjson::num(p.retry.max_attempts as f64)),
+                        ("base_backoff_ms", minjson::num(p.retry.base_backoff_ms as f64)),
+                        ("max_backoff_ms", minjson::num(p.retry.max_backoff_ms as f64)),
+                    ]),
+                ),
             ]),
         ),
         (
@@ -247,6 +266,11 @@ fn cfg_to_json(cfg: &RunConfig) -> Value {
                 ("mean_upload_ms", fnum(cfg.provider.mean_upload_ms)),
                 ("jitter_ms", fnum(cfg.provider.jitter_ms)),
                 ("outage_prob", fnum(cfg.provider.outage_prob)),
+                ("get_fail_prob", fnum(cfg.provider.get_fail_prob)),
+                ("corrupt_prob", fnum(cfg.provider.corrupt_prob)),
+                ("truncate_prob", fnum(cfg.provider.truncate_prob)),
+                ("spike_prob", fnum(cfg.provider.spike_prob)),
+                ("spike_ms", minjson::num(cfg.provider.spike_ms as f64)),
                 ("max_object_bytes", minjson::num(cfg.provider.max_object_bytes as f64)),
             ]),
         ),
@@ -289,6 +313,25 @@ fn cfg_from_json(v: &Value) -> Result<RunConfig> {
             .as_usize()
             .context("base_microbatches")?,
         checkpoint_every: field::unsigned(p, "checkpoint_every")?,
+        // Tolerant: snapshots written before the retry policy existed
+        // resume on the defaults (which is what those runs effectively
+        // used — a single attempt per transient failure class was the
+        // old behaviour only for p = 0 providers, where it is identical).
+        retry: {
+            let r = p.get("retry");
+            let d = crate::storage::RetryPolicy::default();
+            crate::storage::RetryPolicy {
+                max_attempts: r
+                    .get("max_attempts")
+                    .as_usize()
+                    .map(|n| n as u32)
+                    .unwrap_or(d.max_attempts),
+                base_backoff_ms: field::unsigned(r, "base_backoff_ms")
+                    .unwrap_or(d.base_backoff_ms),
+                max_backoff_ms: field::unsigned(r, "max_backoff_ms")
+                    .unwrap_or(d.max_backoff_ms),
+            }
+        },
     };
     let clock = crate::coordinator::round::RoundClock {
         round_ms: field::unsigned(v.get("clock"), "round_ms")?,
@@ -299,6 +342,12 @@ fn cfg_from_json(v: &Value) -> Result<RunConfig> {
         mean_upload_ms: field::f64(pr, "mean_upload_ms")?,
         jitter_ms: field::f64(pr, "jitter_ms")?,
         outage_prob: field::f64(pr, "outage_prob")?,
+        // Tolerant: pre-chaos snapshots default every fault knob to off.
+        get_fail_prob: read_f64(pr.get("get_fail_prob")).unwrap_or(0.0),
+        corrupt_prob: read_f64(pr.get("corrupt_prob")).unwrap_or(0.0),
+        truncate_prob: read_f64(pr.get("truncate_prob")).unwrap_or(0.0),
+        spike_prob: read_f64(pr.get("spike_prob")).unwrap_or(0.0),
+        spike_ms: field::unsigned(pr, "spike_ms").unwrap_or(0),
         max_object_bytes: pr.get("max_object_bytes").as_usize().context("max_object_bytes")?,
     };
     let agg = crate::demo::aggregate::AggregateOpts {
@@ -591,6 +640,36 @@ impl RunSnapshot {
                     })
                     .unwrap_or(Value::Null),
             ),
+            (
+                "chaos_restore",
+                Value::Arr(
+                    self.chaos_restore
+                        .iter()
+                        .map(|(kind, &(until, orig))| {
+                            Value::Arr(vec![
+                                minjson::s(kind),
+                                minjson::num(until as f64),
+                                fnum(orig),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "eclipse_restore",
+                Value::Arr(
+                    self.eclipse_restore
+                        .iter()
+                        .map(|(&(validator, peer), &until)| {
+                            Value::Arr(vec![
+                                minjson::num(validator as f64),
+                                minjson::num(peer as f64),
+                                minjson::num(until as f64),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
             ("chain", chain_to_json(&self.chain)),
             ("validators", Value::Arr(validators)),
             ("peers", Value::Arr(peers)),
@@ -600,6 +679,8 @@ impl RunSnapshot {
                     ("rng_state", u64s(self.store.rng_state)),
                     ("next_key_id", u64s(self.store.next_key_id)),
                     ("outage_prob", fnum(self.store.outage_prob)),
+                    ("get_fail_prob", fnum(self.store.get_fail_prob)),
+                    ("corrupt_prob", fnum(self.store.corrupt_prob)),
                     ("buckets", Value::Arr(buckets)),
                 ]),
             ),
@@ -784,6 +865,49 @@ impl RunSnapshot {
                     Some((until, orig))
                 }
             },
+            // Tolerant: absent in pre-chaos snapshots → no live windows.
+            chaos_restore: v
+                .get("chaos_restore")
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .map(|e| {
+                    let t = e.as_arr().context("chaos_restore entry")?;
+                    let kind = t
+                        .first()
+                        .and_then(|x| x.as_str())
+                        .context("chaos_restore kind")?
+                        .to_string();
+                    let until = t
+                        .get(1)
+                        .and_then(|x| x.as_f64())
+                        .context("chaos_restore round")? as u64;
+                    let orig = t.get(2).and_then(read_f64).context("chaos_restore prob")?;
+                    Ok((kind, (until, orig)))
+                })
+                .collect::<Result<_>>()?,
+            eclipse_restore: v
+                .get("eclipse_restore")
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .map(|e| {
+                    let t = e.as_arr().context("eclipse_restore entry")?;
+                    let validator = t
+                        .first()
+                        .and_then(|x| x.as_usize())
+                        .context("eclipse_restore validator")? as Uid;
+                    let peer = t
+                        .get(1)
+                        .and_then(|x| x.as_usize())
+                        .context("eclipse_restore peer")? as Uid;
+                    let until = t
+                        .get(2)
+                        .and_then(|x| x.as_f64())
+                        .context("eclipse_restore round")? as u64;
+                    Ok(((validator, peer), until))
+                })
+                .collect::<Result<_>>()?,
             chain: chain_from_json(v.get("chain")).context("snapshot chain")?,
             validators,
             peers,
@@ -791,6 +915,8 @@ impl RunSnapshot {
                 rng_state: read_u64(st.get("rng_state")).context("store rng")?,
                 next_key_id: read_u64(st.get("next_key_id")).context("next_key_id")?,
                 outage_prob: field::f64(st, "outage_prob")?,
+                get_fail_prob: read_f64(st.get("get_fail_prob")).unwrap_or(0.0),
+                corrupt_prob: read_f64(st.get("corrupt_prob")).unwrap_or(0.0),
                 buckets,
             },
             pending_events: v

@@ -12,7 +12,7 @@ use std::collections::BTreeMap;
 
 use anyhow::Result;
 
-use super::fast_eval::{fast_evaluate_all, RoundChecks};
+use super::fast_eval::{fast_evaluate_all, FastViolation, RoundChecks};
 use super::primary_eval::{PrimaryEval, PrimaryEvaluator};
 use super::round::RoundClock;
 use super::scoring::{normalize_scores, top_g_weights, ScoreBook};
@@ -41,6 +41,14 @@ pub struct RoundOutcome {
     pub agg_weights: Vec<(Uid, f64)>,
     /// Submissions that passed every fast check (aggregation candidates).
     pub valid_submissions: BTreeMap<Uid, Submission>,
+    /// Peers whose submission GET spent retries on transient storage
+    /// faults (uid → retries). The coordinator turns these into
+    /// `StorageRetry` events in deterministic validator/peer order.
+    pub fast_retries: BTreeMap<Uid, u32>,
+    /// Peers whose submission could not be read at all (retry budget
+    /// exhausted or eclipsed view), in peer order — surfaced as
+    /// `SubmissionUnavailable` events and scored as misses.
+    pub unavailable: Vec<Uid>,
 }
 
 pub struct Validator {
@@ -122,11 +130,19 @@ impl Validator {
             lr: lr_t,
             sync_threshold: self.params.sync_threshold,
             window: clock.put_window(round),
+            reader: self.uid,
+            retry: self.params.retry.clone(),
         };
         let fast = fast_evaluate_all(store, &keyed, &checks, pool, fanout)?;
         for (uid, outcome) in fast {
             let passed = outcome.passed();
             let phi = outcome.phi(self.params.phi_penalty);
+            if outcome.retries > 0 {
+                out.fast_retries.insert(uid, outcome.retries);
+            }
+            if outcome.violations.contains(&FastViolation::Unavailable) {
+                out.unavailable.push(uid);
+            }
             self.book.ensure(uid);
             self.book.apply_fast_penalty(uid, phi);
             out.fast_pass.insert(uid, passed);

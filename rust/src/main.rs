@@ -99,6 +99,12 @@ fn print_usage() {
          \x20           --churn <rate>     production-rate registration churn:\n\
          \x20                              steady joins/round against a capped slot\n\
          \x20                              table (0 = off; evicts lowest incentive)\n\
+         \x20           --chaos <p>        storage-fault profile: rolling read-path\n\
+         \x20                              chaos windows (get-fail / corrupt) at\n\
+         \x20                              probability p; with --fuzz/--repro, the\n\
+         \x20                              generated scripts gain chaos directives\n\
+         \x20                              capped at p (dominance waived when p > 0.3\n\
+         \x20                              or an eclipse lands)\n\
          \x20           --fuzz <cases>     instead: run N random adversary scripts\n\
          \x20                              through full engine runs (prop::scenario)\n\
          \x20           --fuzz-seed <s>    base seed for --fuzz\n\
@@ -389,13 +395,22 @@ fn parse_seed(s: &str) -> Result<u64> {
 ///   seed per failure (the CI nightly runs this at high case counts);
 /// - `--repro <seed> --size <n>`: re-run exactly one reported failure.
 fn cmd_soak(flags: &BTreeMap<String, String>) -> Result<()> {
-    use gauntlet::prop::scenario::{check_class_dominance, check_seed, InvariantTracker};
+    use gauntlet::prop::scenario::{check_class_dominance, check_seed_chaos, InvariantTracker};
+
+    // Storage-fault intensity shared by every soak mode: fuzz/repro cap
+    // their generated chaos directives at this probability, the default
+    // endurance run schedules rolling chaos windows with it.
+    let chaos: f64 = flag(flags, "chaos", 0.0)?;
+    anyhow::ensure!(
+        (0.0..=1.0).contains(&chaos),
+        "--chaos must be a probability in [0, 1]"
+    );
 
     if let Some(seed) = flags.get("repro") {
         let seed = parse_seed(seed)?;
         let size: usize = flag(flags, "size", 32)?;
-        println!("repro: seed={seed:#x} size={size}");
-        return match check_seed(seed, size) {
+        println!("repro: seed={seed:#x} size={size} chaos={chaos}");
+        return match check_seed_chaos(seed, size, chaos) {
             Ok(()) => {
                 println!("repro passed: all invariants hold at this seed");
                 Ok(())
@@ -413,10 +428,12 @@ fn cmd_soak(flags: &BTreeMap<String, String>) -> Result<()> {
             // fuzzing explore the same family of cases.
             let seed = base.wrapping_add(case);
             let size = 1 + (case as usize * 7) % 64;
-            if let Err(e) = check_seed(seed, size) {
+            if let Err(e) = check_seed_chaos(seed, size, chaos) {
+                let chaos_arg =
+                    if chaos > 0.0 { format!(" --chaos {chaos}") } else { String::new() };
                 eprintln!(
-                    "FAIL case={case} seed={seed:#x} size={size}\n{e}\n  \
-                     repro: gauntlet soak --repro {seed:#x} --size {size}"
+                    "FAIL case={case} seed={seed:#x} size={size} chaos={chaos}\n{e}\n  \
+                     repro: gauntlet soak --repro {seed:#x} --size {size}{chaos_arg}"
                 );
                 failures.push((seed, size, e));
             }
@@ -429,7 +446,7 @@ fn cmd_soak(flags: &BTreeMap<String, String>) -> Result<()> {
                 .iter()
                 .map(|(seed, size, e)| {
                     format!(
-                        "{{\"seed\":\"{seed:#x}\",\"size\":{size},\"error\":{}}}\n",
+                        "{{\"seed\":\"{seed:#x}\",\"size\":{size},\"chaos\":{chaos},\"error\":{}}}\n",
                         gauntlet::minjson::Value::Str(e.clone()).write()
                     )
                 })
@@ -470,7 +487,7 @@ fn cmd_soak(flags: &BTreeMap<String, String>) -> Result<()> {
         churn >= 0.0 && churn.is_finite(),
         "--churn must be a finite joins-per-round rate >= 0"
     );
-    let scenario = if churn > 0.0 {
+    let scenario = if churn > 0.0 || chaos > 0.0 {
         let classes = ["honest", "freeloader", "late:0.3", "stale:3"];
         let mut script = String::new();
         let mut due = 0.0_f64;
@@ -481,6 +498,20 @@ fn cmd_soak(flags: &BTreeMap<String, String>) -> Result<()> {
                 due -= 1.0;
                 script.push_str(&format!("@{r} join {}\n", classes[k % classes.len()]));
                 k += 1;
+            }
+        }
+        if chaos > 0.0 {
+            // Rolling read-path fault windows at roughly a 1/3 duty
+            // cycle, alternating GET failures with payload corruption
+            // so the digest-verdict rejection path soaks alongside the
+            // retry budget.
+            let mut r = 5_u64;
+            let mut w = 0_usize;
+            while r + 3 < rounds {
+                let kind = if w % 2 == 0 { "get-fail" } else { "corrupt" };
+                script.push_str(&format!("@{r} chaos {kind} {chaos} 3\n"));
+                w += 1;
+                r += 9;
             }
         }
         gauntlet::scenario::Scenario::parse(&script)?
@@ -504,7 +535,8 @@ fn cmd_soak(flags: &BTreeMap<String, String>) -> Result<()> {
         .build()?;
     println!(
         "soak: model={model} rounds={rounds} peers={n_peers} seed={seed} \
-         snapshot-every={snapshot_every} churn={churn}/round ({churn_events} joins)"
+         snapshot-every={snapshot_every} churn={churn}/round chaos={chaos} \
+         ({churn_events} scripted events)"
     );
 
     let mut tracker = InvariantTracker::default();
@@ -556,8 +588,15 @@ fn cmd_soak(flags: &BTreeMap<String, String>) -> Result<()> {
         t.row(&[class.to_string(), bals.len().to_string(), format!("{mean:.3}")]);
     }
     t.print();
-    check_class_dominance(&honest, &groups)
-        .map_err(|e| anyhow::anyhow!("final class dominance (--seed {seed}): {e}"))?;
+    if chaos <= 0.3 {
+        // The honest-strictly-out-earn invariant is only promised up to
+        // moderate fault rates; past that, enough honest submissions are
+        // chance-eclipsed per round that strict dominance can flip.
+        check_class_dominance(&honest, &groups)
+            .map_err(|e| anyhow::anyhow!("final class dominance (--seed {seed}): {e}"))?;
+    } else {
+        println!("soak: chaos={chaos} > 0.3, class-dominance check waived");
+    }
     println!(
         "soak OK: {rounds} rounds, {self_tests} snapshot/resume self-tests, \
          fingerprint {:016x}",

@@ -21,6 +21,9 @@
 //! @5 leave 4            # uid 4 deregisters and frees its slot
 //! @6 stake 0 500        # set uid 0's stake to 500 TAO
 //! @7 outage 0.5 2       # 50% PUT loss for 2 rounds
+//! @7 chaos get-fail 0.2 3   # 20% transient GET failure for 3 rounds
+//! @7 chaos corrupt 0.05 2   # 5% of GET payloads bit-flipped for 2 rounds
+//! @8 eclipse 0 5 2      # validator uid 0 cannot read peer 5 for 2 rounds
 //! ```
 //!
 //! # JSON form
@@ -59,6 +62,16 @@ pub enum Event {
     /// Storage-provider degradation: PUTs fail with probability `prob`
     /// for `rounds` rounds, then the provider recovers.
     ProviderOutage { prob: f64, rounds: u64 },
+    /// Read-path chaos window: GETs fail transiently with probability
+    /// `prob` for `rounds` rounds (`@r chaos get-fail <p> [rounds]`).
+    ChaosGetFail { prob: f64, rounds: u64 },
+    /// Read-path chaos window: GET payloads arrive with one bit flipped
+    /// with probability `prob` for `rounds` rounds — always rejected by
+    /// the digest verdict (`@r chaos corrupt <p> [rounds]`).
+    ChaosCorrupt { prob: f64, rounds: u64 },
+    /// Targeted eclipse: `validator` cannot read `peer`'s bucket for
+    /// `rounds` rounds (`@r eclipse <validator-uid> <peer-uid> [rounds]`).
+    Eclipse { validator: Uid, peer: Uid, rounds: u64 },
 }
 
 /// A round-indexed event schedule. Events within a round fire in the
@@ -139,6 +152,22 @@ impl Scenario {
                         fields.push(("prob", minjson::num(*prob)));
                         fields.push(("rounds", minjson::num(*rounds as f64)));
                     }
+                    Event::ChaosGetFail { prob, rounds } => {
+                        fields.push(("event", minjson::s("chaos-get-fail")));
+                        fields.push(("prob", minjson::num(*prob)));
+                        fields.push(("rounds", minjson::num(*rounds as f64)));
+                    }
+                    Event::ChaosCorrupt { prob, rounds } => {
+                        fields.push(("event", minjson::s("chaos-corrupt")));
+                        fields.push(("prob", minjson::num(*prob)));
+                        fields.push(("rounds", minjson::num(*rounds as f64)));
+                    }
+                    Event::Eclipse { validator, peer, rounds } => {
+                        fields.push(("event", minjson::s("eclipse")));
+                        fields.push(("validator", minjson::num(*validator as f64)));
+                        fields.push(("peer", minjson::num(*peer as f64)));
+                        fields.push(("rounds", minjson::num(*rounds as f64)));
+                    }
                 }
                 minjson::obj(fields)
             })
@@ -159,6 +188,15 @@ impl Scenario {
                 Event::SetStake { uid, amount } => format!("@{round} stake {uid} {amount}"),
                 Event::ProviderOutage { prob, rounds } => {
                     format!("@{round} outage {prob} {rounds}")
+                }
+                Event::ChaosGetFail { prob, rounds } => {
+                    format!("@{round} chaos get-fail {prob} {rounds}")
+                }
+                Event::ChaosCorrupt { prob, rounds } => {
+                    format!("@{round} chaos corrupt {prob} {rounds}")
+                }
+                Event::Eclipse { validator, peer, rounds } => {
+                    format!("@{round} eclipse {validator} {peer} {rounds}")
                 }
             })
             .collect::<Vec<_>>()
@@ -228,6 +266,42 @@ impl Scenario {
                             .map_err(|e| ScenarioError(format!("{line:?}: bad rounds: {e}")))?,
                     },
                 },
+                "chaos" => {
+                    let kind = arg(0, "chaos kind (get-fail|corrupt)")?;
+                    if kind != "get-fail" && kind != "corrupt" {
+                        return Err(ScenarioError(format!(
+                            "{line:?}: unknown chaos kind {kind:?}"
+                        )));
+                    }
+                    let prob: f64 = arg(1, "probability")?
+                        .parse()
+                        .map_err(|e| ScenarioError(format!("{line:?}: bad prob: {e}")))?;
+                    let rounds: u64 = match args.get(2) {
+                        None => 1,
+                        Some(r) => r
+                            .parse()
+                            .map_err(|e| ScenarioError(format!("{line:?}: bad rounds: {e}")))?,
+                    };
+                    if kind == "get-fail" {
+                        Event::ChaosGetFail { prob, rounds }
+                    } else {
+                        Event::ChaosCorrupt { prob, rounds }
+                    }
+                }
+                "eclipse" => Event::Eclipse {
+                    validator: arg(0, "validator uid")?
+                        .parse()
+                        .map_err(|e| ScenarioError(format!("{line:?}: bad validator uid: {e}")))?,
+                    peer: arg(1, "peer uid")?
+                        .parse()
+                        .map_err(|e| ScenarioError(format!("{line:?}: bad peer uid: {e}")))?,
+                    rounds: match args.get(2) {
+                        None => 1,
+                        Some(r) => r
+                            .parse()
+                            .map_err(|e| ScenarioError(format!("{line:?}: bad rounds: {e}")))?,
+                    },
+                },
                 other => {
                     return Err(ScenarioError(format!("{line:?}: unknown event {other:?}")))
                 }
@@ -238,6 +312,9 @@ impl Scenario {
                 Event::JoinPeer { .. } | Event::LeavePeer { .. } => 1,
                 Event::SetStake { .. } => 2,
                 Event::ProviderOutage { .. } => args.len().min(2),
+                Event::ChaosGetFail { .. } | Event::ChaosCorrupt { .. } | Event::Eclipse { .. } => {
+                    args.len().min(3)
+                }
             };
             if args.len() > used {
                 return Err(ScenarioError(format!(
@@ -303,6 +380,33 @@ impl Scenario {
                         .ok_or_else(|| jerr(i, "missing \"prob\""))?,
                     rounds: e.get("rounds").as_f64().map(|r| r as u64).unwrap_or(1),
                 },
+                "chaos-get-fail" => Event::ChaosGetFail {
+                    prob: e
+                        .get("prob")
+                        .as_f64()
+                        .ok_or_else(|| jerr(i, "missing \"prob\""))?,
+                    rounds: e.get("rounds").as_f64().map(|r| r as u64).unwrap_or(1),
+                },
+                "chaos-corrupt" => Event::ChaosCorrupt {
+                    prob: e
+                        .get("prob")
+                        .as_f64()
+                        .ok_or_else(|| jerr(i, "missing \"prob\""))?,
+                    rounds: e.get("rounds").as_f64().map(|r| r as u64).unwrap_or(1),
+                },
+                "eclipse" => Event::Eclipse {
+                    validator: e
+                        .get("validator")
+                        .as_usize()
+                        .map(|u| u as Uid)
+                        .ok_or_else(|| jerr(i, "missing or bad \"validator\""))?,
+                    peer: e
+                        .get("peer")
+                        .as_usize()
+                        .map(|u| u as Uid)
+                        .ok_or_else(|| jerr(i, "missing or bad \"peer\""))?,
+                    rounds: e.get("rounds").as_f64().map(|r| r as u64).unwrap_or(1),
+                },
                 other => return Err(jerr(i, format!("unknown event kind {other:?}"))),
             };
             out.push(round, event);
@@ -323,10 +427,23 @@ mod tests {
              @3 join poisoner ; @5 leave 4\n\
              @6 stake 0 500\n\
              @7 outage 0.5 2\n\
-             @8 outage 0.25   # default duration 1\n",
+             @8 outage 0.25   # default duration 1\n\
+             @9 chaos get-fail 0.2 3\n\
+             @9 chaos corrupt 0.05\n\
+             @10 eclipse 0 5 2\n\
+             @11 eclipse 1 6   # default duration 1\n",
         )
         .unwrap();
-        assert_eq!(s.len(), 6);
+        assert_eq!(s.len(), 10);
+        assert_eq!(
+            s.events_at(9),
+            vec![
+                Event::ChaosGetFail { prob: 0.2, rounds: 3 },
+                Event::ChaosCorrupt { prob: 0.05, rounds: 1 },
+            ]
+        );
+        assert_eq!(s.events_at(10), vec![Event::Eclipse { validator: 0, peer: 5, rounds: 2 }]);
+        assert_eq!(s.events_at(11), vec![Event::Eclipse { validator: 1, peer: 6, rounds: 1 }]);
         assert_eq!(
             s.events_at(3),
             vec![
@@ -339,7 +456,7 @@ mod tests {
         assert_eq!(s.events_at(7), vec![Event::ProviderOutage { prob: 0.5, rounds: 2 }]);
         assert_eq!(s.events_at(8), vec![Event::ProviderOutage { prob: 0.25, rounds: 1 }]);
         assert_eq!(s.events_at(4), vec![]);
-        assert_eq!(s.last_round(), Some(8));
+        assert_eq!(s.last_round(), Some(11));
     }
 
     #[test]
@@ -356,6 +473,19 @@ mod tests {
         )
         .unwrap();
         assert_eq!(compact, json);
+        let chaos_compact = Scenario::parse(
+            "@2 chaos get-fail 0.25 3\n@2 chaos corrupt 0.125\n@4 eclipse 0 5 2",
+        )
+        .unwrap();
+        let chaos_json = Scenario::parse(
+            r#"{"events": [
+                {"round": 2, "event": "chaos-get-fail", "prob": 0.25, "rounds": 3},
+                {"round": 2, "event": "chaos-corrupt", "prob": 0.125},
+                {"round": 4, "event": "eclipse", "validator": 0, "peer": 5, "rounds": 2}
+            ]}"#,
+        )
+        .unwrap();
+        assert_eq!(chaos_compact, chaos_json);
         // bare-array form is accepted too
         let bare = Scenario::parse(r#"[{"round": 3, "event": "join", "peer": "honest"}]"#).unwrap();
         assert_eq!(bare.events_at(3).len(), 1);
@@ -412,6 +542,13 @@ mod tests {
             ("@3 stake 4 10 20", "unexpected trailing tokens"),
             ("@3 outage", "missing probability"),
             ("@3 outage 0.5 2 9", "unexpected trailing tokens"),
+            ("@3 chaos", "missing chaos kind"),
+            ("@3 chaos warp 0.5", "unknown chaos kind"),
+            ("@3 chaos get-fail", "missing probability"),
+            ("@3 chaos corrupt 0.1 2 9", "unexpected trailing tokens"),
+            ("@3 eclipse", "missing validator uid"),
+            ("@3 eclipse 0", "missing peer uid"),
+            ("@3 eclipse 0 5 2 9", "unexpected trailing tokens"),
         ] {
             let err = Scenario::parse(bad).unwrap_err();
             assert!(err.0.contains(needle), "{bad:?} -> {err}");

@@ -25,11 +25,36 @@
 //! [`ObjectStore::get_within_window`] calls on different peers' buckets
 //! must not serialize on one map — per-bucket sharding gives readers of
 //! distinct buckets disjoint locks, and `RwLock` lets readers of the same
-//! bucket proceed together. The provider's latency/outage RNG sits behind
-//! its own mutex; the coordinator applies PUTs in deterministic peer order
-//! so draws are reproducible regardless of worker timing.
+//! bucket proceed together.
+//!
+//! # Deterministic fault draw order
+//!
+//! Every fault draw in the store comes from seeded RNG state, in one
+//! documented order, so run fingerprints pin bit-identically at any
+//! thread count:
+//!
+//! - **Write path (sequential stream).** PUT-side draws — outage, upload
+//!   latency, latency spike — come from one mutex-guarded [`Rng`] stream,
+//!   advanced strictly in PUT order. The coordinator applies PUTs in
+//!   deterministic peer order on one thread, so the stream is reproducible
+//!   regardless of worker timing. Retried PUTs re-draw from the same
+//!   stream (still on the coordinator, still in peer order).
+//! - **Read path (keyed draws).** GET-side draws — transient get
+//!   failure, corruption, truncation — cannot use a sequential stream:
+//!   windowed GETs run concurrently across validators and pool workers,
+//!   so draw *order* is nondeterministic. Instead each draw is a pure
+//!   stateless function of `(fault seed, fault kind, bucket, key,
+//!   reader, attempt)` hashed through [`Rng::from_parts`]. Any thread
+//!   interleaving computes the same verdicts; a retry (higher `attempt`)
+//!   is a fresh draw, while re-reading with the same attempt replays the
+//!   same verdict.
+//!
+//! Targeted faults — per-reader eclipse and per-writer withholding — are
+//! not probabilistic at all: they are explicit set-membership toggles
+//! ([`ObjectStore::set_eclipse`], [`ObjectStore::set_withheld`]) driven
+//! by the scenario engine on the coordinator thread.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::hash::{Hash, Hasher};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock, RwLock};
@@ -107,6 +132,58 @@ pub enum StorageError {
     Outage,
     #[error("object too large: {size} > {limit}")]
     TooLarge { size: usize, limit: usize },
+    /// The object is definitively absent from the reader's view (e.g. the
+    /// reader is eclipsed from the bucket). Unlike [`StorageError::Outage`]
+    /// a retry cannot succeed — callers should degrade immediately.
+    #[error("object not found: {0}")]
+    NotFound(String),
+}
+
+impl StorageError {
+    /// Whether a retry could plausibly succeed. Only [`StorageError::Outage`]
+    /// is transient; every other variant is a definitive verdict (missing
+    /// bucket, ACL failure, size limit, eclipsed view) and retrying it
+    /// wastes the budget — callers should give up and degrade.
+    pub fn is_transient(&self) -> bool {
+        matches!(self, StorageError::Outage)
+    }
+}
+
+/// Bounded-retry policy with exponential backoff on *simulation* time and
+/// deterministic jitter. Used by peer PUTs and validator fast-eval GETs;
+/// the jitter draw is a pure hash of `(salt, attempt)` — no wall clock,
+/// no shared RNG stream — so retries are reproducible at any thread count.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RetryPolicy {
+    /// Total attempts (first try included). `1` disables retries.
+    pub max_attempts: u32,
+    /// Backoff before the second attempt; doubles per further attempt.
+    pub base_backoff_ms: u64,
+    /// Cap on the exponential term (jitter may exceed it by ≤ 25%).
+    pub max_backoff_ms: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy { max_attempts: 3, base_backoff_ms: 250, max_backoff_ms: 4000 }
+    }
+}
+
+impl RetryPolicy {
+    /// Sim-time to wait after the `attempt`-th try failed (1-based):
+    /// `min(base · 2^(attempt-1), max)` plus a deterministic jitter in
+    /// `[0, exp/4]` keyed on `(salt, attempt)`.
+    pub fn backoff_ms(&self, salt: &str, attempt: u32) -> u64 {
+        let shift = (attempt.saturating_sub(1)).min(16);
+        let exp = self
+            .base_backoff_ms
+            .saturating_mul(1u64 << shift)
+            .min(self.max_backoff_ms)
+            .max(1);
+        let jitter = Rng::from_parts(&["retry-jitter", salt, &attempt.to_string()])
+            .below(exp / 4 + 1);
+        exp + jitter
+    }
 }
 
 struct Bucket {
@@ -124,6 +201,18 @@ pub struct ProviderModel {
     /// Probability an individual PUT is lost to a transient outage.
     pub outage_prob: f64,
     pub max_object_bytes: usize,
+    /// Probability an individual GET fails transiently (retryable).
+    pub get_fail_prob: f64,
+    /// Probability a GET returns the payload with one bit flipped. The
+    /// flip is deterministic per `(bucket, key, reader)` and always caught
+    /// by the wire codec's digest verdict — never by a crash.
+    pub corrupt_prob: f64,
+    /// Probability a GET returns a deterministically truncated payload.
+    pub truncate_prob: f64,
+    /// Probability a PUT's upload latency takes an extra spike.
+    pub spike_prob: f64,
+    /// Size of the latency spike when one is drawn (ms).
+    pub spike_ms: u64,
 }
 
 impl Default for ProviderModel {
@@ -133,6 +222,11 @@ impl Default for ProviderModel {
             jitter_ms: 300.0,
             outage_prob: 0.0,
             max_object_bytes: 256 << 20,
+            get_fail_prob: 0.0,
+            corrupt_prob: 0.0,
+            truncate_prob: 0.0,
+            spike_prob: 0.0,
+            spike_ms: 0,
         }
     }
 }
@@ -146,6 +240,16 @@ pub struct ObjectStore {
     /// Latency/outage draws; locked only on the (write-side) PUT path.
     rng: Mutex<Rng>,
     next_key_id: AtomicU64,
+    /// Seed for the keyed (read-path) fault draws — see the module doc's
+    /// "Deterministic fault draw order". Fixed at construction; never
+    /// advanced, so no snapshot state beyond the constructor argument.
+    fault_seed: u64,
+    /// Targeted fault: `(reader, bucket)` pairs where the named reader's
+    /// view of the bucket is blacked out (GETs return `NotFound`).
+    eclipsed: RwLock<BTreeSet<(u64, String)>>,
+    /// Targeted fault: writers whose PUTs succeed from their own point of
+    /// view (latency drawn, stored-at returned) but are never persisted.
+    withheld: RwLock<BTreeSet<String>>,
 }
 
 impl ObjectStore {
@@ -155,7 +259,25 @@ impl ObjectStore {
             model,
             rng: Mutex::new(Rng::new(seed)),
             next_key_id: AtomicU64::new(0),
+            fault_seed: seed,
+            eclipsed: RwLock::new(BTreeSet::new()),
+            withheld: RwLock::new(BTreeSet::new()),
         }
+    }
+
+    /// One keyed fault draw (read path). Pure function of the arguments —
+    /// see the module doc for why the read path cannot share the write
+    /// path's sequential stream.
+    fn fault_rng(&self, kind: &str, bucket: &str, key: &str, reader: u64, attempt: u32) -> Rng {
+        Rng::from_parts(&[
+            "storage-fault",
+            &self.fault_seed.to_string(),
+            kind,
+            bucket,
+            key,
+            &reader.to_string(),
+            &attempt.to_string(),
+        ])
     }
 
     fn shard(&self, bucket: &str) -> &RwLock<BTreeMap<String, Bucket>> {
@@ -198,20 +320,73 @@ impl ObjectStore {
         bytes: Vec<u8>,
         now: SimTime,
     ) -> Result<SimTime, StorageError> {
+        self.check_size(&bytes)?;
+        self.put_inner(bucket, writer, key, &mut Some(bytes), now)
+    }
+
+    /// PUT with bounded retries: transient failures back off on sim-time
+    /// (each attempt's send time moves forward by [`RetryPolicy::backoff_ms`],
+    /// so a rescued PUT can still land outside the put window — realistic
+    /// degradation, not a free pass). Returns `(stored_at, attempts_used)`;
+    /// definitive errors and an exhausted budget return the last error.
+    pub fn put_with_retry(
+        &self,
+        bucket: &str,
+        writer: &str,
+        key: &str,
+        bytes: Vec<u8>,
+        now: SimTime,
+        policy: &RetryPolicy,
+    ) -> Result<(SimTime, u32), StorageError> {
+        self.check_size(&bytes)?;
+        let mut bytes = Some(bytes);
+        let mut send = now;
+        let mut attempt = 1u32;
+        loop {
+            match self.put_inner(bucket, writer, key, &mut bytes, send) {
+                Ok(stored_at) => return Ok((stored_at, attempt)),
+                Err(e) if e.is_transient() && attempt < policy.max_attempts.max(1) => {
+                    send += policy.backoff_ms(key, attempt);
+                    attempt += 1;
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
+
+    fn check_size(&self, bytes: &[u8]) -> Result<(), StorageError> {
         if bytes.len() > self.model.max_object_bytes {
             return Err(StorageError::TooLarge {
                 size: bytes.len(),
                 limit: self.model.max_object_bytes,
             });
         }
-        // One lock hold for both draws keeps the draw sequence identical to
+        Ok(())
+    }
+
+    /// One PUT attempt. `bytes` is an `Option` so retries never clone the
+    /// payload — it is only moved out on the attempt that actually stores.
+    fn put_inner(
+        &self,
+        bucket: &str,
+        writer: &str,
+        key: &str,
+        bytes: &mut Option<Vec<u8>>,
+        now: SimTime,
+    ) -> Result<SimTime, StorageError> {
+        // One lock hold for all draws keeps the draw sequence identical to
         // the pre-sharding sequential store.
         let latency = {
             let mut rng = self.rng.lock().unwrap();
             if self.model.outage_prob > 0.0 && rng.chance(self.model.outage_prob) {
                 return Err(StorageError::Outage);
             }
-            (self.model.mean_upload_ms + rng.normal() * self.model.jitter_ms).max(1.0) as u64
+            let mut ms =
+                (self.model.mean_upload_ms + rng.normal() * self.model.jitter_ms).max(1.0) as u64;
+            if self.model.spike_prob > 0.0 && rng.chance(self.model.spike_prob) {
+                ms += self.model.spike_ms;
+            }
+            ms
         };
         let mut shard = self.shard(bucket).write().unwrap();
         let b = shard
@@ -221,7 +396,11 @@ impl ObjectStore {
             return Err(StorageError::AccessDenied(bucket.to_string()));
         }
         let stored_at = now + latency;
-        b.objects.insert(key.to_string(), Arc::new(Object::new(key.to_string(), bytes, stored_at)));
+        if !self.is_withheld(writer) {
+            let payload = bytes.take().expect("payload consumed by an earlier attempt");
+            b.objects
+                .insert(key.to_string(), Arc::new(Object::new(key.to_string(), payload, stored_at)));
+        }
         Ok(stored_at)
     }
 
@@ -275,6 +454,115 @@ impl ObjectStore {
             Some(o) if o.stored_at > window_end => Ok(WindowedGet::TooLate(o.stored_at)),
             Some(o) => Ok(WindowedGet::InWindow(o)),
         }
+    }
+
+    /// Windowed GET through the fault model, as a *named reader* — the
+    /// fault-injecting counterpart of [`ObjectStore::get_within_window`].
+    ///
+    /// Fault order (read path, all keyed draws — see module doc):
+    ///   1. eclipse check: an eclipsed `(reader, bucket)` pair gets a
+    ///      definitive [`StorageError::NotFound`] (retrying cannot help);
+    ///   2. transient get failure ([`ProviderModel::get_fail_prob`]) →
+    ///      [`StorageError::Outage`]; a retry with a higher `attempt` is a
+    ///      fresh draw;
+    ///   3. payload damage on in-window objects: corruption (one bit
+    ///      flipped) then truncation, keyed per `(bucket, key, reader)` so
+    ///      the damage is stable across retries — retrying cannot launder a
+    ///      corrupt replica; the digest verdict has to catch it.
+    ///
+    /// Damage is applied to a *fresh* `Arc<Object>` copy: the pristine
+    /// stored object (and its shared integrity memo) is never touched, so
+    /// other readers still see good bytes.
+    pub fn get_within_window_as(
+        &self,
+        reader: u64,
+        attempt: u32,
+        bucket: &str,
+        rk: &ReadKey,
+        key: &str,
+        window_start: SimTime,
+        window_end: SimTime,
+    ) -> Result<WindowedGet, StorageError> {
+        if self.is_eclipsed(reader, bucket) {
+            return Err(StorageError::NotFound(format!("{bucket}/{key}")));
+        }
+        if self.model.get_fail_prob > 0.0
+            && self.fault_rng("get-fail", bucket, key, reader, attempt).next_f64()
+                < self.model.get_fail_prob
+        {
+            return Err(StorageError::Outage);
+        }
+        match self.get_within_window(bucket, rk, key, window_start, window_end)? {
+            WindowedGet::InWindow(o) => {
+                Ok(WindowedGet::InWindow(self.maybe_damage(o, bucket, key, reader)))
+            }
+            other => Ok(other),
+        }
+    }
+
+    /// Apply read-path payload damage (corruption, then truncation) per the
+    /// model's probabilities. Returns the original `Arc` untouched when no
+    /// damage is drawn.
+    fn maybe_damage(&self, o: Arc<Object>, bucket: &str, key: &str, reader: u64) -> Arc<Object> {
+        if self.model.corrupt_prob > 0.0 && !o.bytes.is_empty() {
+            let mut rng = self.fault_rng("corrupt", bucket, key, reader, 0);
+            if rng.next_f64() < self.model.corrupt_prob {
+                let mut bytes = o.bytes.clone();
+                let pos = rng.below(bytes.len() as u64) as usize;
+                let bit = rng.below(8) as u32;
+                // XOR always changes the byte, so any drawn flip is a real
+                // corruption the digest check must reject.
+                bytes[pos] ^= 1u8 << bit;
+                return Arc::new(Object::new(o.key.clone(), bytes, o.stored_at));
+            }
+        }
+        if self.model.truncate_prob > 0.0 && !o.bytes.is_empty() {
+            let mut rng = self.fault_rng("truncate", bucket, key, reader, 0);
+            if rng.next_f64() < self.model.truncate_prob {
+                let keep = rng.below(o.bytes.len() as u64) as usize;
+                let bytes = o.bytes[..keep].to_vec();
+                return Arc::new(Object::new(o.key.clone(), bytes, o.stored_at));
+            }
+        }
+        o
+    }
+
+    // ------------------- targeted faults (eclipse / withholding) ---------
+
+    /// Black out `reader`'s view of `bucket`: its GETs via
+    /// [`ObjectStore::get_within_window_as`] return
+    /// [`StorageError::NotFound`] until cleared.
+    pub fn set_eclipse(&self, reader: u64, bucket: &str) {
+        self.eclipsed.write().unwrap().insert((reader, bucket.to_string()));
+    }
+
+    /// Lift an eclipse; returns whether it was active.
+    pub fn clear_eclipse(&self, reader: u64, bucket: &str) -> bool {
+        self.eclipsed.write().unwrap().remove(&(reader, bucket.to_string()))
+    }
+
+    pub fn is_eclipsed(&self, reader: u64, bucket: &str) -> bool {
+        let set = self.eclipsed.read().unwrap();
+        // Fast path: the common (no targeted faults) case takes only the
+        // read lock — no per-GET key allocation.
+        !set.is_empty() && set.contains(&(reader, bucket.to_string()))
+    }
+
+    /// Withhold `writer`'s PUTs: they succeed from the writer's view
+    /// (latency drawn, stored-at returned) but nothing is persisted, so
+    /// every reader sees the object as missing.
+    pub fn set_withheld(&self, writer: &str) {
+        self.withheld.write().unwrap().insert(writer.to_string());
+    }
+
+    /// Stop withholding; returns whether the writer was withheld.
+    pub fn clear_withheld(&self, writer: &str) -> bool {
+        self.withheld.write().unwrap().remove(writer)
+    }
+
+    pub fn is_withheld(&self, writer: &str) -> bool {
+        let set = self.withheld.read().unwrap();
+        !set.is_empty() && set.contains(writer)
     }
 
     // ------------------- snapshot/resume support ------------------------
@@ -588,6 +876,245 @@ mod tests {
         for i in 0..32 {
             let b = format!("peer-{i}");
             assert_eq!(s.list(&b, &keys[i]).unwrap().len(), 2);
+        }
+    }
+
+    // ------------------- fault model -------------------------------------
+
+    fn chaos_store(model: ProviderModel) -> (ObjectStore, ReadKey) {
+        let s = ObjectStore::new(model, 42);
+        let rk = s.create_bucket("peer-7", "peer-7");
+        s.put("peer-7", "peer-7", "grad", vec![9, 9, 9], 400).unwrap(); // stored at 500
+        (s, rk)
+    }
+
+    #[test]
+    fn get_fail_is_transient_and_leaves_the_plain_path_alone() {
+        let model = ProviderModel {
+            mean_upload_ms: 100.0,
+            jitter_ms: 0.0,
+            get_fail_prob: 1.0,
+            ..Default::default()
+        };
+        let (s, rk) = chaos_store(model);
+        let err = s.get_within_window_as(1, 0, "peer-7", &rk, "grad", 0, 10_000).unwrap_err();
+        assert_eq!(err, StorageError::Outage);
+        assert!(err.is_transient(), "get-fail must look retryable");
+        // The un-named (fault-free) read path is not touched by the model.
+        let got = s.get_within_window("peer-7", &rk, "grad", 0, 10_000).unwrap();
+        assert!(matches!(got, WindowedGet::InWindow(_)));
+    }
+
+    #[test]
+    fn keyed_get_draws_are_reproducible_across_calls_and_threads() {
+        let model = ProviderModel {
+            mean_upload_ms: 100.0,
+            jitter_ms: 0.0,
+            get_fail_prob: 0.5,
+            corrupt_prob: 0.5,
+            ..Default::default()
+        };
+        let s = std::sync::Arc::new(ObjectStore::new(model, 42));
+        let mut rks = Vec::new();
+        for i in 0..8 {
+            let b = format!("peer-{i}");
+            rks.push(s.create_bucket(&b, &b));
+            s.put(&b, &b, "grad", vec![i as u8; 16], 400).unwrap();
+        }
+        let read_all = |reader: u64| {
+            (0..8usize)
+                .map(|i| {
+                    let b = format!("peer-{i}");
+                    format!(
+                        "{:?}",
+                        s.get_within_window_as(reader, 0, &b, &rks[i], "grad", 0, 10_000)
+                    )
+                })
+                .collect::<Vec<_>>()
+        };
+        let sequential = read_all(3);
+        // The same reads done concurrently (any interleaving) must match
+        // the sequential verdicts exactly — draws are keyed, not streamed.
+        let concurrent = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..8)
+                .map(|_| scope.spawn(|| read_all(3)))
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect::<Vec<_>>()
+        });
+        for run in &concurrent {
+            assert_eq!(*run, sequential);
+        }
+    }
+
+    #[test]
+    fn corruption_flips_bits_on_a_fresh_copy_only() {
+        let model = ProviderModel {
+            mean_upload_ms: 100.0,
+            jitter_ms: 0.0,
+            corrupt_prob: 1.0,
+            ..Default::default()
+        };
+        let (s, rk) = chaos_store(model);
+        let WindowedGet::InWindow(damaged) =
+            s.get_within_window_as(1, 0, "peer-7", &rk, "grad", 0, 10_000).unwrap()
+        else {
+            panic!("expected in-window object")
+        };
+        assert_eq!(damaged.bytes.len(), 3, "corruption preserves length");
+        assert_ne!(damaged.bytes, vec![9, 9, 9], "exactly one bit differs");
+        let diff: u32 = damaged
+            .bytes
+            .iter()
+            .zip([9u8, 9, 9])
+            .map(|(a, b)| (a ^ b).count_ones())
+            .sum();
+        assert_eq!(diff, 1, "single bit flip");
+        // Damage is stable across retries: same reader, same replica.
+        let WindowedGet::InWindow(again) =
+            s.get_within_window_as(1, 1, "peer-7", &rk, "grad", 0, 10_000).unwrap()
+        else {
+            panic!()
+        };
+        assert_eq!(again.bytes, damaged.bytes);
+        // The stored object (and its integrity memo) stays pristine.
+        let pristine = s.get("peer-7", &rk, "grad").unwrap().unwrap();
+        assert_eq!(pristine.bytes, vec![9, 9, 9]);
+        assert!(pristine.integrity_memo(|b| b == [9, 9, 9]));
+        assert!(!damaged.integrity_memo(|b| b == [9, 9, 9]), "memo not shared with damage");
+    }
+
+    #[test]
+    fn truncation_shortens_the_payload() {
+        let model = ProviderModel {
+            mean_upload_ms: 100.0,
+            jitter_ms: 0.0,
+            truncate_prob: 1.0,
+            ..Default::default()
+        };
+        let (s, rk) = chaos_store(model);
+        let WindowedGet::InWindow(o) =
+            s.get_within_window_as(1, 0, "peer-7", &rk, "grad", 0, 10_000).unwrap()
+        else {
+            panic!()
+        };
+        assert!(o.bytes.len() < 3, "tail cut: {:?}", o.bytes);
+        assert_eq!(o.bytes, vec![9u8; o.bytes.len()], "prefix preserved");
+    }
+
+    #[test]
+    fn eclipse_blacks_out_one_reader_only_and_is_definitive() {
+        let model =
+            ProviderModel { mean_upload_ms: 100.0, jitter_ms: 0.0, ..Default::default() };
+        let (s, rk) = chaos_store(model);
+        s.set_eclipse(1, "peer-7");
+        let err = s.get_within_window_as(1, 0, "peer-7", &rk, "grad", 0, 10_000).unwrap_err();
+        assert!(matches!(err, StorageError::NotFound(_)));
+        assert!(!err.is_transient(), "eclipse must not look retryable");
+        // Another reader's view is untouched.
+        let other = s.get_within_window_as(2, 0, "peer-7", &rk, "grad", 0, 10_000).unwrap();
+        assert!(matches!(other, WindowedGet::InWindow(_)));
+        assert!(s.clear_eclipse(1, "peer-7"));
+        assert!(!s.clear_eclipse(1, "peer-7"), "second clear is a no-op");
+        let back = s.get_within_window_as(1, 0, "peer-7", &rk, "grad", 0, 10_000).unwrap();
+        assert!(matches!(back, WindowedGet::InWindow(_)));
+    }
+
+    #[test]
+    fn withheld_writer_put_succeeds_but_stores_nothing() {
+        let model =
+            ProviderModel { mean_upload_ms: 100.0, jitter_ms: 0.0, ..Default::default() };
+        let s = ObjectStore::new(model, 42);
+        let rk = s.create_bucket("peer-3", "peer-3");
+        s.set_withheld("peer-3");
+        let t = s.put("peer-3", "peer-3", "grad", vec![1, 2], 400).unwrap();
+        assert_eq!(t, 500, "writer sees a normal ack with latency");
+        assert_eq!(s.get("peer-3", &rk, "grad").unwrap(), None, "readers see nothing");
+        assert!(s.clear_withheld("peer-3"));
+        s.put("peer-3", "peer-3", "grad", vec![1, 2], 600).unwrap();
+        assert!(s.get("peer-3", &rk, "grad").unwrap().is_some());
+    }
+
+    #[test]
+    fn latency_spike_extends_stored_at() {
+        let model = ProviderModel {
+            mean_upload_ms: 100.0,
+            jitter_ms: 0.0,
+            spike_prob: 1.0,
+            spike_ms: 5_000,
+            ..Default::default()
+        };
+        let s = ObjectStore::new(model, 42);
+        s.create_bucket("b", "b");
+        assert_eq!(s.put("b", "b", "k", vec![1], 400).unwrap(), 5_500);
+    }
+
+    #[test]
+    fn retry_free_put_matches_put_with_retry_on_a_clean_provider() {
+        // With no faults drawn, put and put_with_retry consume identical
+        // draw sequences — the retry layer adds nothing on the happy path.
+        let a = store();
+        let b = store();
+        a.create_bucket("p", "p");
+        b.create_bucket("p", "p");
+        let policy = RetryPolicy::default();
+        for i in 0..4 {
+            let t1 = a.put("p", "p", "k", vec![i], 100).unwrap();
+            let (t2, attempts) = b.put_with_retry("p", "p", "k", vec![i], 100, &policy).unwrap();
+            assert_eq!(t1, t2);
+            assert_eq!(attempts, 1);
+        }
+        assert_eq!(a.rng_state(), b.rng_state(), "same stream position");
+    }
+
+    #[test]
+    fn put_with_retry_exhausts_budget_on_hard_outage() {
+        let model = ProviderModel { outage_prob: 1.0, ..Default::default() };
+        let s = ObjectStore::new(model, 1);
+        s.create_bucket("b", "b");
+        let policy = RetryPolicy { max_attempts: 3, ..Default::default() };
+        let before = s.rng_state();
+        assert_eq!(
+            s.put_with_retry("b", "b", "k", vec![1], 0, &policy),
+            Err(StorageError::Outage)
+        );
+        assert_ne!(s.rng_state(), before, "attempts consumed outage draws");
+    }
+
+    #[test]
+    fn put_with_retry_rescues_transient_outages() {
+        let model = ProviderModel {
+            mean_upload_ms: 100.0,
+            jitter_ms: 0.0,
+            outage_prob: 0.5,
+            ..Default::default()
+        };
+        let s = ObjectStore::new(model, 7);
+        let rk = s.create_bucket("b", "b");
+        let policy = RetryPolicy { max_attempts: 50, ..Default::default() };
+        let mut retried = false;
+        for i in 0..32u8 {
+            let key = format!("k{i}");
+            let (stored_at, attempts) =
+                s.put_with_retry("b", "b", &key, vec![i], 1_000, &policy).unwrap();
+            if attempts > 1 {
+                retried = true;
+                assert!(stored_at > 1_100, "backoff pushed the send time forward");
+            }
+        }
+        assert!(retried, "a p=0.5 outage must trip at least one retry in 32 puts");
+        assert_eq!(s.list("b", &rk).unwrap().len(), 32, "every put eventually landed");
+    }
+
+    #[test]
+    fn backoff_is_deterministic_exponential_and_capped() {
+        let p = RetryPolicy { max_attempts: 5, base_backoff_ms: 250, max_backoff_ms: 4_000 };
+        let b1 = p.backoff_ms("grad-3", 1);
+        assert_eq!(b1, p.backoff_ms("grad-3", 1), "same salt+attempt, same jitter");
+        // Exponential envelope: exp term doubles until the cap; jitter ≤ exp/4.
+        for attempt in 1..=8u32 {
+            let exp = (250u64 << (attempt - 1).min(16)).min(4_000);
+            let b = p.backoff_ms("grad-3", attempt);
+            assert!(b >= exp && b <= exp + exp / 4, "attempt {attempt}: {b} vs exp {exp}");
         }
     }
 }

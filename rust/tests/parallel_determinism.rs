@@ -85,6 +85,24 @@ fn churn_config(threads: usize) -> RunConfig {
     cfg
 }
 
+/// The ChaosPlane acceptance scenario: moderate GET failures, payload
+/// corruption caught by the digest verdict, and one peer eclipsed from
+/// one validator — a full engine run must complete with no panic, score
+/// unreadable submissions as misses, and stay bit-identical across
+/// worker-thread counts.
+fn chaos_config(threads: usize) -> RunConfig {
+    let mut cfg = config(threads);
+    cfg.rounds = 10;
+    cfg.seed = 37;
+    cfg.scenario = Scenario::parse(
+        "@1 chaos get-fail 0.2 6\n\
+         @2 chaos corrupt 0.05 5\n\
+         @3 eclipse 0 4 4      # validator 0 blind to honest peer 4",
+    )
+    .expect("valid scenario");
+    cfg
+}
+
 fn engine_for(cfg: RunConfig) -> GauntletEngine {
     GauntletBuilder::sim().config(cfg).build().expect("sim engine")
 }
@@ -190,6 +208,57 @@ fn churn_scenario_is_bit_identical_at_any_thread_count() {
             "churn numeric fingerprint diverged at {threads} threads"
         );
     }
+}
+
+#[test]
+fn chaos_scenario_is_bit_identical_at_any_thread_count() {
+    // Read-path faults draw from keyed RNG streams (bucket, key, reader,
+    // attempt), so the fault pattern — and therefore every retry,
+    // rejection, and scored miss — must be independent of how the
+    // fast-eval fan-out is scheduled across workers.
+    let (trace_seq, bits_seq) = fingerprint_cfg(chaos_config(1));
+    assert!(!bits_seq.is_empty());
+    let all = trace_seq.join("\n");
+    assert!(all.contains("chaos get-fail p=0.2 until round 7"), "{all}");
+    assert!(all.contains("chaos corrupt p=0.05 until round 7"), "{all}");
+    assert!(all.contains("validator 0 eclipsed from peer 4 until round 7"), "{all}");
+    assert!(all.contains("chaos get-fail cleared"), "{all}");
+    assert!(all.contains("chaos corrupt cleared"), "{all}");
+    assert!(all.contains("validator 0 sees peer 4 again"), "{all}");
+    for threads in [2usize, 8] {
+        let (trace, bits) = fingerprint_cfg(chaos_config(threads));
+        assert_eq!(
+            trace, trace_seq,
+            "chaos structural trace diverged at {threads} threads"
+        );
+        assert_eq!(
+            bits, bits_seq,
+            "chaos numeric fingerprint diverged at {threads} threads"
+        );
+    }
+}
+
+#[test]
+fn chaos_event_stream_surfaces_misses_and_retries() {
+    // The eclipsed peer's submission must surface as a typed
+    // SubmissionUnavailable miss for exactly the blinded validator, and
+    // at a 0.2 GET-failure rate the bounded retry path must actually
+    // fire — and the whole fault telemetry stream must be identical
+    // whether the reads ran sequentially or fanned out.
+    let seq = event_stream(chaos_config(1));
+    assert!(
+        seq.iter().any(|e| e.starts_with("SubmissionUnavailable")
+            && e.contains("validator: 0")
+            && e.contains("uid: 4")),
+        "no SubmissionUnavailable for the eclipsed peer in {} events",
+        seq.len()
+    );
+    assert!(
+        seq.iter().any(|e| e.starts_with("StorageRetry")),
+        "no StorageRetry at get-fail p=0.2"
+    );
+    let par = event_stream(chaos_config(8));
+    assert_eq!(par, seq, "chaos event stream diverged at 8 threads");
 }
 
 #[test]

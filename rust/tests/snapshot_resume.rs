@@ -62,6 +62,23 @@ fn churn_cfg(threads: usize) -> RunConfig {
     cfg
 }
 
+/// Chaos on both sides of the snapshot boundary (taken at round 3): a
+/// get-fail window and a corrupt window still open at the boundary, an
+/// eclipse that expires only after the resume, and a second get-fail
+/// window that must fire from the restored scenario cursor.
+fn chaos_cfg(threads: usize) -> RunConfig {
+    let mut cfg = base_cfg(threads);
+    cfg.rounds = 7;
+    cfg.scenario = Scenario::parse(
+        "@1 chaos get-fail 0.25 4   # still open when the snapshot is taken at 3\n\
+         @2 chaos corrupt 0.125 3\n\
+         @2 eclipse 0 4 3           # validator 0 blind to peer 4 through round 4\n\
+         @5 chaos get-fail 0.5 1",
+    )
+    .expect("valid scenario");
+    cfg
+}
+
 /// Everything the acceptance contract pins, as exact bit patterns.
 fn state_bits(run: &GauntletEngine) -> Vec<u64> {
     let mut bits = Vec::new();
@@ -181,6 +198,42 @@ fn resume_under_churn_scenario_is_bit_identical() {
         assert_eq!(
             bits_straight, bits,
             "churn state diverged (pause {pause_at}, {resume_threads} threads)"
+        );
+    }
+}
+
+#[test]
+fn resume_inside_chaos_window_is_bit_identical() {
+    // The snapshot boundary sits inside open get-fail + corrupt chaos
+    // windows and an active eclipse: the restored fault probabilities,
+    // eclipse set, chaos/eclipse restore cursors, and the keyed fault-RNG
+    // draws must all continue exactly — at any resume thread count.
+    let (straight, bits_straight) = straight_run(chaos_cfg(1));
+    let all_events: Vec<String> =
+        straight.iter().flat_map(|r| r.events.clone()).collect();
+    let joined = all_events.join("\n");
+    assert!(joined.contains("chaos get-fail p=0.25 until round 5"), "{joined}");
+    assert!(joined.contains("chaos corrupt p=0.125 until round 5"), "{joined}");
+    assert!(joined.contains("chaos get-fail cleared"), "{joined}");
+    assert!(joined.contains("chaos corrupt cleared"), "{joined}");
+    assert!(
+        joined.contains("validator 0 eclipsed from peer 4 until round 5"),
+        "{joined}"
+    );
+    assert!(joined.contains("validator 0 sees peer 4 again"), "{joined}");
+
+    for (pause_at, resume_threads) in [(3u64, 1usize), (3, 4), (4, 2)] {
+        let (resumed, bits) = interrupted_run(chaos_cfg(1), pause_at, resume_threads);
+        for (a, b) in straight[pause_at as usize..].iter().zip(&resumed) {
+            assert_eq!(
+                a, b,
+                "chaos round {} diverged (pause {pause_at}, {resume_threads} threads)",
+                a.round
+            );
+        }
+        assert_eq!(
+            bits_straight, bits,
+            "chaos state diverged (pause {pause_at}, {resume_threads} threads)"
         );
     }
 }
